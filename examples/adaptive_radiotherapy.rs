@@ -1,0 +1,185 @@
+//! END-TO-END DRIVER — the adaptive-radiotherapy workload the paper's
+//! introduction motivates (MR-Linac: image, analyse, adapt the dose in
+//! real time).
+//!
+//! Full-stack composition proof:
+//!   1. **train** — the Rust trainer drives the AOT Adam train-step
+//!      executable (L2 jax + L1 pallas, lowered once) for a few hundred
+//!      steps on the synthetic protocol, logging the loss curve;
+//!   2. **image** — a 3-D digital phantom (tumour core/rim, vessel,
+//!      healthy parenchyma) is scanned into noisy IVIM signals;
+//!   3. **serve** — every voxel streams through the serving coordinator
+//!      (dynamic batcher -> PJRT engine with the trained weights ->
+//!      uncertainty aggregation), measuring latency/throughput;
+//!   4. **report** — per-tissue parameter maps + uncertainty, the
+//!      high-uncertainty review mask a clinician would see, and the
+//!      real-time budget check (0.8 ms/batch, paper §VI-C).
+//!
+//! ```sh
+//! cargo run --release --example adaptive_radiotherapy
+//! ```
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use uivim::coordinator::{Coordinator, CoordinatorConfig, VoxelRequest};
+use uivim::experiments::load_manifest;
+use uivim::infer::Engine;
+use uivim::ivim::phantom::{generate, PhantomConfig, Tissue};
+use uivim::ivim::Param;
+use uivim::metrics::report::Table;
+use uivim::model::Weights;
+use uivim::runtime::{InferExecutable, Runtime};
+use uivim::train::{train, TrainConfig};
+use uivim::util::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let man = load_manifest("tiny")?;
+    let rt = Runtime::cpu()?;
+
+    // ---- 1. TRAIN ------------------------------------------------------
+    let steps = std::env::var("RADIO_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300usize);
+    println!("[1/4] training uIVIM-NET for {steps} steps (AOT train-step via PJRT)...");
+    let rep = train(
+        &rt,
+        &man,
+        &TrainConfig {
+            steps,
+            snr: 20.0,
+            seed: 2,
+            log_every: 0,
+            early_stop_rel: 0.0,
+        },
+        None,
+    )?;
+    println!(
+        "      loss {:.5} -> {:.5} over {} steps ({:.1} steps/s)",
+        rep.initial_loss(),
+        rep.final_loss(),
+        rep.steps_run,
+        rep.steps_run as f64 / rep.seconds
+    );
+    let weights: Weights = rep.final_weights;
+
+    // ---- 2. IMAGE ------------------------------------------------------
+    let cfg = PhantomConfig {
+        dim: (24, 24, 8),
+        snr: 20.0,
+        ..Default::default()
+    };
+    let ph = generate(&cfg, &man.bvalues);
+    println!(
+        "[2/4] phantom scanned: {}x{}x{} = {} voxels (tumour core {}, rim {}, vessel {})",
+        cfg.dim.0,
+        cfg.dim.1,
+        cfg.dim.2,
+        ph.len(),
+        ph.count(Tissue::TumourCore),
+        ph.count(Tissue::TumourRim),
+        ph.count(Tissue::Vessel),
+    );
+
+    // ---- 3. SERVE ------------------------------------------------------
+    let man2 = man.clone();
+    let w2 = weights.clone();
+    let mut ccfg = CoordinatorConfig::for_batch(man.nb, man.batch_infer);
+    ccfg.batcher.max_wait = Duration::from_millis(1);
+    ccfg.batcher.queue_capacity = ph.len() + 1;
+    let coord = Coordinator::start(ccfg, move || {
+        let rt = Runtime::cpu()?;
+        let mut e = InferExecutable::load(&rt, &man2, &w2)?;
+        e.verify_golden().ok(); // goldens bind to init weights; ignore here
+        Ok(Box::new(e) as Box<dyn Engine>)
+    })?;
+
+    println!("[3/4] streaming {} voxels through the coordinator (PJRT engine)...", ph.len());
+    let t = Timer::start();
+    let rxs: Vec<_> = (0..ph.len())
+        .map(|i| {
+            coord
+                .submit(VoxelRequest {
+                    id: i as u64,
+                    signals: ph.voxel_signals(i).to_vec(),
+                })
+                .expect("queue sized for the volume")
+        })
+        .collect();
+    let reports: Vec<_> = rxs
+        .into_iter()
+        .map(|rx| rx.recv().expect("response"))
+        .collect();
+    let wall = t.elapsed_s();
+    let snap = coord.metrics().snapshot();
+    println!(
+        "      {} voxels in {:.2}s -> {:.0} vox/s | {} batches | mean {:.2} ms, p99 {:.2} ms",
+        ph.len(),
+        wall,
+        ph.len() as f64 / wall,
+        snap.batches,
+        snap.mean_request_us / 1e3,
+        snap.p99_request_us / 1e3
+    );
+
+    // ---- 4. REPORT -----------------------------------------------------
+    let mut per_tissue: BTreeMap<&str, (Vec<f64>, Vec<f64>, Vec<f64>, usize)> = BTreeMap::new();
+    let mut flagged = 0usize;
+    for (i, resp) in reports.iter().enumerate() {
+        let t = match ph.tissue[i] {
+            Tissue::Background => "background",
+            Tissue::Healthy => "healthy",
+            Tissue::TumourCore => "tumour-core",
+            Tissue::TumourRim => "tumour-rim",
+            Tissue::Vessel => "vessel",
+        };
+        let e = per_tissue.entry(t).or_default();
+        e.0.push(resp.report.get(Param::D).mean);
+        e.1.push(resp.report.get(Param::F).mean);
+        e.2.push(resp.report.get(Param::F).relative);
+        e.3 += 1;
+        if !resp.report.confident {
+            flagged += 1;
+        }
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    let mut tbl = Table::new(&["tissue", "voxels", "D (mean)", "f (mean)", "rel-unc(f)"]);
+    for (t, (d, f, u, n)) in &per_tissue {
+        tbl.row(&[
+            t.to_string(),
+            n.to_string(),
+            format!("{:.5}", mean(d)),
+            format!("{:.3}", mean(f)),
+            format!("{:.3}", mean(u)),
+        ]);
+    }
+    println!("[4/4] per-tissue IVIM analysis:\n\n{}", tbl.to_text());
+    println!(
+        "high-uncertainty voxels flagged for clinician review: {} / {} ({:.1}%)",
+        flagged,
+        ph.len(),
+        100.0 * flagged as f64 / ph.len() as f64
+    );
+    // Export the f-parameter and uncertainty maps as PGM slices (what a
+    // clinician review tool would render).
+    let mut f_map = uivim::metrics::maps::VolumeMap::new(ph.dim);
+    let mut unc_map = uivim::metrics::maps::VolumeMap::new(ph.dim);
+    for (i, resp) in reports.iter().enumerate() {
+        f_map.data[i] = resp.report.get(Param::F).mean;
+        unc_map.data[i] = resp.report.get(Param::F).relative;
+    }
+    let mid = ph.dim.2 / 2;
+    f_map.write_pgm_slice(mid, std::path::Path::new("reports/f_map_mid.pgm"))?;
+    unc_map.write_pgm_slice(mid, std::path::Path::new("reports/f_uncertainty_mid.pgm"))?;
+    println!("maps written: reports/f_map_mid.pgm, reports/f_uncertainty_mid.pgm");
+
+    let batch_ms = snap.mean_batch_us / 1e3;
+    println!(
+        "engine batch latency {:.3} ms vs paper's 0.8 ms/batch real-time budget: {}",
+        batch_ms,
+        if batch_ms <= 0.8 { "MET (on-host CPU)" } else { "missed on CPU — paper meets it on the FPGA (sim: see `repro table2`)" }
+    );
+    coord.shutdown();
+    Ok(())
+}

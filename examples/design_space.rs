@@ -1,0 +1,55 @@
+//! Design-space exploration: sweep the accelerator's PE count on the
+//! paper-scale model and pick the best configuration that fits the
+//! VU13P — the paper's Fig. 8 workflow as a library user would run it.
+//!
+//! ```sh
+//! cargo run --release --example design_space
+//! ```
+
+use uivim::accel::dse::{best_fitting, sweep};
+use uivim::accel::Scheme;
+use uivim::experiments::load_manifest;
+use uivim::ivim::synth::synth_dataset;
+use uivim::metrics::report::Table;
+use uivim::model::Weights;
+
+fn main() -> anyhow::Result<()> {
+    let man = load_manifest("paper").or_else(|_| load_manifest("tiny"))?;
+    let weights = Weights::load_init(&man)?;
+    let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 13);
+
+    let pe_counts = [2usize, 4, 8, 16, 24, 32, 48, 64];
+    println!(
+        "sweeping {} PE configurations on the '{}' model (Nb={}, batch {})...",
+        pe_counts.len(),
+        man.variant,
+        man.nb,
+        man.batch_infer
+    );
+    let points = sweep(&man, &weights, &pe_counts, Scheme::BatchLevel, &ds.signals)?;
+
+    let mut t = Table::new(&["PEs", "DSP%", "BRAM%", "power (W)", "ms/batch", "kvox/s", "fits VU13P"]);
+    for p in &points {
+        t.row(&[
+            p.n_pe.to_string(),
+            format!("{:.1}", p.usage.dsp_pct()),
+            format!("{:.1}", p.usage.bram_pct()),
+            format!("{:.2}", p.power.watts),
+            format!("{:.4}", p.batch_ms),
+            format!("{:.1}", p.voxels_per_s / 1e3),
+            p.fits.to_string(),
+        ]);
+    }
+    println!("\n{}", t.to_text());
+
+    let best = best_fitting(&points).expect("at least one fitting configuration");
+    println!(
+        "selected configuration: {} PEs -> {:.4} ms/batch at {:.2} W \
+         (real-time budget 0.8 ms/batch: {})",
+        best.n_pe,
+        best.batch_ms,
+        best.power.watts,
+        best.batch_ms <= 0.8
+    );
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Quickstart: load the AOT artifacts, run one batch of synthetic voxels
+//! through the PJRT executable and print predictions with uncertainty.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use uivim::coordinator::uncertainty::{aggregate_batch, Thresholds};
+use uivim::experiments::load_manifest;
+use uivim::infer::Engine;
+use uivim::ivim::synth::synth_dataset;
+use uivim::ivim::Param;
+use uivim::model::Weights;
+use uivim::runtime::{InferExecutable, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the artifact manifest (shapes, masks, b-values) and the
+    //    initial weights exported by `make artifacts`.
+    let man = load_manifest("tiny")?;
+    let weights = Weights::load_init(&man)?;
+    println!(
+        "loaded uIVIM-NET '{}': {} b-values, {} mask samples, {} parameters",
+        man.variant, man.nb, man.n_samples, man.param_count
+    );
+
+    // 2. Boot the PJRT CPU runtime and compile the inference executable
+    //    (HLO text -> XLA; contains the L1 Pallas kernel lowering).
+    let rt = Runtime::cpu()?;
+    let mut engine = InferExecutable::load(&rt, &man, &weights)?;
+    engine.verify_golden()?; // cross-language correctness gate
+    println!("PJRT engine ready on {} (golden check passed)", rt.platform());
+
+    // 3. Simulate a batch of voxels at SNR 20 (the paper's synthetic
+    //    protocol) and run inference under all N masks.
+    let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 42);
+    let out = engine.infer_batch(&ds.signals)?;
+
+    // 4. Aggregate the mask samples into predictions + uncertainty.
+    let reports = aggregate_batch(&out, &Thresholds::default());
+    println!("\nvoxel  D(mean±std)            f(mean±std)          confident");
+    for (i, r) in reports.iter().take(8).enumerate() {
+        let d = r.get(Param::D);
+        let f = r.get(Param::F);
+        println!(
+            "{i:>5}  {:.5}±{:.5} (gt {:.5})  {:.3}±{:.3} (gt {:.3})  {}",
+            d.mean,
+            d.std,
+            ds.truth[i].d,
+            f.mean,
+            f.std,
+            ds.truth[i].f,
+            r.confident
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Training driver: the Rust-owned training loop over the AOT Adam
+//! train-step executable, logging the loss curve — the end-to-end
+//! validation that all three layers compose (EXPERIMENTS.md §E2E).
+//!
+//! ```sh
+//! cargo run --release --example train_loop [-- steps]
+//! ```
+
+use uivim::experiments::load_manifest;
+use uivim::runtime::Runtime;
+use uivim::train::{train, TrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+
+    let man = load_manifest("tiny")?;
+    let rt = Runtime::cpu()?;
+    println!(
+        "training uIVIM-NET ({} params) for {steps} steps, batch {} @ SNR 20",
+        man.param_count, man.batch_train
+    );
+
+    let cfg = TrainConfig {
+        steps,
+        snr: 20.0,
+        seed: 1,
+        log_every: 0,
+        early_stop_rel: 0.0,
+    };
+    let rep = train(&rt, &man, &cfg, None)?;
+
+    // Print the loss curve every ~5% of the run.
+    let stride = (rep.losses.len() / 20).max(1);
+    println!("\nstep   loss");
+    for (i, l) in rep.losses.iter().enumerate() {
+        if i % stride == 0 || i + 1 == rep.losses.len() {
+            let bar_len = ((l / rep.initial_loss()) * 50.0).clamp(0.0, 50.0) as usize;
+            println!("{i:>5}  {l:.6} {}", "#".repeat(bar_len));
+        }
+    }
+    println!(
+        "\n{} steps in {:.2}s ({:.1} steps/s); loss {:.6} -> {:.6} ({:.1}% reduction)",
+        rep.steps_run,
+        rep.seconds,
+        rep.steps_run as f64 / rep.seconds,
+        rep.initial_loss(),
+        rep.final_loss(),
+        100.0 * (1.0 - rep.tail_mean(20) / rep.initial_loss() as f64)
+    );
+    anyhow::ensure!(
+        rep.tail_mean(20) < rep.initial_loss() as f64,
+        "training failed to reduce the loss"
+    );
+    println!("training e2e check passed: loss decreased");
+    Ok(())
+}

@@ -1,0 +1,196 @@
+"""AOT compile path: lower uIVIM-NET to HLO text + export the manifest.
+
+This is the ONLY Python entry point that runtime artifacts come from; it
+runs once at build time (``make artifacts``) and never on the request
+path.  For each variant it emits into ``artifacts/<variant>/``:
+
+  infer.hlo.txt     inference executable (params, bn, signals[B,Nb]) ->
+                    (d, dstar, f, s0, recon) with masks baked in
+  train.hlo.txt     Adam train-step executable
+  params_init.bin   initial flat parameter vector (f32 LE)
+  bn_init.bin       initial flat BN state (f32 LE)
+  manifest.json     shapes, layouts, b-values, masks, hyper-parameters
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Variants:
+  tiny   Nb=11 clinical protocol, batch 8  — fast tests & CI
+  paper  Nb=104 pancreatic protocol [43], batch 64 — the paper's
+         accelerator configuration (32 PEs, 4 samples, batch 64)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import ivim, model
+
+VARIANTS = {
+    "tiny": dict(nb=11, batch_infer=8, batch_train=32, n_samples=4, scale=2.0),
+    "paper": dict(nb=104, batch_infer=64, batch_train=64, n_samples=4, scale=2.0),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (return_tuple=True).
+
+    ``print_large_constants=True`` is ESSENTIAL: the default printer elides
+    arrays beyond a small threshold as ``constant({...})`` and the text
+    parser silently zero-fills them — which would zero out the baked-in
+    Masksembles masks and b-values (observed: all sub-networks collapse to
+    the sigmoid midpoint).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_variant(name: str, out_dir: str, seed: int = 0) -> dict:
+    spec = VARIANTS[name]
+    cfg = model.NetConfig(
+        nb=spec["nb"], n_samples=spec["n_samples"], scale=spec["scale"]
+    )
+    bvals = ivim.bvalues_tiny() if name == "tiny" else ivim.bvalues_paper()
+    assert len(bvals) == cfg.nb
+    mask_sets = model.build_masks(cfg)
+    params, bn = model.init_params(cfg, seed=seed)
+
+    os.makedirs(out_dir, exist_ok=True)
+
+    # --- inference executable -------------------------------------------
+    b_inf = spec["batch_infer"]
+    infer = model.infer_fn(cfg, mask_sets, bvals)
+    lowered = jax.jit(infer).lower(
+        jax.ShapeDtypeStruct(params.shape, jnp.float32),
+        jax.ShapeDtypeStruct(bn.shape, jnp.float32),
+        jax.ShapeDtypeStruct((b_inf, cfg.nb), jnp.float32),
+    )
+    with open(os.path.join(out_dir, "infer.hlo.txt"), "w") as fh:
+        fh.write(to_hlo_text(lowered))
+
+    # --- train-step executable ------------------------------------------
+    b_tr = spec["batch_train"]
+    train = model.train_step_fn(cfg, mask_sets, bvals)
+    p_spec = jax.ShapeDtypeStruct(params.shape, jnp.float32)
+    lowered_t = jax.jit(train).lower(
+        p_spec,
+        jax.ShapeDtypeStruct(bn.shape, jnp.float32),
+        p_spec,
+        p_spec,
+        jax.ShapeDtypeStruct((), jnp.float32),
+        jax.ShapeDtypeStruct((b_tr, cfg.nb), jnp.float32),
+    )
+    with open(os.path.join(out_dir, "train.hlo.txt"), "w") as fh:
+        fh.write(to_hlo_text(lowered_t))
+
+    # --- initial state ----------------------------------------------------
+    params.astype("<f4").tofile(os.path.join(out_dir, "params_init.bin"))
+    bn.astype("<f4").tofile(os.path.join(out_dir, "bn_init.bin"))
+
+    # --- golden vectors for the Rust runtime's cross-language check -------
+    # Deterministic inputs -> jit outputs; the Rust integration test loads
+    # the HLO, executes with golden_in, and asserts allclose on golden_out.
+    sig, _ = ivim.synth_dataset(b_inf, bvals, snr=20, seed=12345)
+    outs = jax.jit(infer)(
+        jnp.asarray(params), jnp.asarray(bn), jnp.asarray(sig)
+    )
+    sig.astype("<f4").tofile(os.path.join(out_dir, "golden_in.bin"))
+    np.concatenate([np.asarray(o).reshape(-1) for o in outs]).astype("<f4").tofile(
+        os.path.join(out_dir, "golden_out.bin")
+    )
+
+    tsig, _ = ivim.synth_dataset(b_tr, bvals, snr=20, seed=54321)
+    z = np.zeros_like(params)
+    touts = jax.jit(train)(
+        jnp.asarray(params), jnp.asarray(bn), jnp.asarray(z), jnp.asarray(z),
+        jnp.float32(0.0), jnp.asarray(tsig),
+    )
+    tsig.astype("<f4").tofile(os.path.join(out_dir, "train_golden_in.bin"))
+    np.concatenate([np.asarray(o).reshape(-1) for o in touts]).astype("<f4").tofile(
+        os.path.join(out_dir, "train_golden_out.bin")
+    )
+
+    # --- manifest ---------------------------------------------------------
+    manifest = {
+        "variant": name,
+        "nb": cfg.nb,
+        "n_samples": cfg.n_samples,
+        "scale": cfg.scale,
+        "mask_seed": cfg.mask_seed,
+        "batch_infer": b_inf,
+        "batch_train": b_tr,
+        "param_count": int(model.param_count(cfg.nb)),
+        "bn_count": int(model.bn_count(cfg.nb)),
+        "bvalues": [float(b) for b in bvals],
+        "param_ranges": {k: list(v) for k, v in ivim.PARAM_RANGES.items()},
+        "subnets": list(ivim.SUBNETS),
+        "adam": {
+            "lr": cfg.lr,
+            "beta1": cfg.beta1,
+            "beta2": cfg.beta2,
+            "eps": cfg.adam_eps,
+        },
+        "bn_momentum": model.BN_MOMENTUM,
+        "param_layout": [
+            {"name": n, "offset": o, "shape": list(s)}
+            for n, o, s in model.param_layout(cfg.nb)
+        ],
+        "bn_layout": [
+            {"name": n, "offset": o, "shape": list(s)}
+            for n, o, s in model.bn_layout(cfg.nb)
+        ],
+        "masks": {
+            k: [int(x) for x in v.reshape(-1)] for k, v in sorted(mask_sets.items())
+        },
+        "files": {
+            "infer": "infer.hlo.txt",
+            "train": "train.hlo.txt",
+            "params_init": "params_init.bin",
+            "bn_init": "bn_init.bin",
+            "golden_in": "golden_in.bin",
+            "golden_out": "golden_out.bin",
+            "train_golden_in": "train_golden_in.bin",
+            "train_golden_out": "train_golden_out.bin",
+        },
+        "infer_outputs": ["d", "dstar", "f", "s0", "recon"],
+        "train_io": "(params, bn, m, v, step, signals) -> (params, bn, m, v, loss)",
+    }
+    path = os.path.join(out_dir, "manifest.json")
+    with open(path, "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts root dir")
+    ap.add_argument(
+        "--variants", default="tiny,paper", help="comma-separated variant names"
+    )
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    for name in args.variants.split(","):
+        name = name.strip()
+        out_dir = os.path.join(args.out, name)
+        man = export_variant(name, out_dir, seed=args.seed)
+        print(
+            f"[aot] {name}: nb={man['nb']} params={man['param_count']} "
+            f"batch_infer={man['batch_infer']} -> {out_dir}"
+        )
+
+
+if __name__ == "__main__":
+    main()

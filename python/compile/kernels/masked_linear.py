@@ -1,0 +1,124 @@
+"""L1 Pallas kernel: fused masked linear layer for uIVIM-NET.
+
+Computes, for every mask sample ``s`` and batch tile:
+
+    y[s] = relu( bn( x[s] @ W + b ) ) * mask[s]
+
+which is one hidden block of a uIVIM-NET sub-network (Linear -> BatchNorm
+-> ReLU -> Masksembles mask).  This is the model's compute hot-spot: the
+whole network is three of these (the encoder is a thin epilogue).
+
+Hardware adaptation of the paper's FPGA design to TPU (DESIGN.md §7):
+
+* **batch-level scheme** — the grid is ``(samples, batch_tiles)`` with the
+  *sample* index outermost, so one sample's (pre-masked) weight tile is
+  fetched into VMEM once and reused across every batch tile, exactly
+  mirroring the accelerator's "load weights of one sampling, run the whole
+  batch" loop order.
+* **mask-zero skipping** — masks are compile-time constants; the caller
+  folds them into the weights (``W ⊙ mask`` per sample), so no Bernoulli
+  sampling or runtime dropout appears in the lowered HLO.
+* **MXU mapping** — the dot product uses ``jnp.dot`` with
+  ``preferred_element_type=float32`` so it lowers to MXU matmuls on real
+  TPUs; tiles are padded to (8, 128) multiples by the caller when needed.
+
+Kernels run with ``interpret=True`` — the CPU PJRT client cannot execute
+Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-5
+
+
+def _kernel(x_ref, w_ref, b_ref, gamma_ref, beta_ref, mean_ref, var_ref, mask_ref, o_ref):
+    """One (sample, batch-tile) grid step.
+
+    Block shapes:
+      x:     (1, Bt, Nin)   — activations of this sample's batch tile
+      w:     (1, Nin, Nout) — this sample's (pre-masked) weights
+      b, gamma, beta, mean, var: (1, Nout)
+      mask:  (1, Nout)      — this sample's binary mask
+      o:     (1, Bt, Nout)
+    """
+    x = x_ref[0]
+    w = w_ref[0]
+    # MXU-friendly matmul; accumulate in f32.
+    h = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    h = h + b_ref[0][None, :]
+    inv = jax.lax.rsqrt(var_ref[0] + EPS)
+    h = (h - mean_ref[0][None, :]) * (inv * gamma_ref[0])[None, :] + beta_ref[0][None, :]
+    h = jnp.maximum(h, 0.0)
+    o_ref[0] = h * mask_ref[0][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def masked_linear(x, w, b, gamma, beta, mean, var, mask, *, block_b: int = 64):
+    """Fused masked linear block over all mask samples.
+
+    Args:
+      x:     f32[S, B, Nin]  per-sample activations (layer 1 callers
+             broadcast the shared input to all samples).
+      w:     f32[S, Nin, Nout] per-sample weights.  Callers fold the mask
+             into the weights of the *previous* layer when exporting the
+             mask-zero-skipping variant; this kernel multiplies the output
+             mask explicitly so it is also usable stand-alone.
+      b, gamma, beta, mean, var: f32[S, Nout] per-sample affine/BN terms
+             (broadcast by the caller if shared across samples).
+      mask:  f32[S, Nout] binary masks.
+      block_b: batch tile size.
+
+    Returns f32[S, B, Nout].
+    """
+    s, bsz, nin = x.shape
+    nout = w.shape[-1]
+    bt = min(block_b, bsz)
+    if bsz % bt:
+        raise ValueError(f"batch {bsz} not divisible by block {bt}")
+    grid = (s, bsz // bt)  # sample OUTERMOST: batch-level weight reuse.
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, nin), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, nin, nout), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, nout), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, nout), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, nout), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, nout), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, nout), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, nout), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, nout), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, bsz, nout), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(x, w, b, gamma, beta, mean, var, mask)
+
+
+def vmem_footprint_bytes(s: int, bsz: int, nin: int, nout: int, block_b: int = 64) -> int:
+    """Estimated VMEM residency per grid step (DESIGN.md §9 L1 profile).
+
+    One batch tile of x, one sample's weight tile, the per-feature vectors
+    and one output tile, all f32.
+    """
+    bt = min(block_b, bsz)
+    return 4 * (bt * nin + nin * nout + 6 * nout + bt * nout)
+
+
+def mxu_utilization_estimate(nin: int, nout: int, bt: int = 64) -> float:
+    """Fraction of a 128x128 MXU pass doing useful work for one tile matmul.
+
+    The (bt, nin) x (nin, nout) matmul pads each dim up to the systolic
+    array tile; utilisation = useful MACs / padded MACs.
+    """
+    pad = lambda v, m: ((v + m - 1) // m) * m
+    useful = bt * nin * nout
+    padded = pad(bt, 8) * pad(nin, 128) * pad(nout, 128)
+    return useful / padded

@@ -1,0 +1,125 @@
+"""Masksembles mask generation (Durasov et al., CVPR'21) — deterministic.
+
+The paper converts IVIM-NET into uIVIM-NET by replacing each dropout layer
+with a *fixed* set of N binary masks.  Masks are generated once, offline,
+and stay fixed for training and inference — this is what enables the
+hardware's mask-zero-skipping (weights at dropped positions are simply not
+stored) and batch-level weight loading.
+
+Algorithm (reference Masksembles implementation, made deterministic):
+
+1. ``_attempt(m, n, s)``: draw ``n`` masks with ``m`` ones each over an
+   expanded space of ``round(m*s)`` positions, then drop positions that no
+   mask uses.  The expansion factor ``s`` (scale) controls the expected
+   overlap between masks: larger ``s`` → less correlated masks → closer to
+   Deep Ensembles; ``s → 1`` → identical masks.
+2. The expected surviving width is ``E = round(m*s*(1-(1-1/s)^n))``;
+   attempts are retried until the width matches ``E`` exactly.
+3. ``for_width(c, ...)``: binary-search ``s`` so the surviving width equals
+   the layer width ``c`` for a requested ones-count ``m ≈ c/scale``.
+
+The Rust mirror is ``rust/src/masks/``; cross-language parity is enforced
+by regenerating the masks from the manifest's ``mask_seed`` on the Rust
+side and comparing with the manifest's mask bytes.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .pcg import Pcg32
+
+
+def expected_width(m: int, n: int, s: float) -> int:
+    """Expected number of surviving positions after dropping unused ones."""
+    return int(round(m * s * (1.0 - (1.0 - 1.0 / s) ** n)))
+
+
+def _attempt(m: int, n: int, s: float, rng: Pcg32) -> np.ndarray:
+    total = int(round(m * s))
+    masks = np.zeros((n, total), dtype=np.uint8)
+    for i in range(n):
+        idx = rng.choose(total, m)
+        masks[i, idx] = 1
+    keep = masks.any(axis=0)
+    return masks[:, keep]
+
+
+def generate_masks(m: int, n: int, s: float, rng: Pcg32, max_tries: int = 4096) -> np.ndarray:
+    """Masks of exactly ``expected_width(m, n, s)`` columns, ``m`` ones per row."""
+    exp = expected_width(m, n, s)
+    masks = _attempt(m, n, s, rng)
+    tries = 1
+    while masks.shape[1] != exp and tries < max_tries:
+        masks = _attempt(m, n, s, rng)
+        tries += 1
+    return masks
+
+
+def for_width(c: int, n: int, scale: float, seed: int, max_outer: int = 64) -> np.ndarray:
+    """Generate ``n`` masks of width exactly ``c`` with ``~c/scale`` ones each.
+
+    Binary-searches the expansion factor ``s`` so that the surviving width
+    lands on ``c``; retries with small ones-count adjustments if the
+    discrete search cannot hit ``c`` exactly.  Deterministic in ``seed``.
+    """
+    if c < 1 or n < 1:
+        raise ValueError("width and mask count must be >= 1")
+    if scale <= 1.0:
+        # scale == 1 degenerates to all-ones masks (no dropout).
+        return np.ones((n, c), dtype=np.uint8)
+
+    rng = Pcg32(seed)
+    m = max(1, int(round(c / scale)))
+    for _ in range(max_outer + c):
+        # Directed search: the achievable surviving width for a given
+        # ones-count m lies in [m (s->1), expected_width(m, n, 64)].
+        if expected_width(m, n, 64.0) < c:
+            m += 1  # too few ones to ever cover width c
+            continue
+        if m > c:
+            m -= 1  # more ones than positions
+            continue
+        s = _solve_scale(m, n, c)
+        if s is None:
+            m += 1
+            continue
+        masks = generate_masks(m, n, s, rng)
+        if masks.shape[1] == c:
+            return masks
+    raise RuntimeError(f"mask search failed for width={c} n={n} scale={scale}")
+
+
+def _solve_scale(m: int, n: int, c: int) -> float | None:
+    """Find s with expected_width(m, n, s) == c by bisection, else None."""
+    lo, hi = 1.0 + 1e-6, 64.0
+    if expected_width(m, n, hi) < c or expected_width(m, n, lo) > c:
+        return None
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        e = expected_width(m, n, mid)
+        if e == c:
+            return mid
+        if e < c:
+            lo = mid
+        else:
+            hi = mid
+    return None
+
+
+def overlap(masks: np.ndarray) -> float:
+    """Mean pairwise IoU between masks — the correlation proxy from the paper.
+
+    Lower overlap → less correlated ensemble members → better-calibrated
+    uncertainty (closer to Deep Ensembles).
+    """
+    n = masks.shape[0]
+    if n < 2:
+        return 1.0
+    vals = []
+    for i in range(n):
+        for j in range(i + 1, n):
+            inter = np.logical_and(masks[i], masks[j]).sum()
+            union = np.logical_or(masks[i], masks[j]).sum()
+            vals.append(inter / union if union else 0.0)
+    return float(np.mean(vals))

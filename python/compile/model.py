@@ -1,0 +1,334 @@
+"""L2: uIVIM-NET — the mask-based Bayesian IVIM network (paper §IV).
+
+Architecture (paper Fig. 2): four identical, independent sub-networks, one
+per IVIM parameter (D, D*, f, S0).  Each sub-network:
+
+    part 1: Linear(Nb -> Nb) -> BatchNorm -> ReLU -> Masksembles mask
+    part 2: Linear(Nb -> Nb) -> BatchNorm -> ReLU -> Masksembles mask
+    part 3: Linear(Nb -> 1)  -> Sigmoid -> conversion C(.) into the
+            clinical parameter range
+
+The dropout layers of IVIM-NET are replaced by *fixed* Masksembles masks
+(one mask set per masked layer, N masks each).  Masks are generated once
+(``masks.for_width``) and baked into the traced function as constants —
+the software twin of the accelerator's offline mask-zero-skipping.
+
+All trainable parameters live in a single flat f32 vector whose layout is
+defined here and exported in the artifact manifest, so the Rust runtime
+can address individual tensors without any Python at runtime.  BatchNorm
+running statistics live in a second flat vector ("bn state"): updated by
+``train_step`` but not touched by Adam.
+
+Training (paper §IV): unsupervised, physics-consistent — each voxel's
+reconstruction from the predicted parameters via eq. (1) is regressed onto
+the input signal with MSE.  The batch is split into N groups, group i
+passing through mask i (standard Masksembles training).
+
+Inference: every voxel is evaluated under all N masks; the Rust
+coordinator computes mean (prediction) and std/mean (relative uncertainty).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ivim
+from . import masks as masks_mod
+from .kernels import masked_linear as kmod
+from .kernels.ref import masked_linear_ref
+
+EPS = 1e-5
+BN_MOMENTUM = 0.1
+
+
+@dataclass(frozen=True)
+class NetConfig:
+    """Static configuration of one uIVIM-NET instance."""
+
+    nb: int                      # number of b-values == layer width
+    n_samples: int = 4           # N: number of Masksembles masks
+    scale: float = 2.0           # Masksembles scale (ones per mask ~ nb/scale)
+    mask_seed: int = 2024
+    lr: float = 1e-3             # Adam
+    beta1: float = 0.9
+    beta2: float = 0.999
+    adam_eps: float = 1e-8
+    use_pallas: bool = True      # hidden blocks via the Pallas kernel
+
+
+# --------------------------------------------------------------------------
+# Flat parameter layout
+# --------------------------------------------------------------------------
+
+_TENSORS_PER_SUBNET = (
+    # (name, shape as a function of nb)
+    ("w1", lambda nb: (nb, nb)),
+    ("b1", lambda nb: (nb,)),
+    ("g1", lambda nb: (nb,)),
+    ("be1", lambda nb: (nb,)),
+    ("w2", lambda nb: (nb, nb)),
+    ("b2", lambda nb: (nb,)),
+    ("g2", lambda nb: (nb,)),
+    ("be2", lambda nb: (nb,)),
+    ("w3", lambda nb: (nb,)),
+    ("b3", lambda nb: (1,)),
+)
+
+_BN_TENSORS_PER_SUBNET = (
+    ("m1", lambda nb: (nb,)),
+    ("v1", lambda nb: (nb,)),
+    ("m2", lambda nb: (nb,)),
+    ("v2", lambda nb: (nb,)),
+)
+
+
+def param_layout(nb: int) -> list[tuple[str, int, tuple[int, ...]]]:
+    """[(qualified_name, offset, shape)] for the flat trainable vector."""
+    entries = []
+    off = 0
+    for sn in ivim.SUBNETS:
+        for name, shape_fn in _TENSORS_PER_SUBNET:
+            shape = shape_fn(nb)
+            entries.append((f"{sn}.{name}", off, shape))
+            off += math.prod(shape)
+    return entries
+
+
+def bn_layout(nb: int) -> list[tuple[str, int, tuple[int, ...]]]:
+    """[(qualified_name, offset, shape)] for the flat BN-state vector."""
+    entries = []
+    off = 0
+    for sn in ivim.SUBNETS:
+        for name, shape_fn in _BN_TENSORS_PER_SUBNET:
+            shape = shape_fn(nb)
+            entries.append((f"{sn}.{name}", off, shape))
+            off += math.prod(shape)
+    return entries
+
+
+def param_count(nb: int) -> int:
+    _, off, shape = param_layout(nb)[-1]
+    return off + math.prod(shape)
+
+
+def bn_count(nb: int) -> int:
+    _, off, shape = bn_layout(nb)[-1]
+    return off + math.prod(shape)
+
+
+def _unpack(flat, layout):
+    out = {}
+    for name, off, shape in layout:
+        size = math.prod(shape)
+        out[name] = jax.lax.dynamic_slice(flat, (off,), (size,)).reshape(shape)
+    return out
+
+
+def unpack_params(params_flat, nb: int):
+    return _unpack(params_flat, param_layout(nb))
+
+
+def unpack_bn(bn_flat, nb: int):
+    return _unpack(bn_flat, bn_layout(nb))
+
+
+def init_params(cfg: NetConfig, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """He-initialised flat parameter vector + fresh BN state (mean 0, var 1)."""
+    key = jax.random.PRNGKey(seed)
+    nb = cfg.nb
+    params = np.zeros(param_count(nb), dtype=np.float32)
+    for name, off, shape in param_layout(nb):
+        size = math.prod(shape)
+        base = name.split(".")[-1]
+        if base in ("w1", "w2", "w3"):
+            key, sub = jax.random.split(key)
+            fan_in = shape[0]
+            std = math.sqrt(2.0 / fan_in)
+            vals = np.asarray(jax.random.normal(sub, (size,), dtype=jnp.float32)) * std
+        elif base in ("g1", "g2"):
+            vals = np.ones(size, dtype=np.float32)
+        else:  # biases, betas
+            vals = np.zeros(size, dtype=np.float32)
+        params[off : off + size] = vals
+    bn = np.zeros(bn_count(nb), dtype=np.float32)
+    for name, off, shape in bn_layout(nb):
+        size = math.prod(shape)
+        if name.split(".")[-1].startswith("v"):
+            bn[off : off + size] = 1.0
+    return params, bn
+
+
+def subnet_views(tensors: dict, sn: str) -> dict:
+    """Select one sub-network's tensors, stripping the prefix."""
+    return {k.split(".")[1]: v for k, v in tensors.items() if k.startswith(sn + ".")}
+
+
+# --------------------------------------------------------------------------
+# Masks
+# --------------------------------------------------------------------------
+
+def build_masks(cfg: NetConfig) -> dict[str, np.ndarray]:
+    """One mask set [N, nb] per (subnet, hidden layer); deterministic."""
+    out = {}
+    for si, sn in enumerate(ivim.SUBNETS):
+        for li in (1, 2):
+            seed = cfg.mask_seed + 1000 * si + li
+            out[f"{sn}.mask{li}"] = masks_mod.for_width(
+                cfg.nb, cfg.n_samples, cfg.scale, seed
+            )
+    return out
+
+
+# --------------------------------------------------------------------------
+# Inference forward
+# --------------------------------------------------------------------------
+
+def _hidden_block(x_s, w, b, g, be, mean, var, mask_s, *, use_pallas: bool, block_b: int):
+    """relu(bn(x @ w + b)) * mask over all samples; Pallas or jnp reference.
+
+    x_s: f32[N, B, Nin]; w: f32[Nin, Nout] (shared); mask_s: f32[N, Nout].
+    """
+    n = x_s.shape[0]
+    bcast = lambda a: jnp.broadcast_to(a, (n,) + a.shape)
+    args = (x_s, bcast(w), bcast(b), bcast(g), bcast(be), bcast(mean), bcast(var), mask_s)
+    if use_pallas:
+        return kmod.masked_linear(*args, block_b=block_b)
+    return masked_linear_ref(*args)
+
+
+def subnet_infer(p, bn, x, mask1, mask2, rng_name: str, *, use_pallas: bool, block_b: int):
+    """Forward one sub-network under all N masks (inference-mode BN).
+
+    x: f32[B, Nb]; mask1/mask2: f32[N, Nb].  Returns the converted
+    physical parameter, f32[N, B].
+    """
+    n = mask1.shape[0]
+    x_s = jnp.broadcast_to(x, (n,) + x.shape)
+    h = _hidden_block(x_s, p["w1"], p["b1"], p["g1"], p["be1"], bn["m1"], bn["v1"],
+                      mask1, use_pallas=use_pallas, block_b=block_b)
+    h = _hidden_block(h, p["w2"], p["b2"], p["g2"], p["be2"], bn["m2"], bn["v2"],
+                      mask2, use_pallas=use_pallas, block_b=block_b)
+    logits = jnp.einsum("nbi,i->nb", h, p["w3"]) + p["b3"]
+    sig = jax.nn.sigmoid(logits)
+    lo, hi = ivim.PARAM_RANGES[rng_name]
+    return lo + sig * (hi - lo)
+
+
+def infer_fn(cfg: NetConfig, mask_sets: dict[str, np.ndarray], bvals: np.ndarray):
+    """Build the AOT inference function.
+
+    Signature: (params_flat, bn_flat, signals[B, Nb]) ->
+        (d[N,B], dstar[N,B], f[N,B], s0[N,B], recon[N,B,Nb])
+    Masks and b-values are baked in as constants (fixed masks == the
+    paper's offline weight configuration).
+    """
+    const_masks = {k: jnp.asarray(v, dtype=jnp.float32) for k, v in mask_sets.items()}
+    b_const = jnp.asarray(bvals, dtype=jnp.float32)
+
+    def fn(params_flat, bn_flat, signals):
+        p = unpack_params(params_flat, cfg.nb)
+        bn = unpack_bn(bn_flat, cfg.nb)
+        outs = {}
+        for sn in ivim.SUBNETS:
+            outs[sn] = subnet_infer(
+                subnet_views(p, sn), subnet_views(bn, sn), signals,
+                const_masks[f"{sn}.mask1"], const_masks[f"{sn}.mask2"], sn,
+                use_pallas=cfg.use_pallas, block_b=min(64, signals.shape[0]),
+            )
+        recon = ivim.signal(b_const, outs["d"], outs["dstar"], outs["f"], outs["s0"])
+        return outs["d"], outs["dstar"], outs["f"], outs["s0"], recon
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# Training
+# --------------------------------------------------------------------------
+
+def _subnet_train(p, groups, mask1, mask2, rng_name):
+    """One sub-network over N mask groups with batch-stats BN.
+
+    groups: f32[N, Bg, Nb]; mask1/mask2: f32[N, Nb].
+    Returns (converted params [N, Bg], batch stats tuple of [N, Nb]).
+    """
+
+    def one(x, mv1, mv2):
+        h = x @ p["w1"] + p["b1"]
+        m1 = h.mean(axis=0)
+        v1 = h.var(axis=0)
+        h = (h - m1) * jax.lax.rsqrt(v1 + EPS) * p["g1"] + p["be1"]
+        h = jnp.maximum(h, 0.0) * mv1
+        h = h @ p["w2"] + p["b2"]
+        m2 = h.mean(axis=0)
+        v2 = h.var(axis=0)
+        h = (h - m2) * jax.lax.rsqrt(v2 + EPS) * p["g2"] + p["be2"]
+        h = jnp.maximum(h, 0.0) * mv2
+        logits = h @ p["w3"] + p["b3"][0]
+        return jax.nn.sigmoid(logits), (m1, v1, m2, v2)
+
+    sig, stats = jax.vmap(one)(groups, mask1, mask2)
+    lo, hi = ivim.PARAM_RANGES[rng_name]
+    return lo + sig * (hi - lo), stats
+
+
+def train_step_fn(cfg: NetConfig, mask_sets: dict[str, np.ndarray], bvals: np.ndarray):
+    """Build the AOT train-step.
+
+    Signature: (params, bn_state, m, v, step, signals[B, Nb]) ->
+        (params', bn_state', m', v', loss)
+    where B is divisible by N; group i of the batch trains under mask i.
+    Adam with the config hyper-parameters; BN running stats updated with
+    momentum BN_MOMENTUM from the mean of the per-group batch stats.
+    """
+    nb = cfg.nb
+    n = cfg.n_samples
+    const_masks = {k: jnp.asarray(v, dtype=jnp.float32) for k, v in mask_sets.items()}
+    b_const = jnp.asarray(bvals, dtype=jnp.float32)
+    b_layout = bn_layout(nb)
+
+    def loss_fn(params_flat, bn_flat, signals):
+        p = unpack_params(params_flat, nb)
+        bsz = signals.shape[0]
+        groups = signals.reshape(n, bsz // n, nb)
+        outs = {}
+        new_bn_parts = {}
+        for sn in ivim.SUBNETS:
+            vals, (m1, v1, m2, v2) = _subnet_train(
+                subnet_views(p, sn), groups,
+                const_masks[f"{sn}.mask1"], const_masks[f"{sn}.mask2"], sn,
+            )
+            outs[sn] = vals  # [N, Bg]
+            new_bn_parts[f"{sn}.m1"] = m1.mean(axis=0)
+            new_bn_parts[f"{sn}.v1"] = v1.mean(axis=0)
+            new_bn_parts[f"{sn}.m2"] = m2.mean(axis=0)
+            new_bn_parts[f"{sn}.v2"] = v2.mean(axis=0)
+        recon = ivim.signal(b_const, outs["d"], outs["dstar"], outs["f"], outs["s0"])
+        loss = jnp.mean((recon - groups) ** 2)
+
+        # Momentum update of the flat BN state.
+        bn_new = bn_flat
+        for name, off, shape in b_layout:
+            size = math.prod(shape)
+            cur = jax.lax.dynamic_slice(bn_flat, (off,), (size,))
+            upd = (1.0 - BN_MOMENTUM) * cur + BN_MOMENTUM * new_bn_parts[name].reshape(size)
+            bn_new = jax.lax.dynamic_update_slice(bn_new, upd, (off,))
+        return loss, bn_new
+
+    def train_step(params, bn_state, m, v, step, signals):
+        (loss, bn_new), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, bn_state, signals
+        )
+        t = step + 1.0
+        m_new = cfg.beta1 * m + (1.0 - cfg.beta1) * grads
+        v_new = cfg.beta2 * v + (1.0 - cfg.beta2) * grads * grads
+        m_hat = m_new / (1.0 - cfg.beta1 ** t)
+        v_hat = v_new / (1.0 - cfg.beta2 ** t)
+        params_new = params - cfg.lr * m_hat / (jnp.sqrt(v_hat) + cfg.adam_eps)
+        return params_new, bn_new, m_new, v_new, loss
+
+    return train_step

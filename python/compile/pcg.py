@@ -1,0 +1,87 @@
+"""PCG32 (XSH-RR 64/32) — deterministic RNG mirrored bit-exactly in Rust.
+
+The mask-based BayesNN relies on *fixed, pre-generated* masks (the paper's
+mask-zero-skipping optimisation assumes dropped positions are known
+offline).  To let the Rust coordinator and the Python compile path agree on
+the exact same masks, both sides implement the same PCG32 generator and the
+same partial Fisher-Yates sampler.  The Rust mirror is
+``rust/src/util/rng.rs``; golden-vector parity is tested on both sides
+(``python/tests/test_pcg.py`` and the Rust ``util::rng`` unit tests share
+the vectors below).
+"""
+
+from __future__ import annotations
+
+_MUL = 6364136223846793005
+_M64 = (1 << 64) - 1
+_DEFAULT_SEQ = 0xDA3E39CB94B95BDB
+
+
+class Pcg32:
+    """Minimal PCG32 with the reference stream/seeding procedure."""
+
+    def __init__(self, seed: int, seq: int = _DEFAULT_SEQ) -> None:
+        self.state = 0
+        self.inc = ((seq << 1) | 1) & _M64
+        self.next_u32()
+        self.state = (self.state + (seed & _M64)) & _M64
+        self.next_u32()
+
+    def next_u32(self) -> int:
+        old = self.state
+        self.state = (old * _MUL + self.inc) & _M64
+        xorshifted = (((old >> 18) ^ old) >> 27) & 0xFFFFFFFF
+        rot = old >> 59
+        return ((xorshifted >> rot) | (xorshifted << ((32 - rot) & 31))) & 0xFFFFFFFF
+
+    def below(self, n: int) -> int:
+        """Uniform integer in [0, n) — debiased via rejection sampling.
+
+        Mirrors ``pcg32_boundedrand``: reject draws below
+        ``(2^32 - n) % n`` so every residue class is equally likely.
+        """
+        if n <= 0:
+            raise ValueError("below() needs n >= 1")
+        threshold = ((1 << 32) - n) % n
+        while True:
+            r = self.next_u32()
+            if r >= threshold:
+                return r % n
+
+    def next_f32(self) -> float:
+        """Uniform float in [0, 1) with 24 bits of randomness (f32-exact)."""
+        return (self.next_u32() >> 8) * (1.0 / (1 << 24))
+
+    def choose(self, total: int, k: int) -> list[int]:
+        """k distinct indices from range(total) via partial Fisher-Yates.
+
+        Deterministic given the generator state; identical to the Rust
+        implementation (same swap order).
+        """
+        if k > total:
+            raise ValueError("cannot choose more than total")
+        idx = list(range(total))
+        for i in range(k):
+            j = i + self.below(total - i)
+            idx[i], idx[j] = idx[j], idx[i]
+        return idx[:k]
+
+
+# Golden vectors shared with the Rust tests (seed=42, default stream).
+GOLDEN_SEED_42_FIRST_8 = [
+    0x713066EA,
+    0x3C7A0D56,
+    0xF424216A,
+    0x25C89145,
+    0x43E7EF3E,
+    0x90CFF60C,
+    0x52320591,
+    0x53DFBCB8,
+]
+# Pcg32(42).choose(10, 4) == [2, 9, 4, 0]; Pcg32(7).below(5) == 3.
+GOLDEN_CHOOSE_42_10_4 = [2, 9, 4, 0]
+
+
+if __name__ == "__main__":  # pragma: no cover - tiny debug helper
+    r = Pcg32(42)
+    print([hex(r.next_u32()) for _ in range(8)])

@@ -1,0 +1,125 @@
+"""AOT round-trip: the exported HLO text must re-parse and reproduce the
+traced function's numerics through XLA's own CPU client — the same path the
+Rust runtime takes (HloModuleProto::from_text -> compile -> execute)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot, ivim, model
+
+ARTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def tiny_dir(tmp_path_factory):
+    # Prefer prebuilt artifacts (make artifacts); else export into tmp.
+    pre = os.path.join(ARTS, "tiny")
+    if os.path.exists(os.path.join(pre, "manifest.json")):
+        return pre
+    out = tmp_path_factory.mktemp("arts") / "tiny"
+    aot.export_variant("tiny", str(out))
+    return str(out)
+
+
+@pytest.fixture(scope="module")
+def manifest(tiny_dir):
+    with open(os.path.join(tiny_dir, "manifest.json")) as fh:
+        return json.load(fh)
+
+
+def test_manifest_consistency(manifest):
+    assert manifest["variant"] == "tiny"
+    assert manifest["nb"] == len(manifest["bvalues"]) == 11
+    assert manifest["param_count"] == model.param_count(11)
+    assert manifest["bn_count"] == model.bn_count(11)
+    # layouts contiguous
+    off = 0
+    for e in manifest["param_layout"]:
+        assert e["offset"] == off
+        off += int(np.prod(e["shape"]))
+    assert off == manifest["param_count"]
+    # masks: n_samples rows of nb entries in {0,1}
+    for k, flat in manifest["masks"].items():
+        assert len(flat) == manifest["n_samples"] * manifest["nb"], k
+        assert set(flat).issubset({0, 1})
+
+
+def test_init_files_match_layout(manifest, tiny_dir):
+    p = np.fromfile(os.path.join(tiny_dir, manifest["files"]["params_init"]),
+                    dtype="<f4")
+    b = np.fromfile(os.path.join(tiny_dir, manifest["files"]["bn_init"]),
+                    dtype="<f4")
+    assert p.shape[0] == manifest["param_count"]
+    assert b.shape[0] == manifest["bn_count"]
+    assert np.isfinite(p).all() and np.isfinite(b).all()
+
+
+def _exec_hlo(path, literals):
+    """Parse HLO text (the same text the Rust runtime loads), re-compile it
+    on XLA's CPU client, and execute — proving the artifact is valid and
+    numerically faithful independent of the jax trace that produced it."""
+    client = xc.make_cpu_client()
+    with open(path) as fh:
+        text = fh.read()
+    mod = xc._xla.hlo_module_from_text(text)
+    stablehlo = xc._xla.mlir.hlo_to_stablehlo(mod.as_serialized_hlo_module_proto())
+    devs = xc._xla.DeviceList(tuple(client.local_devices()))
+    exe = client.compile_and_load(stablehlo, devs, xc.CompileOptions())
+    bufs = [client.buffer_from_pyval(np.asarray(l)) for l in literals]
+    out = exe.execute(bufs)
+    return [np.asarray(o) for o in out]
+
+
+def test_infer_hlo_roundtrip(manifest, tiny_dir):
+    cfg = model.NetConfig(nb=manifest["nb"], n_samples=manifest["n_samples"],
+                          scale=manifest["scale"], mask_seed=manifest["mask_seed"])
+    masks = model.build_masks(cfg)
+    bvals = np.array(manifest["bvalues"])
+    params = np.fromfile(os.path.join(tiny_dir, "params_init.bin"), dtype="<f4")
+    bn = np.fromfile(os.path.join(tiny_dir, "bn_init.bin"), dtype="<f4")
+    sig, _ = ivim.synth_dataset(manifest["batch_infer"], bvals, snr=20, seed=9)
+
+    want = jax.jit(model.infer_fn(cfg, masks, bvals))(
+        jnp.asarray(params), jnp.asarray(bn), jnp.asarray(sig)
+    )
+    got = _exec_hlo(os.path.join(tiny_dir, "infer.hlo.txt"), [params, bn, sig])
+    assert len(got) == len(want)
+    # Text round-trip recompiles with different fusion decisions, so allow
+    # fp-reassociation-level drift (observed max ~1e-4 absolute).
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, np.asarray(w), rtol=2e-2, atol=1e-3)
+
+
+def test_train_hlo_roundtrip(manifest, tiny_dir):
+    cfg = model.NetConfig(nb=manifest["nb"], n_samples=manifest["n_samples"],
+                          scale=manifest["scale"], mask_seed=manifest["mask_seed"])
+    masks = model.build_masks(cfg)
+    bvals = np.array(manifest["bvalues"])
+    params = np.fromfile(os.path.join(tiny_dir, "params_init.bin"), dtype="<f4")
+    bn = np.fromfile(os.path.join(tiny_dir, "bn_init.bin"), dtype="<f4")
+    sig, _ = ivim.synth_dataset(manifest["batch_train"], bvals, snr=20, seed=10)
+    z = np.zeros_like(params)
+    step = np.float32(0.0)
+
+    want = jax.jit(model.train_step_fn(cfg, masks, bvals))(
+        jnp.asarray(params), jnp.asarray(bn), jnp.asarray(z), jnp.asarray(z),
+        jnp.float32(0), jnp.asarray(sig),
+    )
+    got = _exec_hlo(os.path.join(tiny_dir, "train.hlo.txt"),
+                    [params, bn, z, z, step, sig])
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, np.asarray(w), rtol=2e-2, atol=1e-3)
+
+
+def test_hlo_has_no_custom_calls(tiny_dir):
+    # CPU PJRT cannot execute Mosaic custom-calls; interpret=True must have
+    # lowered the Pallas kernel into plain HLO.
+    for f in ("infer.hlo.txt", "train.hlo.txt"):
+        with open(os.path.join(tiny_dir, f)) as fh:
+            assert "custom-call" not in fh.read(), f

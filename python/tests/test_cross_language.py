@@ -1,0 +1,65 @@
+"""Cross-language parity: the Rust mask generator must agree bit-for-bit
+with the Python generator for arbitrary (width, n, scale, seed) — not
+just the configurations baked into the artifacts.
+
+Drives the `repro masks` CLI when the release binary exists (skipped
+otherwise, e.g. before `make build`)."""
+
+import os
+import re
+import subprocess
+
+import numpy as np
+import pytest
+
+from compile import masks
+
+REPRO = os.path.join(os.path.dirname(__file__), "..", "..", "target", "release", "repro")
+
+
+def _rust_masks(width, n, scale, seed):
+    out = subprocess.run(
+        [REPRO, "masks", "--width", str(width), "--n", str(n),
+         "--scale", str(scale), "--seed", str(seed)],
+        capture_output=True, text=True, timeout=60,
+    )
+    assert out.returncode == 0, out.stderr
+    rows = []
+    for line in out.stdout.splitlines():
+        m = re.match(r"\s*\[\d+\] ([#.]+)", line)
+        if m:
+            rows.append([1 if c == "#" else 0 for c in m.group(1)])
+    return np.array(rows, dtype=np.uint8)
+
+
+needs_binary = pytest.mark.skipif(
+    not os.path.exists(REPRO), reason="release binary not built"
+)
+
+
+@needs_binary
+@pytest.mark.parametrize(
+    "width,n,scale,seed",
+    [
+        (11, 4, 2.0, 2024),
+        (16, 4, 1.8, 7),
+        (104, 4, 2.0, 3024),   # the paper-variant layer width
+        (7, 2, 3.0, 0),        # the hard n=2 family
+        (24, 8, 2.5, 99),
+    ],
+)
+def test_rust_masks_match_python(width, n, scale, seed):
+    want = masks.for_width(width, n, scale, seed)
+    got = _rust_masks(width, n, scale, seed)
+    assert got.shape == want.shape
+    np.testing.assert_array_equal(got, want)
+
+
+@needs_binary
+def test_repro_info_passes_golden_and_parity_gates():
+    out = subprocess.run(
+        [REPRO, "info", "--variant", "tiny"], capture_output=True, text=True, timeout=300
+    )
+    assert out.returncode == 0, out.stderr
+    assert "mask parity    : OK" in out.stdout
+    assert "golden check   : OK" in out.stdout

@@ -1,0 +1,96 @@
+"""IVIM signal model & synthetic-data protocol tests (paper eq. 1, §VI-A)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import ivim
+
+
+def test_signal_at_b0_equals_s0():
+    s = ivim.signal_np(np.array([0.0]), np.array([0.002]), np.array([0.05]),
+                       np.array([0.3]), np.array([1.1]))
+    np.testing.assert_allclose(s, [[1.1]], rtol=1e-12)
+
+
+def test_signal_monotone_decreasing_in_b():
+    b = np.linspace(0, 800, 50)
+    s = ivim.signal_np(b, np.array([0.002]), np.array([0.05]), np.array([0.3]),
+                       np.array([1.0]))[0]
+    assert (np.diff(s) < 0).all()
+
+
+def test_signal_biexponential_limits():
+    # f=0: pure diffusion; f=1: pure perfusion.
+    b = np.array([0.0, 100.0, 500.0])
+    d, dstar = 0.001, 0.08
+    s_f0 = ivim.signal_np(b, np.array([d]), np.array([dstar]), np.array([0.0]),
+                          np.array([1.0]))[0]
+    np.testing.assert_allclose(s_f0, np.exp(-b * d), rtol=1e-12)
+    s_f1 = ivim.signal_np(b, np.array([d]), np.array([dstar]), np.array([1.0]),
+                          np.array([1.0]))[0]
+    np.testing.assert_allclose(s_f1, np.exp(-b * dstar), rtol=1e-12)
+
+
+def test_jnp_and_np_signals_agree():
+    rng = np.random.default_rng(0)
+    gt = ivim.draw_params(16, rng)
+    b = ivim.bvalues_tiny()
+    s_np = ivim.signal_np(b, gt["d"], gt["dstar"], gt["f"], gt["s0"])
+    s_j = np.asarray(ivim.signal(b, gt["d"], gt["dstar"], gt["f"], gt["s0"]))
+    np.testing.assert_allclose(s_np, s_j, rtol=1e-5)
+
+
+def test_bvalue_protocols():
+    assert len(ivim.bvalues_tiny()) == 11
+    bp = ivim.bvalues_paper()
+    assert len(bp) == 104  # the published pancreatic protocol size
+    assert bp.min() == 0 and bp.max() == 800
+    assert (np.diff(bp) >= 0).all()
+
+
+def test_synth_dataset_shapes_and_ranges():
+    b = ivim.bvalues_tiny()
+    sig, gt = ivim.synth_dataset(100, b, snr=20, seed=0)
+    assert sig.shape == (100, 11)
+    assert sig.dtype == np.float32
+    for k, (lo, hi) in ivim.PARAM_RANGES.items():
+        assert (gt[k] >= lo).all() and (gt[k] <= hi).all()
+
+
+def test_synth_noise_scales_with_snr():
+    # Higher SNR -> signals closer to the clean model.
+    b = ivim.bvalues_tiny()
+    rng = np.random.default_rng(0)
+
+    def resid(snr):
+        sig, gt = ivim.synth_dataset(2000, b, snr=snr, seed=1)
+        clean = ivim.signal_np(b, gt["d"], gt["dstar"], gt["f"], gt["s0"])
+        clean_norm = clean / gt["s0"][:, None]
+        return np.sqrt(np.mean((sig - clean_norm) ** 2))
+
+    assert resid(50) < resid(15) < resid(5)
+
+
+def test_synth_deterministic_in_seed():
+    b = ivim.bvalues_tiny()
+    a, _ = ivim.synth_dataset(10, b, snr=20, seed=3)
+    c, _ = ivim.synth_dataset(10, b, snr=20, seed=3)
+    d, _ = ivim.synth_dataset(10, b, snr=20, seed=4)
+    assert (a == c).all()
+    assert not (a == d).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    d=st.floats(min_value=1e-4, max_value=0.005),
+    dstar=st.floats(min_value=0.005, max_value=0.2),
+    f=st.floats(min_value=0.0, max_value=0.7),
+    s0=st.floats(min_value=0.8, max_value=1.2),
+)
+def test_signal_bounded_property(d, dstar, f, s0):
+    b = ivim.bvalues_tiny()
+    s = ivim.signal_np(b, np.array([d]), np.array([dstar]), np.array([f]),
+                       np.array([s0]))[0]
+    assert (s <= s0 + 1e-9).all()
+    assert (s >= 0.0).all()

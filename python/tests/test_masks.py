@@ -1,0 +1,76 @@
+"""Masksembles generator invariants (paper §II-C / §IV)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import masks
+from compile.pcg import Pcg32
+
+
+def test_for_width_exact_width_and_ones():
+    m = masks.for_width(11, 4, 2.0, seed=2024)
+    assert m.shape == (4, 11)
+    ones = m.sum(axis=1)
+    # every mask keeps the same number of neurons
+    assert len(set(ones.tolist())) == 1
+    # roughly width/scale ones per mask
+    assert 3 <= ones[0] <= 8
+
+
+def test_deterministic_in_seed():
+    a = masks.for_width(16, 4, 1.8, seed=7)
+    b = masks.for_width(16, 4, 1.8, seed=7)
+    c = masks.for_width(16, 4, 1.8, seed=8)
+    assert (a == b).all()
+    assert not (a == c).all()
+
+
+def test_every_column_used():
+    # By construction, unused columns are dropped, so every position is
+    # kept by at least one mask (no permanently dead neuron).
+    m = masks.for_width(24, 4, 2.5, seed=3)
+    assert m.any(axis=0).all()
+
+
+def test_scale_one_is_all_ones():
+    m = masks.for_width(10, 4, 1.0, seed=0)
+    assert (m == 1).all()
+
+
+def test_overlap_decreases_with_scale():
+    # Larger scale -> less correlated masks (paper: closer to Deep
+    # Ensembles). Overlap is monotone on average; compare extremes.
+    low = masks.overlap(masks.for_width(64, 4, 1.3, seed=11))
+    high = masks.overlap(masks.for_width(64, 4, 4.0, seed=11))
+    assert high < low
+
+
+def test_expected_width_formula():
+    # n -> infinity covers all positions: expected width -> m*s.
+    assert masks.expected_width(10, 1000, 2.0) == 20
+    # single mask keeps exactly m positions
+    assert masks.expected_width(10, 1, 3.0) == 10
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    c=st.integers(min_value=4, max_value=64),
+    n=st.sampled_from([2, 4, 8]),
+    scale=st.floats(min_value=1.2, max_value=3.5),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_for_width_property(c, n, scale, seed):
+    m = masks.for_width(c, n, scale, seed)
+    assert m.shape == (n, c)
+    assert set(np.unique(m)).issubset({0, 1})
+    ones = m.sum(axis=1)
+    assert len(set(ones.tolist())) == 1
+    assert 1 <= ones[0] <= c
+    assert m.any(axis=0).all()
+
+
+def test_generate_masks_width_matches_expected():
+    rng = Pcg32(5)
+    m = masks.generate_masks(6, 4, 2.0, rng)
+    assert m.shape[1] == masks.expected_width(6, 4, 2.0)

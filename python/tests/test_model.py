@@ -1,0 +1,137 @@
+"""L2 model tests: shapes, conversion ranges, pallas-vs-ref forward parity,
+training-loss decrease, BN state updates."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import ivim, model
+
+CFG = model.NetConfig(nb=11, n_samples=4, use_pallas=True)
+CFG_REF = model.NetConfig(nb=11, n_samples=4, use_pallas=False)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    masks = model.build_masks(CFG)
+    params, bn = model.init_params(CFG, seed=0)
+    bvals = ivim.bvalues_tiny()
+    sig, gt = ivim.synth_dataset(8, bvals, snr=20, seed=0)
+    return masks, params, bn, bvals, sig, gt
+
+
+def test_layout_contiguous_and_disjoint():
+    lay = model.param_layout(11)
+    off = 0
+    for name, o, shape in lay:
+        assert o == off, f"{name} not contiguous"
+        off += int(np.prod(shape))
+    assert off == model.param_count(11)
+    blay = model.bn_layout(11)
+    off = 0
+    for name, o, shape in blay:
+        assert o == off
+        off += int(np.prod(shape))
+    assert off == model.bn_count(11)
+
+
+def test_init_params_stats():
+    params, bn = model.init_params(CFG, seed=0)
+    assert params.dtype == np.float32 and bn.dtype == np.float32
+    p = model.unpack_params(jnp.asarray(params), 11)
+    # gammas init to 1, biases to 0
+    assert np.allclose(np.asarray(p["d.g1"]), 1.0)
+    assert np.allclose(np.asarray(p["d.b1"]), 0.0)
+    # weights He-scaled: std ~ sqrt(2/fan_in)
+    w = np.asarray(p["d.w1"])
+    assert 0.2 < w.std() < 0.8
+    b = model.unpack_bn(jnp.asarray(bn), 11)
+    assert np.allclose(np.asarray(b["d.v1"]), 1.0)
+    assert np.allclose(np.asarray(b["d.m1"]), 0.0)
+
+
+def test_infer_shapes_and_ranges(setup):
+    masks, params, bn, bvals, sig, gt = setup
+    fn = jax.jit(model.infer_fn(CFG, masks, bvals))
+    d, dstar, f, s0, recon = fn(jnp.asarray(params), jnp.asarray(bn), jnp.asarray(sig))
+    n, bsz = CFG.n_samples, sig.shape[0]
+    assert d.shape == (n, bsz) and recon.shape == (n, bsz, CFG.nb)
+    for name, arr in zip(("d", "dstar", "f", "s0"), (d, dstar, f, s0)):
+        lo, hi = ivim.PARAM_RANGES[name]
+        a = np.asarray(arr)
+        assert (a >= lo).all() and (a <= hi).all(), name
+
+
+def test_pallas_and_ref_forward_agree(setup):
+    masks, params, bn, bvals, sig, _ = setup
+    args = (jnp.asarray(params), jnp.asarray(bn), jnp.asarray(sig))
+    out_p = jax.jit(model.infer_fn(CFG, masks, bvals))(*args)
+    out_r = jax.jit(model.infer_fn(CFG_REF, masks, bvals))(*args)
+    for a, b in zip(out_p, out_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_samples_differ_across_masks(setup):
+    # Different masks must produce different predictions (that is where the
+    # uncertainty signal comes from).
+    masks, params, bn, bvals, sig, _ = setup
+    fn = jax.jit(model.infer_fn(CFG, masks, bvals))
+    d, *_ = fn(jnp.asarray(params), jnp.asarray(bn), jnp.asarray(sig))
+    d = np.asarray(d)
+    assert np.std(d, axis=0).max() > 0
+
+
+def test_train_step_decreases_loss(setup):
+    masks, params, bn, bvals, _, _ = setup
+    ts = jax.jit(model.train_step_fn(CFG, masks, bvals))
+    sig, _ = ivim.synth_dataset(32, bvals, snr=30, seed=5)
+    p = jnp.asarray(params)
+    b = jnp.asarray(bn)
+    m = jnp.zeros_like(p)
+    v = jnp.zeros_like(p)
+    losses = []
+    for i in range(30):
+        p, b, m, v, loss = ts(p, b, m, v, jnp.float32(i), jnp.asarray(sig))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses[:3] + losses[-3:]
+
+
+def test_train_step_updates_bn_state(setup):
+    masks, params, bn, bvals, _, _ = setup
+    ts = jax.jit(model.train_step_fn(CFG, masks, bvals))
+    sig, _ = ivim.synth_dataset(32, bvals, snr=30, seed=6)
+    p = jnp.asarray(params)
+    b0 = jnp.asarray(bn)
+    m = jnp.zeros_like(p)
+    v = jnp.zeros_like(p)
+    _, b1, _, _, _ = ts(p, b0, m, v, jnp.float32(0), jnp.asarray(sig))
+    assert not np.allclose(np.asarray(b0), np.asarray(b1))
+
+
+def test_train_step_finite_grads(setup):
+    masks, params, bn, bvals, _, _ = setup
+    ts = jax.jit(model.train_step_fn(CFG, masks, bvals))
+    sig, _ = ivim.synth_dataset(32, bvals, snr=5, seed=7)  # worst-case noise
+    p = jnp.asarray(params)
+    out = ts(p, jnp.asarray(bn), jnp.zeros_like(p), jnp.zeros_like(p),
+             jnp.float32(0), jnp.asarray(sig))
+    for arr in out:
+        assert np.isfinite(np.asarray(arr)).all()
+
+
+def test_mask_groups_see_own_mask(setup):
+    # Training splits the batch into N groups; verify group boundaries by
+    # checking that permuting voxels WITHIN a group leaves loss unchanged
+    # while swapping across groups changes it.
+    masks, params, bn, bvals, _, _ = setup
+    ts = model.train_step_fn(CFG, masks, bvals)
+    sig, _ = ivim.synth_dataset(32, bvals, snr=20, seed=8)
+    p = jnp.asarray(params)
+    args = (p, jnp.asarray(bn), jnp.zeros_like(p), jnp.zeros_like(p), jnp.float32(0))
+
+    loss_of = lambda s: float(jax.jit(ts)(*args, jnp.asarray(s))[4])
+    base = loss_of(sig)
+    within = sig.copy()
+    within[[0, 1]] = within[[1, 0]]  # both in group 0 (rows 0..7)
+    assert abs(loss_of(within) - base) < 1e-6

@@ -1,0 +1,52 @@
+"""PCG32 golden vectors — shared bit-exactly with rust/src/util/rng.rs."""
+
+from compile.pcg import (
+    GOLDEN_CHOOSE_42_10_4,
+    GOLDEN_SEED_42_FIRST_8,
+    Pcg32,
+)
+
+
+def test_golden_stream():
+    r = Pcg32(42)
+    assert [r.next_u32() for _ in range(8)] == GOLDEN_SEED_42_FIRST_8
+
+
+def test_golden_choose():
+    assert Pcg32(42).choose(10, 4) == GOLDEN_CHOOSE_42_10_4
+
+
+def test_below_in_range():
+    r = Pcg32(7)
+    for n in (1, 2, 3, 5, 17, 1000):
+        for _ in range(50):
+            assert 0 <= r.below(n) < n
+
+
+def test_below_debiased_small():
+    # All residues reachable for a small modulus.
+    r = Pcg32(123)
+    seen = {r.below(5) for _ in range(500)}
+    assert seen == {0, 1, 2, 3, 4}
+
+
+def test_choose_distinct_and_complete():
+    r = Pcg32(9)
+    for total, k in [(1, 1), (5, 5), (20, 7), (104, 52)]:
+        got = r.choose(total, k)
+        assert len(got) == k
+        assert len(set(got)) == k
+        assert all(0 <= g < total for g in got)
+
+
+def test_streams_differ_by_seed():
+    a = [Pcg32(1).next_u32() for _ in range(4)]
+    b = [Pcg32(2).next_u32() for _ in range(4)]
+    assert a != b
+
+
+def test_f32_unit_interval():
+    r = Pcg32(5)
+    vals = [r.next_f32() for _ in range(200)]
+    assert all(0.0 <= v < 1.0 for v in vals)
+    assert max(vals) > 0.5 and min(vals) < 0.5

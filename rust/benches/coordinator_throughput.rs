@@ -1,0 +1,75 @@
+//! Bench: coordinator end-to-end throughput/latency under load — the
+//! §VI-C real-time requirement (0.8 ms/batch) exercised at the serving
+//! layer, plus the batch-size trade-off.
+
+use std::time::Duration;
+use uivim::bench::fmt_time;
+use uivim::coordinator::{Coordinator, CoordinatorConfig, VoxelRequest};
+use uivim::experiments::load_manifest;
+use uivim::infer::native::NativeEngine;
+use uivim::infer::Engine;
+use uivim::ivim::synth::synth_dataset;
+use uivim::metrics::report::Table;
+use uivim::model::Weights;
+use uivim::util::Timer;
+
+fn main() {
+    let fast = std::env::var("UIVIM_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let variant = std::env::var("UIVIM_VARIANT").unwrap_or_else(|_| "tiny".into());
+    let man = match load_manifest(&variant) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            return;
+        }
+    };
+    let n_requests = if fast { 500 } else { 5000 };
+    let mut table = Table::new(&[
+        "batch", "throughput (vox/s)", "mean latency", "p99 latency", "batches", "padded",
+    ]);
+
+    for batch in [8usize, 32, 64] {
+        let man2 = man.clone();
+        let mut cfg = CoordinatorConfig::for_batch(man.nb, batch);
+        cfg.batcher.max_wait = Duration::from_millis(1);
+        cfg.batcher.queue_capacity = n_requests + 1;
+        let coord = Coordinator::start(cfg, move || {
+            let w = Weights::load_init(&man2)?;
+            Ok(Box::new(NativeEngine::with_batch(&man2, &w, batch)?) as Box<dyn Engine>)
+        })
+        .expect("coordinator");
+
+        let ds = synth_dataset(n_requests, &man.bvalues, 20.0, 41);
+        let t = Timer::start();
+        let rxs: Vec<_> = (0..n_requests)
+            .map(|i| {
+                coord
+                    .submit(VoxelRequest {
+                        id: i as u64,
+                        signals: ds.voxel(i).to_vec(),
+                    })
+                    .expect("queue sized for the run")
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().expect("response");
+        }
+        let el = t.elapsed_s();
+        let snap = coord.metrics().snapshot();
+        table.row(&[
+            batch.to_string(),
+            format!("{:.0}", n_requests as f64 / el),
+            fmt_time(snap.mean_request_us / 1e6),
+            fmt_time(snap.p99_request_us / 1e6),
+            snap.batches.to_string(),
+            snap.padded_rows.to_string(),
+        ]);
+        coord.shutdown();
+    }
+
+    println!(
+        "\n== Coordinator throughput ({} variant, {} requests) ==\n",
+        man.variant, n_requests
+    );
+    println!("{}", table.to_text());
+}

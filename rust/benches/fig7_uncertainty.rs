@@ -1,0 +1,33 @@
+//! Bench: paper Fig. 7 — relative uncertainty (std/mean) of predicted
+//! parameters vs evaluation SNR, plus calibration correlation.
+//!
+//! Env: `UIVIM_VARIANT`, `UIVIM_BENCH_FAST=1`.
+
+use uivim::experiments::{fig67, load_manifest, resolve_weights, EngineKind};
+use uivim::runtime::Runtime;
+
+fn main() {
+    let fast = std::env::var("UIVIM_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let variant = std::env::var("UIVIM_VARIANT").unwrap_or_else(|_| "tiny".into());
+    let man = match load_manifest(&variant) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            return;
+        }
+    };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let steps = if fast { 150 } else { 500 };
+    let w = resolve_weights(&man, &rt, None, steps, 20.0).expect("weights");
+    let cfg = fig67::SweepConfig {
+        n_voxels: if fast { 500 } else { 2000 },
+        engine: EngineKind::Native,
+        ..Default::default()
+    };
+    let rows = fig67::snr_sweep(&man, &w, Some(&rt), &cfg).expect("sweep");
+    println!(
+        "\n== Fig. 7 ({} variant, {} voxels/SNR) ==\n",
+        man.variant, cfg.n_voxels
+    );
+    println!("{}", fig67::render_fig7(&rows));
+}

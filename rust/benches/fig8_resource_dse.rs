@@ -1,0 +1,24 @@
+//! Bench: paper Fig. 8 — resource utilisation & performance vs PE count
+//! {4, 8, 16, 32, 64}, with the eq. (2) analytic-model cross-check.
+
+use uivim::experiments::{fig8, load_manifest};
+use uivim::model::Weights;
+
+fn main() {
+    let variant = std::env::var("UIVIM_VARIANT").unwrap_or_else(|_| "paper".into());
+    let man = match load_manifest(&variant) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            return;
+        }
+    };
+    let w = Weights::load_init(&man).expect("init weights");
+    let (points, ok) = fig8::fig8(&man, &w, &fig8::PAPER_PE_COUNTS).expect("fig8");
+    println!("\n== Fig. 8 ({} variant) ==\n", man.variant);
+    println!("{}", fig8::render(&points, &ok));
+    assert!(
+        ok.iter().all(|&b| b),
+        "eq. (2) analytic model must match the cycle simulator"
+    );
+}

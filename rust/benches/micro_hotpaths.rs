@@ -1,0 +1,90 @@
+//! Bench: micro-benchmarks of the hot paths — fixed-point ops, PU dot
+//! products, the native hidden block, mask generation and the synthetic
+//! data generator.  These feed the EXPERIMENTS.md §Perf iteration log.
+
+use uivim::accel::fixed::{quantize_slice, Fx};
+use uivim::accel::pu::{pu_dot, PuConfig};
+use uivim::bench::{bench, black_box, config_from_env, print_results};
+use uivim::experiments::load_manifest;
+use uivim::infer::native::NativeEngine;
+use uivim::infer::Engine;
+use uivim::ivim::synth::synth_dataset;
+use uivim::masks;
+use uivim::model::Weights;
+use uivim::util::rng::Pcg32;
+
+fn main() {
+    let cfg = config_from_env();
+    let mut results = Vec::new();
+
+    // fixed-point multiply-accumulate chain
+    let xs: Vec<Fx> = (0..1024).map(|i| Fx::from_f32((i % 13) as f32 * 0.01)).collect();
+    results.push(bench("fx_mac_1024", &cfg, || {
+        let mut acc = Fx::ZERO;
+        for w in xs.windows(2) {
+            acc = acc.add(w[0].mul(w[1]));
+        }
+        black_box(acc);
+    }));
+
+    // PU dot product at paper width
+    let pu = PuConfig::default();
+    let w: Vec<Fx> = quantize_slice(&vec![0.01f32; 104]);
+    let x: Vec<Fx> = quantize_slice(&vec![0.5f32; 104]);
+    results.push(bench("pu_dot_104", &cfg, || {
+        black_box(pu_dot(&pu, &x, &w, Fx::ZERO));
+    }));
+
+    // mask generation (paper width)
+    let mut seed = 0u64;
+    results.push(bench("masks_for_width_104", &cfg, || {
+        seed += 1;
+        black_box(masks::for_width(104, 4, 2.0, seed).unwrap());
+    }));
+
+    // synthetic data generator
+    let bvals = uivim::ivim::bvalues_paper();
+    results.push(bench("synth_1000_voxels", &cfg, || {
+        black_box(synth_dataset(1000, &bvals, 20.0, 7));
+    }));
+
+    // PCG throughput
+    let mut rng = Pcg32::new(3);
+    results.push(bench("pcg32_normal_10k", &cfg, || {
+        let mut s = 0.0;
+        for _ in 0..10_000 {
+            s += rng.normal();
+        }
+        black_box(s);
+    }));
+
+    // classical fit baselines (paper §II-B motivation: "long fitting
+    // times" of least squares vs the network's one-pass inference)
+    let bt = uivim::ivim::bvalues_tiny();
+    let ds1 = synth_dataset(1, &bt, 20.0, 9);
+    let sig: Vec<f64> = ds1.voxel(0).iter().map(|&v| v as f64).collect();
+    results.push(bench("fit_segmented_1_voxel", &cfg, || {
+        black_box(uivim::fit::segmented_fit(&bt, &sig, 200.0));
+    }));
+    results.push(bench("fit_lm_1_voxel", &cfg, || {
+        black_box(uivim::fit::levenberg_marquardt(&bt, &sig));
+    }));
+
+    // native engine batch at each variant (if artifacts exist)
+    for variant in ["tiny", "paper"] {
+        if let Ok(man) = load_manifest(variant) {
+            let w = Weights::load_init(&man).unwrap();
+            let mut eng = NativeEngine::new(&man, &w).unwrap();
+            let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 8);
+            results.push(bench(
+                &format!("native_infer_batch_{variant}"),
+                &cfg,
+                || {
+                    black_box(eng.infer_batch(&ds.signals).unwrap());
+                },
+            ));
+        }
+    }
+
+    print_results("micro hot paths", &results);
+}

@@ -1,0 +1,82 @@
+//! Bench: §V-D ablation — batch-level vs sampling-level weight loading
+//! (paper Fig. 5): cycles, weight-load traffic, power and energy per
+//! batch, plus the mask-zero-skipping storage ablation (paper Fig. 4).
+
+use uivim::accel::power::estimate;
+use uivim::accel::resource::usage;
+use uivim::accel::{AccelConfig, AccelSimulator, Scheme};
+use uivim::experiments::load_manifest;
+use uivim::ivim::synth::synth_dataset;
+use uivim::metrics::report::Table;
+use uivim::model::Weights;
+
+fn main() {
+    let variant = std::env::var("UIVIM_VARIANT").unwrap_or_else(|_| "paper".into());
+    let man = match load_manifest(&variant) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            return;
+        }
+    };
+    let w = Weights::load_init(&man).expect("weights");
+    let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 51);
+    let cfg = AccelConfig {
+        batch: man.batch_infer,
+        ..Default::default()
+    };
+
+    let mut t = Table::new(&[
+        "scheme", "cycles", "weight loads", "words loaded", "ms/batch", "power (W)",
+        "energy (mJ/batch)",
+    ]);
+    for scheme in [Scheme::BatchLevel, Scheme::SamplingLevel] {
+        let mut sim = AccelSimulator::new(&man, &w, cfg, scheme).expect("sim");
+        let (_, st) = sim.infer_batch_stats(&ds.signals).expect("run");
+        let u = usage(&cfg, man.nb, man.n_samples, &sim.weight_stores());
+        let p = estimate(&cfg, &u, &st, false);
+        t.row(&[
+            scheme.name().to_string(),
+            st.cycles.to_string(),
+            st.weight_loads.to_string(),
+            st.weight_words_loaded.to_string(),
+            format!("{:.4}", st.seconds(cfg.clock_hz) * 1e3),
+            format!("{:.2}", p.watts),
+            format!("{:.3}", p.energy_mj()),
+        ]);
+    }
+    println!("\n== Scheme ablation ({} variant, Fig. 5) ==\n", man.variant);
+    println!("{}", t.to_text());
+
+    // mask-zero skipping storage ablation (Fig. 4)
+    let sim = AccelSimulator::new(&man, &w, cfg, Scheme::BatchLevel).expect("sim");
+    let mut dense = 0usize;
+    let mut skipped = 0usize;
+    for s in sim.weight_stores() {
+        dense += s.total_dense_words();
+        skipped += s.total_skipped_words();
+    }
+    println!(
+        "mask-zero skipping: {} -> {} weight words ({:.1}% saved; MC-Dropout designs \
+         additionally need the runtime Bernoulli sampler, Fig. 4 left)\n",
+        dense,
+        skipped,
+        100.0 * (1.0 - skipped as f64 / dense as f64)
+    );
+
+    // overlap headroom (EXPERIMENTS.md §Perf #5)
+    let over = AccelConfig {
+        overlap_loads: true,
+        ..cfg
+    };
+    let mut sim_o = AccelSimulator::new(&man, &w, over, Scheme::BatchLevel).expect("sim");
+    let (_, st_o) = sim_o.infer_batch_stats(&ds.signals).expect("run");
+    let mut sim_b = AccelSimulator::new(&man, &w, cfg, Scheme::BatchLevel).expect("sim");
+    let (_, st_b) = sim_b.infer_batch_stats(&ds.signals).expect("run");
+    println!(
+        "double-buffered load/compute overlap: {} -> {} cycles ({:.2}x headroom)",
+        st_b.cycles,
+        st_o.cycles,
+        st_b.cycles as f64 / st_o.cycles as f64
+    );
+}

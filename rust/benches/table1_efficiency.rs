@@ -1,0 +1,22 @@
+//! Bench: paper Table I — energy efficiency (GOP/s/W) of the simulated
+//! accelerator vs the four prior FPGA BayesNN designs (quoted rows).
+//!
+//! Run: `cargo bench --bench table1_efficiency`
+
+use uivim::experiments::{load_manifest, tables};
+use uivim::model::Weights;
+
+fn main() {
+    let variant = std::env::var("UIVIM_VARIANT").unwrap_or_else(|_| "paper".into());
+    let man = match load_manifest(&variant) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            return;
+        }
+    };
+    let w = Weights::load_init(&man).expect("init weights");
+    let rows = tables::table1(&man, &w).expect("table1");
+    println!("\n== Table I ({} variant) ==\n", man.variant);
+    println!("{}", tables::render_table1(&rows));
+}

@@ -1,0 +1,30 @@
+//! Bench: paper Table II — latency / power / energy per batch across
+//! platforms (CPU native, CPU PJRT, derived GPU, simulated FPGA).
+//!
+//! Run: `cargo bench --bench table2_platforms`
+//! Env: `UIVIM_BENCH_FAST=1` for a quick pass,
+//!      `UIVIM_VARIANT=tiny|paper` (default paper).
+
+use uivim::bench::config_from_env;
+use uivim::experiments::{load_manifest, tables};
+use uivim::model::Weights;
+use uivim::runtime::Runtime;
+
+fn main() {
+    let variant = std::env::var("UIVIM_VARIANT").unwrap_or_else(|_| "paper".into());
+    let man = match load_manifest(&variant) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            return;
+        }
+    };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let w = Weights::load_init(&man).expect("init weights");
+    let t = tables::table2(&man, &w, &rt, &config_from_env()).expect("table2");
+    println!(
+        "\n== Table II ({} variant, batch {} x {} b-values) ==\n",
+        man.variant, man.batch_infer, man.nb
+    );
+    println!("{}", tables::render_table2(&t));
+}

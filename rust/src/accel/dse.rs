@@ -1,0 +1,108 @@
+//! Design-space exploration over the PE count — regenerates paper Fig. 8
+//! ("Relationship between resource utilization and performance") and the
+//! parallelism trade-off discussion of §VI-C.
+
+use super::power::{estimate, PowerReport};
+use super::resource::{usage, AccelConfig, ResourceUsage};
+use super::schemes::Scheme;
+use super::sim::AccelSimulator;
+use crate::model::{Manifest, Weights};
+
+/// One row of the Fig. 8 sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct DsePoint {
+    pub n_pe: usize,
+    pub usage: ResourceUsage,
+    pub batch_ms: f64,
+    pub voxels_per_s: f64,
+    pub power: PowerReport,
+    pub fits: bool,
+}
+
+/// Sweep the PE counts (paper plots 4..64) on a reference batch.
+pub fn sweep(
+    man: &Manifest,
+    weights: &Weights,
+    pe_counts: &[usize],
+    scheme: Scheme,
+    signals: &[f32],
+) -> anyhow::Result<Vec<DsePoint>> {
+    let mut rows = Vec::with_capacity(pe_counts.len());
+    for &n_pe in pe_counts {
+        let cfg = AccelConfig {
+            n_pe,
+            batch: man.batch_infer,
+            ..Default::default()
+        };
+        let mut sim = AccelSimulator::new(man, weights, cfg, scheme)?;
+        let (_, stats) = sim.infer_batch_stats(signals)?;
+        let u = usage(&cfg, man.nb, man.n_samples, &sim.weight_stores());
+        let p = estimate(&cfg, &u, &stats, false);
+        let batch_ms = stats.seconds(cfg.clock_hz) * 1e3;
+        rows.push(DsePoint {
+            n_pe,
+            usage: u,
+            batch_ms,
+            voxels_per_s: man.batch_infer as f64 / (batch_ms / 1e3),
+            power: p,
+            fits: u.fits(),
+        });
+    }
+    Ok(rows)
+}
+
+/// Pick the fastest configuration that fits the device — the §VI-C
+/// guidance ("parallelism can be determined according to resources
+/// available on chip and performance requirements").
+pub fn best_fitting(points: &[DsePoint]) -> Option<&DsePoint> {
+    points
+        .iter()
+        .filter(|p| p.fits)
+        .min_by(|a, b| a.batch_ms.partial_cmp(&b.batch_ms).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ivim::synth::synth_dataset;
+    use crate::model::manifest::artifacts_root;
+
+    fn setup() -> Option<(Manifest, Weights)> {
+        let dir = artifacts_root().join("tiny");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        let w = Weights::load_init(&man).unwrap();
+        Some((man, w))
+    }
+
+    #[test]
+    fn sweep_shapes_match_paper_fig8() {
+        let Some((man, w)) = setup() else { return };
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 3);
+        let rows = sweep(&man, &w, &[4, 8, 16, 32], Scheme::BatchLevel, &ds.signals).unwrap();
+        assert_eq!(rows.len(), 4);
+        // DSP% strictly increases with PEs; speed increases (latency falls);
+        // BRAM and IO stay flat (paper: "remain relatively constant").
+        for w2 in rows.windows(2) {
+            assert!(w2[1].usage.dsp_pct() > w2[0].usage.dsp_pct());
+            assert!(w2[1].batch_ms <= w2[0].batch_ms);
+            assert_eq!(w2[1].usage.bram36, w2[0].usage.bram36);
+            assert_eq!(w2[1].usage.io, w2[0].usage.io);
+        }
+        // power increases with parallelism
+        assert!(rows.last().unwrap().power.watts > rows[0].power.watts * 0.9);
+    }
+
+    #[test]
+    fn best_fitting_prefers_fast_valid() {
+        let Some((man, w)) = setup() else { return };
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 4);
+        let rows = sweep(&man, &w, &[4, 16, 64], Scheme::BatchLevel, &ds.signals).unwrap();
+        let best = best_fitting(&rows).unwrap();
+        assert!(best.fits);
+        // 64 PEs exceeds the VU13P DSP budget -> best must not be 64
+        assert_ne!(best.n_pe, 64);
+    }
+}

@@ -1,0 +1,206 @@
+//! Q4.12 fixed-point arithmetic — the paper's quantisation scheme
+//! ("16-bit fixed-point representation with 4 integer bits", §VI-A).
+//!
+//! Layout: 1 sign + 3 integer + 12 fractional bits, value range
+//! [-8, 8 - 2^-12].  All ops saturate (no wrap-around), matching the
+//! conventional FPGA datapath.  Multiplication uses a 32-bit product with
+//! round-half-up on the dropped fractional bits, and the PU's adder tree
+//! accumulates in 32-bit before the final saturation back to Q4.12 —
+//! mirrored exactly by [`crate::accel::pu`].
+
+/// Fractional bits of the Q4.12 format.
+pub const FRAC_BITS: u32 = 12;
+/// Scale factor 2^12.
+pub const SCALE: i32 = 1 << FRAC_BITS;
+/// Maximum representable raw value (+7.999756).
+pub const MAX_RAW: i16 = i16::MAX;
+/// Minimum representable raw value (-8.0).
+pub const MIN_RAW: i16 = i16::MIN;
+
+/// A Q4.12 fixed-point number.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub struct Fx(pub i16);
+
+#[inline]
+fn sat16(v: i32) -> i16 {
+    if v > MAX_RAW as i32 {
+        MAX_RAW
+    } else if v < MIN_RAW as i32 {
+        MIN_RAW
+    } else {
+        v as i16
+    }
+}
+
+impl Fx {
+    pub const ZERO: Fx = Fx(0);
+    pub const ONE: Fx = Fx(SCALE as i16);
+
+    /// Quantise an f32 (round to nearest, saturate).
+    pub fn from_f32(v: f32) -> Fx {
+        let scaled = (v as f64 * SCALE as f64).round();
+        if scaled > MAX_RAW as f64 {
+            Fx(MAX_RAW)
+        } else if scaled < MIN_RAW as f64 {
+            Fx(MIN_RAW)
+        } else {
+            Fx(scaled as i16)
+        }
+    }
+
+    /// Back to f32.
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        self.0 as f32 / SCALE as f32
+    }
+
+    /// Saturating addition.
+    #[inline]
+    pub fn add(self, rhs: Fx) -> Fx {
+        Fx(sat16(self.0 as i32 + rhs.0 as i32))
+    }
+
+    /// Saturating subtraction.
+    #[inline]
+    pub fn sub(self, rhs: Fx) -> Fx {
+        Fx(sat16(self.0 as i32 - rhs.0 as i32))
+    }
+
+    /// Saturating multiplication with round-half-up.
+    #[inline]
+    pub fn mul(self, rhs: Fx) -> Fx {
+        let prod = self.0 as i32 * rhs.0 as i32; // Q8.24 in 32 bits
+        let rounded = (prod + (1 << (FRAC_BITS - 1))) >> FRAC_BITS;
+        Fx(sat16(rounded))
+    }
+
+    /// Raw product in Q8.24 (for tree accumulation in i32/i64).
+    #[inline]
+    pub fn mul_raw(self, rhs: Fx) -> i32 {
+        self.0 as i32 * rhs.0 as i32
+    }
+
+    /// ReLU.
+    #[inline]
+    pub fn relu(self) -> Fx {
+        if self.0 < 0 {
+            Fx(0)
+        } else {
+            self
+        }
+    }
+
+    /// Quantisation step (resolution).
+    pub fn epsilon() -> f32 {
+        1.0 / SCALE as f32
+    }
+}
+
+/// Saturate a wide Q8.24 accumulator back to Q4.12 with rounding.
+#[inline]
+pub fn sat_from_acc(acc: i64) -> Fx {
+    let rounded = (acc + (1 << (FRAC_BITS - 1))) >> FRAC_BITS;
+    if rounded > MAX_RAW as i64 {
+        Fx(MAX_RAW)
+    } else if rounded < MIN_RAW as i64 {
+        Fx(MIN_RAW)
+    } else {
+        Fx(rounded as i16)
+    }
+}
+
+/// Quantise a whole f32 slice.
+pub fn quantize_slice(xs: &[f32]) -> Vec<Fx> {
+    xs.iter().map(|&v| Fx::from_f32(v)).collect()
+}
+
+/// Max |quantised - original| over a slice (for error reporting).
+pub fn quantization_error(xs: &[f32]) -> f32 {
+    xs.iter()
+        .map(|&v| (Fx::from_f32(v).to_f32() - v).abs())
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Gen};
+
+    #[test]
+    fn roundtrip_within_epsilon() {
+        for v in [-7.5f32, -1.0, -0.001, 0.0, 0.5, 1.0, 3.25, 7.9] {
+            let q = Fx::from_f32(v).to_f32();
+            assert!((q - v).abs() <= Fx::epsilon() / 2.0 + 1e-7, "{v} -> {q}");
+        }
+    }
+
+    #[test]
+    fn saturates_at_bounds() {
+        assert_eq!(Fx::from_f32(100.0), Fx(MAX_RAW));
+        assert_eq!(Fx::from_f32(-100.0), Fx(MIN_RAW));
+        assert_eq!(Fx(MAX_RAW).add(Fx::ONE), Fx(MAX_RAW));
+        assert_eq!(Fx(MIN_RAW).sub(Fx::ONE), Fx(MIN_RAW));
+        assert_eq!(Fx::from_f32(7.0).mul(Fx::from_f32(7.0)), Fx(MAX_RAW));
+    }
+
+    #[test]
+    fn exact_small_arithmetic() {
+        let a = Fx::from_f32(1.5);
+        let b = Fx::from_f32(0.25);
+        assert_eq!(a.add(b).to_f32(), 1.75);
+        assert_eq!(a.sub(b).to_f32(), 1.25);
+        assert_eq!(a.mul(b).to_f32(), 0.375);
+        assert_eq!(Fx::ONE.mul(a), a);
+        assert_eq!(Fx::ZERO.mul(a), Fx::ZERO);
+    }
+
+    #[test]
+    fn relu_behaviour() {
+        assert_eq!(Fx::from_f32(-1.0).relu(), Fx::ZERO);
+        let p = Fx::from_f32(2.5);
+        assert_eq!(p.relu(), p);
+    }
+
+    #[test]
+    fn acc_saturation() {
+        assert_eq!(sat_from_acc(i64::MAX / 2), Fx(MAX_RAW));
+        assert_eq!(sat_from_acc(i64::MIN / 2), Fx(MIN_RAW));
+        assert_eq!(sat_from_acc(0), Fx::ZERO);
+        // 1.0 * 1.0 accumulated once = 1.0
+        assert_eq!(sat_from_acc(Fx::ONE.mul_raw(Fx::ONE) as i64), Fx::ONE);
+    }
+
+    #[test]
+    fn mul_matches_float_within_epsilon() {
+        forall(
+            300,
+            crate::testing::zip(Gen::f64_in(-2.5, 2.5), Gen::f64_in(-2.5, 2.5)),
+            |&(a, b): &(f64, f64)| {
+                let fa = Fx::from_f32(a as f32);
+                let fb = Fx::from_f32(b as f32);
+                let got = fa.mul(fb).to_f32() as f64;
+                let want = (fa.to_f32() * fb.to_f32()) as f64;
+                (got - want).abs() <= 1.5 * Fx::epsilon() as f64
+            },
+        );
+    }
+
+    #[test]
+    fn add_monotone_property() {
+        forall(
+            200,
+            crate::testing::zip(Gen::f64_in(-7.0, 7.0), Gen::f64_in(0.0, 1.0)),
+            |&(a, d): &(f64, f64)| {
+                let x = Fx::from_f32(a as f32);
+                let y = Fx::from_f32((a + d) as f32);
+                x <= y
+            },
+        );
+    }
+
+    #[test]
+    fn quantization_error_bounded() {
+        let xs: Vec<f32> = (-100..100).map(|i| i as f32 * 0.07).collect();
+        assert!(quantization_error(&xs) <= Fx::epsilon() / 2.0 + 1e-7);
+    }
+}

@@ -1,0 +1,150 @@
+//! Analytic latency model (paper §III Phase 3, eq. 2) — closed-form
+//! cycle prediction from the configuration alone, cross-validated against
+//! the cycle simulator ("The processing speed can be estimated based on
+//! equation (2), which matches the practical results", §VI-C).
+
+use super::pu::PuConfig;
+use super::resource::AccelConfig;
+use super::schemes::Scheme;
+use super::sim::LOAD_WORDS_PER_CYCLE;
+use crate::model::Manifest;
+
+/// Closed-form cycle prediction for one batch.
+///
+/// Mirrors the controller schedule: per (subnet, layer, sample) a weight
+/// load plus a pipelined streaming phase of
+/// `ceil(kept/N_PE) * batch * chunks` cycles behind a fill of
+/// eq. (2)'s PU latency.
+pub fn predict_batch_cycles(man: &Manifest, cfg: &AccelConfig, scheme: Scheme) -> u64 {
+    let pu = PuConfig {
+        lanes: cfg.lanes.min(man.nb.next_power_of_two()),
+        r_m: cfg.r_m,
+        r_a: cfg.r_a,
+    };
+    let fill = pu.latency_cycles(man.nb) as u64;
+    let chunks = pu.chunks(man.nb) as u64;
+    let batch = cfg.batch as u64;
+    let mut cycles = 0u64;
+
+    let combine = |load: u64, compute: u64| {
+        if cfg.overlap_loads {
+            load.max(compute)
+        } else {
+            load + compute
+        }
+    };
+    for sn in &man.subnets {
+        for layer in 1..=2usize {
+            let mask = man.mask(sn, layer).expect("mask");
+            for s in 0..man.n_samples {
+                let kept = mask.ones(s) as u64;
+                let words = kept * man.nb as u64 + 3 * kept;
+                let loads = match scheme {
+                    Scheme::BatchLevel => 1u64,
+                    Scheme::SamplingLevel => batch,
+                };
+                let load_c = words.div_ceil(LOAD_WORDS_PER_CYCLE as u64) * loads;
+                let out_groups = kept.div_ceil(cfg.n_pe as u64);
+                cycles += combine(load_c, fill + out_groups * batch * chunks);
+            }
+        }
+        // encoder
+        for _ in 0..man.n_samples {
+            let words = man.nb as u64 + 1;
+            let load_c = words.div_ceil(LOAD_WORDS_PER_CYCLE as u64);
+            cycles += combine(load_c, fill + batch * chunks);
+        }
+    }
+    cycles
+}
+
+/// Predicted batch latency in milliseconds.
+pub fn predict_batch_ms(man: &Manifest, cfg: &AccelConfig, scheme: Scheme) -> f64 {
+    predict_batch_cycles(man, cfg, scheme) as f64 / cfg.clock_hz * 1e3
+}
+
+/// Predicted throughput in voxels/second.
+pub fn predict_voxels_per_s(man: &Manifest, cfg: &AccelConfig, scheme: Scheme) -> f64 {
+    let ms = predict_batch_ms(man, cfg, scheme);
+    cfg.batch as f64 / (ms / 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::sim::AccelSimulator;
+    use crate::ivim::synth::synth_dataset;
+    use crate::model::manifest::artifacts_root;
+    use crate::model::Weights;
+
+    fn setup() -> Option<(Manifest, Weights)> {
+        let dir = artifacts_root().join("tiny");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        let w = Weights::load_init(&man).unwrap();
+        Some((man, w))
+    }
+
+    #[test]
+    fn analytic_model_matches_simulator_exactly() {
+        let Some((man, w)) = setup() else { return };
+        for scheme in [Scheme::BatchLevel, Scheme::SamplingLevel] {
+            let cfg = AccelConfig {
+                batch: man.batch_infer,
+                ..Default::default()
+            };
+            let mut sim = AccelSimulator::new(&man, &w, cfg, scheme).unwrap();
+            let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 1);
+            let (_, stats) = sim.infer_batch_stats(&ds.signals).unwrap();
+            let predicted = predict_batch_cycles(&man, &cfg, scheme);
+            assert_eq!(
+                predicted, stats.cycles,
+                "{scheme:?}: analytic {predicted} vs simulated {}",
+                stats.cycles
+            );
+        }
+    }
+
+    #[test]
+    fn more_pes_fewer_cycles() {
+        let Some((man, _)) = setup() else { return };
+        let mut prev = u64::MAX;
+        for n_pe in [2usize, 4, 8] {
+            let cfg = AccelConfig {
+                n_pe,
+                batch: man.batch_infer,
+                ..Default::default()
+            };
+            let c = predict_batch_cycles(&man, &cfg, Scheme::BatchLevel);
+            assert!(c <= prev, "n_pe={n_pe}: {c} > {prev}");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn sampling_level_strictly_slower() {
+        let Some((man, _)) = setup() else { return };
+        let cfg = AccelConfig {
+            batch: man.batch_infer,
+            ..Default::default()
+        };
+        assert!(
+            predict_batch_cycles(&man, &cfg, Scheme::SamplingLevel)
+                > predict_batch_cycles(&man, &cfg, Scheme::BatchLevel)
+        );
+    }
+
+    #[test]
+    fn throughput_consistent_with_latency() {
+        let Some((man, _)) = setup() else { return };
+        let cfg = AccelConfig {
+            batch: man.batch_infer,
+            ..Default::default()
+        };
+        let ms = predict_batch_ms(&man, &cfg, Scheme::BatchLevel);
+        let vps = predict_voxels_per_s(&man, &cfg, Scheme::BatchLevel);
+        assert!((vps - cfg.batch as f64 / (ms / 1e3)).abs() < 1e-6);
+    }
+}

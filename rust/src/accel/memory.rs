@@ -1,0 +1,159 @@
+//! On-chip memory model: I/O manager (voxel + output store), mask-zero-
+//! skipped weight memories, and the intermediate layer cache (paper §V-B).
+//!
+//! All sizes in 16-bit words.  BRAM36 blocks hold 36 Kib = 2048 words of
+//! 18 bits; we model 2048 16-bit words per block.
+
+use crate::masks::MaskSet;
+
+/// Words per BRAM36 block (36Kib at 18-bit width -> 2048 entries; we
+/// store 16-bit words).
+pub const WORDS_PER_BRAM36: usize = 2048;
+
+/// I/O manager: stores a window of input voxels and the per-sample
+/// outputs (paper: 20k voxels on chip, batch of 64).
+#[derive(Debug, Clone)]
+pub struct IoManager {
+    pub voxel_capacity: usize,
+    pub nb: usize,
+    pub n_samples: usize,
+}
+
+impl IoManager {
+    pub fn new(voxel_capacity: usize, nb: usize, n_samples: usize) -> Self {
+        IoManager {
+            voxel_capacity,
+            nb,
+            n_samples,
+        }
+    }
+
+    /// Input store size in 16-bit words.
+    pub fn input_words(&self) -> usize {
+        self.voxel_capacity * self.nb
+    }
+
+    /// Output store: 4 IVIM parameters x N samples per voxel.
+    pub fn output_words(&self) -> usize {
+        self.voxel_capacity * 4 * self.n_samples
+    }
+
+    pub fn bram36(&self) -> usize {
+        (self.input_words() + self.output_words()).div_ceil(WORDS_PER_BRAM36)
+    }
+
+    /// Batches needed to stream `n` voxels through a `batch`-sized window.
+    pub fn batches_for(&self, n: usize, batch: usize) -> usize {
+        n.div_ceil(batch)
+    }
+}
+
+/// Mask-zero-skipped weight store for one layer of one sub-network
+/// (paper §V-C, Fig. 4): only the weights of *kept* output neurons are
+/// stored, one copy per mask sample.
+#[derive(Debug, Clone)]
+pub struct WeightStore {
+    pub nb: usize,
+    /// kept output counts per sample.
+    pub kept_per_sample: Vec<usize>,
+}
+
+impl WeightStore {
+    pub fn from_mask(nb: usize, mask: &MaskSet) -> Self {
+        WeightStore {
+            nb,
+            kept_per_sample: (0..mask.n).map(|s| mask.ones(s)).collect(),
+        }
+    }
+
+    /// Dense (no skipping) words for one sample: full `nb x nb` weights +
+    /// nb biases + 2*nb folded-BN terms.
+    pub fn dense_words_per_sample(&self) -> usize {
+        self.nb * self.nb + 3 * self.nb
+    }
+
+    /// Stored words for sample `s` with mask-zero skipping: only kept
+    /// output columns keep their `nb` weights + bias + BN terms.
+    pub fn skipped_words(&self, s: usize) -> usize {
+        let kept = self.kept_per_sample[s];
+        kept * self.nb + 3 * kept
+    }
+
+    /// Total words across samples with skipping.
+    pub fn total_skipped_words(&self) -> usize {
+        (0..self.kept_per_sample.len())
+            .map(|s| self.skipped_words(s))
+            .sum()
+    }
+
+    /// Total words without skipping (what an MC-Dropout design stores,
+    /// plus it needs the runtime sampler — paper Fig. 4 left).
+    pub fn total_dense_words(&self) -> usize {
+        self.kept_per_sample.len() * self.dense_words_per_sample()
+    }
+
+    /// Storage saved by mask-zero skipping.
+    pub fn savings_ratio(&self) -> f64 {
+        1.0 - self.total_skipped_words() as f64 / self.total_dense_words() as f64
+    }
+}
+
+/// Intermediate layer cache: double-buffered activations for one batch
+/// (paper §V-B: results of early layers, or partial results when the
+/// layer is wider than the PE array).
+#[derive(Debug, Clone)]
+pub struct LayerCache {
+    pub batch: usize,
+    pub nb: usize,
+}
+
+impl LayerCache {
+    pub fn words(&self) -> usize {
+        2 * self.batch * self.nb // ping-pong buffers
+    }
+    pub fn bram36(&self) -> usize {
+        self.words().div_ceil(WORDS_PER_BRAM36)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masks::for_width;
+
+    #[test]
+    fn io_manager_paper_configuration() {
+        // Paper §VI-A: 20k voxels, 104 b-values, 4 samples.
+        let io = IoManager::new(20_000, 104, 4);
+        assert_eq!(io.input_words(), 20_000 * 104);
+        assert_eq!(io.output_words(), 20_000 * 16);
+        // ~2.08M + 320k words -> over 1000 BRAM36
+        assert!(io.bram36() > 1000);
+        assert_eq!(io.batches_for(20_000, 64), 313);
+    }
+
+    #[test]
+    fn weight_store_skipping_saves_memory() {
+        let mask = for_width(104, 4, 2.0, 1).unwrap();
+        let ws = WeightStore::from_mask(104, &mask);
+        assert!(ws.total_skipped_words() < ws.total_dense_words());
+        // scale 2.0 -> roughly half the neurons kept -> ~50% savings
+        let r = ws.savings_ratio();
+        assert!(r > 0.35 && r < 0.65, "savings {r}");
+    }
+
+    #[test]
+    fn weight_store_all_ones_mask_no_savings() {
+        let mask = for_width(16, 4, 1.0, 0).unwrap();
+        let ws = WeightStore::from_mask(16, &mask);
+        assert_eq!(ws.total_skipped_words(), ws.total_dense_words());
+        assert_eq!(ws.savings_ratio(), 0.0);
+    }
+
+    #[test]
+    fn layer_cache_words() {
+        let c = LayerCache { batch: 64, nb: 104 };
+        assert_eq!(c.words(), 2 * 64 * 104);
+        assert!(c.bram36() >= 6);
+    }
+}

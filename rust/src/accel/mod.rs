@@ -1,0 +1,33 @@
+//! Cycle-level simulator of the paper's FPGA accelerator (§V) — the
+//! hardware substrate of this reproduction (DESIGN.md §5: the physical
+//! VU13P is replaced by this model; the paper's hardware claims are
+//! architectural and the simulator reproduces exactly those mechanisms).
+//!
+//! Components, mapped to the paper:
+//!
+//! | Paper | Module |
+//! |---|---|
+//! | 16-bit fixed-point, 4 integer bits (§VI-A) | [`fixed`] |
+//! | PU: parallel multipliers + pipelined adder tree, eq. (2) (§V-C) | [`pu`] |
+//! | I/O manager, intermediate layer cache, weight memories (§V-B) | [`memory`] |
+//! | Mask-zero skipping (§V-C, Fig. 4) | [`sim`] (`QuantLayer`: only kept outputs stored/scheduled) |
+//! | Sampling-level vs batch-level schemes (§V-D, Fig. 5) | [`schemes`], accounted in [`sim`] |
+//! | Controller state machine (§V-D) | [`sim`] (`infer_batch_stats` schedule) |
+//! | Latency model (§III Phase 3, eq. 2) | [`latency`] (cross-checked == simulator) |
+//! | VU13P resources (Fig. 8) | [`resource`] |
+//! | Power / energy (Tables I, II) | [`power`] |
+//! | PE-count design space (Fig. 8) | [`dse`] |
+
+pub mod dse;
+pub mod fixed;
+pub mod latency;
+pub mod memory;
+pub mod power;
+pub mod pu;
+pub mod resource;
+pub mod schemes;
+pub mod sim;
+
+pub use resource::AccelConfig;
+pub use schemes::Scheme;
+pub use sim::{AccelSimulator, CycleStats};

@@ -1,0 +1,192 @@
+//! Power model (paper Tables I/II substrate).
+//!
+//! Decomposition: static + DSP dynamic + BRAM access + weight-load
+//! energy.  The split follows Horowitz (ISSCC'14 [8]): on-chip SRAM/BRAM
+//! accesses cost an order of magnitude more than arithmetic, which is why
+//! the paper's batch-level scheme (cutting weight loads by `batchsize`x)
+//! is the headline power optimisation, and why designs with runtime
+//! Bernoulli samplers + dropout modules ([33][35][36]) burn more.
+//!
+//! Constants are calibrated so the paper's shipped configuration (32 PEs,
+//! 250 MHz, batch-level) lands on its reported 11.78 W; the *shape*
+//! (scaling with N_PE, scheme contrast) comes from the model structure.
+
+use super::resource::{AccelConfig, ResourceUsage};
+use super::sim::CycleStats;
+
+/// Static (leakage + clocking) watts for the VU13P at 250 MHz.
+pub const P_STATIC_W: f64 = 3.2;
+/// Dynamic watts per active DSP slice at 250 MHz, 16-bit operands.
+pub const P_DSP_W: f64 = 0.90e-3;
+/// Dynamic watts per BRAM36 block held active.
+pub const P_BRAM_W: f64 = 0.25e-3;
+/// Per-PE infrastructure power (clock tree, register files, control) —
+/// calibrated so the paper's shipped point (32 PE, 250 MHz, batch-level)
+/// lands near its reported 11.78 W.
+pub const P_PE_W: f64 = 0.21;
+/// Energy per 16-bit word fetched during a weight load (J).  BRAM read +
+/// distribution network; ~10x a MAC per Horowitz.
+pub const E_WEIGHT_WORD_J: f64 = 12.0e-12;
+/// Energy per runtime Bernoulli sample + dropout mux (J/weight) — charged
+/// only to MC-Dropout-style designs (paper Fig. 4 left), used by the
+/// ablation in Table I discussion.
+pub const E_SAMPLER_J: f64 = 6.0e-12;
+
+/// Power/energy report for one simulated run.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerReport {
+    /// Average power over the run (W).
+    pub watts: f64,
+    /// Energy for the whole run (J).
+    pub energy_j: f64,
+    /// Energy attributable to weight loading (J).
+    pub weight_load_j: f64,
+    /// Runtime of the run (s).
+    pub seconds: f64,
+}
+
+impl PowerReport {
+    pub fn energy_mj(&self) -> f64 {
+        self.energy_j * 1e3
+    }
+}
+
+/// Estimate power for a run described by `stats` on configuration `cfg`
+/// with resource usage `usage`.
+///
+/// `runtime_sampler`: charge the MC-Dropout sampler energy (for modelling
+/// the prior designs the paper compares against; `false` for uIVIM-NET,
+/// whose masks are folded offline).
+pub fn estimate(
+    cfg: &AccelConfig,
+    usage: &ResourceUsage,
+    stats: &CycleStats,
+    runtime_sampler: bool,
+) -> PowerReport {
+    let seconds = stats.cycles as f64 / cfg.clock_hz;
+    // Utilisation-scaled DSP power: fraction of cycles the MAC array is
+    // actually streaming.
+    let util = if stats.cycles == 0 {
+        0.0
+    } else {
+        stats.active_cycles as f64 / stats.cycles as f64
+    };
+    let p_dsp = usage.dsp as f64 * P_DSP_W * util;
+    let p_bram = usage.bram36 as f64 * P_BRAM_W * 1.0;
+    let p_pe = usage.n_pe as f64 * P_PE_W;
+    let base_w = P_STATIC_W + p_dsp + p_bram + p_pe;
+
+    let mut weight_load_j = stats.weight_words_loaded as f64 * E_WEIGHT_WORD_J;
+    if runtime_sampler {
+        weight_load_j += stats.weight_words_loaded as f64 * E_SAMPLER_J;
+    }
+    let energy_j = base_w * seconds + weight_load_j;
+    let watts = if seconds > 0.0 {
+        energy_j / seconds
+    } else {
+        base_w
+    };
+    PowerReport {
+        watts,
+        energy_j,
+        weight_load_j,
+        seconds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(cycles: u64, loads: u64) -> CycleStats {
+        CycleStats {
+            cycles,
+            active_cycles: (cycles as f64 * 0.9) as u64,
+            weight_loads: 4,
+            weight_words_loaded: loads,
+            macs: cycles * 32 * 128,
+        }
+    }
+
+    fn usage32() -> ResourceUsage {
+        ResourceUsage {
+            n_pe: 32,
+            dsp: 8192,
+            bram36: 1300,
+            lut: 500_000,
+            io: 300,
+        }
+    }
+
+    #[test]
+    fn more_loads_more_power() {
+        let cfg = AccelConfig::default();
+        let u = usage32();
+        let a = estimate(&cfg, &u, &stats(100_000, 10_000), false);
+        let b = estimate(&cfg, &u, &stats(100_000, 10_000 * 64), false);
+        assert!(b.watts > a.watts, "{} !> {}", b.watts, a.watts);
+        assert!(b.weight_load_j > a.weight_load_j * 50.0);
+    }
+
+    #[test]
+    fn sampler_energy_only_for_mc_dropout() {
+        let cfg = AccelConfig::default();
+        let u = usage32();
+        let s = stats(100_000, 500_000);
+        let ours = estimate(&cfg, &u, &s, false);
+        let mcd = estimate(&cfg, &u, &s, true);
+        assert!(mcd.energy_j > ours.energy_j);
+    }
+
+    #[test]
+    fn energy_equals_power_times_time() {
+        let cfg = AccelConfig::default();
+        let u = usage32();
+        let r = estimate(&cfg, &u, &stats(250_000, 1000), false);
+        assert!((r.energy_j - r.watts * r.seconds).abs() < 1e-12);
+        assert!(r.seconds > 0.0);
+    }
+
+    #[test]
+    fn calibrated_to_paper_operating_point() {
+        // Paper §VI-A/C: 32 PEs @ 250 MHz, batch-level -> 11.78 W.  The
+        // model must land in the same regime (+-35%, DESIGN.md §5) when
+        // running the REAL paper-scale workload through the simulator.
+        use crate::model::manifest::{artifacts_root, Manifest};
+        let dir = artifacts_root().join("paper");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        let w = crate::model::Weights::load_init(&man).unwrap();
+        let cfg = AccelConfig {
+            batch: man.batch_infer,
+            ..Default::default()
+        };
+        let mut sim = crate::accel::AccelSimulator::new(
+            &man,
+            &w,
+            cfg,
+            crate::accel::Scheme::BatchLevel,
+        )
+        .unwrap();
+        let ds = crate::ivim::synth::synth_dataset(man.batch_infer, &man.bvalues, 20.0, 77);
+        let (_, st) = sim.infer_batch_stats(&ds.signals).unwrap();
+        let u = crate::accel::resource::usage(&cfg, man.nb, man.n_samples, &sim.weight_stores());
+        let r = estimate(&cfg, &u, &st, false);
+        assert!(
+            r.watts > 11.78 * 0.65 && r.watts < 11.78 * 1.35,
+            "calibration drifted: {} W vs paper 11.78 W",
+            r.watts
+        );
+    }
+
+    #[test]
+    fn zero_cycles_degrades_gracefully() {
+        let cfg = AccelConfig::default();
+        let u = usage32();
+        let r = estimate(&cfg, &u, &stats(0, 0), false);
+        assert!(r.watts > 0.0);
+        assert_eq!(r.energy_j, 0.0);
+    }
+}

@@ -1,0 +1,204 @@
+//! Processing Unit (PU) — the paper's §V-C datapath, bit- and
+//! cycle-faithful.
+//!
+//! A PU computes one output neuron's dot product: a block of `lanes`
+//! parallel 16-bit multipliers feeding a pipelined adder tree of depth
+//! `L = ceil(log2(lanes))`, followed by a chunk accumulator and the bias
+//! add.  `R_M` / `R_A` internal pipeline registers per multiplier / adder
+//! let the PU accept a new chunk every cycle despite multi-cycle op
+//! latency.
+//!
+//! Paper eq. (2) (with `N_PE` denoting the PU's multiplier lane count):
+//!
+//! ```text
+//! Latency_PU = R_M + R_A*(L+1) + ceil(Nb/lanes) - 1
+//! ```
+//!
+//! i.e. multiplier fill + tree fill + one extra tree level's register for
+//! the accumulator + the serial accumulation of `ceil(Nb/lanes)` chunks.
+
+use super::fixed::{sat_from_acc, Fx};
+
+/// Static PU configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PuConfig {
+    /// Parallel multiplier lanes (the paper's PEs handle up to 128
+    /// elements per voxel).
+    pub lanes: usize,
+    /// Pipeline registers per multiplier.
+    pub r_m: usize,
+    /// Pipeline registers per adder.
+    pub r_a: usize,
+}
+
+impl Default for PuConfig {
+    fn default() -> Self {
+        // R_M = 3, R_A = 2 are typical for 16-bit DSP48 mult / fabric add
+        // at 250 MHz on UltraScale+.
+        PuConfig {
+            lanes: 128,
+            r_m: 3,
+            r_a: 2,
+        }
+    }
+}
+
+impl PuConfig {
+    /// Adder tree depth.
+    pub fn tree_depth(&self) -> usize {
+        (self.lanes.max(2) as f64).log2().ceil() as usize
+    }
+
+    /// Paper eq. (2): cycles until the first dot product of an `nb`-long
+    /// input emerges from the PU.
+    pub fn latency_cycles(&self, nb: usize) -> usize {
+        let chunks = nb.div_ceil(self.lanes);
+        self.r_m + self.r_a * (self.tree_depth() + 1) + chunks - 1
+    }
+
+    /// Chunks (sequential accumulation steps) for an `nb`-long input.
+    pub fn chunks(&self, nb: usize) -> usize {
+        nb.div_ceil(self.lanes)
+    }
+}
+
+/// Raw PU accumulation: fixed-point dot product in adder-tree order,
+/// returned as the wide Q8.24 accumulator (callers add bias / apply
+/// shifts before saturating).  Bit-exact with the hardware datapath.
+pub fn pu_dot_acc(cfg: &PuConfig, x: &[Fx], w: &[Fx]) -> i64 {
+    debug_assert_eq!(x.len(), w.len());
+    let mut acc: i64 = 0;
+    let mut chunk_prods = vec![0i64; cfg.lanes];
+    for (xc, wc) in x.chunks(cfg.lanes).zip(w.chunks(cfg.lanes)) {
+        for (i, slot) in chunk_prods.iter_mut().enumerate() {
+            *slot = if i < xc.len() {
+                xc[i].mul_raw(wc[i]) as i64
+            } else {
+                0
+            };
+        }
+        let mut width = cfg.lanes;
+        while width > 1 {
+            let half = width.div_ceil(2);
+            for i in 0..half {
+                let a = chunk_prods[2 * i];
+                let b = if 2 * i + 1 < width {
+                    chunk_prods[2 * i + 1]
+                } else {
+                    0
+                };
+                chunk_prods[i] = a + b;
+            }
+            width = half;
+        }
+        acc += chunk_prods[0];
+    }
+    acc
+}
+
+/// Functional PU evaluation: fixed-point dot product + bias, computed in
+/// adder-tree order (pairwise reduction) with a wide accumulator —
+/// bit-exact with the hardware the cycle model describes.
+///
+/// `x` and `w` must be equal-length; shorter-than-`lanes` tails are
+/// zero-padded exactly like the hardware's unused lanes.
+pub fn pu_dot(cfg: &PuConfig, x: &[Fx], w: &[Fx], bias: Fx) -> Fx {
+    // bias enters the accumulator in Q8.24
+    let acc = pu_dot_acc(cfg, x, w) + ((bias.0 as i64) << super::fixed::FRAC_BITS);
+    sat_from_acc(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fx(v: f32) -> Fx {
+        Fx::from_f32(v)
+    }
+
+    #[test]
+    fn latency_matches_paper_formula() {
+        // Paper example shape: Nb=104, lanes=128 -> 1 chunk.
+        let cfg = PuConfig::default();
+        let l = cfg.tree_depth(); // log2(128) = 7
+        assert_eq!(l, 7);
+        assert_eq!(cfg.latency_cycles(104), 3 + 2 * 8 + 0); // 19
+        // Nb=300 on 128 lanes -> 3 chunks -> +2 cycles.
+        assert_eq!(cfg.latency_cycles(300), 3 + 2 * 8 + 2);
+    }
+
+    #[test]
+    fn tree_depth_non_pow2() {
+        let cfg = PuConfig {
+            lanes: 11,
+            r_m: 1,
+            r_a: 1,
+        };
+        assert_eq!(cfg.tree_depth(), 4); // ceil(log2(11))
+        assert_eq!(cfg.chunks(11), 1);
+        assert_eq!(cfg.chunks(12), 2);
+    }
+
+    #[test]
+    fn dot_exact_small() {
+        let cfg = PuConfig {
+            lanes: 4,
+            ..Default::default()
+        };
+        let x = vec![fx(1.0), fx(2.0), fx(-1.5), fx(0.5)];
+        let w = vec![fx(0.5), fx(0.25), fx(1.0), fx(-2.0)];
+        // 0.5 + 0.5 - 1.5 - 1.0 = -1.5; bias 0.25 -> -1.25
+        let got = pu_dot(&cfg, &x, &w, fx(0.25));
+        assert_eq!(got.to_f32(), -1.25);
+    }
+
+    #[test]
+    fn dot_handles_multi_chunk() {
+        let cfg = PuConfig {
+            lanes: 2,
+            ..Default::default()
+        };
+        let x: Vec<Fx> = (0..6).map(|i| fx(0.5 * i as f32)).collect();
+        let w: Vec<Fx> = (0..6).map(|_| fx(1.0)).collect();
+        // sum 0+0.5+1+1.5+2+2.5 = 7.5
+        assert_eq!(pu_dot(&cfg, &x, &w, Fx::ZERO).to_f32(), 7.5);
+    }
+
+    #[test]
+    fn dot_saturates() {
+        let cfg = PuConfig {
+            lanes: 4,
+            ..Default::default()
+        };
+        let x = vec![fx(7.9); 4];
+        let w = vec![fx(7.9); 4];
+        let got = pu_dot(&cfg, &x, &w, Fx::ZERO);
+        assert_eq!(got, Fx(super::super::fixed::MAX_RAW));
+    }
+
+    #[test]
+    fn dot_matches_f32_reference_within_quantisation() {
+        use crate::util::rng::Pcg32;
+        let cfg = PuConfig {
+            lanes: 16,
+            ..Default::default()
+        };
+        let mut rng = Pcg32::new(8);
+        for _ in 0..50 {
+            let n = 1 + rng.below(40) as usize;
+            let xf: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+            let wf: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+            let x: Vec<Fx> = xf.iter().map(|&v| fx(v)).collect();
+            let w: Vec<Fx> = wf.iter().map(|&v| fx(v)).collect();
+            let want: f32 = x
+                .iter()
+                .zip(&w)
+                .map(|(a, b)| a.to_f32() * b.to_f32())
+                .sum();
+            let got = pu_dot(&cfg, &x, &w, Fx::ZERO).to_f32();
+            // n products each with <= eps/2 rounding in the accumulator
+            let tol = Fx::epsilon() * (n as f32 * 0.5 + 1.0);
+            assert!((got - want).abs() <= tol, "{got} vs {want} (n={n})");
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! VU13P resource model (paper Fig. 8 substrate).
+//!
+//! Budgets from the Xilinx VU13P datasheet; consumption follows the PE
+//! structure: each PE owns `lanes` 16-bit multipliers (2 DSP slices per
+//! mult lane in the paper's mapping — 32 PEs x 128 lanes x 2 = 8192 DSPs
+//! = 66.7%, matching the paper's "67% of all available DSPs with 32
+//! PEs"), an adder tree in fabric LUTs, and its weight BRAM.
+
+use super::memory::{IoManager, LayerCache, WeightStore, WORDS_PER_BRAM36};
+
+/// VU13P budgets.
+pub const VU13P_DSP: usize = 12_288;
+pub const VU13P_BRAM36: usize = 2_688;
+pub const VU13P_LUT: usize = 1_728_000;
+pub const VU13P_IO: usize = 832;
+
+/// DSP slices per multiplier lane (paper mapping).
+pub const DSP_PER_LANE: usize = 2;
+/// Fabric LUTs per adder-tree node (16-bit add + pipeline reg).
+pub const LUT_PER_ADDER: usize = 48;
+/// LUTs of fixed control/infra logic (controller FSM, AXI, etc.).
+pub const LUT_FIXED: usize = 120_000;
+/// I/O pins used (constant: AXI + clocking), paper: "IO resources
+/// remain relatively constant".
+pub const IO_USED: usize = 300;
+
+/// Resource usage summary for one accelerator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceUsage {
+    pub n_pe: usize,
+    pub dsp: usize,
+    pub bram36: usize,
+    pub lut: usize,
+    pub io: usize,
+}
+
+impl ResourceUsage {
+    pub fn dsp_pct(&self) -> f64 {
+        100.0 * self.dsp as f64 / VU13P_DSP as f64
+    }
+    pub fn bram_pct(&self) -> f64 {
+        100.0 * self.bram36 as f64 / VU13P_BRAM36 as f64
+    }
+    pub fn lut_pct(&self) -> f64 {
+        100.0 * self.lut as f64 / VU13P_LUT as f64
+    }
+    pub fn io_pct(&self) -> f64 {
+        100.0 * self.io as f64 / VU13P_IO as f64
+    }
+    /// Does the configuration fit the device?
+    pub fn fits(&self) -> bool {
+        self.dsp <= VU13P_DSP
+            && self.bram36 <= VU13P_BRAM36
+            && self.lut <= VU13P_LUT
+            && self.io <= VU13P_IO
+    }
+}
+
+/// Accelerator-level static configuration used by the resource/power
+/// models and the cycle simulator.
+#[derive(Debug, Clone, Copy)]
+pub struct AccelConfig {
+    pub n_pe: usize,
+    pub lanes: usize,
+    pub clock_hz: f64,
+    pub voxel_capacity: usize,
+    pub batch: usize,
+    pub r_m: usize,
+    pub r_a: usize,
+    /// Double-buffered weight memories: overlap the next sample's weight
+    /// load with the current sample's compute (perf-pass optimization,
+    /// EXPERIMENTS.md §Perf; off by default to match the paper's
+    /// reported operating point).
+    pub overlap_loads: bool,
+}
+
+impl Default for AccelConfig {
+    fn default() -> Self {
+        // The paper's shipped configuration (§VI-A).
+        AccelConfig {
+            n_pe: 32,
+            lanes: 128,
+            clock_hz: 250.0e6,
+            voxel_capacity: 20_000,
+            batch: 64,
+            r_m: 3,
+            r_a: 2,
+            overlap_loads: false,
+        }
+    }
+}
+
+/// Compute resource usage for a model (nb, n_samples, weight stores).
+pub fn usage(
+    cfg: &AccelConfig,
+    nb: usize,
+    n_samples: usize,
+    weight_stores: &[WeightStore],
+) -> ResourceUsage {
+    let dsp = cfg.n_pe * cfg.lanes * DSP_PER_LANE;
+
+    // BRAM: I/O manager + per-PE weight copies + intermediate cache.
+    let io_mgr = IoManager::new(cfg.voxel_capacity, nb, n_samples);
+    let weight_words: usize = weight_stores.iter().map(|w| w.total_skipped_words()).sum();
+    let cache = LayerCache {
+        batch: cfg.batch,
+        nb,
+    };
+    let bram36 = io_mgr.bram36() + weight_words.div_ceil(WORDS_PER_BRAM36) + cache.bram36();
+
+    // LUT: adder trees (lanes-1 adders per PE) + control.
+    let adders_per_pe = cfg.lanes.saturating_sub(1);
+    let lut = LUT_FIXED + cfg.n_pe * adders_per_pe * LUT_PER_ADDER;
+
+    ResourceUsage {
+        n_pe: cfg.n_pe,
+        dsp,
+        bram36,
+        lut,
+        io: IO_USED,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masks::for_width;
+
+    fn stores(nb: usize) -> Vec<WeightStore> {
+        // 4 subnets x 2 masked layers
+        (0..8)
+            .map(|i| {
+                let m = for_width(nb, 4, 2.0, i as u64).unwrap();
+                WeightStore::from_mask(nb, &m)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn paper_configuration_uses_67pct_dsp() {
+        let cfg = AccelConfig::default();
+        let u = usage(&cfg, 104, 4, &stores(104));
+        assert!((u.dsp_pct() - 66.7).abs() < 1.0, "dsp {}%", u.dsp_pct());
+        assert!(u.fits(), "paper config must fit: {u:?}");
+    }
+
+    #[test]
+    fn dsp_scales_linearly_with_pes() {
+        let s = stores(104);
+        let mut prev = 0;
+        for n_pe in [4, 8, 16, 32] {
+            let cfg = AccelConfig {
+                n_pe,
+                ..Default::default()
+            };
+            let u = usage(&cfg, 104, 4, &s);
+            assert!(u.dsp > prev);
+            assert_eq!(u.dsp, n_pe * 128 * DSP_PER_LANE);
+            prev = u.dsp;
+        }
+    }
+
+    #[test]
+    fn bram_dominated_by_voxel_store() {
+        // Paper: "BRAM consumption primarily depends on the storage of
+        // voxels and model weights" and stays ~constant with PE count.
+        let s = stores(104);
+        let u4 = usage(
+            &AccelConfig {
+                n_pe: 4,
+                ..Default::default()
+            },
+            104,
+            4,
+            &s,
+        );
+        let u32 = usage(&AccelConfig::default(), 104, 4, &s);
+        assert_eq!(u4.bram36, u32.bram36);
+        assert!(u32.bram_pct() > 10.0);
+    }
+
+    #[test]
+    fn oversized_config_does_not_fit() {
+        let cfg = AccelConfig {
+            n_pe: 64,
+            ..Default::default()
+        };
+        let u = usage(&cfg, 104, 4, &stores(104));
+        assert!(u.dsp > VU13P_DSP);
+        assert!(!u.fits());
+    }
+
+    #[test]
+    fn io_constant() {
+        let s = stores(104);
+        let pcts: Vec<f64> = [4usize, 16, 32]
+            .iter()
+            .map(|&n_pe| {
+                usage(
+                    &AccelConfig {
+                        n_pe,
+                        ..Default::default()
+                    },
+                    104,
+                    4,
+                    &s,
+                )
+                .io_pct()
+            })
+            .collect();
+        assert!(pcts.windows(2).all(|w| (w[0] - w[1]).abs() < 1e-9));
+    }
+}

@@ -1,0 +1,547 @@
+//! Cycle-level accelerator simulator — the controller (§V-D), PE array
+//! (§V-C) and both operation-ordering schemes, functionally evaluating
+//! uIVIM-NET in Q4.12 and counting cycles / weight loads as the RTL
+//! would.
+//!
+//! Controller schedule per batch (batch-level scheme):
+//!
+//! ```text
+//! for subnet in [D, D*, f, S0]:
+//!   for layer in [1, 2, encoder]:
+//!     for sample in 0..N:                  # outer = batch-level
+//!       load sample's (mask-skipped) weights        -> load cycles
+//!       for voxel in batch:                          # pipelined
+//!         for out_group in ceil(kept/N_PE):          # PEs in parallel
+//!           PU: chunks = ceil(nb/lanes) cycles each
+//! ```
+//!
+//! The sampling-level scheme swaps the sample and voxel loops, forcing a
+//! weight re-load per (voxel, sample) — same arithmetic, same results,
+//! `batchsize`x the load traffic (paper Fig. 5).
+//!
+//! Mask-zero skipping: dropped output neurons are never scheduled (no
+//! cycles, no weights stored); the sigmoid is the hardware-standard PLAN
+//! piecewise-linear approximation.
+
+use super::fixed::{quantize_slice, Fx};
+use super::memory::WeightStore;
+use super::pu::{pu_dot, PuConfig};
+use super::resource::AccelConfig;
+use super::schemes::Scheme;
+use crate::infer::{Engine, InferOutput};
+use crate::ivim::Param;
+use crate::masks::MaskSet;
+use crate::model::{Manifest, Weights};
+
+/// Words fetched per cycle during a weight load (burst width).
+pub const LOAD_WORDS_PER_CYCLE: usize = 8;
+
+/// Counters accumulated by a simulation run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CycleStats {
+    pub cycles: u64,
+    /// Cycles in which the MAC array was streaming (vs load/drain).
+    pub active_cycles: u64,
+    pub weight_loads: u64,
+    pub weight_words_loaded: u64,
+    pub macs: u64,
+}
+
+impl CycleStats {
+    pub fn merge(&mut self, o: &CycleStats) {
+        self.cycles += o.cycles;
+        self.active_cycles += o.active_cycles;
+        self.weight_loads += o.weight_loads;
+        self.weight_words_loaded += o.weight_words_loaded;
+        self.macs += o.macs;
+    }
+
+    /// Wall-clock seconds at the given clock.
+    pub fn seconds(&self, clock_hz: f64) -> f64 {
+        self.cycles as f64 / clock_hz
+    }
+}
+
+/// PLAN piecewise-linear sigmoid (Amin et al.), the standard FPGA
+/// approximation; max error ~0.019.
+pub fn plan_sigmoid(x: Fx) -> Fx {
+    let neg = x.0 < 0;
+    let ax = Fx(x.0.unsigned_abs().min(i16::MAX as u16) as i16);
+    let xf = ax.to_f32();
+    let y = if xf >= 5.0 {
+        Fx::from_f32(1.0)
+    } else if xf >= 2.375 {
+        Fx::from_f32(0.03125 * xf + 0.84375)
+    } else if xf >= 1.0 {
+        Fx::from_f32(0.125 * xf + 0.625)
+    } else {
+        Fx::from_f32(0.25 * xf + 0.5)
+    };
+    if neg {
+        Fx::ONE.sub(y)
+    } else {
+        y
+    }
+}
+
+/// One kept output column of a masked layer after offline BN folding.
+///
+/// The BatchNorm affine is folded into the column weights offline
+/// (standard FPGA quantisation flow): `h = (x·W + b)·scale + shift =
+/// x·(W·scale) + (b·scale + shift)`.  Trained BN scales can exceed the
+/// Q4.12 range (observed up to ~14x), so each column additionally gets a
+/// power-of-two pre-shift `k`: weights/bias are stored divided by `2^k`
+/// and the wide accumulator is barrel-shifted left by `k` before
+/// saturation — free in fabric, bit-faithful here.
+struct QuantColumn {
+    out: usize,
+    weights: Vec<Fx>,
+    bias: Fx,
+    shift_k: u32,
+}
+
+/// One masked layer's quantised, mask-skipped storage.
+struct QuantLayer {
+    nb_in: usize,
+    /// Per sample: ONLY kept outputs (mask-zero skipping).
+    samples: Vec<Vec<QuantColumn>>,
+    store: WeightStore,
+}
+
+impl QuantLayer {
+    fn build(
+        nb: usize,
+        w: &[f32],
+        b: &[f32],
+        g: &[f32],
+        be: &[f32],
+        m: &[f32],
+        v: &[f32],
+        mask: &MaskSet,
+    ) -> QuantLayer {
+        const EPS: f32 = 1e-5;
+        let mut samples = Vec::with_capacity(mask.n);
+        for s in 0..mask.n {
+            let mut kept = Vec::new();
+            for o in 0..nb {
+                if mask.row(s)[o] == 0 {
+                    continue;
+                }
+                let scale = g[o] / (v[o] + EPS).sqrt();
+                let shift = be[o] - m[o] * scale;
+                let col: Vec<f32> = (0..nb).map(|i| w[i * nb + o] * scale).collect();
+                let bias = b[o] * scale + shift;
+                // smallest k so the scaled column and bias fit Q4.12
+                let maxabs = col
+                    .iter()
+                    .map(|x| x.abs())
+                    .fold(bias.abs(), f32::max);
+                let mut k = 0u32;
+                while maxabs / (1u32 << k) as f32 >= 7.9 && k < 12 {
+                    k += 1;
+                }
+                let div = (1u32 << k) as f32;
+                kept.push(QuantColumn {
+                    out: o,
+                    weights: quantize_slice(
+                        &col.iter().map(|x| x / div).collect::<Vec<_>>(),
+                    ),
+                    bias: Fx::from_f32(bias / div),
+                    shift_k: k,
+                });
+            }
+            samples.push(kept);
+        }
+        QuantLayer {
+            nb_in: nb,
+            samples,
+            store: WeightStore::from_mask(nb, mask),
+        }
+    }
+
+    /// Stored words for one sample (mask-skipped).
+    fn words(&self, s: usize) -> usize {
+        self.store.skipped_words(s)
+    }
+}
+
+/// Encoder layer (nb -> 1), dense (no mask).
+struct QuantEncoder {
+    w: Vec<Fx>,
+    b: Fx,
+}
+
+struct QuantSubnet {
+    param: Param,
+    l1: QuantLayer,
+    l2: QuantLayer,
+    enc: QuantEncoder,
+}
+
+/// The simulator.  Owns quantised weights; evaluates batches in Q4.12
+/// while counting cycles.
+pub struct AccelSimulator {
+    pub cfg: AccelConfig,
+    pu: PuConfig,
+    nb: usize,
+    n_samples: usize,
+    scheme: Scheme,
+    subnets: Vec<QuantSubnet>,
+    /// Stats of the last `infer_batch` call.
+    pub last_stats: CycleStats,
+}
+
+impl AccelSimulator {
+    pub fn new(
+        man: &Manifest,
+        weights: &Weights,
+        cfg: AccelConfig,
+        scheme: Scheme,
+    ) -> anyhow::Result<AccelSimulator> {
+        let mut subnets = Vec::with_capacity(4);
+        for p in Param::ALL {
+            let sn = p.name();
+            let sw = weights.subnet(man, sn);
+            let m1 = man
+                .mask(sn, 1)
+                .ok_or_else(|| anyhow::anyhow!("missing mask {sn}.1"))?;
+            let m2 = man
+                .mask(sn, 2)
+                .ok_or_else(|| anyhow::anyhow!("missing mask {sn}.2"))?;
+            subnets.push(QuantSubnet {
+                param: p,
+                l1: QuantLayer::build(man.nb, sw.w1, sw.b1, sw.g1, sw.be1, sw.m1, sw.v1, m1),
+                l2: QuantLayer::build(man.nb, sw.w2, sw.b2, sw.g2, sw.be2, sw.m2, sw.v2, m2),
+                enc: QuantEncoder {
+                    w: quantize_slice(sw.w3),
+                    b: Fx::from_f32(sw.b3[0]),
+                },
+            });
+        }
+        let pu = PuConfig {
+            lanes: cfg.lanes.min(man.nb.next_power_of_two()),
+            r_m: cfg.r_m,
+            r_a: cfg.r_a,
+        };
+        Ok(AccelSimulator {
+            cfg,
+            pu,
+            nb: man.nb,
+            n_samples: man.n_samples,
+            scheme,
+            subnets,
+            last_stats: CycleStats::default(),
+        })
+    }
+
+    pub fn scheme(&self) -> Scheme {
+        self.scheme
+    }
+    pub fn set_scheme(&mut self, s: Scheme) {
+        self.scheme = s;
+    }
+    pub fn pu_config(&self) -> &PuConfig {
+        &self.pu
+    }
+
+    /// Weight stores of all masked layers (for the resource model).
+    pub fn weight_stores(&self) -> Vec<WeightStore> {
+        self.subnets
+            .iter()
+            .flat_map(|s| [s.l1.store.clone(), s.l2.store.clone()])
+            .collect()
+    }
+
+    /// Cycles to load `words` weight words.
+    fn load_cycles(words: usize) -> u64 {
+        words.div_ceil(LOAD_WORDS_PER_CYCLE) as u64
+    }
+
+    /// Compute cycles for evaluating `kept` output neurons over `batch`
+    /// voxels with the PE array (pipelined; one chunk per cycle per PE).
+    fn compute_cycles(&self, kept: usize, batch: usize) -> (u64, u64) {
+        let out_groups = kept.div_ceil(self.cfg.n_pe);
+        let chunks = self.pu.chunks(self.nb);
+        let fill = self.pu.latency_cycles(self.nb) as u64;
+        let stream = (out_groups * batch * chunks) as u64;
+        (fill + stream, stream)
+    }
+
+    /// Evaluate one masked layer for one sample over the whole batch
+    /// (functional), returning activations `[batch][nb]`.
+    fn eval_layer(
+        &self,
+        layer: &QuantLayer,
+        sample: usize,
+        input: &[Fx],
+        batch: usize,
+        out: &mut [Fx],
+    ) -> u64 {
+        let nb = self.nb;
+        out.fill(Fx::ZERO);
+        let mut macs = 0u64;
+        for v in 0..batch {
+            let x = &input[v * layer.nb_in..(v + 1) * layer.nb_in];
+            for c in &layer.samples[sample] {
+                // BN is folded into the stored weights; the accumulator
+                // is barrel-shifted by the column's pre-shift before
+                // saturating back to Q4.12 (see QuantColumn docs).
+                let mut acc = super::pu::pu_dot_acc(&self.pu, x, &c.weights);
+                acc += (c.bias.0 as i64) << super::fixed::FRAC_BITS;
+                acc <<= c.shift_k;
+                out[v * nb + c.out] = super::fixed::sat_from_acc(acc).relu();
+                macs += layer.nb_in as u64;
+            }
+        }
+        macs
+    }
+
+    /// Run one batch through the full model under the configured scheme.
+    pub fn infer_batch_stats(
+        &mut self,
+        signals: &[f32],
+    ) -> anyhow::Result<(InferOutput, CycleStats)> {
+        let batch = self.cfg.batch;
+        let nb = self.nb;
+        anyhow::ensure!(
+            signals.len() == batch * nb,
+            "expected {batch}x{nb} signals, got {}",
+            signals.len()
+        );
+        let x0: Vec<Fx> = quantize_slice(signals);
+        let mut out = InferOutput::new(self.n_samples, batch);
+        let mut stats = CycleStats::default();
+        let mut h1 = vec![Fx::ZERO; batch * nb];
+        let mut h2 = vec![Fx::ZERO; batch * nb];
+
+        // The functional result is scheme-independent (verified by test);
+        // cycle/load accounting follows the configured scheme.
+        for sn in &self.subnets {
+            for s in 0..self.n_samples {
+                // layer 1
+                stats.macs += self.eval_layer(&sn.l1, s, &x0, batch, &mut h1);
+                // layer 2
+                stats.macs += self.eval_layer(&sn.l2, s, &h1, batch, &mut h2);
+                // encoder + PLAN sigmoid
+                for v in 0..batch {
+                    let x = &h2[v * nb..(v + 1) * nb];
+                    let logit = pu_dot(&self.pu, x, &sn.enc.w, sn.enc.b);
+                    let sig = plan_sigmoid(logit);
+                    out.set(
+                        sn.param,
+                        s,
+                        v,
+                        sn.param.convert(sig.to_f32() as f64) as f32,
+                    );
+                    stats.macs += nb as u64;
+                }
+            }
+
+            // Cycle accounting per layer under the scheme.
+            for layer in [&sn.l1, &sn.l2] {
+                for s in 0..self.n_samples {
+                    let kept = layer.samples[s].len();
+                    let words = layer.words(s);
+                    let loads = match self.scheme {
+                        Scheme::BatchLevel => 1usize,
+                        Scheme::SamplingLevel => batch,
+                    };
+                    stats.weight_loads += loads as u64;
+                    stats.weight_words_loaded += (loads * words) as u64;
+                    let load_c = Self::load_cycles(words) * loads as u64;
+                    let (c, active) = self.compute_cycles(kept, batch);
+                    if self.cfg.overlap_loads {
+                        // Double-buffered weight memories: the next
+                        // sample's load hides behind this sample's
+                        // compute; the sequence is bound by the larger.
+                        stats.cycles += load_c.max(c);
+                    } else {
+                        stats.cycles += load_c + c;
+                    }
+                    stats.active_cycles += active;
+                }
+            }
+            // encoder: dense single output, loaded once per batch per
+            // sample (its weights are tiny).
+            for _s in 0..self.n_samples {
+                let words = nb + 1;
+                stats.weight_loads += 1;
+                stats.weight_words_loaded += words as u64;
+                let load_c = Self::load_cycles(words);
+                let (c, active) = self.compute_cycles(1, batch);
+                if self.cfg.overlap_loads {
+                    stats.cycles += load_c.max(c);
+                } else {
+                    stats.cycles += load_c + c;
+                }
+                stats.active_cycles += active;
+            }
+        }
+
+        self.last_stats = stats;
+        Ok((out, stats))
+    }
+
+    /// Latency of one batch in milliseconds at the configured clock.
+    pub fn batch_latency_ms(&self, stats: &CycleStats) -> f64 {
+        stats.seconds(self.cfg.clock_hz) * 1e3
+    }
+}
+
+impl Engine for AccelSimulator {
+    fn name(&self) -> &str {
+        "fpga-sim-q4.12"
+    }
+    fn batch_size(&self) -> usize {
+        self.cfg.batch
+    }
+    fn infer_batch(&mut self, signals: &[f32]) -> anyhow::Result<InferOutput> {
+        self.infer_batch_stats(signals).map(|(o, _)| o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::native::NativeEngine;
+    use crate::ivim::synth::synth_dataset;
+    use crate::model::manifest::artifacts_root;
+
+    fn setup() -> Option<(Manifest, Weights)> {
+        let dir = artifacts_root().join("tiny");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        let w = Weights::load_init(&man).unwrap();
+        Some((man, w))
+    }
+
+    fn cfg_for(man: &Manifest) -> AccelConfig {
+        AccelConfig {
+            batch: man.batch_infer,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn plan_sigmoid_accuracy() {
+        for i in -80..=80 {
+            let x = i as f32 * 0.1;
+            let want = 1.0 / (1.0 + (-x).exp());
+            let got = plan_sigmoid(Fx::from_f32(x)).to_f32();
+            assert!((got - want).abs() < 0.022, "x={x}: {got} vs {want}");
+        }
+        assert_eq!(plan_sigmoid(Fx::from_f32(7.0)).to_f32(), 1.0);
+    }
+
+    #[test]
+    fn matches_native_engine_within_quantisation() {
+        let Some((man, w)) = setup() else { return };
+        let mut sim =
+            AccelSimulator::new(&man, &w, cfg_for(&man), Scheme::BatchLevel).unwrap();
+        let mut native = NativeEngine::new(&man, &w).unwrap();
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 5);
+        let a = sim.infer_batch(&ds.signals).unwrap();
+        let b = native.infer_batch(&ds.signals).unwrap();
+        for p in Param::ALL {
+            let (lo, hi) = p.range();
+            // quantisation (Q4.12 through 3 layers) + PLAN sigmoid error,
+            // scaled into the parameter range
+            let tol = (hi - lo) * 0.05;
+            for s in 0..a.n_samples {
+                for v in 0..a.batch {
+                    let d = (a.get(p, s, v) - b.get(p, s, v)).abs() as f64;
+                    assert!(d <= tol, "{p:?} s{s} v{v}: diff {d} > {tol}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn schemes_are_bit_identical_in_results() {
+        let Some((man, w)) = setup() else { return };
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 6);
+        let mut sim_b =
+            AccelSimulator::new(&man, &w, cfg_for(&man), Scheme::BatchLevel).unwrap();
+        let mut sim_s =
+            AccelSimulator::new(&man, &w, cfg_for(&man), Scheme::SamplingLevel).unwrap();
+        let a = sim_b.infer_batch(&ds.signals).unwrap();
+        let b = sim_s.infer_batch(&ds.signals).unwrap();
+        for p in Param::ALL {
+            assert_eq!(a.samples[p.index()], b.samples[p.index()]);
+        }
+    }
+
+    #[test]
+    fn batch_level_reduces_weight_loads_by_batchsize() {
+        let Some((man, w)) = setup() else { return };
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 7);
+        let mut sim_b =
+            AccelSimulator::new(&man, &w, cfg_for(&man), Scheme::BatchLevel).unwrap();
+        let mut sim_s =
+            AccelSimulator::new(&man, &w, cfg_for(&man), Scheme::SamplingLevel).unwrap();
+        let (_, st_b) = sim_b.infer_batch_stats(&ds.signals).unwrap();
+        let (_, st_s) = sim_s.infer_batch_stats(&ds.signals).unwrap();
+        // masked layers re-load batchsize x (encoder always 1/batch)
+        assert_eq!(
+            st_s.weight_words_loaded - (st_b.weight_words_loaded - masked_words(&sim_b)),
+            masked_words(&sim_b) * man.batch_infer as u64,
+        );
+        assert!(st_s.cycles > st_b.cycles);
+    }
+
+    fn masked_words(sim: &AccelSimulator) -> u64 {
+        sim.weight_stores()
+            .iter()
+            .map(|s| s.total_skipped_words() as u64)
+            .sum()
+    }
+
+    #[test]
+    fn mask_zero_skipping_reduces_cycles() {
+        let Some((man, w)) = setup() else { return };
+        // With ~half the neurons masked out, active cycles must be well
+        // below the dense op count.
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 8);
+        let mut sim =
+            AccelSimulator::new(&man, &w, cfg_for(&man), Scheme::BatchLevel).unwrap();
+        let (_, st) = sim.infer_batch_stats(&ds.signals).unwrap();
+        // dense macs = 4 subnets * N * batch * (2*nb^2 + nb)
+        let nb = man.nb as u64;
+        let dense = 4 * man.n_samples as u64 * man.batch_infer as u64 * (2 * nb * nb + nb);
+        assert!(st.macs < dense, "macs {} !< dense {}", st.macs, dense);
+        assert!(st.macs > dense / 4);
+    }
+
+    #[test]
+    fn overlap_loads_saves_cycles_not_accuracy() {
+        let Some((man, w)) = setup() else { return };
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 10);
+        let base = cfg_for(&man);
+        let over = AccelConfig {
+            overlap_loads: true,
+            ..base
+        };
+        let mut a = AccelSimulator::new(&man, &w, base, Scheme::BatchLevel).unwrap();
+        let mut b = AccelSimulator::new(&man, &w, over, Scheme::BatchLevel).unwrap();
+        let (oa, sa) = a.infer_batch_stats(&ds.signals).unwrap();
+        let (ob, sb) = b.infer_batch_stats(&ds.signals).unwrap();
+        assert!(sb.cycles < sa.cycles, "{} !< {}", sb.cycles, sa.cycles);
+        for p in Param::ALL {
+            assert_eq!(oa.samples[p.index()], ob.samples[p.index()]);
+        }
+    }
+
+    #[test]
+    fn deterministic_stats() {
+        let Some((man, w)) = setup() else { return };
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 9);
+        let mut sim =
+            AccelSimulator::new(&man, &w, cfg_for(&man), Scheme::BatchLevel).unwrap();
+        let (_, s1) = sim.infer_batch_stats(&ds.signals).unwrap();
+        let (_, s2) = sim.infer_batch_stats(&ds.signals).unwrap();
+        assert_eq!(s1.cycles, s2.cycles);
+        assert_eq!(s1.weight_words_loaded, s2.weight_words_loaded);
+    }
+}

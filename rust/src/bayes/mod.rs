@@ -1,0 +1,229 @@
+//! Uncertainty-method baselines (paper §II-C): MC-Dropout and Deep
+//! Ensembles heads over the native engine, for the
+//! Masksembles-vs-alternatives ablation.
+//!
+//! * [`McDropout`] — random Bernoulli masks drawn *per forward pass*
+//!   (the runtime randomness the paper's hardware specifically removes;
+//!   its cost shows up in the Table I sampler-energy ablation).
+//! * [`DeepEnsemble`] — N independently initialised weight sets; the
+//!   calibration gold standard at N-times the memory cost.
+
+use crate::infer::native::NativeEngine;
+use crate::infer::{Engine, InferOutput};
+use crate::ivim::Param;
+use crate::masks::MaskSet;
+use crate::model::{Manifest, Weights};
+use crate::util::rng::Pcg32;
+
+/// MC-Dropout: the manifest's network evaluated under freshly sampled
+/// Bernoulli masks each call (rate ~= 1 - 1/scale, matching the
+/// Masksembles keep fraction).
+pub struct McDropout {
+    man: Manifest,
+    weights: Weights,
+    batch: usize,
+    n_samples: usize,
+    keep_prob: f64,
+    rng: Pcg32,
+}
+
+impl McDropout {
+    pub fn new(man: &Manifest, weights: &Weights, seed: u64) -> Self {
+        McDropout {
+            man: man.clone(),
+            weights: weights.clone(),
+            batch: man.batch_infer,
+            n_samples: man.n_samples,
+            keep_prob: 1.0 / man.scale,
+            rng: Pcg32::new(seed),
+        }
+    }
+
+    fn sample_mask(&mut self, width: usize) -> MaskSet {
+        // Bernoulli per neuron; re-draw all-zero masks (a dead layer
+        // would zero the subnet exactly like the elision bug class).
+        loop {
+            let bits: Vec<u8> = (0..width)
+                .map(|_| u8::from(self.rng.next_f64() < self.keep_prob))
+                .collect();
+            if bits.iter().any(|&b| b == 1) {
+                return MaskSet {
+                    n: 1,
+                    width,
+                    bits,
+                };
+            }
+        }
+    }
+}
+
+impl Engine for McDropout {
+    fn name(&self) -> &str {
+        "mc-dropout"
+    }
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn infer_batch(&mut self, signals: &[f32]) -> anyhow::Result<InferOutput> {
+        let mut out = InferOutput::new(self.n_samples, self.batch);
+        for s in 0..self.n_samples {
+            // Build a one-sample manifest clone with random masks.
+            let mut man = self.man.clone();
+            man.n_samples = 1;
+            for sn in man.subnets.clone() {
+                for layer in 1..=2usize {
+                    let m = self.sample_mask(man.nb);
+                    man.masks.insert(format!("{sn}.mask{layer}"), m);
+                }
+            }
+            let mut eng = NativeEngine::with_batch(&man, &self.weights, self.batch)?;
+            let one = eng.infer_batch(signals)?;
+            for p in Param::ALL {
+                for v in 0..self.batch {
+                    out.set(p, s, v, one.get(p, 0, v));
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Deep Ensemble: N independently initialised (optionally independently
+/// trained) weight vectors, no masks (all-ones).
+pub struct DeepEnsemble {
+    man: Manifest,
+    members: Vec<Weights>,
+    batch: usize,
+}
+
+impl DeepEnsemble {
+    /// Build from explicit member weights.
+    pub fn new(man: &Manifest, members: Vec<Weights>) -> anyhow::Result<Self> {
+        anyhow::ensure!(!members.is_empty(), "ensemble needs members");
+        Ok(DeepEnsemble {
+            man: Self::all_ones_manifest(man),
+            members,
+            batch: man.batch_infer,
+        })
+    }
+
+    /// Fresh ensemble with random independent initialisations.
+    pub fn init_random(man: &Manifest, n: usize, seed: u64) -> anyhow::Result<Self> {
+        let members = (0..n)
+            .map(|i| Weights::init_random(man, seed + i as u64))
+            .collect();
+        Self::new(man, members)
+    }
+
+    fn all_ones_manifest(man: &Manifest) -> Manifest {
+        let mut m = man.clone();
+        m.n_samples = 1;
+        for sn in m.subnets.clone() {
+            for layer in 1..=2usize {
+                m.masks.insert(
+                    format!("{sn}.mask{layer}"),
+                    MaskSet {
+                        n: 1,
+                        width: m.nb,
+                        bits: vec![1u8; m.nb],
+                    },
+                );
+            }
+        }
+        m
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Memory cost relative to a single model — the ensemble's known
+    /// downside (paper §II-C: "heavy operational costs").
+    pub fn memory_ratio(&self) -> f64 {
+        self.members.len() as f64
+    }
+}
+
+impl Engine for DeepEnsemble {
+    fn name(&self) -> &str {
+        "deep-ensemble"
+    }
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn infer_batch(&mut self, signals: &[f32]) -> anyhow::Result<InferOutput> {
+        let n = self.members.len();
+        let mut out = InferOutput::new(n, self.batch);
+        for (s, w) in self.members.iter().enumerate() {
+            let mut eng = NativeEngine::with_batch(&self.man, w, self.batch)?;
+            let one = eng.infer_batch(signals)?;
+            for p in Param::ALL {
+                for v in 0..self.batch {
+                    out.set(p, s, v, one.get(p, 0, v));
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ivim::synth::synth_dataset;
+    use crate::model::manifest::artifacts_root;
+
+    fn setup() -> Option<(Manifest, Weights)> {
+        let dir = artifacts_root().join("tiny");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        let w = Weights::load_init(&man).unwrap();
+        Some((man, w))
+    }
+
+    #[test]
+    fn mc_dropout_produces_spread() {
+        let Some((man, w)) = setup() else { return };
+        let mut mcd = McDropout::new(&man, &w, 42);
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 1);
+        let out = mcd.infer_batch(&ds.signals).unwrap();
+        let spread: f64 = (0..out.batch).map(|v| out.std(Param::F, v)).sum();
+        assert!(spread > 0.0, "random masks must induce variance");
+    }
+
+    #[test]
+    fn mc_dropout_is_stochastic_across_calls() {
+        let Some((man, w)) = setup() else { return };
+        let mut mcd = McDropout::new(&man, &w, 42);
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 2);
+        let a = mcd.infer_batch(&ds.signals).unwrap();
+        let b = mcd.infer_batch(&ds.signals).unwrap();
+        // unlike Masksembles, MC-Dropout is NOT repeatable run-to-run
+        assert_ne!(a.samples[Param::F.index()], b.samples[Param::F.index()]);
+    }
+
+    #[test]
+    fn deep_ensemble_members_disagree() {
+        let Some((man, _)) = setup() else { return };
+        let mut de = DeepEnsemble::init_random(&man, 3, 7).unwrap();
+        assert_eq!(de.len(), 3);
+        assert_eq!(de.memory_ratio(), 3.0);
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 3);
+        let out = de.infer_batch(&ds.signals).unwrap();
+        let spread: f64 = (0..out.batch).map(|v| out.std(Param::D, v)).sum();
+        assert!(spread > 0.0);
+    }
+
+    #[test]
+    fn ensemble_needs_members() {
+        let Some((man, _)) = setup() else { return };
+        assert!(DeepEnsemble::new(&man, vec![]).is_err());
+    }
+}

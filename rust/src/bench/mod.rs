@@ -1,0 +1,181 @@
+//! Benchmark harness (criterion substitute, DESIGN.md §6): warmup,
+//! adaptive iteration count, outlier-robust statistics and comparison
+//! tables.  All `cargo bench` targets (`harness = false`) are built on
+//! this.
+
+use crate::util::stats;
+use crate::util::Timer;
+
+/// Result of benchmarking one case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub p99_s: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+    pub fn mean_us(&self) -> f64 {
+        self.mean_s * 1e6
+    }
+    /// Throughput given a per-iteration item count.
+    pub fn items_per_s(&self, items: usize) -> f64 {
+        items as f64 / self.mean_s
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    /// Target total measurement time.
+    pub target_s: f64,
+    /// Warmup time before measuring.
+    pub warmup_s: f64,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            target_s: 1.0,
+            warmup_s: 0.2,
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+}
+
+/// Fast config for CI / smoke runs (honours `UIVIM_BENCH_FAST=1`).
+pub fn config_from_env() -> BenchConfig {
+    if std::env::var("UIVIM_BENCH_FAST").map(|v| v == "1").unwrap_or(false) {
+        BenchConfig {
+            target_s: 0.1,
+            warmup_s: 0.02,
+            min_iters: 2,
+            max_iters: 100,
+        }
+    } else {
+        BenchConfig::default()
+    }
+}
+
+/// Benchmark a closure.  The closure is the measured unit; per-iteration
+/// samples feed robust stats.
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    // Warmup + per-iteration cost estimate.
+    let warm = Timer::start();
+    let mut warm_iters = 0usize;
+    while warm.elapsed_s() < cfg.warmup_s || warm_iters < 1 {
+        f();
+        warm_iters += 1;
+        if warm_iters >= cfg.max_iters {
+            break;
+        }
+    }
+    let est = warm.elapsed_s() / warm_iters as f64;
+    let iters = ((cfg.target_s / est.max(1e-9)) as usize)
+        .clamp(cfg.min_iters, cfg.max_iters);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed_s());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: stats::mean(&samples),
+        median_s: stats::median(&samples),
+        std_s: stats::std(&samples),
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        p99_s: stats::percentile(&samples, 99.0),
+    }
+}
+
+/// Print a standard results table for a set of bench results.
+pub fn print_results(title: &str, results: &[BenchResult]) {
+    use crate::metrics::report::Table;
+    let mut t = Table::new(&["case", "iters", "mean", "median", "std", "p99"]);
+    for r in results {
+        t.row(&[
+            r.name.clone(),
+            r.iters.to_string(),
+            fmt_time(r.mean_s),
+            fmt_time(r.median_s),
+            fmt_time(r.std_s),
+            fmt_time(r.p99_s),
+        ]);
+    }
+    println!("\n== {title} ==\n{}", t.to_text());
+}
+
+/// Human-friendly time formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Prevent the optimizer from eliding a value (std::hint wrapper).
+#[inline]
+pub fn black_box<T>(v: T) -> T {
+    std::hint::black_box(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep() {
+        let cfg = BenchConfig {
+            target_s: 0.05,
+            warmup_s: 0.005,
+            min_iters: 3,
+            max_iters: 50,
+        };
+        let r = bench("sleep", &cfg, || {
+            std::thread::sleep(std::time::Duration::from_micros(500))
+        });
+        assert!(r.mean_s >= 400e-6, "mean {}", r.mean_s);
+        assert!(r.iters >= 3);
+        assert!(r.median_s > 0.0 && r.p99_s >= r.median_s);
+    }
+
+    #[test]
+    fn adaptive_iters_bounded() {
+        let cfg = BenchConfig {
+            target_s: 0.02,
+            warmup_s: 0.002,
+            min_iters: 2,
+            max_iters: 64,
+        };
+        let r = bench("fast", &cfg, || {
+            black_box(1 + 1);
+        });
+        assert!(r.iters <= 64 && r.iters >= 2);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" us"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,256 @@
+//! Minimal clap-substitute argument parser (DESIGN.md §6): subcommands,
+//! `--key value` options, `--flag` booleans, automatic help text.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// A subcommand spec.
+#[derive(Debug, Clone)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+/// Parsed arguments for one command.
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<Option<usize>> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'"))
+            })
+            .transpose()
+    }
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<Option<f64>> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'"))
+            })
+            .transpose()
+    }
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+}
+
+/// The CLI definition: a set of commands.
+pub struct Cli {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+impl Cli {
+    /// Parse argv (without the program name).  Returns parsed args or a
+    /// help/usage error message to print.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        if argv.is_empty()
+            || argv[0] == "--help"
+            || argv[0] == "-h"
+            || argv[0] == "help"
+        {
+            return Err(self.usage());
+        }
+        let cmd_name = &argv[0];
+        let Some(spec) = self.commands.iter().find(|c| c.name == cmd_name) else {
+            return Err(format!(
+                "unknown command '{cmd_name}'\n\n{}",
+                self.usage()
+            ));
+        };
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        // defaults
+        for o in &spec.opts {
+            if let Some(d) = o.default {
+                values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.command_usage(spec));
+            }
+            let Some(name) = a.strip_prefix("--") else {
+                return Err(format!(
+                    "unexpected positional argument '{a}'\n\n{}",
+                    self.command_usage(spec)
+                ));
+            };
+            let Some(opt) = spec.opts.iter().find(|o| o.name == name) else {
+                return Err(format!(
+                    "unknown option '--{name}'\n\n{}",
+                    self.command_usage(spec)
+                ));
+            };
+            if opt.is_flag {
+                flags.insert(name.to_string(), true);
+                i += 1;
+            } else {
+                let Some(v) = argv.get(i + 1) else {
+                    return Err(format!("--{name} requires a value"));
+                };
+                values.insert(name.to_string(), v.clone());
+                i += 2;
+            }
+        }
+        Ok(Args {
+            command: cmd_name.clone(),
+            values,
+            flags,
+        })
+    }
+
+    /// Top-level usage text.
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n", self.program, self.about, self.program);
+        let w = self
+            .commands
+            .iter()
+            .map(|c| c.name.len())
+            .max()
+            .unwrap_or(0);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<width$}  {}\n", c.name, c.help, width = w));
+        }
+        s.push_str(&format!(
+            "\nRun '{} <command> --help' for command options.\n",
+            self.program
+        ));
+        s
+    }
+
+    fn command_usage(&self, spec: &CommandSpec) -> String {
+        let mut s = format!(
+            "{} {} — {}\n\nOPTIONS:\n",
+            self.program, spec.name, spec.help
+        );
+        for o in &spec.opts {
+            let head = if o.is_flag {
+                format!("--{}", o.name)
+            } else {
+                format!("--{} <value>", o.name)
+            };
+            let dflt = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {head:<24}  {}{dflt}\n", o.help));
+        }
+        s
+    }
+}
+
+/// Shorthand option constructors.
+pub fn opt(name: &'static str, help: &'static str, default: Option<&'static str>) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        default,
+        is_flag: false,
+    }
+}
+pub fn flag(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        default: None,
+        is_flag: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli {
+            program: "repro",
+            about: "test cli",
+            commands: vec![CommandSpec {
+                name: "train",
+                help: "train the model",
+                opts: vec![
+                    opt("steps", "training steps", Some("500")),
+                    opt("snr", "train snr", Some("20")),
+                    flag("verbose", "chatty"),
+                ],
+            }],
+        }
+    }
+
+    #[test]
+    fn parses_defaults_and_overrides() {
+        let c = cli();
+        let a = c
+            .parse(&["train".into(), "--steps".into(), "10".into()])
+            .unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get_usize("steps").unwrap(), Some(10));
+        assert_eq!(a.get_f64("snr").unwrap(), Some(20.0));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn parses_flags() {
+        let c = cli();
+        let a = c.parse(&["train".into(), "--verbose".into()]).unwrap();
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn help_and_errors() {
+        let c = cli();
+        assert!(c.parse(&[]).is_err());
+        assert!(c.parse(&["help".into()]).unwrap_err().contains("COMMANDS"));
+        assert!(c
+            .parse(&["nope".into()])
+            .unwrap_err()
+            .contains("unknown command"));
+        assert!(c
+            .parse(&["train".into(), "--bogus".into(), "1".into()])
+            .unwrap_err()
+            .contains("unknown option"));
+        assert!(c
+            .parse(&["train".into(), "--steps".into()])
+            .unwrap_err()
+            .contains("requires a value"));
+        assert!(c
+            .parse(&["train".into(), "--help".into()])
+            .unwrap_err()
+            .contains("OPTIONS"));
+    }
+
+    #[test]
+    fn bad_number_reports_nicely() {
+        let c = cli();
+        let a = c
+            .parse(&["train".into(), "--steps".into(), "abc".into()])
+            .unwrap();
+        assert!(a.get_usize("steps").is_err());
+    }
+}

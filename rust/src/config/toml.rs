@@ -1,0 +1,222 @@
+//! TOML-subset parser: `[section]`, `key = value` (string / int / float /
+//! bool / flat array), `#` comments.  Enough for this project's configs;
+//! rejects anything outside the subset loudly rather than mis-parsing.
+
+use std::collections::BTreeMap;
+
+/// A TOML value in the supported subset.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: section -> key -> value.  Root-level keys live in
+/// section "".
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> anyhow::Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow::anyhow!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                anyhow::ensure!(
+                    !name.is_empty() && !name.contains('['),
+                    "line {}: bad section name",
+                    lineno + 1
+                );
+                section = name.to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                anyhow::bail!("line {}: expected 'key = value'", lineno + 1);
+            };
+            let key = line[..eq].trim().to_string();
+            anyhow::ensure!(!key.is_empty(), "line {}: empty key", lineno + 1);
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        self.get(section, key)?.as_str()
+    }
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        self.get(section, key)?.as_int()
+    }
+    pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key)?.as_float()
+    }
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        self.get(section, key)?.as_bool()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> anyhow::Result<TomlValue> {
+    anyhow::ensure!(!s.is_empty(), "missing value");
+    if let Some(body) = s.strip_prefix('"') {
+        let inner = body
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
+        anyhow::ensure!(!inner.contains('"'), "embedded quotes unsupported");
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let inner = body
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow::anyhow!("unterminated array"))?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in trimmed.split(',') {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    anyhow::bail!("unparseable value '{s}'")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+            top = 1
+            [a]
+            s = "hello"   # trailing comment
+            i = -42
+            f = 2.5
+            b = true
+            arr = [1, 2, 3]
+            [b]
+            x = 0.5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_int("", "top"), Some(1));
+        assert_eq!(doc.get_str("a", "s"), Some("hello"));
+        assert_eq!(doc.get_int("a", "i"), Some(-42));
+        assert_eq!(doc.get_float("a", "f"), Some(2.5));
+        assert_eq!(doc.get_bool("a", "b"), Some(true));
+        assert_eq!(
+            doc.get("a", "arr"),
+            Some(&TomlValue::Array(vec![
+                TomlValue::Int(1),
+                TomlValue::Int(2),
+                TomlValue::Int(3)
+            ]))
+        );
+        assert_eq!(doc.get_float("b", "x"), Some(0.5));
+        assert_eq!(doc.get("zzz", "x"), None);
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = TomlDoc::parse("[s]\nv = 3\n").unwrap();
+        assert_eq!(doc.get_float("s", "v"), Some(3.0));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = TomlDoc::parse("[s]\nv = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get_str("s", "v"), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(TomlDoc::parse("[unclosed\n").is_err());
+        assert!(TomlDoc::parse("novalue\n").is_err());
+        assert!(TomlDoc::parse("k = \n").is_err());
+        assert!(TomlDoc::parse("k = what\n").is_err());
+        assert!(TomlDoc::parse("k = \"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn empty_doc_and_empty_array() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert!(doc.sections.is_empty());
+        let doc = TomlDoc::parse("k = []\n").unwrap();
+        assert_eq!(doc.get("", "k"), Some(&TomlValue::Array(vec![])));
+    }
+}

@@ -1,0 +1,264 @@
+//! Dynamic batcher: size-or-deadline batching with tail padding.
+//!
+//! The AOT inference executable has a static batch shape `B`, so the
+//! batcher's invariants are load-bearing:
+//!
+//! 1. a batch never exceeds `B` voxels;
+//! 2. a request never waits longer than `max_wait` before being flushed;
+//! 3. tail batches are padded (with the last real voxel repeated) up to
+//!    `B` — padding rows are marked so their outputs are dropped;
+//! 4. FIFO order is preserved within and across batches.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Configuration of the dynamic batcher.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Engine batch size (the AOT executable's static B).
+    pub batch_size: usize,
+    /// Maximum time the oldest queued request may wait.
+    pub max_wait: Duration,
+    /// Queue capacity before backpressure kicks in.
+    pub queue_capacity: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            batch_size: 64,
+            max_wait: Duration::from_millis(2),
+            queue_capacity: 4096,
+        }
+    }
+}
+
+/// One queued request.
+#[derive(Debug, Clone)]
+pub struct Pending<T> {
+    pub signals: Vec<f32>,
+    pub tag: T,
+    pub enqueued: Instant,
+}
+
+/// A formed batch ready for the engine.
+#[derive(Debug, Clone)]
+pub struct Batch<T> {
+    /// Row-major `[batch_size][nb]` signals, padded to the full size.
+    pub signals: Vec<f32>,
+    /// Tags of the real (non-padding) rows, in row order.
+    pub tags: Vec<T>,
+    /// Number of real rows (<= batch_size).
+    pub real: usize,
+}
+
+/// The batcher state machine.  Single-consumer; thread-safety is provided
+/// by the server's ownership structure (one batcher per worker).
+pub struct Batcher<T> {
+    cfg: BatcherConfig,
+    nb: usize,
+    queue: VecDeque<Pending<T>>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatcherConfig, nb: usize) -> Self {
+        assert!(cfg.batch_size > 0, "batch_size must be positive");
+        Batcher {
+            cfg,
+            nb,
+            queue: VecDeque::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// True when the queue is at capacity (backpressure: callers must
+    /// retry or shed load).
+    pub fn is_full(&self) -> bool {
+        self.queue.len() >= self.cfg.queue_capacity
+    }
+
+    /// Enqueue a request.  Returns `Err` with the request when full.
+    pub fn push(&mut self, req: Pending<T>) -> Result<(), Pending<T>> {
+        if self.is_full() {
+            return Err(req);
+        }
+        assert_eq!(req.signals.len(), self.nb, "voxel width mismatch");
+        self.queue.push_back(req);
+        Ok(())
+    }
+
+    /// Age of the oldest queued request.
+    pub fn oldest_wait(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|p| now.duration_since(p.enqueued))
+    }
+
+    /// Should a batch be cut right now?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.cfg.batch_size {
+            return true;
+        }
+        match self.oldest_wait(now) {
+            Some(w) => !self.queue.is_empty() && w >= self.cfg.max_wait,
+            None => false,
+        }
+    }
+
+    /// Cut a batch (caller checked `ready`, but cutting an early batch is
+    /// legal too).  Pads the tail by repeating the last real row.
+    pub fn cut(&mut self) -> Option<Batch<T>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let take = self.queue.len().min(self.cfg.batch_size);
+        let mut signals = Vec::with_capacity(self.cfg.batch_size * self.nb);
+        let mut tags = Vec::with_capacity(take);
+        for _ in 0..take {
+            let p = self.queue.pop_front().expect("non-empty");
+            signals.extend_from_slice(&p.signals);
+            tags.push(p.tag);
+        }
+        // Pad to the static shape with copies of the last row.
+        let last_row_start = (take - 1) * self.nb;
+        let last_row: Vec<f32> = signals[last_row_start..last_row_start + self.nb].to_vec();
+        for _ in take..self.cfg.batch_size {
+            signals.extend_from_slice(&last_row);
+        }
+        Some(Batch {
+            signals,
+            tags,
+            real: take,
+        })
+    }
+
+    pub fn config(&self) -> &BatcherConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pend(i: usize, nb: usize) -> Pending<usize> {
+        Pending {
+            signals: vec![i as f32; nb],
+            tag: i,
+            enqueued: Instant::now(),
+        }
+    }
+
+    fn mk(batch: usize, cap: usize) -> Batcher<usize> {
+        Batcher::new(
+            BatcherConfig {
+                batch_size: batch,
+                max_wait: Duration::from_millis(1),
+                queue_capacity: cap,
+            },
+            4,
+        )
+    }
+
+    #[test]
+    fn cuts_full_batches_fifo() {
+        let mut b = mk(4, 100);
+        for i in 0..10 {
+            b.push(pend(i, 4)).unwrap();
+        }
+        assert!(b.ready(Instant::now()));
+        let batch = b.cut().unwrap();
+        assert_eq!(batch.real, 4);
+        assert_eq!(batch.tags, vec![0, 1, 2, 3]);
+        assert_eq!(batch.signals.len(), 16);
+        let batch2 = b.cut().unwrap();
+        assert_eq!(batch2.tags, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn pads_tail_batches() {
+        let mut b = mk(4, 100);
+        b.push(pend(7, 4)).unwrap();
+        b.push(pend(8, 4)).unwrap();
+        let batch = b.cut().unwrap();
+        assert_eq!(batch.real, 2);
+        assert_eq!(batch.tags, vec![7, 8]);
+        assert_eq!(batch.signals.len(), 16);
+        // padding rows repeat the last real row
+        assert_eq!(&batch.signals[8..12], &[8.0, 8.0, 8.0, 8.0]);
+        assert_eq!(&batch.signals[12..16], &[8.0, 8.0, 8.0, 8.0]);
+    }
+
+    #[test]
+    fn deadline_triggers_ready() {
+        let mut b = mk(64, 100);
+        assert!(!b.ready(Instant::now()));
+        b.push(pend(0, 4)).unwrap();
+        let now = Instant::now();
+        assert!(!b.ready(now)); // not full, not old
+        let later = now + Duration::from_millis(5);
+        assert!(b.ready(later)); // oldest exceeded max_wait
+    }
+
+    #[test]
+    fn backpressure_at_capacity() {
+        let mut b = mk(4, 3);
+        for i in 0..3 {
+            b.push(pend(i, 4)).unwrap();
+        }
+        assert!(b.is_full());
+        let rejected = b.push(pend(9, 4));
+        assert!(rejected.is_err());
+        assert_eq!(rejected.unwrap_err().tag, 9);
+        // draining frees capacity
+        b.cut().unwrap();
+        assert!(b.push(pend(10, 4)).is_ok());
+    }
+
+    #[test]
+    fn empty_cut_is_none() {
+        let mut b = mk(4, 10);
+        assert!(b.cut().is_none());
+    }
+
+    #[test]
+    fn property_batch_invariants() {
+        use crate::testing::{forall, zip, Gen};
+        // For any queue length and batch size: cut yields <= batch_size
+        // real rows, padded signal length == batch_size * nb, FIFO order.
+        forall(
+            80,
+            zip(Gen::usize_in(1, 32), Gen::usize_in(1, 100)),
+            |&(bs, n): &(usize, usize)| {
+                let mut b = Batcher::new(
+                    BatcherConfig {
+                        batch_size: bs,
+                        max_wait: Duration::from_millis(1),
+                        queue_capacity: 1000,
+                    },
+                    2,
+                );
+                for i in 0..n {
+                    b.push(Pending {
+                        signals: vec![i as f32; 2],
+                        tag: i,
+                        enqueued: Instant::now(),
+                    })
+                    .unwrap();
+                }
+                let mut seen = Vec::new();
+                while let Some(batch) = b.cut() {
+                    if batch.real > bs || batch.signals.len() != bs * 2 {
+                        return false;
+                    }
+                    seen.extend(batch.tags);
+                }
+                seen == (0..n).collect::<Vec<_>>()
+            },
+        );
+    }
+}

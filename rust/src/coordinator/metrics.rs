@@ -1,0 +1,168 @@
+//! Serving metrics: latency histogram, throughput and queue gauges.
+//!
+//! Lock-cheap: counters are atomics; the histogram uses fixed log-spaced
+//! buckets so recording is a single atomic increment.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log-spaced latency histogram from 1 us to ~16 s.
+pub struct LatencyHistogram {
+    /// bucket i covers [2^i, 2^(i+1)) microseconds.
+    buckets: [AtomicU64; 24],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record_us(&self, us: u64) {
+        let idx = (63 - us.max(1).leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate percentile from bucket boundaries (upper bound).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1); // bucket upper bound
+            }
+        }
+        self.max_us()
+    }
+}
+
+/// Aggregate serving metrics shared between the coordinator and its
+/// observers.
+#[derive(Default)]
+pub struct ServingMetrics {
+    pub request_latency: LatencyHistogram,
+    pub batch_latency: LatencyHistogram,
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_rows: AtomicU64,
+    pub rejected: AtomicU64,
+}
+
+impl ServingMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            responses: self.responses.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            padded_rows: self.padded_rows.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            mean_request_us: self.request_latency.mean_us(),
+            p99_request_us: self.request_latency.percentile_us(99.0) as f64,
+            mean_batch_us: self.batch_latency.mean_us(),
+        }
+    }
+}
+
+/// Point-in-time copy of the counters.
+#[derive(Debug, Clone, Copy)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub responses: u64,
+    pub batches: u64,
+    pub padded_rows: u64,
+    pub rejected: u64,
+    pub mean_request_us: f64,
+    pub p99_request_us: f64,
+    pub mean_batch_us: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_basic() {
+        let h = LatencyHistogram::new();
+        for us in [1u64, 10, 100, 1000, 1000, 10_000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 6);
+        assert!(h.mean_us() > 1.0);
+        assert_eq!(h.max_us(), 10_000);
+        assert!(h.percentile_us(50.0) <= h.percentile_us(99.0));
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.percentile_us(99.0), 0);
+    }
+
+    #[test]
+    fn percentile_monotone_in_p() {
+        let h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record_us(i);
+        }
+        let p50 = h.percentile_us(50.0);
+        let p90 = h.percentile_us(90.0);
+        let p999 = h.percentile_us(99.9);
+        assert!(p50 <= p90 && p90 <= p999);
+    }
+
+    #[test]
+    fn snapshot_copies_counters() {
+        let m = ServingMetrics::new();
+        m.requests.fetch_add(5, Ordering::Relaxed);
+        m.responses.fetch_add(3, Ordering::Relaxed);
+        m.request_latency.record_us(42);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 5);
+        assert_eq!(s.responses, 3);
+        assert!(s.mean_request_us > 0.0);
+    }
+}

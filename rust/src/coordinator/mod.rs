@@ -1,0 +1,31 @@
+//! L3 coordinator — the serving layer for real-time MRI uncertainty
+//! estimation (the paper's adaptive-radiotherapy use case: voxel batches
+//! arrive from the MR-Linac pipeline and must return calibrated
+//! predictions within the 0.8 ms/batch real-time budget, §VI-C).
+//!
+//! Architecture (std threads + channels; tokio unavailable offline):
+//!
+//! ```text
+//! clients ──► RequestQueue ──► Batcher ──► worker thread (owns Engine)
+//!                 ▲  backpressure  │             │
+//!                 └────────────────┘             ▼
+//!                              UncertaintyAggregator ──► responses
+//! ```
+//!
+//! * [`batcher`] — groups requests into engine-sized batches under a
+//!   deadline (size-or-timeout policy), padding tail batches.
+//! * [`server`] — worker thread construction (engines are not `Send`;
+//!   the worker builds its engine from a factory inside the thread),
+//!   request/response plumbing, graceful shutdown.
+//! * [`uncertainty`] — per-voxel aggregation of the N mask samples into
+//!   prediction + relative uncertainty + confidence flag.
+//! * [`metrics`] — latency histogram, throughput, queue depth gauges.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+pub mod uncertainty;
+
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use server::{Coordinator, CoordinatorConfig, VoxelRequest, VoxelResponse};
+pub use uncertainty::{UncertaintyReport, VoxelEstimate};

@@ -1,0 +1,167 @@
+//! Uncertainty aggregation (paper §IV "evaluation stage"): the N mask
+//! samples per voxel collapse to mean (prediction) and std/mean
+//! (relative uncertainty), plus a clinical confidence flag against a
+//! per-parameter threshold ("clinicians are able to set numerical
+//! thresholds to determine diagnosis with high uncertainty", §VI-B).
+
+use crate::infer::InferOutput;
+use crate::ivim::Param;
+
+/// Aggregated estimate of one parameter for one voxel.
+#[derive(Debug, Clone, Copy)]
+pub struct VoxelEstimate {
+    pub mean: f64,
+    pub std: f64,
+    /// std / mean — the paper's Fig. 7 metric.
+    pub relative: f64,
+}
+
+/// Full per-voxel report across the four IVIM parameters.
+#[derive(Debug, Clone)]
+pub struct UncertaintyReport {
+    pub estimates: [VoxelEstimate; 4],
+    /// True when every parameter's relative uncertainty is under the
+    /// configured threshold.
+    pub confident: bool,
+}
+
+impl UncertaintyReport {
+    pub fn get(&self, p: Param) -> &VoxelEstimate {
+        &self.estimates[p.index()]
+    }
+}
+
+/// Uncertainty thresholds per parameter (relative units).  Defaults follow
+/// the shape of the paper's Fig. 7: perfusion-related parameters tolerate
+/// more relative spread than D / S0.
+#[derive(Debug, Clone, Copy)]
+pub struct Thresholds {
+    pub d: f64,
+    pub dstar: f64,
+    pub f: f64,
+    pub s0: f64,
+}
+
+impl Default for Thresholds {
+    fn default() -> Self {
+        Thresholds {
+            d: 0.35,
+            dstar: 0.5,
+            f: 0.5,
+            s0: 0.1,
+        }
+    }
+}
+
+impl Thresholds {
+    pub fn get(&self, p: Param) -> f64 {
+        match p {
+            Param::D => self.d,
+            Param::DStar => self.dstar,
+            Param::F => self.f,
+            Param::S0 => self.s0,
+        }
+    }
+}
+
+/// Aggregate one voxel of an [`InferOutput`].
+pub fn aggregate_voxel(out: &InferOutput, voxel: usize, thr: &Thresholds) -> UncertaintyReport {
+    let mut estimates = [VoxelEstimate {
+        mean: 0.0,
+        std: 0.0,
+        relative: 0.0,
+    }; 4];
+    let mut confident = true;
+    for p in Param::ALL {
+        let mean = out.mean(p, voxel);
+        let std = out.std(p, voxel);
+        let relative = if mean.abs() < 1e-12 { 0.0 } else { std / mean };
+        estimates[p.index()] = VoxelEstimate {
+            mean,
+            std,
+            relative,
+        };
+        if relative > thr.get(p) {
+            confident = false;
+        }
+    }
+    UncertaintyReport {
+        estimates,
+        confident,
+    }
+}
+
+/// Aggregate every voxel of a batch output.
+pub fn aggregate_batch(out: &InferOutput, thr: &Thresholds) -> Vec<UncertaintyReport> {
+    (0..out.batch).map(|v| aggregate_voxel(out, v, thr)).collect()
+}
+
+/// Mean relative uncertainty of one parameter across a set of reports —
+/// the Fig. 7 series value for one SNR level.
+pub fn mean_relative(reports: &[UncertaintyReport], p: Param) -> f64 {
+    if reports.is_empty() {
+        return 0.0;
+    }
+    reports.iter().map(|r| r.get(p).relative).sum::<f64>() / reports.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic_output() -> InferOutput {
+        let mut out = InferOutput::new(4, 2);
+        // voxel 0: tight spread; voxel 1: wide spread
+        for (s, v) in [(0usize, 0.0101f32), (1, 0.0099), (2, 0.0100), (3, 0.0100)] {
+            out.set(Param::DStar, s, 0, v);
+        }
+        for (s, v) in [(0usize, 0.02f32), (1, 0.18), (2, 0.05), (3, 0.15)] {
+            out.set(Param::DStar, s, 1, v);
+        }
+        // give the other params stable values everywhere
+        for p in [Param::D, Param::F, Param::S0] {
+            for s in 0..4 {
+                for v in 0..2 {
+                    out.set(p, s, v, p.convert(0.5) as f32);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn tight_voxel_is_confident() {
+        let out = synthetic_output();
+        let thr = Thresholds::default();
+        let r0 = aggregate_voxel(&out, 0, &thr);
+        assert!(r0.confident);
+        assert!(r0.get(Param::DStar).relative < 0.05);
+    }
+
+    #[test]
+    fn wide_voxel_is_flagged() {
+        let out = synthetic_output();
+        let thr = Thresholds::default();
+        let r1 = aggregate_voxel(&out, 1, &thr);
+        assert!(!r1.confident);
+        assert!(r1.get(Param::DStar).relative > 0.5);
+    }
+
+    #[test]
+    fn batch_aggregation_covers_all() {
+        let out = synthetic_output();
+        let reports = aggregate_batch(&out, &Thresholds::default());
+        assert_eq!(reports.len(), 2);
+        let m = mean_relative(&reports, Param::DStar);
+        assert!(m > 0.0);
+        assert_eq!(mean_relative(&[], Param::D), 0.0);
+    }
+
+    #[test]
+    fn zero_spread_zero_uncertainty() {
+        let out = synthetic_output();
+        let r = aggregate_voxel(&out, 0, &Thresholds::default());
+        assert_eq!(r.get(Param::F).std, 0.0);
+        assert_eq!(r.get(Param::F).relative, 0.0);
+    }
+}

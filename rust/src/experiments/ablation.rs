@@ -1,0 +1,184 @@
+//! Ablation: Masksembles vs MC-Dropout vs Deep Ensembles (paper §II-C —
+//! "Masksembles … combine[s] the advantages" of both extremes) plus the
+//! hardware-cost side the co-design argument rests on.
+//!
+//! For each method we report uncertainty quality (calibration correlation
+//! and monotonicity across SNR) and the hardware-relevant costs:
+//! repeatability (fixed masks are deterministic; MC-Dropout is not),
+//! weight memory multiplier, and whether a runtime sampler is needed
+//! (the paper's Fig. 4 hardware penalty).
+
+use crate::bayes::{DeepEnsemble, McDropout};
+use crate::experiments::fig67::run_batches;
+use crate::infer::native::NativeEngine;
+use crate::infer::Engine;
+use crate::ivim::synth::synth_dataset;
+use crate::ivim::Param;
+use crate::metrics;
+use crate::model::{Manifest, Weights};
+
+/// One method's ablation row.
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub method: String,
+    /// Mean calibration (Pearson of |err| vs std) across params at the
+    /// reference SNR.
+    pub calibration: f64,
+    /// Mean relative uncertainty at SNR 5 / SNR 50 — monotone methods
+    /// have hi > lo.
+    pub unc_noisy: f64,
+    pub unc_clean: f64,
+    /// Run-to-run repeatability: max |Δ prediction| between two identical
+    /// calls (0 for deterministic methods).
+    pub repeatability: f64,
+    /// Weight-memory multiplier vs a single dense model.
+    pub memory_x: f64,
+    /// Needs a runtime RNG/sampler module in hardware.
+    pub runtime_sampler: bool,
+}
+
+fn eval_engine(
+    engine: &mut dyn Engine,
+    man: &Manifest,
+    seed: u64,
+) -> anyhow::Result<(f64, f64, f64, f64)> {
+    let ref_ds = synth_dataset(512, &man.bvalues, 20.0, seed);
+    let outs = run_batches(engine, &ref_ds)?;
+    let calibration = Param::ALL
+        .iter()
+        .map(|&p| metrics::calibration(&outs, &ref_ds, p))
+        .sum::<f64>()
+        / 4.0;
+
+    let noisy = synth_dataset(256, &man.bvalues, 5.0, seed + 1);
+    let clean = synth_dataset(256, &man.bvalues, 50.0, seed + 1);
+    let unc = |outs: &[crate::infer::InferOutput]| {
+        Param::ALL
+            .iter()
+            .map(|&p| metrics::mean_relative_uncertainty(outs, p))
+            .sum::<f64>()
+            / 4.0
+    };
+    let unc_noisy = unc(&run_batches(engine, &noisy)?);
+    let unc_clean = unc(&run_batches(engine, &clean)?);
+
+    // repeatability: identical input twice
+    let a = run_batches(engine, &ref_ds)?;
+    let b = run_batches(engine, &ref_ds)?;
+    let mut max_delta = 0.0f64;
+    for (oa, ob) in a.iter().zip(&b) {
+        for p in Param::ALL {
+            let (lo, hi) = p.range();
+            for v in 0..oa.batch {
+                let d = (oa.mean(p, v) - ob.mean(p, v)).abs() / (hi - lo);
+                max_delta = max_delta.max(d);
+            }
+        }
+    }
+    Ok((calibration, unc_noisy, unc_clean, max_delta))
+}
+
+/// Run the three-method ablation with the given weights.
+pub fn ablation(man: &Manifest, weights: &Weights) -> anyhow::Result<Vec<AblationRow>> {
+    let mut rows = Vec::new();
+
+    // Masksembles (the paper's method): fixed masks from the manifest.
+    let mut ours = NativeEngine::new(man, weights)?;
+    let (cal, un, uc, rep) = eval_engine(&mut ours, man, 61)?;
+    rows.push(AblationRow {
+        method: "Masksembles (ours)".into(),
+        calibration: cal,
+        unc_noisy: un,
+        unc_clean: uc,
+        repeatability: rep,
+        memory_x: 1.0, // mask-zero skipping: N partial copies ≈ 1 dense set
+        runtime_sampler: false,
+    });
+
+    // MC-Dropout: random Bernoulli masks per pass.
+    let mut mcd = McDropout::new(man, weights, 62);
+    let (cal, un, uc, rep) = eval_engine(&mut mcd, man, 61)?;
+    rows.push(AblationRow {
+        method: "MC-Dropout".into(),
+        calibration: cal,
+        unc_noisy: un,
+        unc_clean: uc,
+        repeatability: rep,
+        memory_x: 1.0,
+        runtime_sampler: true, // the Fig.-4 hardware penalty
+    });
+
+    // Deep Ensemble: N independent weight sets (untrained members carry
+    // init-diversity; with trained members this is the gold standard).
+    let mut de = DeepEnsemble::init_random(man, man.n_samples, 63)?;
+    let memory_x = de.memory_ratio();
+    let (cal, un, uc, rep) = eval_engine(&mut de, man, 61)?;
+    rows.push(AblationRow {
+        method: "Deep Ensemble".into(),
+        calibration: cal,
+        unc_noisy: un,
+        unc_clean: uc,
+        repeatability: rep,
+        memory_x,
+        runtime_sampler: false,
+    });
+
+    Ok(rows)
+}
+
+/// Render the ablation table.
+pub fn render(rows: &[AblationRow]) -> String {
+    use crate::metrics::report::Table;
+    let mut t = Table::new(&[
+        "method", "calibration", "unc@SNR5", "unc@SNR50", "repeatability", "memory", "runtime sampler",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.method.clone(),
+            format!("{:.3}", r.calibration),
+            format!("{:.3}", r.unc_noisy),
+            format!("{:.3}", r.unc_clean),
+            if r.repeatability == 0.0 {
+                "exact".into()
+            } else {
+                format!("±{:.1e}", r.repeatability)
+            },
+            format!("{:.0}x", r.memory_x),
+            if r.runtime_sampler { "REQUIRED" } else { "none" }.into(),
+        ]);
+    }
+    t.to_text()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::load_manifest;
+
+    #[test]
+    fn ablation_hardware_claims() {
+        let Ok(man) = load_manifest("tiny") else { return };
+        let w = Weights::load_init(&man).unwrap();
+        let rows = ablation(&man, &w).unwrap();
+        assert_eq!(rows.len(), 3);
+        let ours = &rows[0];
+        let mcd = &rows[1];
+        let de = &rows[2];
+        // The paper's §II-C / §V claims:
+        assert_eq!(ours.repeatability, 0.0, "fixed masks are deterministic");
+        assert!(mcd.repeatability > 0.0, "MC-Dropout is not repeatable");
+        assert!(!ours.runtime_sampler && mcd.runtime_sampler);
+        assert!(de.memory_x >= 2.0, "ensembles pay the memory cost");
+        // All three methods show more uncertainty on noisier data.
+        for r in &rows {
+            assert!(
+                r.unc_noisy > r.unc_clean,
+                "{}: {} !> {}",
+                r.method,
+                r.unc_noisy,
+                r.unc_clean
+            );
+        }
+        assert!(render(&rows).contains("Masksembles"));
+    }
+}

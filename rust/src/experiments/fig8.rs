@@ -1,0 +1,95 @@
+//! Fig. 8: resource utilisation and performance vs PE count, plus the
+//! eq. (2) analytic-model cross-check the paper reports ("matches the
+//! practical results").
+
+use crate::accel::dse::{sweep, DsePoint};
+use crate::accel::latency::predict_batch_cycles;
+use crate::accel::resource::AccelConfig;
+use crate::accel::Scheme;
+use crate::ivim::synth::synth_dataset;
+use crate::model::{Manifest, Weights};
+
+/// Paper's swept PE counts.
+pub const PAPER_PE_COUNTS: [usize; 5] = [4, 8, 16, 32, 64];
+
+/// The Fig. 8 sweep: returns DSE points and per-point analytic-model
+/// agreement (predicted cycles == simulated cycles).
+pub fn fig8(
+    man: &Manifest,
+    weights: &Weights,
+    pe_counts: &[usize],
+) -> anyhow::Result<(Vec<DsePoint>, Vec<bool>)> {
+    let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 31);
+    let points = sweep(man, weights, pe_counts, Scheme::BatchLevel, &ds.signals)?;
+    let mut model_ok = Vec::with_capacity(points.len());
+    for p in &points {
+        let cfg = AccelConfig {
+            n_pe: p.n_pe,
+            batch: man.batch_infer,
+            ..Default::default()
+        };
+        let predicted = predict_batch_cycles(man, &cfg, Scheme::BatchLevel);
+        let simulated = (p.batch_ms / 1e3 * cfg.clock_hz).round() as u64;
+        model_ok.push(predicted == simulated);
+    }
+    Ok((points, model_ok))
+}
+
+/// Render the Fig. 8 table + plot.
+pub fn render(points: &[DsePoint], model_ok: &[bool]) -> String {
+    use crate::metrics::report::{ascii_plot, Table};
+    let mut t = Table::new(&[
+        "PEs", "DSP%", "BRAM%", "LUT%", "IO%", "power (W)", "ms/batch", "kvox/s", "fits",
+        "eq2==sim",
+    ]);
+    for (p, ok) in points.iter().zip(model_ok) {
+        t.row(&[
+            p.n_pe.to_string(),
+            format!("{:.1}", p.usage.dsp_pct()),
+            format!("{:.1}", p.usage.bram_pct()),
+            format!("{:.1}", p.usage.lut_pct()),
+            format!("{:.1}", p.usage.io_pct()),
+            format!("{:.2}", p.power.watts),
+            format!("{:.4}", p.batch_ms),
+            format!("{:.1}", p.voxels_per_s / 1e3),
+            p.fits.to_string(),
+            ok.to_string(),
+        ]);
+    }
+    let xs: Vec<f64> = points.iter().map(|p| p.n_pe as f64).collect();
+    let speed: Vec<f64> = points.iter().map(|p| p.voxels_per_s / 1e3).collect();
+    let dsp: Vec<f64> = points.iter().map(|p| p.usage.dsp_pct()).collect();
+    let bram: Vec<f64> = points.iter().map(|p| p.usage.bram_pct()).collect();
+    format!(
+        "{}\n{}",
+        t.to_text(),
+        ascii_plot(
+            "Fig. 8 — utilisation & speed vs PE count",
+            &xs,
+            &[("kvox/s", speed), ("DSP%", dsp), ("BRAM%", bram)],
+            10
+        )
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::load_manifest;
+
+    #[test]
+    fn fig8_model_check_and_shapes() {
+        let Ok(man) = load_manifest("tiny") else { return };
+        let w = Weights::load_init(&man).unwrap();
+        let (points, ok) = fig8(&man, &w, &[4, 8, 16]).unwrap();
+        assert_eq!(points.len(), 3);
+        // paper: "the processing speed can be estimated based on
+        // equation (2), which matches the practical results"
+        assert!(ok.iter().all(|&b| b), "analytic model diverged: {ok:?}");
+        // speed monotone non-decreasing in PEs
+        for w2 in points.windows(2) {
+            assert!(w2[1].voxels_per_s >= w2[0].voxels_per_s);
+        }
+        assert!(render(&points, &ok).contains("Fig. 8"));
+    }
+}

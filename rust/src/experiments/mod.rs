@@ -1,0 +1,138 @@
+//! Experiment drivers — one function per paper table/figure, shared by
+//! the CLI (`repro fig6` …) and the `cargo bench` targets so both always
+//! report the same numbers (DESIGN.md §4 experiment index).
+
+pub mod ablation;
+pub mod fig67;
+pub mod fig8;
+pub mod tables;
+
+use crate::infer::native::NativeEngine;
+use crate::infer::Engine;
+use crate::model::manifest::{artifacts_root, Manifest};
+use crate::model::Weights;
+use crate::runtime::{InferExecutable, Runtime};
+
+/// Which inference backend an experiment runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    Native,
+    Pjrt,
+    AccelSim,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> anyhow::Result<EngineKind> {
+        Ok(match s {
+            "native" => EngineKind::Native,
+            "pjrt" => EngineKind::Pjrt,
+            "accel" => EngineKind::AccelSim,
+            other => anyhow::bail!("unknown engine '{other}' (native|pjrt|accel)"),
+        })
+    }
+}
+
+/// Load a variant manifest from the artifacts root.
+pub fn load_manifest(variant: &str) -> anyhow::Result<Manifest> {
+    let dir = artifacts_root().join(variant);
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "artifacts for variant '{variant}' not found under {} — run `make artifacts`",
+        artifacts_root().display()
+    );
+    Manifest::load(&dir)
+}
+
+/// Build an engine of the requested kind.  `rt` is required for PJRT.
+pub fn build_engine(
+    kind: EngineKind,
+    man: &Manifest,
+    weights: &Weights,
+    rt: Option<&Runtime>,
+) -> anyhow::Result<Box<dyn Engine>> {
+    Ok(match kind {
+        EngineKind::Native => Box::new(NativeEngine::new(man, weights)?),
+        EngineKind::Pjrt => {
+            let rt = rt.ok_or_else(|| anyhow::anyhow!("PJRT engine needs a runtime"))?;
+            Box::new(InferExecutable::load(rt, man, weights)?)
+        }
+        EngineKind::AccelSim => Box::new(crate::accel::AccelSimulator::new(
+            man,
+            weights,
+            crate::accel::AccelConfig {
+                batch: man.batch_infer,
+                ..Default::default()
+            },
+            crate::accel::Scheme::BatchLevel,
+        )?),
+    })
+}
+
+/// Resolve weights: explicit stem > cached trained weights > train now >
+/// artifact init (when `train_steps == 0`).
+pub fn resolve_weights(
+    man: &Manifest,
+    rt: &Runtime,
+    weights_stem: Option<&str>,
+    train_steps: usize,
+    train_snr: f64,
+) -> anyhow::Result<Weights> {
+    if let Some(stem) = weights_stem {
+        let stem = std::path::PathBuf::from(stem);
+        return Weights::load_files(
+            man,
+            &stem.with_extension("params.bin"),
+            &stem.with_extension("bn.bin"),
+        );
+    }
+    if train_steps == 0 {
+        return Weights::load_init(man);
+    }
+    // Cache trained weights next to the artifacts so repeated experiment
+    // runs skip retraining.
+    let cache = man.dir.join(format!(
+        "trained_s{}_snr{}",
+        train_steps, train_snr as i64
+    ));
+    let p = cache.with_extension("params.bin");
+    let b = cache.with_extension("bn.bin");
+    if p.exists() && b.exists() {
+        if let Ok(w) = Weights::load_files(man, &p, &b) {
+            return Ok(w);
+        }
+    }
+    let cfg = crate::train::TrainConfig {
+        steps: train_steps,
+        snr: train_snr,
+        seed: 1,
+        log_every: 0,
+        early_stop_rel: 0.0,
+    };
+    let rep = crate::train::train(rt, man, &cfg, None)?;
+    let _ = rep.final_weights.save(&cache);
+    Ok(rep.final_weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_kind_parse() {
+        assert_eq!(EngineKind::parse("native").unwrap(), EngineKind::Native);
+        assert_eq!(EngineKind::parse("pjrt").unwrap(), EngineKind::Pjrt);
+        assert_eq!(EngineKind::parse("accel").unwrap(), EngineKind::AccelSim);
+        assert!(EngineKind::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn builds_all_engines_tiny() {
+        let Ok(man) = load_manifest("tiny") else { return };
+        let w = Weights::load_init(&man).unwrap();
+        assert!(build_engine(EngineKind::Native, &man, &w, None).is_ok());
+        assert!(build_engine(EngineKind::AccelSim, &man, &w, None).is_ok());
+        let rt = Runtime::cpu().unwrap();
+        assert!(build_engine(EngineKind::Pjrt, &man, &w, Some(&rt)).is_ok());
+        assert!(build_engine(EngineKind::Pjrt, &man, &w, None).is_err());
+    }
+}

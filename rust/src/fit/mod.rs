@@ -1,0 +1,68 @@
+//! Classical IVIM fitting baselines (paper §II-B: "least squares method
+//! and Bayesian inference … suffer from long fitting times and poor
+//! repeatability").
+//!
+//! Two fitters from the IVIM literature:
+//!
+//! * [`segmented`] — the standard two-step fit: estimate D from the
+//!   high-b regime (mono-exponential tail, log-linear least squares),
+//!   then f from the b→0 intercept, then D* from the residual
+//!   low-b signal.
+//! * [`levenberg_marquardt`] — full nonlinear least squares on eq. (1)
+//!   with analytic Jacobian, seeded by the segmented fit.
+//!
+//! These are the "long fitting time" baselines the neural approach is
+//! compared against in fitting-speed benches, and a sanity oracle on
+//! noiseless data.
+
+pub mod lm;
+pub mod segmented;
+
+pub use lm::levenberg_marquardt;
+pub use segmented::segmented_fit;
+
+use crate::ivim::IvimParams;
+
+/// Result of a classical fit.
+#[derive(Debug, Clone, Copy)]
+pub struct FitResult {
+    pub params: IvimParams,
+    /// Final sum of squared residuals.
+    pub ssr: f64,
+    /// Iterations used (0 for closed-form stages).
+    pub iterations: usize,
+    pub converged: bool,
+}
+
+/// Clamp fitted parameters into the clinical ranges (fits on noisy voxels
+/// can wander; the network's sigmoid conversion enforces the same bounds).
+pub fn clamp_to_ranges(p: IvimParams) -> IvimParams {
+    use crate::ivim::Param;
+    IvimParams {
+        d: p.d.clamp(Param::D.range().0, Param::D.range().1),
+        dstar: p.dstar.clamp(Param::DStar.range().0, Param::DStar.range().1),
+        f: p.f.clamp(Param::F.range().0, Param::F.range().1),
+        s0: p.s0.clamp(Param::S0.range().0, Param::S0.range().1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ivim::Param;
+
+    #[test]
+    fn clamp_bounds() {
+        let wild = IvimParams {
+            d: 1.0,
+            dstar: -5.0,
+            f: 2.0,
+            s0: 0.0,
+        };
+        let c = clamp_to_ranges(wild);
+        for p in Param::ALL {
+            let (lo, hi) = p.range();
+            assert!(c.get(p) >= lo && c.get(p) <= hi);
+        }
+    }
+}

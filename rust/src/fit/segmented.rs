@@ -1,0 +1,201 @@
+//! Segmented (two-step) IVIM fit — the fastest classical baseline.
+//!
+//! Standard protocol (e.g. Gurney-Champion et al. 2018 [43]):
+//!
+//! 1. **Diffusion regime**: for b >= `b_thresh` (default 200 s/mm^2), the
+//!    perfusion term has decayed, so `ln S = ln(S0*(1-f)) - b*D` — a
+//!    log-linear least-squares line gives D and the intercept `A`.
+//! 2. **Perfusion fraction**: `f = 1 - A / S(0)` using the measured b=0
+//!    signal (here the normalised signal ≈ 1).
+//! 3. **Pseudo-diffusion**: fit D* by 1-D golden-section search on the
+//!    residual SSR of the full model with D, f, S0 fixed.
+
+use super::{clamp_to_ranges, FitResult};
+use crate::ivim::{signal, IvimParams};
+
+/// Log-linear least squares of `ln s = a + b x`; returns (a, b).
+fn loglin(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return (sy / n, 0.0);
+    }
+    let slope = (n * sxy - sx * sy) / denom;
+    let intercept = (sy - slope * sx) / n;
+    (intercept, slope)
+}
+
+fn ssr_of(bvals: &[f64], sig: &[f64], p: &IvimParams) -> f64 {
+    bvals
+        .iter()
+        .zip(sig)
+        .map(|(&b, &s)| {
+            let r = signal(b, p) - s;
+            r * r
+        })
+        .sum()
+}
+
+/// Two-step segmented fit on a normalised voxel (`sig[i] = S(b_i)/S(0)`).
+pub fn segmented_fit(bvals: &[f64], sig: &[f64], b_thresh: f64) -> FitResult {
+    assert_eq!(bvals.len(), sig.len());
+
+    // Step 1: high-b log-linear fit for D.
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for (&b, &s) in bvals.iter().zip(sig) {
+        if b >= b_thresh && s > 1e-6 {
+            xs.push(b);
+            ys.push(s.ln());
+        }
+    }
+    let (mut d, mut a) = (1.0e-3, (1.0f64 - 0.2).ln());
+    if xs.len() >= 2 {
+        let (intercept, slope) = loglin(&xs, &ys);
+        d = (-slope).max(0.0);
+        a = intercept;
+    }
+
+    // Step 2: f from the b->0 intercept of the diffusion line.
+    let s0_meas = sig
+        .iter()
+        .zip(bvals)
+        .filter(|(_, &b)| b == 0.0)
+        .map(|(&s, _)| s)
+        .fold(0.0, f64::max)
+        .max(1e-6);
+    let f = (1.0 - a.exp() / s0_meas).clamp(0.0, 0.7);
+
+    // Step 3: golden-section search for D* on the full-model SSR.
+    let base = IvimParams {
+        d,
+        dstar: 0.05,
+        f,
+        s0: s0_meas,
+    };
+    let mut lo = 0.005;
+    let mut hi = 0.2;
+    let phi = 0.5 * (5.0f64.sqrt() - 1.0);
+    let mut iters = 0;
+    let eval = |dstar: f64| {
+        ssr_of(
+            bvals,
+            sig,
+            &IvimParams {
+                dstar,
+                ..base
+            },
+        )
+    };
+    let mut c = hi - phi * (hi - lo);
+    let mut dd = lo + phi * (hi - lo);
+    let mut fc = eval(c);
+    let mut fd = eval(dd);
+    while (hi - lo) > 1e-5 && iters < 200 {
+        if fc < fd {
+            hi = dd;
+            dd = c;
+            fd = fc;
+            c = hi - phi * (hi - lo);
+            fc = eval(c);
+        } else {
+            lo = c;
+            c = dd;
+            fc = fd;
+            dd = lo + phi * (hi - lo);
+            fd = eval(dd);
+        }
+        iters += 1;
+    }
+    let dstar = 0.5 * (lo + hi);
+
+    let params = clamp_to_ranges(IvimParams {
+        d,
+        dstar,
+        f,
+        s0: s0_meas,
+    });
+    FitResult {
+        params,
+        ssr: ssr_of(bvals, sig, &params),
+        iterations: iters,
+        converged: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ivim::{bvalues_tiny, signal_curve};
+
+    #[test]
+    fn recovers_noiseless_parameters() {
+        let truth = IvimParams {
+            d: 0.0015,
+            dstar: 0.06,
+            f: 0.25,
+            s0: 1.0,
+        };
+        let b = bvalues_tiny();
+        let sig = signal_curve(&b, &truth);
+        let fit = segmented_fit(&b, &sig, 200.0);
+        assert!((fit.params.d - truth.d).abs() < 3e-4, "D {:?}", fit.params);
+        assert!((fit.params.f - truth.f).abs() < 0.08, "f {:?}", fit.params);
+        assert!(
+            (fit.params.dstar - truth.dstar).abs() < 0.04,
+            "D* {:?}",
+            fit.params
+        );
+    }
+
+    #[test]
+    fn handles_pure_diffusion() {
+        let truth = IvimParams {
+            d: 0.002,
+            dstar: 0.05,
+            f: 0.0,
+            s0: 1.0,
+        };
+        let b = bvalues_tiny();
+        let sig = signal_curve(&b, &truth);
+        let fit = segmented_fit(&b, &sig, 200.0);
+        assert!((fit.params.d - truth.d).abs() < 2e-4);
+        assert!(fit.params.f < 0.05);
+    }
+
+    #[test]
+    fn loglin_exact_line() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 - 0.5 * x).collect();
+        let (a, b) = loglin(&xs, &ys);
+        assert!((a - 2.0).abs() < 1e-12);
+        assert!((b + 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ssr_is_zero_on_truth() {
+        let truth = IvimParams {
+            d: 0.001,
+            dstar: 0.08,
+            f: 0.3,
+            s0: 1.1,
+        };
+        let b = bvalues_tiny();
+        let sig = signal_curve(&b, &truth);
+        assert!(ssr_of(&b, &sig, &truth) < 1e-20);
+    }
+
+    #[test]
+    fn degenerate_inputs_do_not_panic() {
+        let b = [0.0, 10.0];
+        let sig = [1.0, 0.9];
+        let fit = segmented_fit(&b, &sig, 200.0); // no high-b points at all
+        assert!(fit.params.d >= 0.0);
+        let zeros = [0.0, 0.0];
+        let _ = segmented_fit(&b, &zeros, 0.0);
+    }
+}

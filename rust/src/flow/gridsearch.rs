@@ -1,0 +1,174 @@
+//! Phase-2 hyper-parameter grid search (paper §III: "A grid search is
+//! conducted for the dropout rate ranging from 0.1 to 0.9 … and the
+//! sampling number is varied among 4, 8, 16, 32, 64").
+//!
+//! Masksembles' dropout rate maps to the scale: keep fraction ≈ 1/scale,
+//! so rate r → scale 1/(1−r).  Candidate mask configurations are
+//! evaluated on the **native engine** (which accepts arbitrary mask
+//! sets — the AOT artifacts bake one configuration, so the search runs
+//! on the substrate and the winner is what `aot.py` would be re-run
+//! with).  Hardware cost comes from the accelerator models, giving the
+//! algorithm/hardware trade-off table the co-design flow picks from.
+
+use crate::accel::latency::predict_batch_ms;
+use crate::accel::resource::AccelConfig;
+use crate::accel::Scheme;
+use crate::masks::for_width;
+use crate::model::{Manifest, Weights};
+
+/// One grid-search candidate's evaluation.
+#[derive(Debug, Clone)]
+pub struct GridPoint {
+    pub dropout_rate: f64,
+    pub scale: f64,
+    pub n_samples: usize,
+    /// Mean relative uncertainty on the reference scenario.
+    pub mean_uncertainty: f64,
+    /// Mask-zero-skipped weight memory (words, all masked layers).
+    pub weight_words: usize,
+    /// Predicted batch latency on the default accelerator (ms).
+    pub batch_ms: f64,
+    pub mask_overlap: f64,
+}
+
+/// The paper's grid (a trimmed default; pass custom grids for the full
+/// 9 x 5 sweep).
+pub fn paper_grid() -> (Vec<f64>, Vec<usize>) {
+    (
+        vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9],
+        vec![4, 8, 16, 32, 64],
+    )
+}
+
+/// Build a manifest clone whose masks follow a (rate, n) candidate.
+pub fn candidate_manifest(
+    man: &Manifest,
+    rate: f64,
+    n_samples: usize,
+    seed: u64,
+) -> anyhow::Result<Manifest> {
+    anyhow::ensure!((0.0..1.0).contains(&rate), "rate must be in [0,1)");
+    let scale = 1.0 / (1.0 - rate);
+    let mut cand = man.clone();
+    cand.n_samples = n_samples;
+    for (si, sn) in man.subnets.iter().enumerate() {
+        for layer in 1..=2usize {
+            let m = for_width(
+                man.nb,
+                n_samples,
+                scale,
+                seed + 1000 * si as u64 + layer as u64,
+            )?;
+            cand.masks.insert(format!("{sn}.mask{layer}"), m);
+        }
+    }
+    Ok(cand)
+}
+
+/// Run the grid search against one weights set and reference SNR.
+pub fn grid_search(
+    man: &Manifest,
+    weights: &Weights,
+    rates: &[f64],
+    sample_counts: &[usize],
+    snr: f64,
+    n_voxels: usize,
+) -> anyhow::Result<Vec<GridPoint>> {
+    let mut out = Vec::with_capacity(rates.len() * sample_counts.len());
+    for &rate in rates {
+        for &n in sample_counts {
+            let cand = candidate_manifest(man, rate, n, 4242)?;
+            let unc = super::quick_uncertainty(&cand, weights, snr, n_voxels)?;
+            let weight_words: usize = cand
+                .masks
+                .values()
+                .map(|m| {
+                    crate::accel::memory::WeightStore::from_mask(cand.nb, m)
+                        .total_skipped_words()
+                })
+                .sum();
+            let cfg = AccelConfig {
+                batch: cand.batch_infer,
+                ..Default::default()
+            };
+            let batch_ms = predict_batch_ms(&cand, &cfg, Scheme::BatchLevel);
+            let overlap = cand
+                .masks
+                .values()
+                .map(|m| m.overlap())
+                .sum::<f64>()
+                / cand.masks.len() as f64;
+            out.push(GridPoint {
+                dropout_rate: rate,
+                scale: 1.0 / (1.0 - rate),
+                n_samples: n,
+                mean_uncertainty: unc,
+                weight_words,
+                batch_ms,
+                mask_overlap: overlap,
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Render the search as a table.
+pub fn render(points: &[GridPoint]) -> String {
+    use crate::metrics::report::Table;
+    let mut t = Table::new(&[
+        "rate", "scale", "N", "mean unc", "overlap", "weight words", "ms/batch",
+    ]);
+    for p in points {
+        t.row(&[
+            format!("{:.1}", p.dropout_rate),
+            format!("{:.2}", p.scale),
+            p.n_samples.to_string(),
+            format!("{:.4}", p.mean_uncertainty),
+            format!("{:.3}", p.mask_overlap),
+            p.weight_words.to_string(),
+            format!("{:.4}", p.batch_ms),
+        ]);
+    }
+    t.to_text()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::load_manifest;
+
+    #[test]
+    fn candidate_masks_follow_rate_and_n() {
+        let Ok(man) = load_manifest("tiny") else { return };
+        let cand = candidate_manifest(&man, 0.5, 8, 1).unwrap();
+        assert_eq!(cand.n_samples, 8);
+        let m = cand.mask("d", 1).unwrap();
+        assert_eq!(m.n, 8);
+        // rate 0.5 -> ~half the neurons kept
+        let keep = m.ones(0) as f64 / man.nb as f64;
+        assert!(keep > 0.3 && keep < 0.75, "keep {keep}");
+        assert!(candidate_manifest(&man, 1.5, 4, 1).is_err());
+    }
+
+    #[test]
+    fn grid_trends_hold() {
+        let Ok(man) = load_manifest("tiny") else { return };
+        let w = Weights::load_init(&man).unwrap();
+        let pts = grid_search(&man, &w, &[0.2, 0.7], &[4], 20.0, 128).unwrap();
+        assert_eq!(pts.len(), 2);
+        // heavier dropout -> fewer stored weights, more mask diversity
+        let (lo, hi) = (&pts[0], &pts[1]);
+        assert!(hi.weight_words < lo.weight_words);
+        assert!(hi.mask_overlap < lo.mask_overlap + 1e-9);
+        // latency falls with fewer kept outputs (mask-zero skipping)
+        assert!(hi.batch_ms <= lo.batch_ms + 1e-9);
+    }
+
+    #[test]
+    fn more_samples_cost_latency() {
+        let Ok(man) = load_manifest("tiny") else { return };
+        let w = Weights::load_init(&man).unwrap();
+        let pts = grid_search(&man, &w, &[0.5], &[4, 8], 20.0, 64).unwrap();
+        assert!(pts[1].batch_ms > pts[0].batch_ms);
+    }
+}

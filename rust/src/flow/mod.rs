@@ -1,0 +1,283 @@
+//! The algorithm-hardware co-optimization flow (paper Fig. 1, §III) as a
+//! first-class, runnable driver:
+//!
+//! * **Phase 1 — Preparation**: uncertainty requirements + synthetic
+//!   scenario set (SNR levels).
+//! * **Phase 2 — Algorithm**: convert to a mask-based BayesNN (the
+//!   Masksembles hyper-parameters), train on the synthetic scenarios,
+//!   evaluate the uncertainty requirements; iterate if unsatisfied.
+//!   Includes the paper's grid search over dropout rate (0.1–0.9 →
+//!   Masksembles scale) and sampling number {4, 8, 16, 32, 64}.
+//! * **Phase 3 — Hardware**: latency/resource modelling (eq. 2 + VU13P
+//!   budgets) and selection of the PE parallelism meeting the real-time
+//!   requirement.
+//!
+//! The flow runs entirely on the `tiny`/`paper` artifacts (Phase-2
+//! training uses the AOT train-step; candidate mask configurations that
+//! differ from the baked ones are evaluated on the native engine, which
+//! accepts any `MaskSet`).
+
+pub mod gridsearch;
+
+use crate::accel::dse::{best_fitting, sweep};
+use crate::accel::Scheme;
+use crate::experiments::fig67::{run_batches, snr_sweep, SnrRow, SweepConfig};
+use crate::experiments::EngineKind;
+use crate::ivim::{Param, PAPER_SNRS};
+use crate::model::{Manifest, Weights};
+use crate::runtime::Runtime;
+use crate::train::{train, TrainConfig};
+
+/// Phase-1 uncertainty requirements: per-parameter caps on the mean
+/// relative uncertainty at a reference SNR, plus the monotonicity
+/// requirement ("output uncertainty shrinks with less noise", §IV).
+#[derive(Debug, Clone)]
+pub struct UncertaintyRequirements {
+    /// (SNR at which the caps apply, cap per parameter in Param order).
+    pub reference_snr: f64,
+    pub max_relative: [f64; 4],
+    /// Require uncertainty to be non-increasing from the noisiest to the
+    /// cleanest scenario.
+    pub monotone_in_snr: bool,
+}
+
+impl Default for UncertaintyRequirements {
+    fn default() -> Self {
+        UncertaintyRequirements {
+            reference_snr: 20.0,
+            // generous defaults shaped like Fig. 7's measured ranges
+            max_relative: [0.5, 0.6, 0.5, 0.1],
+            monotone_in_snr: true,
+        }
+    }
+}
+
+/// Result of the Phase-2 evaluation against the requirements.
+#[derive(Debug, Clone)]
+pub struct Phase2Report {
+    pub rows: Vec<SnrRow>,
+    pub satisfied: bool,
+    pub violations: Vec<String>,
+    pub final_loss: f32,
+}
+
+/// Result of the Phase-3 hardware mapping.
+#[derive(Debug, Clone)]
+pub struct Phase3Report {
+    pub chosen_pe: usize,
+    pub batch_ms: f64,
+    pub power_w: f64,
+    pub meets_realtime: bool,
+    pub dsp_pct: f64,
+}
+
+/// Full-flow outcome.
+#[derive(Debug, Clone)]
+pub struct FlowReport {
+    pub phase2: Phase2Report,
+    pub phase3: Option<Phase3Report>,
+}
+
+/// Evaluate the trained model against the Phase-1 requirements.
+pub fn evaluate_requirements(
+    man: &Manifest,
+    weights: &Weights,
+    req: &UncertaintyRequirements,
+    n_voxels: usize,
+) -> anyhow::Result<Phase2Report> {
+    let cfg = SweepConfig {
+        n_voxels,
+        snrs: PAPER_SNRS.to_vec(),
+        engine: EngineKind::Native,
+        seed: 23,
+    };
+    let rows = snr_sweep(man, weights, None, &cfg)?;
+    let mut violations = Vec::new();
+
+    // caps at the reference SNR
+    if let Some(r) = rows.iter().find(|r| r.snr == req.reference_snr) {
+        for p in Param::ALL {
+            let got = r.uncertainty[p.index()];
+            let cap = req.max_relative[p.index()];
+            if got > cap {
+                violations.push(format!(
+                    "{} relative uncertainty {:.3} exceeds cap {:.3} at SNR {}",
+                    p.name(),
+                    got,
+                    cap,
+                    req.reference_snr
+                ));
+            }
+        }
+    } else {
+        violations.push(format!("reference SNR {} not evaluated", req.reference_snr));
+    }
+
+    // monotonicity over the SNR grid (averaged over parameters; per-point
+    // noise tolerance 5%)
+    if req.monotone_in_snr {
+        let mean_unc: Vec<f64> = rows
+            .iter()
+            .map(|r| r.uncertainty.iter().sum::<f64>() / 4.0)
+            .collect();
+        for w in mean_unc.windows(2) {
+            if w[1] > w[0] * 1.05 {
+                violations.push(format!(
+                    "uncertainty not monotone in SNR: {:.4} -> {:.4}",
+                    w[0], w[1]
+                ));
+                break;
+            }
+        }
+    }
+
+    Ok(Phase2Report {
+        satisfied: violations.is_empty(),
+        violations,
+        rows,
+        final_loss: f32::NAN,
+    })
+}
+
+/// Run the whole Fig.-1 flow on a variant: Phase-2 training + evaluation,
+/// then Phase-3 hardware mapping if the requirements hold.
+pub fn run_flow(
+    man: &Manifest,
+    rt: &Runtime,
+    req: &UncertaintyRequirements,
+    train_steps: usize,
+    realtime_ms: f64,
+) -> anyhow::Result<FlowReport> {
+    // Phase 2: train on the synthetic scenarios.
+    let trained = train(
+        rt,
+        man,
+        &TrainConfig {
+            steps: train_steps,
+            snr: req.reference_snr,
+            seed: 1,
+            log_every: 0,
+            early_stop_rel: 0.0,
+        },
+        None,
+    )?;
+    let mut phase2 = evaluate_requirements(man, &trained.final_weights, req, 800)?;
+    phase2.final_loss = trained.final_loss();
+
+    // Phase 3 only proceeds when Phase 2 is satisfied (Fig. 1's decision
+    // diamond; otherwise the caller iterates with new hyper-parameters).
+    let phase3 = if phase2.satisfied {
+        let ds = crate::ivim::synth::synth_dataset(man.batch_infer, &man.bvalues, 20.0, 29);
+        let points = sweep(
+            man,
+            &trained.final_weights,
+            &[4, 8, 16, 32, 64],
+            Scheme::BatchLevel,
+            &ds.signals,
+        )?;
+        best_fitting(&points).map(|best| Phase3Report {
+            chosen_pe: best.n_pe,
+            batch_ms: best.batch_ms,
+            power_w: best.power.watts,
+            meets_realtime: best.batch_ms <= realtime_ms,
+            dsp_pct: best.usage.dsp_pct(),
+        })
+    } else {
+        None
+    };
+
+    Ok(FlowReport { phase2, phase3 })
+}
+
+/// Quick uncertainty-quality score used by the grid search: mean
+/// calibration correlation across parameters minus a penalty for
+/// violating monotonicity (higher is better).
+pub fn uncertainty_quality(rows: &[SnrRow]) -> f64 {
+    let cal: f64 = rows
+        .iter()
+        .flat_map(|r| r.calibration.iter())
+        .sum::<f64>()
+        / (rows.len() * 4) as f64;
+    let mean_unc: Vec<f64> = rows
+        .iter()
+        .map(|r| r.uncertainty.iter().sum::<f64>() / 4.0)
+        .collect();
+    let mono_violation = mean_unc
+        .windows(2)
+        .filter(|w| w[1] > w[0] * 1.05)
+        .count() as f64;
+    cal - 0.25 * mono_violation
+}
+
+/// Helper shared with the grid search: evaluate a weights/mask setup on
+/// one dataset, returning mean relative uncertainty across parameters.
+pub fn quick_uncertainty(
+    man: &Manifest,
+    weights: &Weights,
+    snr: f64,
+    n_voxels: usize,
+) -> anyhow::Result<f64> {
+    let ds = crate::ivim::synth::synth_dataset(n_voxels, &man.bvalues, snr, 31);
+    let mut eng = crate::infer::native::NativeEngine::new(man, weights)?;
+    let outs = run_batches(&mut eng, &ds)?;
+    Ok(Param::ALL
+        .iter()
+        .map(|&p| crate::metrics::mean_relative_uncertainty(&outs, p))
+        .sum::<f64>()
+        / 4.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::load_manifest;
+
+    #[test]
+    fn flow_runs_end_to_end_tiny() {
+        let Ok(man) = load_manifest("tiny") else { return };
+        let rt = Runtime::cpu().unwrap();
+        let req = UncertaintyRequirements::default();
+        let rep = run_flow(&man, &rt, &req, 150, 0.8).unwrap();
+        assert_eq!(rep.phase2.rows.len(), 5);
+        assert!(rep.phase2.final_loss.is_finite());
+        if rep.phase2.satisfied {
+            let p3 = rep.phase3.expect("phase 3 runs when phase 2 passes");
+            assert!(p3.chosen_pe >= 4);
+            assert!(p3.batch_ms > 0.0);
+        } else {
+            assert!(!rep.phase2.violations.is_empty());
+            assert!(rep.phase3.is_none());
+        }
+    }
+
+    #[test]
+    fn impossible_requirements_are_flagged() {
+        let Ok(man) = load_manifest("tiny") else { return };
+        let w = Weights::load_init(&man).unwrap();
+        let req = UncertaintyRequirements {
+            max_relative: [1e-6; 4], // unattainable caps
+            ..Default::default()
+        };
+        let rep = evaluate_requirements(&man, &w, &req, 200).unwrap();
+        assert!(!rep.satisfied);
+        assert!(!rep.violations.is_empty());
+    }
+
+    #[test]
+    fn quality_score_penalises_non_monotone() {
+        let mk = |unc: [f64; 3]| -> Vec<SnrRow> {
+            unc.iter()
+                .enumerate()
+                .map(|(i, &u)| SnrRow {
+                    snr: [5.0, 20.0, 50.0][i],
+                    rmse: [0.0; 4],
+                    uncertainty: [u; 4],
+                    calibration: [0.5; 4],
+                })
+                .collect()
+        };
+        let good = uncertainty_quality(&mk([0.5, 0.3, 0.2]));
+        let bad = uncertainty_quality(&mk([0.2, 0.5, 0.3]));
+        assert!(good > bad);
+    }
+}

@@ -1,0 +1,121 @@
+//! Inference engines.
+//!
+//! Two implementations of the same uIVIM-NET forward pass:
+//!
+//! * [`native`] — pure-Rust f32 engine.  This is the measured "CPU"
+//!   baseline of Table II and the numeric oracle the accelerator
+//!   simulator is validated against.
+//! * `runtime::InferExecutable` — the AOT XLA executable (L2-lowered
+//!   model incl. the Pallas kernel) driven through PJRT.
+//!
+//! Both produce [`InferOutput`]: per-mask-sample parameter predictions,
+//! from which the coordinator computes mean (prediction) and std/mean
+//! (relative uncertainty).
+
+pub mod native;
+
+use crate::ivim::Param;
+
+/// Raw per-sample inference output for one batch of voxels.
+///
+/// `samples[p][s * batch + v]` is parameter `p`'s prediction for voxel `v`
+/// under mask sample `s` (row-major `[n_samples][batch]`, one plane per
+/// IVIM parameter in `Param::ALL` order).
+#[derive(Debug, Clone)]
+pub struct InferOutput {
+    pub n_samples: usize,
+    pub batch: usize,
+    pub samples: [Vec<f32>; 4],
+}
+
+impl InferOutput {
+    pub fn new(n_samples: usize, batch: usize) -> Self {
+        let plane = vec![0.0f32; n_samples * batch];
+        InferOutput {
+            n_samples,
+            batch,
+            samples: [plane.clone(), plane.clone(), plane.clone(), plane],
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, p: Param, sample: usize, voxel: usize) -> f32 {
+        self.samples[p.index()][sample * self.batch + voxel]
+    }
+
+    #[inline]
+    pub fn set(&mut self, p: Param, sample: usize, voxel: usize, v: f32) {
+        self.samples[p.index()][sample * self.batch + voxel] = v;
+    }
+
+    /// Sample mean for one voxel/parameter — the prediction.
+    pub fn mean(&self, p: Param, voxel: usize) -> f64 {
+        let plane = &self.samples[p.index()];
+        (0..self.n_samples)
+            .map(|s| plane[s * self.batch + voxel] as f64)
+            .sum::<f64>()
+            / self.n_samples as f64
+    }
+
+    /// Sample std for one voxel/parameter.
+    pub fn std(&self, p: Param, voxel: usize) -> f64 {
+        let m = self.mean(p, voxel);
+        let plane = &self.samples[p.index()];
+        let var = (0..self.n_samples)
+            .map(|s| {
+                let d = plane[s * self.batch + voxel] as f64 - m;
+                d * d
+            })
+            .sum::<f64>()
+            / self.n_samples as f64;
+        var.sqrt()
+    }
+
+    /// The paper's uncertainty metric: std / mean (relative variation).
+    pub fn relative_uncertainty(&self, p: Param, voxel: usize) -> f64 {
+        let m = self.mean(p, voxel);
+        if m.abs() < 1e-12 {
+            0.0
+        } else {
+            self.std(p, voxel) / m
+        }
+    }
+}
+
+/// Common interface over inference engines so the coordinator, benches
+/// and examples can swap CPU / PJRT / accelerator-sim backends.
+///
+/// NOT `Send`: the xla crate's PJRT handles are `Rc`-based, so engines
+/// live on the thread that created them.  The coordinator accordingly
+/// takes an engine *factory* and constructs the engine inside its worker
+/// thread.
+pub trait Engine {
+    /// Engine display name (used in reports).
+    fn name(&self) -> &str;
+    /// Fixed batch size the engine processes per call (PJRT executables
+    /// have a static batch; native engines adopt the same for fairness).
+    fn batch_size(&self) -> usize;
+    /// Run one batch: `signals` is row-major `[batch][nb]`.  Implementors
+    /// must accept exactly `batch_size()` voxels.
+    fn infer_batch(&mut self, signals: &[f32]) -> anyhow::Result<InferOutput>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infer_output_stats() {
+        let mut out = InferOutput::new(4, 2);
+        for (s, v) in [(0usize, 1.0f32), (1, 2.0), (2, 3.0), (3, 4.0)] {
+            out.set(Param::F, s, 0, v);
+        }
+        assert!((out.mean(Param::F, 0) - 2.5).abs() < 1e-9);
+        assert!((out.std(Param::F, 0) - (1.25f64).sqrt()).abs() < 1e-9);
+        assert!(
+            (out.relative_uncertainty(Param::F, 0) - (1.25f64).sqrt() / 2.5).abs() < 1e-9
+        );
+        // untouched voxel 1 is all zeros -> relative uncertainty defined as 0
+        assert_eq!(out.relative_uncertainty(Param::F, 1), 0.0);
+    }
+}

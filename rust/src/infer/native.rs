@@ -1,0 +1,356 @@
+//! Pure-Rust f32 inference engine — the measured CPU baseline (Table II)
+//! and the numeric oracle for the accelerator simulator.
+//!
+//! Implements exactly the uIVIM-NET forward pass of
+//! `python/compile/model.py::subnet_infer` (inference-mode BatchNorm,
+//! fixed Masksembles masks), with the same op ordering so results agree
+//! with the AOT executable to f32 round-off.
+
+use super::{Engine, InferOutput};
+use crate::ivim::Param;
+use crate::masks::MaskSet;
+use crate::model::{Manifest, SubnetWeights, Weights};
+
+const EPS: f32 = 1e-5;
+
+/// Pre-extracted per-subnet state (avoids re-slicing per batch).
+struct SubnetState {
+    param: Param,
+    /// Output-major (transposed) weights: `w1t[o*nb + i]` — contiguous
+    /// per-output rows so the PU dot product streams cache lines.
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    bn1_scale: Vec<f32>, // gamma / sqrt(var + eps)
+    bn1_shift: Vec<f32>, // beta - mean * scale
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+    bn2_scale: Vec<f32>,
+    bn2_shift: Vec<f32>,
+    w3: Vec<f32>,
+    b3: f32,
+    mask1: MaskSet,
+    mask2: MaskSet,
+    /// Precomputed kept-output index lists per sample (mask-zero
+    /// skipping without a per-output branch in the hot loop).
+    kept1: Vec<Vec<usize>>,
+    kept2: Vec<Vec<usize>>,
+}
+
+/// The native engine.  One instance per (manifest, weights) pair; batch
+/// size matches the manifest's `batch_infer` so comparisons with the PJRT
+/// engine are apples-to-apples.
+pub struct NativeEngine {
+    nb: usize,
+    n_samples: usize,
+    batch: usize,
+    subnets: Vec<SubnetState>,
+    // scratch buffers reused across calls (hot path: no allocation)
+    h1: Vec<f32>,
+    h2: Vec<f32>,
+}
+
+/// Transpose an input-major `[nb_in][nb_out]` matrix into output-major
+/// rows (perf: the hot dot product then reads contiguously).
+fn transpose(w: &[f32], nb: usize) -> Vec<f32> {
+    let mut t = vec![0.0f32; w.len()];
+    for i in 0..nb {
+        for o in 0..nb {
+            t[o * nb + i] = w[i * nb + o];
+        }
+    }
+    t
+}
+
+fn fold_bn(g: &[f32], be: &[f32], m: &[f32], v: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let scale: Vec<f32> = g
+        .iter()
+        .zip(v)
+        .map(|(&g, &v)| g / (v + EPS).sqrt())
+        .collect();
+    let shift: Vec<f32> = be
+        .iter()
+        .zip(m.iter().zip(&scale))
+        .map(|(&be, (&m, &s))| be - m * s)
+        .collect();
+    (scale, shift)
+}
+
+impl NativeEngine {
+    pub fn new(man: &Manifest, weights: &Weights) -> anyhow::Result<Self> {
+        Self::with_batch(man, weights, man.batch_infer)
+    }
+
+    /// Engine with a custom batch size (the native path has no static
+    /// shape constraint; used by the coordinator for tail batches).
+    pub fn with_batch(man: &Manifest, weights: &Weights, batch: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(batch > 0, "batch must be positive");
+        let mut subnets = Vec::with_capacity(4);
+        for p in Param::ALL {
+            let sn = p.name();
+            let sw: SubnetWeights = weights.subnet(man, sn);
+            let (s1, sh1) = fold_bn(sw.g1, sw.be1, sw.m1, sw.v1);
+            let (s2, sh2) = fold_bn(sw.g2, sw.be2, sw.m2, sw.v2);
+            subnets.push(SubnetState {
+                param: p,
+                w1: transpose(sw.w1, man.nb),
+                b1: sw.b1.to_vec(),
+                bn1_scale: s1,
+                bn1_shift: sh1,
+                w2: transpose(sw.w2, man.nb),
+                b2: sw.b2.to_vec(),
+                bn2_scale: s2,
+                bn2_shift: sh2,
+                w3: sw.w3.to_vec(),
+                b3: sw.b3[0],
+                mask1: man
+                    .mask(sn, 1)
+                    .ok_or_else(|| anyhow::anyhow!("missing mask {sn}.1"))?
+                    .clone(),
+                mask2: man
+                    .mask(sn, 2)
+                    .ok_or_else(|| anyhow::anyhow!("missing mask {sn}.2"))?
+                    .clone(),
+                kept1: (0..man.n_samples)
+                    .map(|s| man.mask(sn, 1).unwrap().kept_indices(s))
+                    .collect(),
+                kept2: (0..man.n_samples)
+                    .map(|s| man.mask(sn, 2).unwrap().kept_indices(s))
+                    .collect(),
+            });
+        }
+        Ok(NativeEngine {
+            nb: man.nb,
+            n_samples: man.n_samples,
+            batch,
+            subnets,
+            h1: vec![0.0; batch * man.nb],
+            h2: vec![0.0; batch * man.nb],
+        })
+    }
+
+    pub fn nb(&self) -> usize {
+        self.nb
+    }
+    pub fn n_samples(&self) -> usize {
+        self.n_samples
+    }
+
+    /// One masked hidden block over the whole batch for one mask sample:
+    /// `out = relu(bn(x @ w + b)) * mask_row`, with BN folded to
+    /// `scale/shift`.
+    #[inline]
+    fn hidden_block(
+        nb: usize,
+        batch: usize,
+        x: &[f32],
+        w: &[f32],
+        b: &[f32],
+        scale: &[f32],
+        shift: &[f32],
+        mask_row: &[u8],
+        kept: &[usize],
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(x.len(), batch * nb);
+        debug_assert_eq!(out.len(), batch * nb);
+        let _ = mask_row;
+        for v in 0..batch {
+            let xi = &x[v * nb..(v + 1) * nb];
+            let oi = &mut out[v * nb..(v + 1) * nb];
+            oi.fill(0.0);
+            // mask-zero skipping: only kept outputs are scheduled (the
+            // software analogue of not storing dropped weights)
+            for &o in kept {
+                let wo = &w[o * nb..(o + 1) * nb];
+                // 4-way unrolled dot product: independent accumulators
+                // break the FP dependency chain for ILP.
+                let mut a0 = 0.0f32;
+                let mut a1 = 0.0f32;
+                let mut a2 = 0.0f32;
+                let mut a3 = 0.0f32;
+                let chunks = nb / 4 * 4;
+                let mut i = 0;
+                while i < chunks {
+                    a0 += xi[i] * wo[i];
+                    a1 += xi[i + 1] * wo[i + 1];
+                    a2 += xi[i + 2] * wo[i + 2];
+                    a3 += xi[i + 3] * wo[i + 3];
+                    i += 4;
+                }
+                let mut acc = (a0 + a1) + (a2 + a3);
+                for j in chunks..nb {
+                    acc += xi[j] * wo[j];
+                }
+                let h = (acc + b[o]) * scale[o] + shift[o];
+                oi[o] = if h > 0.0 { h } else { 0.0 };
+            }
+        }
+    }
+
+    /// Forward one subnet for all samples, writing into `out`.
+    fn subnet_forward(&mut self, si: usize, signals: &[f32], out: &mut InferOutput) {
+        let nb = self.nb;
+        let batch = self.batch;
+        let sn = &self.subnets[si];
+        for s in 0..self.n_samples {
+            Self::hidden_block(
+                nb,
+                batch,
+                signals,
+                &sn.w1,
+                &sn.b1,
+                &sn.bn1_scale,
+                &sn.bn1_shift,
+                sn.mask1.row(s),
+                &sn.kept1[s],
+                &mut self.h1,
+            );
+            Self::hidden_block(
+                nb,
+                batch,
+                &self.h1,
+                &sn.w2,
+                &sn.b2,
+                &sn.bn2_scale,
+                &sn.bn2_shift,
+                sn.mask2.row(s),
+                &sn.kept2[s],
+                &mut self.h2,
+            );
+            for v in 0..batch {
+                let hi = &self.h2[v * nb..(v + 1) * nb];
+                let mut logit = sn.b3;
+                for i in 0..nb {
+                    logit += hi[i] * sn.w3[i];
+                }
+                let sig = 1.0 / (1.0 + (-logit).exp());
+                out.set(sn.param, s, v, sn.param.convert(sig as f64) as f32);
+            }
+        }
+    }
+}
+
+impl Engine for NativeEngine {
+    fn name(&self) -> &str {
+        "native-f32"
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn infer_batch(&mut self, signals: &[f32]) -> anyhow::Result<InferOutput> {
+        anyhow::ensure!(
+            signals.len() == self.batch * self.nb,
+            "expected {}x{} signals, got {}",
+            self.batch,
+            self.nb,
+            signals.len()
+        );
+        let mut out = InferOutput::new(self.n_samples, self.batch);
+        for si in 0..self.subnets.len() {
+            self.subnet_forward(si, signals, &mut out);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ivim::synth::synth_dataset;
+    use crate::model::manifest::artifacts_root;
+
+    fn setup() -> Option<(Manifest, Weights)> {
+        let dir = artifacts_root().join("tiny");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        let w = Weights::load_init(&man).unwrap();
+        Some((man, w))
+    }
+
+    #[test]
+    fn outputs_in_clinical_ranges() {
+        let Some((man, w)) = setup() else { return };
+        let mut eng = NativeEngine::new(&man, &w).unwrap();
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 0);
+        let out = eng.infer_batch(&ds.signals).unwrap();
+        for p in Param::ALL {
+            let (lo, hi) = p.range();
+            for s in 0..out.n_samples {
+                for v in 0..out.batch {
+                    let x = out.get(p, s, v) as f64;
+                    assert!(x >= lo && x <= hi, "{p:?} {x} outside [{lo},{hi}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn samples_differ_across_masks() {
+        let Some((man, w)) = setup() else { return };
+        let mut eng = NativeEngine::new(&man, &w).unwrap();
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 1);
+        let out = eng.infer_batch(&ds.signals).unwrap();
+        let any_spread = (0..out.batch)
+            .any(|v| Param::ALL.iter().any(|&p| out.std(p, v) > 0.0));
+        assert!(any_spread, "masks produced identical predictions");
+    }
+
+    #[test]
+    fn deterministic() {
+        let Some((man, w)) = setup() else { return };
+        let mut eng = NativeEngine::new(&man, &w).unwrap();
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 2);
+        let a = eng.infer_batch(&ds.signals).unwrap();
+        let b = eng.infer_batch(&ds.signals).unwrap();
+        for p in Param::ALL {
+            assert_eq!(a.samples[p.index()], b.samples[p.index()]);
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_batch() {
+        let Some((man, w)) = setup() else { return };
+        let mut eng = NativeEngine::new(&man, &w).unwrap();
+        assert!(eng.infer_batch(&vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn custom_batch_size_works() {
+        let Some((man, w)) = setup() else { return };
+        let mut eng = NativeEngine::with_batch(&man, &w, 3).unwrap();
+        let ds = synth_dataset(3, &man.bvalues, 20.0, 3);
+        let out = eng.infer_batch(&ds.signals).unwrap();
+        assert_eq!(out.batch, 3);
+    }
+
+    /// Cross-check vs the python golden outputs: the native engine must
+    /// match the AOT executable's numerics (which the goldens capture) to
+    /// f32 tolerance.
+    #[test]
+    fn matches_python_golden() {
+        let Some((man, w)) = setup() else { return };
+        let gin = crate::util::read_f32_file(&man.file("golden_in").unwrap()).unwrap();
+        let gout = crate::util::read_f32_file(&man.file("golden_out").unwrap()).unwrap();
+        let mut eng = NativeEngine::new(&man, &w).unwrap();
+        let out = eng.infer_batch(&gin).unwrap();
+        let plane = man.n_samples * man.batch_infer;
+        // golden_out layout: d, dstar, f, s0 planes then recon
+        for (pi, p) in Param::ALL.iter().enumerate() {
+            let want = &gout[pi * plane..(pi + 1) * plane];
+            let got = &out.samples[p.index()];
+            let max_diff = got
+                .iter()
+                .zip(want)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            // tolerance scaled to the parameter range (D is ~1e-3)
+            let (lo, hi) = p.range();
+            let tol = ((hi - lo) as f32) * 1e-4 + 1e-6;
+            assert!(max_diff < tol, "{p:?} max diff {max_diff} > {tol}");
+        }
+    }
+}

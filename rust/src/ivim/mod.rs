@@ -1,0 +1,185 @@
+//! IVIM physics substrate: signal model (paper eq. 1), clinical parameter
+//! ranges, synthetic data protocol (paper §III Phase 1 / §VI-A) and a 3-D
+//! anatomical phantom for the adaptive-radiotherapy example.
+
+pub mod phantom;
+pub mod synth;
+
+/// The four IVIM parameters, in the canonical sub-network order shared
+/// with the Python layout (`ivim.SUBNETS`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Param {
+    /// Diffusion coefficient D (Brownian motion of water), mm^2/s.
+    D,
+    /// Pseudo-diffusion D* (perfusion / blood flow), mm^2/s.
+    DStar,
+    /// Perfusion fraction f.
+    F,
+    /// Normalised S(b=0).
+    S0,
+}
+
+impl Param {
+    pub const ALL: [Param; 4] = [Param::D, Param::DStar, Param::F, Param::S0];
+
+    /// Canonical lowercase name (matches the manifest's subnet names).
+    pub fn name(self) -> &'static str {
+        match self {
+            Param::D => "d",
+            Param::DStar => "dstar",
+            Param::F => "f",
+            Param::S0 => "s0",
+        }
+    }
+
+    /// Clinical range (min, max) — must match `python/compile/ivim.py`.
+    pub fn range(self) -> (f64, f64) {
+        match self {
+            Param::D => (0.0, 0.005),
+            Param::DStar => (0.005, 0.2),
+            Param::F => (0.0, 0.7),
+            Param::S0 => (0.8, 1.2),
+        }
+    }
+
+    /// The conversion function C(.) of the paper (Fig. 2): map a sigmoid
+    /// output in (0,1) into the clinical range.
+    pub fn convert(self, sigmoid: f64) -> f64 {
+        let (lo, hi) = self.range();
+        lo + sigmoid * (hi - lo)
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            Param::D => 0,
+            Param::DStar => 1,
+            Param::F => 2,
+            Param::S0 => 3,
+        }
+    }
+}
+
+/// A single voxel's ground-truth IVIM parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IvimParams {
+    pub d: f64,
+    pub dstar: f64,
+    pub f: f64,
+    pub s0: f64,
+}
+
+impl IvimParams {
+    pub fn get(&self, p: Param) -> f64 {
+        match p {
+            Param::D => self.d,
+            Param::DStar => self.dstar,
+            Param::F => self.f,
+            Param::S0 => self.s0,
+        }
+    }
+}
+
+/// Paper eq. (1): `S(b) = S0 * (f * exp(-b D*) + (1-f) * exp(-b D))`.
+#[inline]
+pub fn signal(b: f64, p: &IvimParams) -> f64 {
+    p.s0 * (p.f * (-b * p.dstar).exp() + (1.0 - p.f) * (-b * p.d).exp())
+}
+
+/// Evaluate eq. (1) over a b-value protocol.
+pub fn signal_curve(bvals: &[f64], p: &IvimParams) -> Vec<f64> {
+    bvals.iter().map(|&b| signal(b, p)).collect()
+}
+
+/// The evaluation SNR grid from the paper (§VI-A).
+pub const PAPER_SNRS: [f64; 5] = [5.0, 15.0, 20.0, 30.0, 50.0];
+
+/// 11-point clinical protocol for the `tiny` variant (s/mm^2).
+pub fn bvalues_tiny() -> Vec<f64> {
+    vec![0.0, 5.0, 10.0, 20.0, 30.0, 40.0, 60.0, 150.0, 300.0, 500.0, 800.0]
+}
+
+/// 104-acquisition protocol shaped like the pancreatic dataset [43]-[45]
+/// (must match `python/compile/ivim.py::bvalues_paper`).
+pub fn bvalues_paper() -> Vec<f64> {
+    let shells = [
+        0.0, 10.0, 20.0, 30.0, 40.0, 50.0, 75.0, 100.0, 150.0, 200.0, 300.0, 400.0, 500.0,
+        600.0, 700.0, 800.0,
+    ];
+    let reps = [8, 8, 8, 8, 8, 8, 6, 6, 6, 6, 6, 6, 5, 5, 5, 5];
+    let mut out = Vec::with_capacity(104);
+    for (b, r) in shells.iter().zip(reps.iter()) {
+        for _ in 0..*r {
+            out.push(*b);
+        }
+    }
+    debug_assert_eq!(out.len(), 104);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> IvimParams {
+        IvimParams {
+            d: 0.002,
+            dstar: 0.05,
+            f: 0.3,
+            s0: 1.1,
+        }
+    }
+
+    #[test]
+    fn signal_at_b0_is_s0() {
+        assert!((signal(0.0, &p()) - 1.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn signal_monotone_decreasing() {
+        let c = signal_curve(&bvalues_tiny(), &p());
+        for w in c.windows(2) {
+            assert!(w[1] < w[0]);
+        }
+    }
+
+    #[test]
+    fn biexponential_limits() {
+        let mut q = p();
+        q.f = 0.0;
+        q.s0 = 1.0;
+        for &b in &[0.0, 100.0, 500.0] {
+            assert!((signal(b, &q) - (-b * q.d).exp()).abs() < 1e-12);
+        }
+        q.f = 1.0;
+        for &b in &[0.0, 100.0, 500.0] {
+            assert!((signal(b, &q) - (-b * q.dstar).exp()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn protocols_match_python() {
+        assert_eq!(bvalues_tiny().len(), 11);
+        let bp = bvalues_paper();
+        assert_eq!(bp.len(), 104);
+        assert_eq!(bp[0], 0.0);
+        assert_eq!(*bp.last().unwrap(), 800.0);
+        assert!(bp.windows(2).all(|w| w[1] >= w[0]));
+    }
+
+    #[test]
+    fn conversion_maps_ranges() {
+        for prm in Param::ALL {
+            let (lo, hi) = prm.range();
+            assert!((prm.convert(0.0) - lo).abs() < 1e-12);
+            assert!((prm.convert(1.0) - hi).abs() < 1e-12);
+            let mid = prm.convert(0.5);
+            assert!(mid > lo && mid < hi);
+        }
+    }
+
+    #[test]
+    fn param_names_match_manifest_order() {
+        let names: Vec<&str> = Param::ALL.iter().map(|p| p.name()).collect();
+        assert_eq!(names, vec!["d", "dstar", "f", "s0"]);
+    }
+}

@@ -1,0 +1,167 @@
+//! Synthetic dataset generator — the paper's Phase-1 protocol (§III, §VI-A).
+//!
+//! Draw (S0, D, D*, f) uniformly from the clinical ranges, evaluate
+//! eq. (1) over the b-value protocol, add Gaussian noise with std
+//! `S0 / SNR`, and normalise by the measured b=0 signal, exactly like the
+//! Python generator (`ivim.synth_dataset`) — though with an independent
+//! RNG (both produce *statistically identical* datasets; golden-vector
+//! parity is only required for masks, not data).
+
+use super::{signal, IvimParams, Param};
+use crate::util::rng::Pcg32;
+
+/// A generated dataset: normalised signals (row-major `[n][nb]`) plus
+/// ground truth parameters per voxel.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub signals: Vec<f32>,
+    pub truth: Vec<IvimParams>,
+    pub nb: usize,
+    pub snr: f64,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.truth.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.truth.is_empty()
+    }
+    /// Row view of voxel `i`'s signals.
+    pub fn voxel(&self, i: usize) -> &[f32] {
+        &self.signals[i * self.nb..(i + 1) * self.nb]
+    }
+}
+
+/// Draw one parameter tuple uniformly from the clinical ranges.
+pub fn draw_params(rng: &mut Pcg32) -> IvimParams {
+    let u = |rng: &mut Pcg32, p: Param| {
+        let (lo, hi) = p.range();
+        rng.uniform(lo, hi)
+    };
+    IvimParams {
+        d: u(rng, Param::D),
+        dstar: u(rng, Param::DStar),
+        f: u(rng, Param::F),
+        s0: u(rng, Param::S0),
+    }
+}
+
+/// Generate `n` voxels at the given SNR (paper: 10,000 per SNR level).
+pub fn synth_dataset(n: usize, bvals: &[f64], snr: f64, seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed);
+    let nb = bvals.len();
+    let mut signals = Vec::with_capacity(n * nb);
+    let mut truth = Vec::with_capacity(n);
+    let b0_idx: Vec<usize> = bvals
+        .iter()
+        .enumerate()
+        .filter(|(_, &b)| b == 0.0)
+        .map(|(i, _)| i)
+        .collect();
+
+    for _ in 0..n {
+        let p = draw_params(&mut rng);
+        let noise_std = p.s0 / snr;
+        let noisy: Vec<f64> = bvals
+            .iter()
+            .map(|&b| signal(b, &p) + noise_std * rng.normal())
+            .collect();
+        // Normalise by the measured b=0 signal (mean over b==0 rows).
+        let s_b0 = if b0_idx.is_empty() {
+            p.s0
+        } else {
+            let m = b0_idx.iter().map(|&i| noisy[i]).sum::<f64>() / b0_idx.len() as f64;
+            if m.abs() < 1e-6 {
+                1e-6
+            } else {
+                m
+            }
+        };
+        signals.extend(noisy.iter().map(|&v| (v / s_b0) as f32));
+        truth.push(p);
+    }
+
+    Dataset {
+        signals,
+        truth,
+        nb,
+        snr,
+    }
+}
+
+/// Ground-truth values of one parameter across a dataset.
+pub fn truth_column(ds: &Dataset, p: Param) -> Vec<f64> {
+    ds.truth.iter().map(|t| t.get(p)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ivim::{bvalues_tiny, signal_curve};
+    use crate::util::stats;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let b = bvalues_tiny();
+        let ds = synth_dataset(100, &b, 20.0, 0);
+        assert_eq!(ds.len(), 100);
+        assert_eq!(ds.signals.len(), 100 * b.len());
+        for t in &ds.truth {
+            for p in Param::ALL {
+                let (lo, hi) = p.range();
+                let v = t.get(p);
+                assert!(v >= lo && v <= hi, "{p:?}={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let b = bvalues_tiny();
+        let a = synth_dataset(10, &b, 20.0, 3);
+        let c = synth_dataset(10, &b, 20.0, 3);
+        let d = synth_dataset(10, &b, 20.0, 4);
+        assert_eq!(a.signals, c.signals);
+        assert_ne!(a.signals, d.signals);
+    }
+
+    #[test]
+    fn noise_scales_with_snr() {
+        let b = bvalues_tiny();
+        let resid = |snr: f64| {
+            let ds = synth_dataset(2000, &b, snr, 1);
+            let mut errs = Vec::new();
+            for i in 0..ds.len() {
+                let clean = signal_curve(&b, &ds.truth[i]);
+                let s0 = ds.truth[i].s0;
+                for (j, &v) in ds.voxel(i).iter().enumerate() {
+                    errs.push((v as f64 - clean[j] / s0).abs());
+                }
+            }
+            stats::mean(&errs)
+        };
+        let r5 = resid(5.0);
+        let r15 = resid(15.0);
+        let r50 = resid(50.0);
+        assert!(r50 < r15 && r15 < r5, "{r5} {r15} {r50}");
+    }
+
+    #[test]
+    fn normalised_b0_near_one() {
+        let b = bvalues_tiny();
+        let ds = synth_dataset(500, &b, 50.0, 2);
+        // first column is the (self-normalised) b=0 acquisition
+        let col0: Vec<f64> = (0..ds.len()).map(|i| ds.voxel(i)[0] as f64).collect();
+        assert!((stats::mean(&col0) - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn truth_column_extracts() {
+        let b = bvalues_tiny();
+        let ds = synth_dataset(5, &b, 20.0, 0);
+        let col = truth_column(&ds, Param::F);
+        assert_eq!(col.len(), 5);
+        assert!((col[0] - ds.truth[0].f).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,33 @@
+//! # uIVIM-NET — mask-based Bayesian MRI uncertainty estimation
+//!
+//! Production reproduction of *"Accelerating MRI Uncertainty Estimation
+//! with Mask-based Bayesian Neural Network"* (Zhang et al., 2024) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`) — Pallas masked-linear kernel.
+//! * **L2** (`python/compile/model.py`) — uIVIM-NET forward/train-step in
+//!   JAX, AOT-lowered to HLO text once at build time.
+//! * **L3** (this crate) — the serving coordinator, PJRT runtime, cycle-
+//!   level FPGA accelerator simulator, classical baselines, metrics, CLI.
+//!
+//! See DESIGN.md for the system inventory and the experiment index that
+//! maps every table/figure of the paper onto modules and bench targets.
+
+pub mod accel;
+pub mod bayes;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod fit;
+pub mod flow;
+pub mod infer;
+pub mod ivim;
+pub mod masks;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod testing;
+pub mod train;
+pub mod util;

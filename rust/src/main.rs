@@ -1,0 +1,466 @@
+//! `repro` — the uIVIM-NET leader binary: training, inference, serving
+//! and every paper experiment behind one CLI.
+//!
+//! Python never runs here: all compute comes from the AOT artifacts
+//! (PJRT), the native engine or the accelerator simulator.
+
+use uivim::accel::{AccelConfig, AccelSimulator, Scheme};
+use uivim::bench;
+use uivim::cli::{flag, opt, Args, Cli, CommandSpec};
+use uivim::coordinator::{Coordinator, CoordinatorConfig, VoxelRequest};
+use uivim::experiments::{self, fig67, fig8, tables, EngineKind};
+use uivim::ivim::synth::synth_dataset;
+use uivim::ivim::Param;
+use uivim::masks;
+use uivim::metrics::report::write_report;
+use uivim::model::Weights;
+use uivim::runtime::Runtime;
+use uivim::train::{train, TrainConfig};
+use uivim::util::Timer;
+
+fn cli() -> Cli {
+    let variant = || opt("variant", "artifact variant (tiny|paper)", Some("tiny"));
+    let engine = || opt("engine", "engine (native|pjrt|accel)", Some("native"));
+    let weights_opt = || opt("weights", "weights stem (<stem>.params.bin/.bn.bin)", None);
+    let train_steps = || {
+        opt(
+            "train-steps",
+            "steps to train before eval (0 = init weights)",
+            Some("300"),
+        )
+    };
+    Cli {
+        program: "repro",
+        about: "uIVIM-NET: mask-based Bayesian MRI uncertainty estimation (paper reproduction)",
+        commands: vec![
+            CommandSpec {
+                name: "info",
+                help: "show artifact, platform and mask-parity status",
+                opts: vec![variant()],
+            },
+            CommandSpec {
+                name: "train",
+                help: "train uIVIM-NET via the AOT train-step executable",
+                opts: vec![
+                    variant(),
+                    opt("steps", "training steps", Some("500")),
+                    opt("snr", "training data SNR", Some("20")),
+                    opt("seed", "data stream seed", Some("1")),
+                    opt("out", "output weights stem", Some("reports/weights")),
+                ],
+            },
+            CommandSpec {
+                name: "infer",
+                help: "run batch inference with uncertainty on synthetic voxels",
+                opts: vec![
+                    variant(),
+                    engine(),
+                    weights_opt(),
+                    opt("n", "number of voxels", Some("64")),
+                    opt("snr", "noise level", Some("20")),
+                ],
+            },
+            CommandSpec {
+                name: "serve",
+                help: "demo the serving coordinator on a synthetic request stream",
+                opts: vec![
+                    variant(),
+                    engine(),
+                    weights_opt(),
+                    opt("requests", "number of requests", Some("1000")),
+                    opt("batch", "dynamic batch size (default: variant batch)", None),
+                ],
+            },
+            CommandSpec {
+                name: "fig6",
+                help: "Fig. 6 — RMSE vs evaluation SNR",
+                opts: vec![
+                    variant(),
+                    engine(),
+                    weights_opt(),
+                    train_steps(),
+                    opt("voxels", "voxels per SNR", Some("2000")),
+                    opt("out", "CSV output path", Some("reports/fig6_fig7.csv")),
+                ],
+            },
+            CommandSpec {
+                name: "fig7",
+                help: "Fig. 7 — relative uncertainty vs evaluation SNR",
+                opts: vec![
+                    variant(),
+                    engine(),
+                    weights_opt(),
+                    train_steps(),
+                    opt("voxels", "voxels per SNR", Some("2000")),
+                    opt("out", "CSV output path", Some("reports/fig6_fig7.csv")),
+                ],
+            },
+            CommandSpec {
+                name: "fig8",
+                help: "Fig. 8 — resource utilisation & speed vs PE count",
+                opts: vec![
+                    variant(),
+                    weights_opt(),
+                    flag("check-model", "assert eq. (2) matches the simulator"),
+                ],
+            },
+            CommandSpec {
+                name: "table1",
+                help: "Table I — energy efficiency vs prior FPGA designs",
+                opts: vec![variant(), weights_opt()],
+            },
+            CommandSpec {
+                name: "table2",
+                help: "Table II — latency/power/energy: CPU vs GPU vs FPGA",
+                opts: vec![variant(), weights_opt()],
+            },
+            CommandSpec {
+                name: "schemes",
+                help: "ablation: batch-level vs sampling-level weight loading",
+                opts: vec![variant(), weights_opt()],
+            },
+            CommandSpec {
+                name: "flow",
+                help: "run the Fig. 1 co-design flow: train, check uncertainty requirements, map to hardware",
+                opts: vec![
+                    variant(),
+                    opt("steps", "phase-2 training steps", Some("200")),
+                    opt("realtime-ms", "phase-3 real-time budget (ms/batch)", Some("0.8")),
+                ],
+            },
+            CommandSpec {
+                name: "gridsearch",
+                help: "Phase-2 grid search: dropout rate x sampling number (paper §III)",
+                opts: vec![
+                    variant(),
+                    weights_opt(),
+                    train_steps(),
+                    opt("rates", "comma-separated dropout rates", Some("0.1,0.3,0.5,0.7,0.9")),
+                    opt("samples", "comma-separated sampling numbers", Some("4,8,16")),
+                    opt("voxels", "evaluation voxels per candidate", Some("256")),
+                ],
+            },
+            CommandSpec {
+                name: "ablation",
+                help: "Masksembles vs MC-Dropout vs Deep-Ensembles uncertainty/hardware trade-off",
+                opts: vec![variant(), weights_opt(), train_steps()],
+            },
+            CommandSpec {
+                name: "masks",
+                help: "generate and inspect Masksembles masks",
+                opts: vec![
+                    opt("width", "layer width", Some("11")),
+                    opt("n", "number of masks", Some("4")),
+                    opt("scale", "Masksembles scale", Some("2.0")),
+                    opt("seed", "generator seed", Some("2024")),
+                ],
+            },
+        ],
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cli = cli();
+    let args = match cli.parse(&argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(if argv.is_empty() { 0 } else { 2 });
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn engine_and_weights(
+    args: &Args,
+    rt: &Runtime,
+) -> anyhow::Result<(uivim::model::Manifest, Weights, EngineKind)> {
+    let man = experiments::load_manifest(args.get_or("variant", "tiny"))?;
+    let kind = EngineKind::parse(args.get_or("engine", "native"))?;
+    let steps = args.get_usize("train-steps")?.unwrap_or(0);
+    let w = experiments::resolve_weights(&man, rt, args.get("weights"), steps, 20.0)?;
+    Ok((man, w, kind))
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    match args.command.as_str() {
+        "info" => {
+            let man = experiments::load_manifest(args.get_or("variant", "tiny"))?;
+            let rt = Runtime::cpu()?;
+            println!("variant        : {}", man.variant);
+            println!("b-values       : {} (nb)", man.nb);
+            println!("mask samples   : {}", man.n_samples);
+            println!("batch (infer)  : {}", man.batch_infer);
+            println!("parameters     : {}", man.param_count);
+            println!(
+                "platform       : {} ({} devices)",
+                rt.platform(),
+                rt.device_count()
+            );
+            man.verify_mask_parity()?;
+            println!("mask parity    : OK (Rust generator == python artifacts)");
+            let w = Weights::load_init(&man)?;
+            let exe = uivim::runtime::InferExecutable::load(&rt, &man, &w)?;
+            exe.verify_golden()?;
+            println!("golden check   : OK (PJRT output == python gold)");
+        }
+        "train" => {
+            let man = experiments::load_manifest(args.get_or("variant", "tiny"))?;
+            let rt = Runtime::cpu()?;
+            let cfg = TrainConfig {
+                steps: args.get_usize("steps")?.unwrap_or(500),
+                snr: args.get_f64("snr")?.unwrap_or(20.0),
+                seed: args.get_usize("seed")?.unwrap_or(1) as u64,
+                log_every: 50,
+                early_stop_rel: 0.0,
+            };
+            println!("training {} steps at SNR {} ...", cfg.steps, cfg.snr);
+            let rep = train(&rt, &man, &cfg, None)?;
+            println!(
+                "loss {:.6} -> {:.6} over {} steps in {:.1}s ({:.1} steps/s)",
+                rep.initial_loss(),
+                rep.final_loss(),
+                rep.steps_run,
+                rep.seconds,
+                rep.steps_run as f64 / rep.seconds
+            );
+            let stem = std::path::PathBuf::from(args.get_or("out", "reports/weights"));
+            if let Some(p) = stem.parent() {
+                std::fs::create_dir_all(p)?;
+            }
+            rep.final_weights.save(&stem)?;
+            println!("weights saved to {}.params.bin / .bn.bin", stem.display());
+            let curve: String = rep
+                .losses
+                .iter()
+                .enumerate()
+                .map(|(i, l)| format!("{i},{l}\n"))
+                .collect();
+            write_report(
+                &stem.with_extension("loss.csv"),
+                &format!("step,loss\n{curve}"),
+            )?;
+        }
+        "infer" => {
+            let rt = Runtime::cpu()?;
+            let (man, w, kind) = engine_and_weights(args, &rt)?;
+            let n = args.get_usize("n")?.unwrap_or(64);
+            let snr = args.get_f64("snr")?.unwrap_or(20.0);
+            let ds = synth_dataset(n, &man.bvalues, snr, 17);
+            let mut engine = experiments::build_engine(kind, &man, &w, Some(&rt))?;
+            let t = Timer::start();
+            let outs = fig67::run_batches(engine.as_mut(), &ds)?;
+            let el = t.elapsed_ms();
+            println!(
+                "{} voxels on {} in {:.2} ms ({:.0} voxels/s)",
+                n,
+                engine.name(),
+                el,
+                n as f64 / (el / 1e3)
+            );
+            for p in Param::ALL {
+                let rmse = uivim::metrics::rmse_by_param(&outs, &ds, p);
+                let unc = uivim::metrics::mean_relative_uncertainty(&outs, p);
+                println!(
+                    "  {:<6} rmse {:.6}  rel-uncertainty {:.4}",
+                    p.name(),
+                    rmse,
+                    unc
+                );
+            }
+        }
+        "serve" => {
+            let rt = Runtime::cpu()?;
+            let (man, w, kind) = engine_and_weights(args, &rt)?;
+            let n = args.get_usize("requests")?.unwrap_or(1000);
+            let batch = args.get_usize("batch")?.unwrap_or(man.batch_infer).max(1);
+            let cfg = CoordinatorConfig::for_batch(man.nb, batch);
+            let man2 = man.clone();
+            let coord = Coordinator::start(cfg, move || {
+                let rt = Runtime::cpu().ok();
+                experiments::build_engine(kind, &man2, &w, rt.as_ref())
+            })?;
+            let ds = synth_dataset(n, &man.bvalues, 20.0, 18);
+            let t = Timer::start();
+            let rxs: Vec<_> = (0..n)
+                .map(|i| {
+                    coord
+                        .submit(VoxelRequest {
+                            id: i as u64,
+                            signals: ds.voxel(i).to_vec(),
+                        })
+                        .expect("no backpressure expected in demo")
+                })
+                .collect();
+            let mut confident = 0usize;
+            for rx in rxs {
+                let resp = rx.recv()?;
+                if resp.report.confident {
+                    confident += 1;
+                }
+            }
+            let el = t.elapsed_s();
+            let snap = coord.metrics().snapshot();
+            println!(
+                "{n} requests in {:.2}s -> {:.0} vox/s | batches {} | padded rows {} | \
+                 mean request latency {:.2} ms | p99 {:.2} ms | confident {:.1}%",
+                el,
+                n as f64 / el,
+                snap.batches,
+                snap.padded_rows,
+                snap.mean_request_us / 1e3,
+                snap.p99_request_us / 1e3,
+                100.0 * confident as f64 / n as f64
+            );
+            coord.shutdown();
+        }
+        "fig6" | "fig7" => {
+            let rt = Runtime::cpu()?;
+            let (man, w, kind) = engine_and_weights(args, &rt)?;
+            let cfg = fig67::SweepConfig {
+                n_voxels: args.get_usize("voxels")?.unwrap_or(2000),
+                engine: kind,
+                ..Default::default()
+            };
+            let rows = fig67::snr_sweep(&man, &w, Some(&rt), &cfg)?;
+            if args.command == "fig6" {
+                println!("{}", fig67::render_fig6(&rows));
+            } else {
+                println!("{}", fig67::render_fig7(&rows));
+            }
+            let out = std::path::PathBuf::from(args.get_or("out", "reports/fig6_fig7.csv"));
+            write_report(&out, &fig67::to_csv(&rows))?;
+            println!("CSV written to {}", out.display());
+        }
+        "fig8" => {
+            let man = experiments::load_manifest(args.get_or("variant", "tiny"))?;
+            let rt = Runtime::cpu()?;
+            let w = experiments::resolve_weights(&man, &rt, args.get("weights"), 0, 20.0)?;
+            let (points, ok) = fig8::fig8(&man, &w, &fig8::PAPER_PE_COUNTS)?;
+            println!("{}", fig8::render(&points, &ok));
+            if args.flag("check-model") {
+                anyhow::ensure!(
+                    ok.iter().all(|&b| b),
+                    "eq. (2) model diverged from simulator"
+                );
+                println!("eq. (2) analytic model matches the cycle simulator on all points");
+            }
+        }
+        "table1" => {
+            let man = experiments::load_manifest(args.get_or("variant", "tiny"))?;
+            let rt = Runtime::cpu()?;
+            let w = experiments::resolve_weights(&man, &rt, args.get("weights"), 0, 20.0)?;
+            let rows = tables::table1(&man, &w)?;
+            println!("{}", tables::render_table1(&rows));
+        }
+        "table2" => {
+            let man = experiments::load_manifest(args.get_or("variant", "tiny"))?;
+            let rt = Runtime::cpu()?;
+            let w = experiments::resolve_weights(&man, &rt, args.get("weights"), 0, 20.0)?;
+            let t = tables::table2(&man, &w, &rt, &bench::config_from_env())?;
+            println!("{}", tables::render_table2(&t));
+        }
+        "schemes" => {
+            let man = experiments::load_manifest(args.get_or("variant", "tiny"))?;
+            let rt = Runtime::cpu()?;
+            let w = experiments::resolve_weights(&man, &rt, args.get("weights"), 0, 20.0)?;
+            let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 19);
+            let cfg = AccelConfig {
+                batch: man.batch_infer,
+                ..Default::default()
+            };
+            for scheme in [Scheme::BatchLevel, Scheme::SamplingLevel] {
+                let mut sim = AccelSimulator::new(&man, &w, cfg, scheme)?;
+                let (_, stats) = sim.infer_batch_stats(&ds.signals)?;
+                let u = uivim::accel::resource::usage(
+                    &cfg,
+                    man.nb,
+                    man.n_samples,
+                    &sim.weight_stores(),
+                );
+                let p = uivim::accel::power::estimate(&cfg, &u, &stats, false);
+                println!(
+                    "{:<16} cycles {:>9}  weight loads {:>6}  words {:>9}  {:.3} ms/batch  {:.2} W  {:.3} mJ/batch",
+                    scheme.name(),
+                    stats.cycles,
+                    stats.weight_loads,
+                    stats.weight_words_loaded,
+                    stats.seconds(cfg.clock_hz) * 1e3,
+                    p.watts,
+                    p.energy_mj()
+                );
+            }
+        }
+        "flow" => {
+            let man = experiments::load_manifest(args.get_or("variant", "tiny"))?;
+            let rt = Runtime::cpu()?;
+            let req = uivim::flow::UncertaintyRequirements::default();
+            let steps = args.get_usize("steps")?.unwrap_or(200);
+            let rt_ms = args.get_f64("realtime-ms")?.unwrap_or(0.8);
+            println!("Phase 1: requirements = caps {:?} @ SNR {}, monotone-in-SNR", req.max_relative, req.reference_snr);
+            let rep = uivim::flow::run_flow(&man, &rt, &req, steps, rt_ms)?;
+            println!(
+                "Phase 2: trained {} steps (final loss {:.5}); requirements {}",
+                steps,
+                rep.phase2.final_loss,
+                if rep.phase2.satisfied { "SATISFIED" } else { "VIOLATED" }
+            );
+            for v in &rep.phase2.violations {
+                println!("  violation: {v}");
+            }
+            match rep.phase3 {
+                Some(p3) => println!(
+                    "Phase 3: {} PEs ({:.1}% DSP) -> {:.4} ms/batch at {:.2} W; real-time {} ms budget: {}",
+                    p3.chosen_pe, p3.dsp_pct, p3.batch_ms, p3.power_w, rt_ms,
+                    if p3.meets_realtime { "MET" } else { "MISSED" }
+                ),
+                None => println!("Phase 3: skipped — iterate the model/hyper-parameters (Fig. 1 loop)"),
+            }
+        }
+        "gridsearch" => {
+            let rt = Runtime::cpu()?;
+            let (man, w, _) = engine_and_weights(args, &rt)?;
+            let parse_list = |s: &str| -> Vec<f64> {
+                s.split(',').filter_map(|x| x.trim().parse().ok()).collect()
+            };
+            let rates = parse_list(args.get_or("rates", "0.1,0.3,0.5,0.7,0.9"));
+            let samples: Vec<usize> = args
+                .get_or("samples", "4,8,16")
+                .split(',')
+                .filter_map(|x| x.trim().parse().ok())
+                .collect();
+            let voxels = args.get_usize("voxels")?.unwrap_or(256);
+            let pts = uivim::flow::gridsearch::grid_search(&man, &w, &rates, &samples, 20.0, voxels)?;
+            println!("{}", uivim::flow::gridsearch::render(&pts));
+        }
+        "ablation" => {
+            let rt = Runtime::cpu()?;
+            let (man, w, _) = engine_and_weights(args, &rt)?;
+            let rows = experiments::ablation::ablation(&man, &w)?;
+            println!("{}", experiments::ablation::render(&rows));
+        }
+        "masks" => {
+            let width = args.get_usize("width")?.unwrap_or(11);
+            let n = args.get_usize("n")?.unwrap_or(4);
+            let scale = args.get_f64("scale")?.unwrap_or(2.0);
+            let seed = args.get_usize("seed")?.unwrap_or(2024) as u64;
+            let m = masks::for_width(width, n, scale, seed)?;
+            println!("masks {}x{} (scale {scale}, seed {seed}):", m.n, m.width);
+            for i in 0..m.n {
+                let row: String = m
+                    .row(i)
+                    .iter()
+                    .map(|&b| if b == 1 { '#' } else { '.' })
+                    .collect();
+                println!("  [{i}] {row}  ({} kept)", m.ones(i));
+            }
+            println!("pairwise overlap (IoU): {:.3}", m.overlap());
+        }
+        other => anyhow::bail!("unhandled command {other}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,282 @@
+//! Masksembles mask generation — bit-exact mirror of
+//! `python/compile/masks.py` (same PCG32 stream, same partial
+//! Fisher-Yates), so the coordinator can regenerate the exact masks baked
+//! into the AOT artifacts from `manifest.json`'s `mask_seed`.
+//!
+//! Fixed masks are the paper's central hardware-enabling idea: because the
+//! dropped positions are known offline, the accelerator stores only kept
+//! weights (mask-zero skipping) and reorders the sampling loop
+//! (batch-level scheme).
+
+use crate::util::rng::Pcg32;
+
+/// A set of N binary masks over a layer of `width` neurons.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MaskSet {
+    pub n: usize,
+    pub width: usize,
+    /// Row-major `[n][width]`, values 0/1.
+    pub bits: Vec<u8>,
+}
+
+impl MaskSet {
+    pub fn row(&self, i: usize) -> &[u8] {
+        &self.bits[i * self.width..(i + 1) * self.width]
+    }
+
+    /// Number of kept neurons in mask `i`.
+    pub fn ones(&self, i: usize) -> usize {
+        self.row(i).iter().map(|&b| b as usize).sum()
+    }
+
+    /// Row as f32 multipliers (the form the engines consume).
+    pub fn row_f32(&self, i: usize) -> Vec<f32> {
+        self.row(i).iter().map(|&b| b as f32).collect()
+    }
+
+    /// Indices of kept neurons in mask `i` — the mask-zero-skipping
+    /// "stored weights" index list.
+    pub fn kept_indices(&self, i: usize) -> Vec<usize> {
+        self.row(i)
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b == 1)
+            .map(|(j, _)| j)
+            .collect()
+    }
+
+    /// Mean pairwise IoU (the correlation proxy; lower = closer to Deep
+    /// Ensembles).
+    pub fn overlap(&self) -> f64 {
+        if self.n < 2 {
+            return 1.0;
+        }
+        let mut vals = Vec::new();
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                let (mut inter, mut union) = (0usize, 0usize);
+                for k in 0..self.width {
+                    let a = self.row(i)[k] == 1;
+                    let b = self.row(j)[k] == 1;
+                    if a && b {
+                        inter += 1;
+                    }
+                    if a || b {
+                        union += 1;
+                    }
+                }
+                vals.push(if union == 0 {
+                    0.0
+                } else {
+                    inter as f64 / union as f64
+                });
+            }
+        }
+        vals.iter().sum::<f64>() / vals.len() as f64
+    }
+}
+
+/// Python-compatible `round()`: half-to-even (banker's rounding).  Rust's
+/// `f64::round` rounds half away from zero, which would desynchronise the
+/// mask search path from the Python generator on exact .5 values.
+pub(crate) fn pyround(x: f64) -> usize {
+    let f = x.floor();
+    if (x - f - 0.5).abs() < 1e-9 {
+        let lo = f as i64;
+        (if lo % 2 == 0 { lo } else { lo + 1 }) as usize
+    } else {
+        x.round() as usize
+    }
+}
+
+/// Expected surviving width after dropping unused positions
+/// (`round(m*s*(1-(1-1/s)^n))`, mirroring Python).
+pub fn expected_width(m: usize, n: usize, s: f64) -> usize {
+    pyround(m as f64 * s * (1.0 - (1.0 - 1.0 / s).powi(n as i32)))
+}
+
+fn attempt(m: usize, n: usize, s: f64, rng: &mut Pcg32) -> MaskSet {
+    let total = pyround(m as f64 * s);
+    let mut grid = vec![0u8; n * total];
+    for i in 0..n {
+        for idx in rng.choose(total, m) {
+            grid[i * total + idx] = 1;
+        }
+    }
+    // Keep only columns used by at least one mask.
+    let keep: Vec<usize> = (0..total)
+        .filter(|&c| (0..n).any(|r| grid[r * total + c] == 1))
+        .collect();
+    let width = keep.len();
+    let mut bits = vec![0u8; n * width];
+    for (new_c, &c) in keep.iter().enumerate() {
+        for r in 0..n {
+            bits[r * width + new_c] = grid[r * total + c];
+        }
+    }
+    MaskSet { n, width, bits }
+}
+
+/// Retry `attempt` until the surviving width equals the expected width.
+pub fn generate_masks(m: usize, n: usize, s: f64, rng: &mut Pcg32) -> MaskSet {
+    let exp = expected_width(m, n, s);
+    let mut masks = attempt(m, n, s, rng);
+    let mut tries = 1;
+    while masks.width != exp && tries < 4096 {
+        masks = attempt(m, n, s, rng);
+        tries += 1;
+    }
+    masks
+}
+
+fn solve_scale(m: usize, n: usize, c: usize) -> Option<f64> {
+    let (mut lo, mut hi) = (1.0 + 1e-6, 64.0);
+    if expected_width(m, n, hi) < c || expected_width(m, n, lo) > c {
+        return None;
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        let e = expected_width(m, n, mid);
+        if e == c {
+            return Some(mid);
+        }
+        if e < c {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    None
+}
+
+/// Generate `n` masks of width exactly `c` with `~c/scale` ones each —
+/// the identical directed search to `python/compile/masks.py::for_width`.
+pub fn for_width(c: usize, n: usize, scale: f64, seed: u64) -> anyhow::Result<MaskSet> {
+    anyhow::ensure!(c >= 1 && n >= 1, "width and mask count must be >= 1");
+    if scale <= 1.0 {
+        return Ok(MaskSet {
+            n,
+            width: c,
+            bits: vec![1u8; n * c],
+        });
+    }
+    let mut rng = Pcg32::new(seed);
+    let mut m = pyround(c as f64 / scale).max(1);
+    for _ in 0..(64 + c) {
+        if expected_width(m, n, 64.0) < c {
+            m += 1;
+            continue;
+        }
+        if m > c {
+            m -= 1;
+            continue;
+        }
+        let Some(s) = solve_scale(m, n, c) else {
+            m += 1;
+            continue;
+        };
+        let masks = generate_masks(m, n, s, &mut rng);
+        if masks.width == c {
+            return Ok(masks);
+        }
+    }
+    anyhow::bail!("mask search failed for width={c} n={n} scale={scale}")
+}
+
+/// The per-(subnet, layer) mask seed convention shared with
+/// `python/compile/model.py::build_masks`.
+pub fn subnet_layer_seed(mask_seed: u64, subnet_index: usize, layer: usize) -> u64 {
+    mask_seed + 1000 * subnet_index as u64 + layer as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_width_and_uniform_ones() {
+        let m = for_width(11, 4, 2.0, 2024).unwrap();
+        assert_eq!((m.n, m.width), (4, 11));
+        let ones: Vec<usize> = (0..4).map(|i| m.ones(i)).collect();
+        assert!(ones.windows(2).all(|w| w[0] == w[1]), "{ones:?}");
+        assert!(ones[0] >= 3 && ones[0] <= 8);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = for_width(16, 4, 1.8, 7).unwrap();
+        let b = for_width(16, 4, 1.8, 7).unwrap();
+        let c = for_width(16, 4, 1.8, 8).unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn every_column_used() {
+        let m = for_width(24, 4, 2.5, 3).unwrap();
+        for c in 0..m.width {
+            assert!((0..m.n).any(|r| m.row(r)[c] == 1), "dead column {c}");
+        }
+    }
+
+    #[test]
+    fn scale_one_is_all_ones() {
+        let m = for_width(10, 4, 1.0, 0).unwrap();
+        assert!(m.bits.iter().all(|&b| b == 1));
+    }
+
+    #[test]
+    fn overlap_decreases_with_scale() {
+        let low = for_width(64, 4, 1.3, 11).unwrap().overlap();
+        let high = for_width(64, 4, 4.0, 11).unwrap().overlap();
+        assert!(high < low, "{high} !< {low}");
+    }
+
+    #[test]
+    fn hard_cases_from_python_scan() {
+        // The n=2, scale>=3 family used to cycle in the undirected search.
+        for &(c, n, scale) in &[(7usize, 2usize, 3.0f64), (10, 2, 3.5), (19, 2, 3.0)] {
+            let m = for_width(c, n, scale, 0).unwrap();
+            assert_eq!(m.width, c);
+        }
+    }
+
+    #[test]
+    fn kept_indices_match_bits() {
+        let m = for_width(12, 4, 2.0, 5).unwrap();
+        for i in 0..4 {
+            let kept = m.kept_indices(i);
+            assert_eq!(kept.len(), m.ones(i));
+            for &k in &kept {
+                assert_eq!(m.row(i)[k], 1);
+            }
+        }
+    }
+
+    #[test]
+    fn pyround_is_half_even() {
+        assert_eq!(pyround(4.5), 4);
+        assert_eq!(pyround(5.5), 6);
+        assert_eq!(pyround(2.3), 2);
+        assert_eq!(pyround(2.7), 3);
+        assert_eq!(pyround(0.5), 0);
+        assert_eq!(pyround(1.5), 2);
+    }
+
+    #[test]
+    fn property_shapes() {
+        use crate::testing::{forall, zip, Gen};
+        forall(
+            40,
+            zip(Gen::usize_in(4, 48), Gen::usize_in(2, 8)),
+            |&(c, n): &(usize, usize)| {
+                let m = for_width(c, n, 2.0, 9).unwrap();
+                m.width == c
+                    && m.n == n
+                    && m.bits.iter().all(|&b| b <= 1)
+                    && (0..n).map(|i| m.ones(i)).collect::<std::collections::HashSet<_>>().len()
+                        == 1
+            },
+        );
+    }
+}

@@ -1,0 +1,161 @@
+//! Parameter / uncertainty map export: turn per-voxel estimates back into
+//! image slices a clinician (or a README) can look at.  Plain binary PGM
+//! (P5) — zero dependencies, viewable everywhere.
+
+use std::path::Path;
+
+/// A scalar 3-D map over a phantom-shaped volume.
+pub struct VolumeMap {
+    pub dim: (usize, usize, usize),
+    pub data: Vec<f64>,
+}
+
+impl VolumeMap {
+    pub fn new(dim: (usize, usize, usize)) -> Self {
+        VolumeMap {
+            dim,
+            data: vec![0.0; dim.0 * dim.1 * dim.2],
+        }
+    }
+
+    pub fn from_values(dim: (usize, usize, usize), data: Vec<f64>) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            data.len() == dim.0 * dim.1 * dim.2,
+            "volume data length {} != {}x{}x{}",
+            data.len(),
+            dim.0,
+            dim.1,
+            dim.2
+        );
+        Ok(VolumeMap { dim, data })
+    }
+
+    #[inline]
+    pub fn idx(&self, x: usize, y: usize, z: usize) -> usize {
+        (z * self.dim.1 + y) * self.dim.0 + x
+    }
+
+    pub fn set(&mut self, x: usize, y: usize, z: usize, v: f64) {
+        let i = self.idx(x, y, z);
+        self.data[i] = v;
+    }
+
+    pub fn get(&self, x: usize, y: usize, z: usize) -> f64 {
+        self.data[self.idx(x, y, z)]
+    }
+
+    /// One z-slice as a row-major `[ny][nx]` copy.
+    pub fn slice_z(&self, z: usize) -> Vec<f64> {
+        let (nx, ny, _) = self.dim;
+        let mut out = Vec::with_capacity(nx * ny);
+        for y in 0..ny {
+            for x in 0..nx {
+                out.push(self.get(x, y, z));
+            }
+        }
+        out
+    }
+
+    /// Write one z-slice as an 8-bit PGM, scaled to the volume's
+    /// min..max range (constant volumes render mid-grey).
+    pub fn write_pgm_slice(&self, z: usize, path: &Path) -> anyhow::Result<()> {
+        let (nx, ny, nz) = self.dim;
+        anyhow::ensure!(z < nz, "slice {z} out of range (nz={nz})");
+        let lo = self.data.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = self.data.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let span = hi - lo;
+        let mut bytes = Vec::with_capacity(64 + nx * ny);
+        bytes.extend_from_slice(format!("P5\n{nx} {ny}\n255\n").as_bytes());
+        for v in self.slice_z(z) {
+            let g = if span <= 0.0 {
+                128u8
+            } else {
+                (255.0 * (v - lo) / span).round().clamp(0.0, 255.0) as u8
+            };
+            bytes.push(g);
+        }
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+
+    /// Write every z-slice as `<stem>_z<k>.pgm`.
+    pub fn write_pgm_stack(&self, stem: &Path) -> anyhow::Result<Vec<std::path::PathBuf>> {
+        let mut paths = Vec::new();
+        for z in 0..self.dim.2 {
+            let p = stem.with_file_name(format!(
+                "{}_z{z}.pgm",
+                stem.file_name()
+                    .and_then(|s| s.to_str())
+                    .unwrap_or("map")
+            ));
+            self.write_pgm_slice(z, &p)?;
+            paths.push(p);
+        }
+        Ok(paths)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut m = VolumeMap::new((4, 3, 2));
+        m.set(1, 2, 1, 0.5);
+        assert_eq!(m.get(1, 2, 1), 0.5);
+        assert_eq!(m.get(0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn from_values_validates() {
+        assert!(VolumeMap::from_values((2, 2, 2), vec![0.0; 7]).is_err());
+        assert!(VolumeMap::from_values((2, 2, 2), vec![0.0; 8]).is_ok());
+    }
+
+    #[test]
+    fn pgm_slice_well_formed() {
+        let mut m = VolumeMap::new((8, 4, 2));
+        for x in 0..8 {
+            m.set(x, 0, 0, x as f64);
+        }
+        let dir = std::env::temp_dir().join("uivim_maps_test");
+        let path = dir.join("t.pgm");
+        m.write_pgm_slice(0, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(b"P5\n8 4\n255\n"));
+        assert_eq!(bytes.len(), "P5\n8 4\n255\n".len() + 32);
+        // gradient row: first pixel darkest, last brightest
+        let px = &bytes["P5\n8 4\n255\n".len()..];
+        assert_eq!(px[0], 0);
+        assert_eq!(px[7], 255);
+        assert!(m.write_pgm_slice(5, &path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn constant_volume_mid_grey() {
+        let m = VolumeMap::from_values((2, 2, 1), vec![3.0; 4]).unwrap();
+        let dir = std::env::temp_dir().join("uivim_maps_test");
+        let path = dir.join("c.pgm");
+        m.write_pgm_slice(0, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(*bytes.last().unwrap(), 128);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn stack_writes_all_slices() {
+        let m = VolumeMap::new((2, 2, 3));
+        let dir = std::env::temp_dir().join("uivim_maps_stack");
+        let paths = m.write_pgm_stack(&dir.join("unc")).unwrap();
+        assert_eq!(paths.len(), 3);
+        for p in paths {
+            assert!(p.exists());
+            std::fs::remove_file(p).ok();
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Evaluation metrics and report writers for the paper's experiments.
+//!
+//! * [`rmse_by_param`] / Fig. 6 — RMSE of predicted parameters vs ground
+//!   truth per SNR level.
+//! * [`calibration`] / Fig. 7 companion — does uncertainty track error?
+//! * [`report`] — CSV / markdown / ASCII-plot writers used by the bench
+//!   harness and the CLI.
+
+pub mod maps;
+pub mod report;
+
+use crate::coordinator::uncertainty::UncertaintyReport;
+use crate::infer::InferOutput;
+use crate::ivim::synth::Dataset;
+use crate::ivim::Param;
+use crate::util::stats;
+
+/// RMSE of the mean prediction vs ground truth for one parameter.
+pub fn rmse_by_param(outs: &[InferOutput], ds: &Dataset, p: Param) -> f64 {
+    let mut pred = Vec::with_capacity(ds.len());
+    let mut truth = Vec::with_capacity(ds.len());
+    let mut voxel = 0usize;
+    for out in outs {
+        for v in 0..out.batch {
+            if voxel >= ds.len() {
+                break;
+            }
+            pred.push(out.mean(p, v));
+            truth.push(ds.truth[voxel].get(p));
+            voxel += 1;
+        }
+    }
+    stats::rmse(&pred, &truth)
+}
+
+/// RMSE of the reconstruction against the (noisy) input signals — the
+/// paper's "reconstruction" series in Fig. 6.  `recons` are the raw
+/// `[N][B][Nb]` planes from the executables, averaged over samples.
+pub fn recon_rmse(recons: &[Vec<f32>], n_samples: usize, nb: usize, ds: &Dataset) -> f64 {
+    let mut pred = Vec::new();
+    let mut meas = Vec::new();
+    let mut voxel = 0usize;
+    for plane in recons {
+        let batch = plane.len() / (n_samples * nb);
+        for v in 0..batch {
+            if voxel >= ds.len() {
+                break;
+            }
+            for j in 0..nb {
+                let mean_over_samples: f64 = (0..n_samples)
+                    .map(|s| plane[(s * batch + v) * nb + j] as f64)
+                    .sum::<f64>()
+                    / n_samples as f64;
+                pred.push(mean_over_samples);
+                meas.push(ds.voxel(voxel)[j] as f64);
+            }
+            voxel += 1;
+        }
+    }
+    stats::rmse(&pred, &meas)
+}
+
+/// Mean relative uncertainty (std/mean) for one parameter — Fig. 7's
+/// series value at one SNR.
+pub fn mean_relative_uncertainty(outs: &[InferOutput], p: Param) -> f64 {
+    let mut vals = Vec::new();
+    for out in outs {
+        for v in 0..out.batch {
+            vals.push(out.relative_uncertainty(p, v));
+        }
+    }
+    stats::mean(&vals)
+}
+
+/// Calibration: Pearson correlation between per-voxel |error| and
+/// per-voxel uncertainty (std).  Positive correlation = the network knows
+/// when it is wrong — the qualitative requirement of §III Phase 1.
+pub fn calibration(outs: &[InferOutput], ds: &Dataset, p: Param) -> f64 {
+    let mut errs = Vec::new();
+    let mut stds = Vec::new();
+    let mut voxel = 0usize;
+    for out in outs {
+        for v in 0..out.batch {
+            if voxel >= ds.len() {
+                break;
+            }
+            errs.push((out.mean(p, v) - ds.truth[voxel].get(p)).abs());
+            stds.push(out.std(p, v));
+            voxel += 1;
+        }
+    }
+    stats::pearson(&errs, &stds)
+}
+
+/// Fraction of voxels flagged confident by the thresholds.
+pub fn confident_fraction(reports: &[UncertaintyReport]) -> f64 {
+    if reports.is_empty() {
+        return 0.0;
+    }
+    reports.iter().filter(|r| r.confident).count() as f64 / reports.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ivim::IvimParams;
+
+    fn fake_ds(n: usize, nb: usize) -> Dataset {
+        Dataset {
+            signals: vec![1.0; n * nb],
+            truth: (0..n)
+                .map(|i| IvimParams {
+                    d: 0.001 + 1e-5 * i as f64,
+                    dstar: 0.05,
+                    f: 0.3,
+                    s0: 1.0,
+                })
+                .collect(),
+            nb,
+            snr: 20.0,
+        }
+    }
+
+    fn fake_out(batch: usize, dval: f32, spread: f32) -> InferOutput {
+        let mut out = InferOutput::new(2, batch);
+        for v in 0..batch {
+            out.set(Param::D, 0, v, dval - spread);
+            out.set(Param::D, 1, v, dval + spread);
+            for p in [Param::DStar, Param::F, Param::S0] {
+                out.set(p, 0, v, p.convert(0.5) as f32);
+                out.set(p, 1, v, p.convert(0.5) as f32);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn rmse_zero_for_perfect_prediction() {
+        let ds = fake_ds(4, 3);
+        let mut out = InferOutput::new(2, 4);
+        for v in 0..4 {
+            let t = ds.truth[v].d as f32;
+            out.set(Param::D, 0, v, t);
+            out.set(Param::D, 1, v, t);
+        }
+        assert!(rmse_by_param(&[out], &ds, Param::D) < 1e-9);
+    }
+
+    #[test]
+    fn rmse_positive_for_biased_prediction() {
+        let ds = fake_ds(4, 3);
+        let out = fake_out(4, 0.003, 0.0);
+        let r = rmse_by_param(&[out], &ds, Param::D);
+        assert!(r > 1e-3, "rmse {r}");
+    }
+
+    #[test]
+    fn uncertainty_scales_with_spread() {
+        let tight = fake_out(4, 0.003, 0.0001);
+        let wide = fake_out(4, 0.003, 0.001);
+        let ut = mean_relative_uncertainty(&[tight], Param::D);
+        let uw = mean_relative_uncertainty(&[wide], Param::D);
+        assert!(uw > ut * 5.0, "{uw} vs {ut}");
+    }
+
+    #[test]
+    fn calibration_positive_when_error_tracks_spread() {
+        // voxel 0: low error + low spread; voxel 1: high error + spread
+        let ds = fake_ds(2, 3);
+        let mut out = InferOutput::new(2, 2);
+        let t0 = ds.truth[0].d as f32;
+        out.set(Param::D, 0, 0, t0 - 1e-5);
+        out.set(Param::D, 1, 0, t0 + 1e-5);
+        out.set(Param::D, 0, 1, 0.004);
+        out.set(Param::D, 1, 1, 0.002);
+        let c = calibration(&[out], &ds, Param::D);
+        assert!(c > 0.9, "calibration {c}");
+    }
+
+    #[test]
+    fn recon_rmse_zero_on_exact() {
+        let ds = fake_ds(2, 3);
+        // recon plane equal to the signals (1.0 everywhere)
+        let plane = vec![1.0f32; 2 * 2 * 3];
+        assert!(recon_rmse(&[plane], 2, 3, &ds) < 1e-9);
+    }
+}

@@ -1,0 +1,224 @@
+//! Report writers: aligned-column tables, CSV, and ASCII line plots used
+//! by the bench harness and CLI to print the paper's tables and figures.
+
+/// A simple table builder with aligned columns.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render as an aligned text table.
+    pub fn to_text(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                out.push_str(&format!("{:<width$}  ", c, width = w[i]));
+            }
+            out.pop();
+            out.pop();
+            out.push('\n');
+        };
+        line(&mut out, &self.headers);
+        let total: usize = w.iter().sum::<usize>() + 2 * (w.len() - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(
+            &self
+                .headers
+                .iter()
+                .map(|h| esc(h))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as a GitHub-flavoured markdown table.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}|\n",
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+}
+
+/// ASCII line plot of one or more series over a shared x axis — used to
+/// render Figs. 6/7/8 in the terminal.
+pub fn ascii_plot(
+    title: &str,
+    xs: &[f64],
+    series: &[(&str, Vec<f64>)],
+    height: usize,
+) -> String {
+    let height = height.max(4);
+    let width = 64usize;
+    let mut all: Vec<f64> = series.iter().flat_map(|(_, ys)| ys.clone()).collect();
+    all.retain(|v| v.is_finite());
+    if all.is_empty() || xs.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let ymin = all.iter().cloned().fold(f64::INFINITY, f64::min);
+    let ymax = all.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let yspan = (ymax - ymin).max(1e-12);
+    let xmin = xs[0];
+    let xmax = *xs.last().unwrap();
+    let xspan = (xmax - xmin).max(1e-12);
+
+    let mut grid = vec![vec![' '; width]; height];
+    let marks = ['*', 'o', '+', 'x', '#', '@'];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for (x, y) in xs.iter().zip(ys) {
+            if !y.is_finite() {
+                continue;
+            }
+            let col = (((x - xmin) / xspan) * (width - 1) as f64).round() as usize;
+            let row = height - 1
+                - (((y - ymin) / yspan) * (height - 1) as f64).round() as usize;
+            grid[row][col.min(width - 1)] = mark;
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{ymax:>10.4}")
+        } else if i == height - 1 {
+            format!("{ymin:>10.4}")
+        } else {
+            " ".repeat(10)
+        };
+        out.push_str(&format!("{label} |{}|\n", row.iter().collect::<String>()));
+    }
+    out.push_str(&format!(
+        "{:>10}  {xmin:<10.1}{:>width$.1}\n",
+        "",
+        xmax,
+        width = width - 10
+    ));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {name}\n", marks[si % marks.len()]));
+    }
+    out
+}
+
+/// Write a string to a file, creating parent dirs.
+pub fn write_report(path: &std::path::Path, content: &str) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, content)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment_and_csv() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["alpha".into(), "1".into()]);
+        t.row(&["b".into(), "12345".into()]);
+        let text = t.to_text();
+        assert!(text.contains("alpha"));
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("name,value"));
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["x,y".into()]);
+        assert!(t.to_csv().contains("\"x,y\""));
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.starts_with("| a | b |"));
+        assert!(md.contains("|---|---|"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn ascii_plot_renders() {
+        let xs = vec![5.0, 15.0, 20.0, 30.0, 50.0];
+        let ys = vec![0.5, 0.3, 0.25, 0.2, 0.1];
+        let p = ascii_plot("RMSE vs SNR", &xs, &[("d", ys)], 8);
+        assert!(p.contains("RMSE vs SNR"));
+        assert!(p.contains('*'));
+        assert!(p.lines().count() > 8);
+    }
+
+    #[test]
+    fn ascii_plot_empty_data() {
+        let p = ascii_plot("empty", &[], &[("s", vec![])], 8);
+        assert!(p.contains("no data"));
+    }
+}

@@ -1,0 +1,325 @@
+//! `manifest.json` — the contract between the Python compile path and the
+//! Rust runtime.  Everything the coordinator needs to run a variant
+//! (shapes, layouts, masks, hyper-parameters, file names) is in here; no
+//! Python is consulted at runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::masks::MaskSet;
+use crate::util::json::Json;
+
+/// One entry of a flat-vector layout: a named tensor at `offset` with
+/// `shape` (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl LayoutEntry {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Adam hyper-parameters exported by the compile path.
+#[derive(Debug, Clone, Copy)]
+pub struct AdamHyper {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+}
+
+/// Parsed artifact manifest for one variant.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub variant: String,
+    pub nb: usize,
+    pub n_samples: usize,
+    pub scale: f64,
+    pub mask_seed: u64,
+    pub batch_infer: usize,
+    pub batch_train: usize,
+    pub param_count: usize,
+    pub bn_count: usize,
+    pub bvalues: Vec<f64>,
+    pub subnets: Vec<String>,
+    pub adam: AdamHyper,
+    pub bn_momentum: f64,
+    pub param_layout: Vec<LayoutEntry>,
+    pub bn_layout: Vec<LayoutEntry>,
+    /// Mask sets keyed `"{subnet}.mask{1|2}"`.
+    pub masks: BTreeMap<String, MaskSet>,
+    pub files: BTreeMap<String, String>,
+    /// Directory the manifest was loaded from (for resolving `files`).
+    pub dir: PathBuf,
+}
+
+fn layout_from(j: &Json) -> anyhow::Result<Vec<LayoutEntry>> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("layout is not an array"))?;
+    arr.iter()
+        .map(|e| {
+            Ok(LayoutEntry {
+                name: e
+                    .get("name")
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("layout entry missing name"))?
+                    .to_string(),
+                offset: e
+                    .get("offset")
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("layout entry missing offset"))?,
+                shape: e
+                    .get("shape")
+                    .to_f64_vec()
+                    .iter()
+                    .map(|&v| v as usize)
+                    .collect(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        let j = Json::parse(&text)?;
+
+        let req_usize = |key: &str| {
+            j.get(key)
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("manifest missing '{key}'"))
+        };
+        let nb = req_usize("nb")?;
+        let n_samples = req_usize("n_samples")?;
+
+        let mut masks = BTreeMap::new();
+        if let Some(obj) = j.get("masks").as_obj() {
+            for (k, v) in obj {
+                let flat: Vec<u8> = v.to_f64_vec().iter().map(|&x| x as u8).collect();
+                anyhow::ensure!(
+                    flat.len() == n_samples * nb,
+                    "mask {k} has {} entries, want {}",
+                    flat.len(),
+                    n_samples * nb
+                );
+                masks.insert(
+                    k.clone(),
+                    MaskSet {
+                        n: n_samples,
+                        width: nb,
+                        bits: flat,
+                    },
+                );
+            }
+        }
+
+        let adam = AdamHyper {
+            lr: j.get("adam").get("lr").as_f64().unwrap_or(1e-3),
+            beta1: j.get("adam").get("beta1").as_f64().unwrap_or(0.9),
+            beta2: j.get("adam").get("beta2").as_f64().unwrap_or(0.999),
+            eps: j.get("adam").get("eps").as_f64().unwrap_or(1e-8),
+        };
+
+        let files = j
+            .get("files")
+            .as_obj()
+            .map(|o| {
+                o.iter()
+                    .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                    .collect()
+            })
+            .unwrap_or_default();
+
+        let m = Manifest {
+            variant: j
+                .get("variant")
+                .as_str()
+                .unwrap_or("unknown")
+                .to_string(),
+            nb,
+            n_samples,
+            scale: j.get("scale").as_f64().unwrap_or(2.0),
+            mask_seed: j.get("mask_seed").as_f64().unwrap_or(2024.0) as u64,
+            batch_infer: req_usize("batch_infer")?,
+            batch_train: req_usize("batch_train")?,
+            param_count: req_usize("param_count")?,
+            bn_count: req_usize("bn_count")?,
+            bvalues: j.get("bvalues").to_f64_vec(),
+            subnets: j
+                .get("subnets")
+                .as_arr()
+                .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+                .unwrap_or_else(|| vec!["d".into(), "dstar".into(), "f".into(), "s0".into()]),
+            adam,
+            bn_momentum: j.get("bn_momentum").as_f64().unwrap_or(0.1),
+            param_layout: layout_from(j.get("param_layout"))?,
+            bn_layout: layout_from(j.get("bn_layout"))?,
+            masks,
+            files,
+            dir: dir.to_path_buf(),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Internal consistency checks (layout contiguity, sizes, masks).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.bvalues.len() == self.nb, "bvalues/nb mismatch");
+        let mut off = 0;
+        for e in &self.param_layout {
+            anyhow::ensure!(e.offset == off, "param layout gap at {}", e.name);
+            off += e.len();
+        }
+        anyhow::ensure!(off == self.param_count, "param_count mismatch");
+        off = 0;
+        for e in &self.bn_layout {
+            anyhow::ensure!(e.offset == off, "bn layout gap at {}", e.name);
+            off += e.len();
+        }
+        anyhow::ensure!(off == self.bn_count, "bn_count mismatch");
+        anyhow::ensure!(
+            self.batch_train % self.n_samples == 0,
+            "batch_train must divide into n_samples groups"
+        );
+        for (k, m) in &self.masks {
+            anyhow::ensure!(
+                m.n == self.n_samples && m.width == self.nb,
+                "mask {k} shape mismatch"
+            );
+            anyhow::ensure!(m.bits.iter().all(|&b| b <= 1), "mask {k} non-binary");
+        }
+        Ok(())
+    }
+
+    /// Path of a named artifact file.
+    pub fn file(&self, key: &str) -> anyhow::Result<PathBuf> {
+        self.files
+            .get(key)
+            .map(|f| self.dir.join(f))
+            .ok_or_else(|| anyhow::anyhow!("manifest has no file '{key}'"))
+    }
+
+    /// Find a layout entry by qualified name (e.g. `"d.w1"`).
+    pub fn param_entry(&self, name: &str) -> Option<&LayoutEntry> {
+        self.param_layout.iter().find(|e| e.name == name)
+    }
+    pub fn bn_entry(&self, name: &str) -> Option<&LayoutEntry> {
+        self.bn_layout.iter().find(|e| e.name == name)
+    }
+
+    /// Mask set for `"{subnet}.mask{layer}"`.
+    pub fn mask(&self, subnet: &str, layer: usize) -> Option<&MaskSet> {
+        self.masks.get(&format!("{subnet}.mask{layer}"))
+    }
+
+    /// Regenerate the masks from `mask_seed` with the Rust generator and
+    /// compare with the shipped bytes — the cross-language parity check.
+    pub fn verify_mask_parity(&self) -> anyhow::Result<()> {
+        for (si, sn) in self.subnets.iter().enumerate() {
+            for layer in 1..=2usize {
+                let seed = crate::masks::subnet_layer_seed(self.mask_seed, si, layer);
+                let regen = crate::masks::for_width(self.nb, self.n_samples, self.scale, seed)?;
+                let shipped = self
+                    .mask(sn, layer)
+                    .ok_or_else(|| anyhow::anyhow!("missing mask {sn}.mask{layer}"))?;
+                anyhow::ensure!(
+                    &regen == shipped,
+                    "mask parity failure for {sn}.mask{layer}: Rust generator disagrees \
+                     with python-shipped masks"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Locate the artifacts root: `$UIVIM_ARTIFACTS`, else `./artifacts`,
+/// else walking up from the current dir (so tests work from target/).
+pub fn artifacts_root() -> PathBuf {
+    if let Ok(p) = std::env::var("UIVIM_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("tiny").join("manifest.json").exists() || cand.exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Option<Manifest> {
+        let dir = artifacts_root().join("tiny");
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(&dir).expect("load tiny manifest"))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_tiny_manifest() {
+        let Some(m) = tiny() else { return };
+        assert_eq!(m.variant, "tiny");
+        assert_eq!(m.nb, 11);
+        assert_eq!(m.n_samples, 4);
+        assert_eq!(m.bvalues.len(), 11);
+        assert_eq!(m.subnets, vec!["d", "dstar", "f", "s0"]);
+        assert_eq!(m.masks.len(), 8); // 4 subnets x 2 layers
+    }
+
+    #[test]
+    fn mask_parity_with_python() {
+        let Some(m) = tiny() else { return };
+        m.verify_mask_parity().expect("cross-language mask parity");
+    }
+
+    #[test]
+    fn file_paths_resolve() {
+        let Some(m) = tiny() else { return };
+        for key in ["infer", "train", "params_init", "bn_init", "golden_in", "golden_out"] {
+            let p = m.file(key).unwrap();
+            assert!(p.exists(), "{} missing", p.display());
+        }
+        assert!(m.file("nope").is_err());
+    }
+
+    #[test]
+    fn entries_lookup() {
+        let Some(m) = tiny() else { return };
+        let e = m.param_entry("d.w1").unwrap();
+        assert_eq!(e.offset, 0);
+        assert_eq!(e.shape, vec![11, 11]);
+        assert!(m.param_entry("zzz").is_none());
+        let b = m.bn_entry("s0.v2").unwrap();
+        assert_eq!(b.shape, vec![11]);
+    }
+
+    #[test]
+    fn init_files_sizes_match() {
+        let Some(m) = tiny() else { return };
+        let p = crate::util::read_f32_file(&m.file("params_init").unwrap()).unwrap();
+        let b = crate::util::read_f32_file(&m.file("bn_init").unwrap()).unwrap();
+        assert_eq!(p.len(), m.param_count);
+        assert_eq!(b.len(), m.bn_count);
+    }
+}

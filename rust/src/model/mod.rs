@@ -1,0 +1,13 @@
+//! uIVIM-NET model description on the Rust side: the artifact manifest,
+//! flat parameter-vector layout and typed tensor views.
+//!
+//! The layout is defined by `python/compile/model.py` and shipped in
+//! `manifest.json`; this module parses it and provides named access into
+//! the flat `Vec<f32>` weight vectors, so every engine (PJRT, native f32,
+//! fixed-point accelerator sim) addresses the identical storage.
+
+pub mod manifest;
+pub mod weights;
+
+pub use manifest::Manifest;
+pub use weights::{SubnetWeights, Weights};

@@ -1,0 +1,196 @@
+//! Typed views into the flat parameter / BN-state vectors.
+//!
+//! `Weights` owns the two flat `Vec<f32>`s (exactly the buffers the PJRT
+//! executables consume) and exposes per-sub-network slices for the native
+//! engine and the accelerator simulator.
+
+use super::manifest::Manifest;
+use crate::util::rng::Pcg32;
+
+/// One sub-network's tensors, borrowed out of the flat vectors.
+#[derive(Debug, Clone, Copy)]
+pub struct SubnetWeights<'a> {
+    pub nb: usize,
+    /// `w1[nb][nb]` row-major (input-major: `w1[i*nb + o]` maps input i to
+    /// output o — matches the jax `x @ W` convention).
+    pub w1: &'a [f32],
+    pub b1: &'a [f32],
+    pub g1: &'a [f32],
+    pub be1: &'a [f32],
+    pub w2: &'a [f32],
+    pub b2: &'a [f32],
+    pub g2: &'a [f32],
+    pub be2: &'a [f32],
+    pub w3: &'a [f32],
+    pub b3: &'a [f32],
+    pub m1: &'a [f32],
+    pub v1: &'a [f32],
+    pub m2: &'a [f32],
+    pub v2: &'a [f32],
+}
+
+/// Owned model state: flat trainable params + flat BN running stats.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub params: Vec<f32>,
+    pub bn: Vec<f32>,
+}
+
+impl Weights {
+    /// Load the initial state shipped in the artifacts.
+    pub fn load_init(man: &Manifest) -> anyhow::Result<Weights> {
+        let params = crate::util::read_f32_file(&man.file("params_init")?)?;
+        let bn = crate::util::read_f32_file(&man.file("bn_init")?)?;
+        anyhow::ensure!(params.len() == man.param_count, "params size mismatch");
+        anyhow::ensure!(bn.len() == man.bn_count, "bn size mismatch");
+        Ok(Weights { params, bn })
+    }
+
+    /// Load trained weights from a pair of binary files.
+    pub fn load_files(
+        man: &Manifest,
+        params_path: &std::path::Path,
+        bn_path: &std::path::Path,
+    ) -> anyhow::Result<Weights> {
+        let params = crate::util::read_f32_file(params_path)?;
+        let bn = crate::util::read_f32_file(bn_path)?;
+        anyhow::ensure!(params.len() == man.param_count, "params size mismatch");
+        anyhow::ensure!(bn.len() == man.bn_count, "bn size mismatch");
+        Ok(Weights { params, bn })
+    }
+
+    /// Save to `<stem>.params.bin` / `<stem>.bn.bin` next to each other.
+    pub fn save(&self, stem: &std::path::Path) -> anyhow::Result<()> {
+        let p = stem.with_extension("params.bin");
+        let b = stem.with_extension("bn.bin");
+        crate::util::write_f32_file(&p, &self.params)?;
+        crate::util::write_f32_file(&b, &self.bn)?;
+        Ok(())
+    }
+
+    /// He-initialised fresh weights (native twin of
+    /// `model.init_params`; same *distribution*, independent stream).
+    pub fn init_random(man: &Manifest, seed: u64) -> Weights {
+        let mut rng = Pcg32::new(seed);
+        let mut params = vec![0.0f32; man.param_count];
+        for e in &man.param_layout {
+            let base = e.name.rsplit('.').next().unwrap_or("");
+            let slice = &mut params[e.offset..e.offset + e.len()];
+            match base {
+                "w1" | "w2" | "w3" => {
+                    let fan_in = e.shape[0] as f64;
+                    let std = (2.0 / fan_in).sqrt();
+                    for v in slice.iter_mut() {
+                        *v = (rng.normal() * std) as f32;
+                    }
+                }
+                "g1" | "g2" => slice.fill(1.0),
+                _ => slice.fill(0.0),
+            }
+        }
+        let mut bn = vec![0.0f32; man.bn_count];
+        for e in &man.bn_layout {
+            if e.name.rsplit('.').next().unwrap_or("").starts_with('v') {
+                bn[e.offset..e.offset + e.len()].fill(1.0);
+            }
+        }
+        Weights { params, bn }
+    }
+
+    fn pslice<'a>(&'a self, man: &Manifest, name: &str) -> &'a [f32] {
+        let e = man
+            .param_entry(name)
+            .unwrap_or_else(|| panic!("missing param entry {name}"));
+        &self.params[e.offset..e.offset + e.len()]
+    }
+
+    fn bslice<'a>(&'a self, man: &Manifest, name: &str) -> &'a [f32] {
+        let e = man
+            .bn_entry(name)
+            .unwrap_or_else(|| panic!("missing bn entry {name}"));
+        &self.bn[e.offset..e.offset + e.len()]
+    }
+
+    /// Borrow one sub-network's tensors.
+    pub fn subnet<'a>(&'a self, man: &Manifest, sn: &str) -> SubnetWeights<'a> {
+        SubnetWeights {
+            nb: man.nb,
+            w1: self.pslice(man, &format!("{sn}.w1")),
+            b1: self.pslice(man, &format!("{sn}.b1")),
+            g1: self.pslice(man, &format!("{sn}.g1")),
+            be1: self.pslice(man, &format!("{sn}.be1")),
+            w2: self.pslice(man, &format!("{sn}.w2")),
+            b2: self.pslice(man, &format!("{sn}.b2")),
+            g2: self.pslice(man, &format!("{sn}.g2")),
+            be2: self.pslice(man, &format!("{sn}.be2")),
+            w3: self.pslice(man, &format!("{sn}.w3")),
+            b3: self.pslice(man, &format!("{sn}.b3")),
+            m1: self.bslice(man, &format!("{sn}.m1")),
+            v1: self.bslice(man, &format!("{sn}.v1")),
+            m2: self.bslice(man, &format!("{sn}.m2")),
+            v2: self.bslice(man, &format!("{sn}.v2")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::artifacts_root;
+
+    fn tiny() -> Option<Manifest> {
+        let dir = artifacts_root().join("tiny");
+        dir.join("manifest.json")
+            .exists()
+            .then(|| Manifest::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn subnet_views_have_right_sizes() {
+        let Some(man) = tiny() else { return };
+        let w = Weights::load_init(&man).unwrap();
+        for sn in &man.subnets {
+            let s = w.subnet(&man, sn);
+            assert_eq!(s.w1.len(), man.nb * man.nb);
+            assert_eq!(s.b1.len(), man.nb);
+            assert_eq!(s.w3.len(), man.nb);
+            assert_eq!(s.b3.len(), 1);
+            assert_eq!(s.m1.len(), man.nb);
+            assert_eq!(s.v2.len(), man.nb);
+        }
+    }
+
+    #[test]
+    fn init_random_statistics() {
+        let Some(man) = tiny() else { return };
+        let w = Weights::init_random(&man, 1);
+        let s = w.subnet(&man, "d");
+        assert!(s.g1.iter().all(|&g| g == 1.0));
+        assert!(s.b1.iter().all(|&b| b == 0.0));
+        let std = {
+            let m: f32 = s.w1.iter().sum::<f32>() / s.w1.len() as f32;
+            (s.w1.iter().map(|v| (v - m) * (v - m)).sum::<f32>() / s.w1.len() as f32).sqrt()
+        };
+        assert!(std > 0.2 && std < 0.8, "std {std}");
+        assert!(s.v1.iter().all(|&v| v == 1.0));
+        assert!(s.m1.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let Some(man) = tiny() else { return };
+        let w = Weights::init_random(&man, 2);
+        let dir = std::env::temp_dir().join("uivim_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let stem = dir.join("model");
+        w.save(&stem).unwrap();
+        let back = Weights::load_files(
+            &man,
+            &stem.with_extension("params.bin"),
+            &stem.with_extension("bn.bin"),
+        )
+        .unwrap();
+        assert_eq!(back.params, w.params);
+        assert_eq!(back.bn, w.bn);
+    }
+}

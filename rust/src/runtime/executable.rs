@@ -1,0 +1,251 @@
+//! Typed wrappers over the two AOT executables:
+//!
+//! * [`InferExecutable`] — `(params, bn, signals[B,Nb]) -> (d, dstar, f,
+//!   s0, recon)`, each output `[N,B]` (recon `[N,B,Nb]`).
+//! * [`TrainExecutable`] — one Adam step `(params, bn, m, v, step,
+//!   signals[B,Nb]) -> (params', bn', m', v', loss)`.
+//!
+//! Both validate the golden vectors shipped with the artifacts on demand
+//! (`verify_golden`), which is the cross-language correctness gate.
+
+use super::{execute_untuple, literal_f32, literal_scalar, literal_to_vec, Runtime};
+use crate::infer::{Engine, InferOutput};
+use crate::ivim::Param;
+use crate::model::{Manifest, Weights};
+
+/// Compiled inference executable bound to its manifest and weights.
+pub struct InferExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    man: Manifest,
+    params: Vec<f32>,
+    bn: Vec<f32>,
+}
+
+impl InferExecutable {
+    /// Compile the manifest's `infer` HLO on the given runtime.
+    pub fn load(rt: &Runtime, man: &Manifest, weights: &Weights) -> anyhow::Result<Self> {
+        let exe = rt.compile_hlo_text(&man.file("infer")?)?;
+        Ok(InferExecutable {
+            exe,
+            man: man.clone(),
+            params: weights.params.clone(),
+            bn: weights.bn.clone(),
+        })
+    }
+
+    /// Swap in new weights (e.g. after training).
+    pub fn set_weights(&mut self, weights: &Weights) {
+        self.params = weights.params.clone();
+        self.bn = weights.bn.clone();
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.man
+    }
+
+    /// Execute on one batch, returning per-sample outputs plus the raw
+    /// reconstruction plane `[N*B*Nb]`.
+    pub fn infer_with_recon(
+        &self,
+        signals: &[f32],
+    ) -> anyhow::Result<(InferOutput, Vec<f32>)> {
+        let b = self.man.batch_infer;
+        let nb = self.man.nb;
+        anyhow::ensure!(
+            signals.len() == b * nb,
+            "expected {b}x{nb} signals, got {}",
+            signals.len()
+        );
+        let args = [
+            literal_f32(&self.params, &[self.man.param_count as i64])?,
+            literal_f32(&self.bn, &[self.man.bn_count as i64])?,
+            literal_f32(signals, &[b as i64, nb as i64])?,
+        ];
+        let outs = execute_untuple(&self.exe, &args)?;
+        anyhow::ensure!(outs.len() == 5, "want 5 outputs, got {}", outs.len());
+        let n = self.man.n_samples;
+        let mut result = InferOutput::new(n, b);
+        for (pi, p) in Param::ALL.iter().enumerate() {
+            let plane = literal_to_vec(&outs[pi])?;
+            anyhow::ensure!(plane.len() == n * b, "plane size mismatch");
+            result.samples[p.index()] = plane;
+        }
+        let recon = literal_to_vec(&outs[4])?;
+        anyhow::ensure!(recon.len() == n * b * nb, "recon size mismatch");
+        Ok((result, recon))
+    }
+
+    /// Check the executable reproduces the python-side golden outputs.
+    pub fn verify_golden(&self) -> anyhow::Result<()> {
+        // Goldens are captured against the artifact's *initial* weights.
+        let init = Weights::load_init(&self.man)?;
+        let gin = crate::util::read_f32_file(&self.man.file("golden_in")?)?;
+        let gout = crate::util::read_f32_file(&self.man.file("golden_out")?)?;
+        let args = [
+            literal_f32(&init.params, &[self.man.param_count as i64])?,
+            literal_f32(&init.bn, &[self.man.bn_count as i64])?,
+            literal_f32(&gin, &[self.man.batch_infer as i64, self.man.nb as i64])?,
+        ];
+        let outs = execute_untuple(&self.exe, &args)?;
+        let mut got = Vec::new();
+        for o in &outs {
+            got.extend(literal_to_vec(o)?);
+        }
+        anyhow::ensure!(got.len() == gout.len(), "golden length mismatch");
+        let max_diff = got
+            .iter()
+            .zip(&gout)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        anyhow::ensure!(
+            max_diff < 1e-3,
+            "golden mismatch: max |diff| = {max_diff}"
+        );
+        Ok(())
+    }
+}
+
+impl Engine for InferExecutable {
+    fn name(&self) -> &str {
+        "pjrt-xla"
+    }
+    fn batch_size(&self) -> usize {
+        self.man.batch_infer
+    }
+    fn infer_batch(&mut self, signals: &[f32]) -> anyhow::Result<InferOutput> {
+        self.infer_with_recon(signals).map(|(o, _)| o)
+    }
+}
+
+/// Mutable optimisation state for the trainer.
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub weights: Weights,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: u64,
+}
+
+impl TrainState {
+    pub fn fresh(weights: Weights) -> Self {
+        let z = vec![0.0f32; weights.params.len()];
+        TrainState {
+            m: z.clone(),
+            v: z,
+            step: 0,
+            weights,
+        }
+    }
+}
+
+/// Compiled train-step executable.
+pub struct TrainExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    man: Manifest,
+}
+
+impl TrainExecutable {
+    pub fn load(rt: &Runtime, man: &Manifest) -> anyhow::Result<Self> {
+        let exe = rt.compile_hlo_text(&man.file("train")?)?;
+        Ok(TrainExecutable {
+            exe,
+            man: man.clone(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.man
+    }
+
+    /// One Adam step on a batch of `batch_train` voxels; updates `state`
+    /// in place and returns the loss.
+    pub fn step(&self, state: &mut TrainState, signals: &[f32]) -> anyhow::Result<f32> {
+        let b = self.man.batch_train;
+        let nb = self.man.nb;
+        anyhow::ensure!(
+            signals.len() == b * nb,
+            "expected {b}x{nb} signals, got {}",
+            signals.len()
+        );
+        let pc = self.man.param_count as i64;
+        let args = [
+            literal_f32(&state.weights.params, &[pc])?,
+            literal_f32(&state.weights.bn, &[self.man.bn_count as i64])?,
+            literal_f32(&state.m, &[pc])?,
+            literal_f32(&state.v, &[pc])?,
+            literal_scalar(state.step as f32),
+            literal_f32(signals, &[b as i64, nb as i64])?,
+        ];
+        let outs = execute_untuple(&self.exe, &args)?;
+        anyhow::ensure!(outs.len() == 5, "want 5 outputs, got {}", outs.len());
+        state.weights.params = literal_to_vec(&outs[0])?;
+        state.weights.bn = literal_to_vec(&outs[1])?;
+        state.m = literal_to_vec(&outs[2])?;
+        state.v = literal_to_vec(&outs[3])?;
+        state.step += 1;
+        let loss = literal_to_vec(&outs[4])?;
+        Ok(loss[0])
+    }
+
+    /// Verify against the python-side train golden (one step from init).
+    pub fn verify_golden(&self) -> anyhow::Result<()> {
+        let init = Weights::load_init(&self.man)?;
+        let gin = crate::util::read_f32_file(&self.man.file("train_golden_in")?)?;
+        let gout = crate::util::read_f32_file(&self.man.file("train_golden_out")?)?;
+        let mut state = TrainState::fresh(init);
+        let loss = self.step(&mut state, &gin)?;
+        let mut got = Vec::new();
+        got.extend(&state.weights.params);
+        got.extend(&state.weights.bn);
+        got.extend(&state.m);
+        got.extend(&state.v);
+        got.push(loss);
+        anyhow::ensure!(got.len() == gout.len(), "train golden length mismatch");
+        let max_diff = got
+            .iter()
+            .zip(&gout)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        anyhow::ensure!(max_diff < 1e-3, "train golden mismatch: {max_diff}");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::artifacts_root;
+
+    fn tiny() -> Option<Manifest> {
+        let dir = artifacts_root().join("tiny");
+        dir.join("manifest.json")
+            .exists()
+            .then(|| Manifest::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn infer_golden_roundtrip() {
+        let Some(man) = tiny() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let w = Weights::load_init(&man).unwrap();
+        let exe = InferExecutable::load(&rt, &man, &w).unwrap();
+        exe.verify_golden().expect("PJRT output matches python golden");
+    }
+
+    #[test]
+    fn train_golden_roundtrip() {
+        let Some(man) = tiny() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let exe = TrainExecutable::load(&rt, &man).unwrap();
+        exe.verify_golden().expect("train step matches python golden");
+    }
+
+    #[test]
+    fn infer_rejects_bad_shapes() {
+        let Some(man) = tiny() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let w = Weights::load_init(&man).unwrap();
+        let mut exe = InferExecutable::load(&rt, &man, &w).unwrap();
+        assert!(exe.infer_batch(&vec![0.0f32; 5]).is_err());
+    }
+}

@@ -1,0 +1,214 @@
+//! Rust-driven training: the Adam train-step AOT executable looped from
+//! Rust over streaming synthetic batches (paper §IV training protocol,
+//! end-to-end validation of the full stack — EXPERIMENTS.md logs the
+//! loss curve).
+//!
+//! Python authored the computation once (`python/compile/aot.py`); this
+//! module owns the loop, the data, early stopping and checkpointing.
+
+use crate::ivim::synth::synth_dataset;
+use crate::model::{Manifest, Weights};
+use crate::runtime::{Runtime, TrainExecutable, TrainState};
+use crate::util::Timer;
+
+/// Training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    /// SNR of the synthetic training stream (the paper trains per noise
+    /// scenario; `train_multi_snr` covers the sweep).
+    pub snr: f64,
+    pub seed: u64,
+    /// Log the loss every `log_every` steps (0 = never).
+    pub log_every: usize,
+    /// Stop early when the trailing-window mean loss improves by less
+    /// than `early_stop_rel` relative (0 disables).
+    pub early_stop_rel: f64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 500,
+            snr: 20.0,
+            seed: 1,
+            log_every: 50,
+            early_stop_rel: 0.0,
+        }
+    }
+}
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    pub steps_run: usize,
+    pub seconds: f64,
+    pub final_weights: Weights,
+}
+
+impl TrainReport {
+    pub fn initial_loss(&self) -> f32 {
+        *self.losses.first().unwrap_or(&f32::NAN)
+    }
+    pub fn final_loss(&self) -> f32 {
+        *self.losses.last().unwrap_or(&f32::NAN)
+    }
+    /// Mean loss over the last `w` steps (robust final metric).
+    pub fn tail_mean(&self, w: usize) -> f64 {
+        let n = self.losses.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let start = n.saturating_sub(w);
+        let tail = &self.losses[start..];
+        tail.iter().map(|&l| l as f64).sum::<f64>() / tail.len() as f64
+    }
+}
+
+/// Run the training loop.  Each step draws a fresh synthetic batch (the
+/// paper's protocol: simulation is unlimited, so every batch is new
+/// data — no epochs).
+pub fn train(
+    rt: &Runtime,
+    man: &Manifest,
+    cfg: &TrainConfig,
+    init: Option<Weights>,
+) -> anyhow::Result<TrainReport> {
+    let exe = TrainExecutable::load(rt, man)?;
+    let weights = match init {
+        Some(w) => w,
+        None => Weights::load_init(man)?,
+    };
+    let mut state = TrainState::fresh(weights);
+    let mut losses = Vec::with_capacity(cfg.steps);
+    let timer = Timer::start();
+    let window = 25usize;
+
+    for step in 0..cfg.steps {
+        let ds = synth_dataset(
+            man.batch_train,
+            &man.bvalues,
+            cfg.snr,
+            cfg.seed.wrapping_add(step as u64),
+        );
+        let loss = exe.step(&mut state, &ds.signals)?;
+        anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}: {loss}");
+        losses.push(loss);
+
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            log::info!("step {step}: loss {loss:.6}");
+        }
+        if cfg.early_stop_rel > 0.0 && losses.len() >= 2 * window {
+            let prev: f64 = losses[losses.len() - 2 * window..losses.len() - window]
+                .iter()
+                .map(|&l| l as f64)
+                .sum::<f64>()
+                / window as f64;
+            let cur: f64 = losses[losses.len() - window..]
+                .iter()
+                .map(|&l| l as f64)
+                .sum::<f64>()
+                / window as f64;
+            if prev - cur < cfg.early_stop_rel * prev {
+                break;
+            }
+        }
+    }
+
+    Ok(TrainReport {
+        steps_run: losses.len(),
+        seconds: timer.elapsed_s(),
+        final_weights: state.weights,
+        losses,
+    })
+}
+
+/// Train one model per SNR level (the paper's per-scenario models for
+/// Figs. 6/7).  Returns (snr, report) pairs.
+pub fn train_multi_snr(
+    rt: &Runtime,
+    man: &Manifest,
+    base: &TrainConfig,
+    snrs: &[f64],
+) -> anyhow::Result<Vec<(f64, TrainReport)>> {
+    let mut out = Vec::with_capacity(snrs.len());
+    for &snr in snrs {
+        let cfg = TrainConfig {
+            snr,
+            ..base.clone()
+        };
+        out.push((snr, train(rt, man, &cfg, None)?));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::artifacts_root;
+
+    fn tiny() -> Option<Manifest> {
+        let dir = artifacts_root().join("tiny");
+        dir.join("manifest.json")
+            .exists()
+            .then(|| Manifest::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn loss_decreases_over_training() {
+        let Some(man) = tiny() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let cfg = TrainConfig {
+            steps: 60,
+            snr: 30.0,
+            seed: 5,
+            log_every: 0,
+            early_stop_rel: 0.0,
+        };
+        let rep = train(&rt, &man, &cfg, None).unwrap();
+        assert_eq!(rep.steps_run, 60);
+        let head: f64 =
+            rep.losses[..10].iter().map(|&l| l as f64).sum::<f64>() / 10.0;
+        let tail = rep.tail_mean(10);
+        assert!(
+            tail < head * 0.9,
+            "training failed to reduce loss: {head} -> {tail}"
+        );
+        // weights actually moved
+        let init = Weights::load_init(&man).unwrap();
+        assert_ne!(rep.final_weights.params, init.params);
+    }
+
+    #[test]
+    fn early_stop_halts() {
+        let Some(man) = tiny() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let cfg = TrainConfig {
+            steps: 400,
+            snr: 50.0,
+            seed: 6,
+            log_every: 0,
+            early_stop_rel: 0.5, // aggressive: stop as soon as gains < 50%
+        };
+        let rep = train(&rt, &man, &cfg, None).unwrap();
+        assert!(rep.steps_run < 400, "early stop never fired");
+    }
+
+    #[test]
+    fn resume_from_weights() {
+        let Some(man) = tiny() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let cfg = TrainConfig {
+            steps: 10,
+            snr: 20.0,
+            seed: 7,
+            log_every: 0,
+            early_stop_rel: 0.0,
+        };
+        let rep1 = train(&rt, &man, &cfg, None).unwrap();
+        let rep2 = train(&rt, &man, &cfg, Some(rep1.final_weights.clone())).unwrap();
+        // continuing from trained weights shouldn't blow the loss up
+        assert!(rep2.final_loss() <= rep1.initial_loss());
+    }
+}

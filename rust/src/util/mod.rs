@@ -1,0 +1,96 @@
+//! Shared infrastructure: deterministic RNG, statistics, JSON, thread
+//! pool, timing and binary I/O helpers.
+
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+
+use std::io::{Read, Write};
+use std::path::Path;
+use std::time::Instant;
+
+/// Read a little-endian f32 binary file (the artifact format for weight
+/// vectors and golden tensors).
+pub fn read_f32_file(path: &Path) -> anyhow::Result<Vec<f32>> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?
+        .read_to_end(&mut bytes)?;
+    anyhow::ensure!(
+        bytes.len() % 4 == 0,
+        "{}: length {} not a multiple of 4",
+        path.display(),
+        bytes.len()
+    );
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write a slice of f32 as little-endian binary (inverse of
+/// [`read_f32_file`]).
+pub fn write_f32_file(path: &Path, data: &[f32]) -> anyhow::Result<()> {
+    let mut f = std::fs::File::create(path)
+        .map_err(|e| anyhow::anyhow!("create {}: {e}", path.display()))?;
+    let mut buf = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Wall-clock timer returning seconds.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed_s() * 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_file_roundtrip() {
+        let dir = std::env::temp_dir().join("uivim_util_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.bin");
+        let data = vec![0.0f32, 1.5, -2.25, f32::MIN_POSITIVE, 1.0e30];
+        write_f32_file(&path, &data).unwrap();
+        let back = read_f32_file(&path).unwrap();
+        assert_eq!(back, data);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn read_rejects_misaligned() {
+        let dir = std::env::temp_dir().join("uivim_util_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, [0u8, 1, 2]).unwrap();
+        assert!(read_f32_file(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.elapsed_ms() >= 1.0);
+        assert!(t.elapsed_us() >= t.elapsed_ms());
+    }
+}

@@ -1,0 +1,175 @@
+//! Fixed-size thread pool on std threads + channels.
+//!
+//! tokio is unavailable in the offline registry (DESIGN.md §6); the
+//! coordinator and benches use this pool for fan-out work.  Jobs are
+//! `FnOnce` closures; `scope`-style joining is provided by waiting on a
+//! completion counter.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size worker pool.  Dropping the pool joins all workers.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    inflight: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (min 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let inflight = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let mut workers = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
+            let inflight = Arc::clone(&inflight);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("uivim-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                let (lock, cv) = &*inflight;
+                                let mut n = lock.lock().unwrap();
+                                *n -= 1;
+                                cv.notify_all();
+                            }
+                            Err(_) => break, // pool dropped
+                        }
+                    })
+                    .expect("spawn pool worker"),
+            );
+        }
+        ThreadPool {
+            tx: Some(tx),
+            workers,
+            inflight,
+        }
+    }
+
+    /// Submit a job; returns immediately.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.inflight;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx
+            .as_ref()
+            .expect("pool alive")
+            .send(Box::new(f))
+            .expect("pool worker alive");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.inflight;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close channel -> workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run a closure over each item of a slice in parallel, collecting results
+/// in order.  Convenience built on `std::thread::scope` (no pool needed
+/// for one-shot fan-out).
+pub fn par_map<T: Sync, R: Send>(items: &[T], threads: usize, f: impl Fn(&T) -> R + Sync) -> Vec<R> {
+    let threads = threads.max(1).min(items.len().max(1));
+    let counter = AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    let slots: Vec<Mutex<&mut Option<R>>> = out.iter_mut().map(Mutex::new).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                **slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    drop(slots);
+    out.into_iter().map(|o| o.expect("all slots filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_survives_reuse_after_wait() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for round in 0..3 {
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            pool.wait_idle();
+            assert_eq!(counter.load(Ordering::SeqCst), (round + 1) * 10);
+        }
+    }
+
+    #[test]
+    fn pool_size_clamped() {
+        assert_eq!(ThreadPool::new(0).size(), 1);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<u64> = (0..50).collect();
+        let out = par_map(&items, 4, |&x| x * 2);
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_empty() {
+        let items: Vec<u64> = vec![];
+        assert!(par_map(&items, 4, |&x| x).is_empty());
+    }
+}

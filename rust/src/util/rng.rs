@@ -1,0 +1,244 @@
+//! PCG32 (XSH-RR 64/32) — bit-exact mirror of `python/compile/pcg.py`.
+//!
+//! The mask-based BayesNN depends on *fixed, pre-generated* masks; the Rust
+//! coordinator and the Python compile path must agree on them exactly, so
+//! both sides implement the same PCG32 stream and the same partial
+//! Fisher-Yates sampler.  Golden vectors are shared with
+//! `python/tests/test_pcg.py`.
+
+use rand_core::RngCore;
+
+const MUL: u64 = 6364136223846793005;
+const DEFAULT_SEQ: u64 = 0xDA3E_39CB_94B9_5BDB;
+
+/// Deterministic PCG32 generator (the reference O'Neill variant).
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    /// Seed with the reference seeding procedure (stream = default).
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, DEFAULT_SEQ)
+    }
+
+    /// Seed with an explicit stream selector.
+    pub fn with_stream(seed: u64, seq: u64) -> Self {
+        let mut rng = Pcg32 {
+            state: 0,
+            inc: (seq << 1) | 1,
+        };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Next raw 32-bit output.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(MUL).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Uniform integer in `[0, n)`, debiased via rejection sampling
+    /// (`pcg32_boundedrand`).  Mirrors `Pcg32.below` in Python.
+    pub fn below(&mut self, n: u32) -> u32 {
+        assert!(n >= 1, "below() needs n >= 1");
+        let threshold = n.wrapping_neg() % n;
+        loop {
+            let r = self.next_u32();
+            if r >= threshold {
+                return r % n;
+            }
+        }
+    }
+
+    /// Uniform f32 in `[0, 1)` with 24 bits of randomness (f32-exact).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1 << 24) as f32)
+    }
+
+    /// Uniform f64 in `[0, 1)` built from two 32-bit draws.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        let hi = (self.next_u32() >> 6) as u64; // 26 bits
+        let lo = (self.next_u32() >> 5) as u64; // 27 bits
+        ((hi << 27) | lo) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box-Muller (two uniforms per pair; caches none
+    /// to stay trivially reproducible).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// `k` distinct indices from `0..total` via partial Fisher-Yates —
+    /// identical swap order to the Python implementation.
+    pub fn choose(&mut self, total: usize, k: usize) -> Vec<usize> {
+        assert!(k <= total, "cannot choose more than total");
+        let mut idx: Vec<usize> = (0..total).collect();
+        for i in 0..k {
+            let j = i + self.below((total - i) as u32) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// In-place Fisher-Yates shuffle of a slice.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u32) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+impl RngCore for Pcg32 {
+    fn next_u32(&mut self) -> u32 {
+        Pcg32::next_u32(self)
+    }
+    fn next_u64(&mut self) -> u64 {
+        let lo = Pcg32::next_u32(self) as u64;
+        let hi = Pcg32::next_u32(self) as u64;
+        (hi << 32) | lo
+    }
+    fn fill_bytes(&mut self, dest: &mut [u8]) {
+        for chunk in dest.chunks_mut(4) {
+            let v = Pcg32::next_u32(self).to_le_bytes();
+            chunk.copy_from_slice(&v[..chunk.len()]);
+        }
+    }
+    fn try_fill_bytes(&mut self, dest: &mut [u8]) -> Result<(), rand_core::Error> {
+        self.fill_bytes(dest);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden stream shared with python/tests/test_pcg.py.
+    const GOLDEN_SEED_42: [u32; 8] = [
+        0x7130_66EA,
+        0x3C7A_0D56,
+        0xF424_216A,
+        0x25C8_9145,
+        0x43E7_EF3E,
+        0x90CF_F60C,
+        0x5232_0591,
+        0x53DF_BCB8,
+    ];
+
+    #[test]
+    fn golden_stream_matches_python() {
+        let mut r = Pcg32::new(42);
+        for want in GOLDEN_SEED_42 {
+            assert_eq!(r.next_u32(), want);
+        }
+    }
+
+    #[test]
+    fn golden_choose_matches_python() {
+        let mut r = Pcg32::new(42);
+        assert_eq!(r.choose(10, 4), vec![2, 9, 4, 0]);
+    }
+
+    #[test]
+    fn golden_below_matches_python() {
+        let mut r = Pcg32::new(7);
+        assert_eq!(r.below(5), 3);
+    }
+
+    #[test]
+    fn below_in_range_and_complete() {
+        let mut r = Pcg32::new(123);
+        let mut seen = [false; 5];
+        for _ in 0..500 {
+            let v = r.below(5) as usize;
+            assert!(v < 5);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn choose_distinct() {
+        let mut r = Pcg32::new(9);
+        for &(total, k) in &[(1usize, 1usize), (5, 5), (20, 7), (104, 52)] {
+            let got = r.choose(total, k);
+            assert_eq!(got.len(), k);
+            let mut sorted = got.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), k);
+            assert!(got.iter().all(|&g| g < total));
+        }
+    }
+
+    #[test]
+    fn normal_moments_sane() {
+        let mut r = Pcg32::new(1);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn f32_f64_unit_interval() {
+        let mut r = Pcg32::new(5);
+        for _ in 0..1000 {
+            let a = r.next_f32();
+            let b = r.next_f64();
+            assert!((0.0..1.0).contains(&a));
+            assert!((0.0..1.0).contains(&b));
+        }
+    }
+
+    #[test]
+    fn streams_differ_by_seed() {
+        let a: Vec<u32> = {
+            let mut r = Pcg32::new(1);
+            (0..4).map(|_| r.next_u32()).collect()
+        };
+        let b: Vec<u32> = {
+            let mut r = Pcg32::new(2);
+            (0..4).map(|_| r.next_u32()).collect()
+        };
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::new(3);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..50).collect::<Vec<_>>());
+    }
+}

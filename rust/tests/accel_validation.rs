@@ -1,0 +1,135 @@
+//! Integration: accelerator simulator validation against the native
+//! oracle across noise levels, schemes and PE counts, plus the paper's
+//! architectural claims at system level.
+
+use uivim::accel::{AccelConfig, AccelSimulator, Scheme};
+use uivim::experiments::load_manifest;
+use uivim::infer::native::NativeEngine;
+use uivim::infer::Engine;
+use uivim::ivim::synth::synth_dataset;
+use uivim::ivim::Param;
+use uivim::model::Weights;
+
+#[test]
+fn quantised_outputs_track_oracle_across_snrs() {
+    let Ok(man) = load_manifest("tiny") else { return };
+    let w = Weights::load_init(&man).unwrap();
+    let mut native = NativeEngine::new(&man, &w).unwrap();
+    for (i, snr) in [5.0, 20.0, 50.0].into_iter().enumerate() {
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, snr, 200 + i as u64);
+        let mut sim = AccelSimulator::new(
+            &man,
+            &w,
+            AccelConfig {
+                batch: man.batch_infer,
+                ..Default::default()
+            },
+            Scheme::BatchLevel,
+        )
+        .unwrap();
+        let a = native.infer_batch(&ds.signals).unwrap();
+        let b = sim.infer_batch(&ds.signals).unwrap();
+        for p in Param::ALL {
+            let (lo, hi) = p.range();
+            let tol = (hi - lo) * 0.06;
+            for s in 0..a.n_samples {
+                for v in 0..a.batch {
+                    let d = (a.get(p, s, v) - b.get(p, s, v)).abs() as f64;
+                    assert!(d <= tol, "snr {snr} {p:?}: {d} > {tol}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pe_count_does_not_change_results() {
+    // Parallelism is a scheduling choice; numerics must be invariant.
+    let Ok(man) = load_manifest("tiny") else { return };
+    let w = Weights::load_init(&man).unwrap();
+    let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 300);
+    let run = |n_pe: usize| {
+        let mut sim = AccelSimulator::new(
+            &man,
+            &w,
+            AccelConfig {
+                n_pe,
+                batch: man.batch_infer,
+                ..Default::default()
+            },
+            Scheme::BatchLevel,
+        )
+        .unwrap();
+        sim.infer_batch(&ds.signals).unwrap()
+    };
+    let a = run(4);
+    let b = run(32);
+    for p in Param::ALL {
+        assert_eq!(a.samples[p.index()], b.samples[p.index()]);
+    }
+}
+
+#[test]
+fn mask_zero_skipping_saves_storage_and_ops_system_level() {
+    let Ok(man) = load_manifest("tiny") else { return };
+    let w = Weights::load_init(&man).unwrap();
+    let sim = AccelSimulator::new(
+        &man,
+        &w,
+        AccelConfig {
+            batch: man.batch_infer,
+            ..Default::default()
+        },
+        Scheme::BatchLevel,
+    )
+    .unwrap();
+    for store in sim.weight_stores() {
+        assert!(store.total_skipped_words() < store.total_dense_words());
+        let r = store.savings_ratio();
+        assert!(r > 0.2, "savings {r} too small for scale-2 masks");
+    }
+}
+
+#[test]
+fn batch_level_scheme_cuts_energy_not_accuracy() {
+    let Ok(man) = load_manifest("tiny") else { return };
+    let w = Weights::load_init(&man).unwrap();
+    let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 400);
+    let cfg = AccelConfig {
+        batch: man.batch_infer,
+        ..Default::default()
+    };
+    let mut b = AccelSimulator::new(&man, &w, cfg, Scheme::BatchLevel).unwrap();
+    let mut s = AccelSimulator::new(&man, &w, cfg, Scheme::SamplingLevel).unwrap();
+    let (ob, st_b) = b.infer_batch_stats(&ds.signals).unwrap();
+    let (os, st_s) = s.infer_batch_stats(&ds.signals).unwrap();
+    // identical results
+    for p in Param::ALL {
+        assert_eq!(ob.samples[p.index()], os.samples[p.index()]);
+    }
+    // energy: batch-level strictly cheaper via the power model
+    let u = uivim::accel::resource::usage(&cfg, man.nb, man.n_samples, &b.weight_stores());
+    let pb = uivim::accel::power::estimate(&cfg, &u, &st_b, false);
+    let ps = uivim::accel::power::estimate(&cfg, &u, &st_s, false);
+    assert!(
+        pb.energy_j < ps.energy_j,
+        "batch-level must cost less energy: {} vs {}",
+        pb.energy_j,
+        ps.energy_j
+    );
+}
+
+#[test]
+fn fit_baselines_vs_network_on_clean_data() {
+    // Classical fits are accurate on clean voxels — the network's value
+    // is speed and uncertainty, not noiseless accuracy (paper §II-B).
+    let Ok(man) = load_manifest("tiny") else { return };
+    let ds = synth_dataset(32, &man.bvalues, 1e6, 500); // ~noiseless
+    for i in 0..8 {
+        let sig: Vec<f64> = ds.voxel(i).iter().map(|&v| v as f64).collect();
+        let fit = uivim::fit::levenberg_marquardt(&man.bvalues, &sig);
+        let t = &ds.truth[i];
+        assert!((fit.params.d - t.d).abs() < 3e-4, "voxel {i}: {:?} vs {:?}", fit.params, t);
+        assert!((fit.params.f - t.f).abs() < 0.12);
+    }
+}

@@ -1,0 +1,160 @@
+//! Integration: the full pipeline across all three engines — train via
+//! PJRT, then verify every engine (native f32, PJRT/XLA, accelerator
+//! simulator) agrees on the trained model and produces calibrated
+//! uncertainty, end to end.
+
+use uivim::accel::{AccelConfig, AccelSimulator, Scheme};
+use uivim::experiments::load_manifest;
+use uivim::infer::native::NativeEngine;
+use uivim::infer::Engine;
+use uivim::ivim::synth::synth_dataset;
+use uivim::ivim::Param;
+use uivim::model::Weights;
+use uivim::runtime::{InferExecutable, Runtime};
+use uivim::train::{train, TrainConfig};
+
+fn setup() -> Option<(uivim::model::Manifest, Runtime)> {
+    let man = load_manifest("tiny").ok()?;
+    let rt = Runtime::cpu().ok()?;
+    Some((man, rt))
+}
+
+#[test]
+fn train_then_all_engines_agree() {
+    let Some((man, rt)) = setup() else { return };
+    // Train a short run so predictions carry signal.
+    let rep = train(
+        &rt,
+        &man,
+        &TrainConfig {
+            steps: 120,
+            snr: 20.0,
+            seed: 3,
+            log_every: 0,
+            early_stop_rel: 0.0,
+        },
+        None,
+    )
+    .expect("training");
+    assert!(rep.final_loss() < rep.initial_loss());
+    let w: Weights = rep.final_weights;
+
+    let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 99);
+
+    let mut native = NativeEngine::new(&man, &w).unwrap();
+    let mut pjrt = InferExecutable::load(&rt, &man, &w).unwrap();
+    let mut sim = AccelSimulator::new(
+        &man,
+        &w,
+        AccelConfig {
+            batch: man.batch_infer,
+            ..Default::default()
+        },
+        Scheme::BatchLevel,
+    )
+    .unwrap();
+
+    let a = native.infer_batch(&ds.signals).unwrap();
+    let b = pjrt.infer_batch(&ds.signals).unwrap();
+    let c = sim.infer_batch(&ds.signals).unwrap();
+
+    for p in Param::ALL {
+        let (lo, hi) = p.range();
+        let span = hi - lo;
+        for s in 0..a.n_samples {
+            for v in 0..a.batch {
+                let f1 = a.get(p, s, v) as f64;
+                let f2 = b.get(p, s, v) as f64;
+                let f3 = c.get(p, s, v) as f64;
+                // native vs PJRT: f32 round-off only
+                assert!(
+                    (f1 - f2).abs() < span * 2e-3,
+                    "{p:?} native {f1} vs pjrt {f2}"
+                );
+                // accelerator: Q4.12 + PLAN sigmoid tolerance
+                assert!(
+                    (f1 - f3).abs() < span * 0.06,
+                    "{p:?} native {f1} vs accel {f3}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn trained_model_beats_untrained_on_reconstruction_params() {
+    let Some((man, rt)) = setup() else { return };
+    let rep = train(
+        &rt,
+        &man,
+        &TrainConfig {
+            steps: 200,
+            snr: 30.0,
+            seed: 4,
+            log_every: 0,
+            early_stop_rel: 0.0,
+        },
+        None,
+    )
+    .unwrap();
+    let trained = rep.final_weights;
+    let init = Weights::load_init(&man).unwrap();
+
+    let ds = synth_dataset(512, &man.bvalues, 30.0, 55);
+    let rmse_with = |w: &Weights| {
+        let mut eng = NativeEngine::new(&man, w).unwrap();
+        let outs = uivim::experiments::fig67::run_batches(&mut eng, &ds).unwrap();
+        // D* and f dominate the signal reconstruction; compare their
+        // combined normalised RMSE.
+        Param::ALL
+            .iter()
+            .map(|&p| {
+                let (lo, hi) = p.range();
+                uivim::metrics::rmse_by_param(&outs, &ds, p) / (hi - lo)
+            })
+            .sum::<f64>()
+    };
+    let r_trained = rmse_with(&trained);
+    let r_init = rmse_with(&init);
+    assert!(
+        r_trained < r_init,
+        "training must improve parameter recovery: {r_trained} vs {r_init}"
+    );
+}
+
+#[test]
+fn uncertainty_is_calibrated_after_training() {
+    let Some((man, rt)) = setup() else { return };
+    let rep = train(
+        &rt,
+        &man,
+        &TrainConfig {
+            steps: 200,
+            snr: 20.0,
+            seed: 5,
+            log_every: 0,
+            early_stop_rel: 0.0,
+        },
+        None,
+    )
+    .unwrap();
+    let mut eng = NativeEngine::new(&man, &rep.final_weights).unwrap();
+
+    // Noisier inputs must yield higher average uncertainty (Fig. 7 shape).
+    let noisy = synth_dataset(512, &man.bvalues, 5.0, 66);
+    let clean = synth_dataset(512, &man.bvalues, 50.0, 66);
+    let o_noisy = uivim::experiments::fig67::run_batches(&mut eng, &noisy).unwrap();
+    let o_clean = uivim::experiments::fig67::run_batches(&mut eng, &clean).unwrap();
+    let unc = |outs: &[uivim::infer::InferOutput]| {
+        Param::ALL
+            .iter()
+            .map(|&p| uivim::metrics::mean_relative_uncertainty(outs, p))
+            .sum::<f64>()
+    };
+    let u_noisy = unc(&o_noisy);
+    let u_clean = unc(&o_clean);
+    assert!(
+        u_clean < u_noisy,
+        "uncertainty must shrink with less noise: {u_clean} vs {u_noisy}"
+    );
+}
