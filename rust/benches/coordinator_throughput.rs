@@ -1,6 +1,7 @@
 //! Bench: coordinator end-to-end throughput/latency under load — the
 //! §VI-C real-time requirement (0.8 ms/batch) exercised at the serving
-//! layer, plus the batch-size trade-off.
+//! layer, the batch-size trade-off, and the shard-pool scaling that is
+//! the acceptance bar of ISSUE #1 (4 shards >= 3x one worker).
 
 use std::time::Duration;
 use uivim::bench::fmt_time;
@@ -10,52 +11,72 @@ use uivim::infer::native::NativeEngine;
 use uivim::infer::Engine;
 use uivim::ivim::synth::synth_dataset;
 use uivim::metrics::report::Table;
-use uivim::model::Weights;
+use uivim::model::{Manifest, Weights};
+use uivim::testing::fixture;
 use uivim::util::Timer;
+
+fn run_load(
+    man: &Manifest,
+    w: &Weights,
+    batch: usize,
+    shards: usize,
+    n_requests: usize,
+) -> (f64, uivim::coordinator::MetricsSnapshot) {
+    let man2 = man.clone();
+    let w2 = w.clone();
+    let mut cfg = CoordinatorConfig::sharded(man.nb, batch, shards);
+    cfg.batcher.max_wait = Duration::from_millis(1);
+    cfg.batcher.queue_capacity = n_requests + 1;
+    let coord = Coordinator::start(cfg, move || {
+        Ok(Box::new(NativeEngine::with_batch(&man2, &w2, batch)?) as Box<dyn Engine>)
+    })
+    .expect("coordinator");
+
+    let ds = synth_dataset(n_requests, &man.bvalues, 20.0, 41);
+    let t = Timer::start();
+    let rxs: Vec<_> = (0..n_requests)
+        .map(|i| {
+            coord
+                .submit(VoxelRequest {
+                    id: i as u64,
+                    signals: ds.voxel(i).to_vec(),
+                })
+                .expect("queue sized for the run")
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().expect("response");
+    }
+    let el = t.elapsed_s();
+    let snap = coord.metrics().snapshot();
+    coord.shutdown();
+    (el, snap)
+}
 
 fn main() {
     let fast = std::env::var("UIVIM_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
     let variant = std::env::var("UIVIM_VARIANT").unwrap_or_else(|_| "tiny".into());
-    let man = match load_manifest(&variant) {
-        Ok(m) => m,
-        Err(e) => {
-            eprintln!("skipping: {e}");
-            return;
+    // Artifacts when exported; otherwise the deterministic paper-scale
+    // fixture so this bench runs (and the shard scaling is visible —
+    // nb=104 makes batches compute-bound) on any checkout.
+    let (man, w) = match load_manifest(&variant) {
+        Ok(man) => {
+            let w = Weights::load_init(&man).expect("init weights");
+            (man, w)
+        }
+        Err(_) => {
+            eprintln!("no artifacts for '{variant}': using the paper-scale fixture");
+            fixture::paper_fixture()
         }
     };
     let n_requests = if fast { 500 } else { 5000 };
+
+    // ---- batch-size trade-off (single worker) --------------------------
     let mut table = Table::new(&[
         "batch", "throughput (vox/s)", "mean latency", "p99 latency", "batches", "padded",
     ]);
-
     for batch in [8usize, 32, 64] {
-        let man2 = man.clone();
-        let mut cfg = CoordinatorConfig::for_batch(man.nb, batch);
-        cfg.batcher.max_wait = Duration::from_millis(1);
-        cfg.batcher.queue_capacity = n_requests + 1;
-        let coord = Coordinator::start(cfg, move || {
-            let w = Weights::load_init(&man2)?;
-            Ok(Box::new(NativeEngine::with_batch(&man2, &w, batch)?) as Box<dyn Engine>)
-        })
-        .expect("coordinator");
-
-        let ds = synth_dataset(n_requests, &man.bvalues, 20.0, 41);
-        let t = Timer::start();
-        let rxs: Vec<_> = (0..n_requests)
-            .map(|i| {
-                coord
-                    .submit(VoxelRequest {
-                        id: i as u64,
-                        signals: ds.voxel(i).to_vec(),
-                    })
-                    .expect("queue sized for the run")
-            })
-            .collect();
-        for rx in rxs {
-            rx.recv().expect("response");
-        }
-        let el = t.elapsed_s();
-        let snap = coord.metrics().snapshot();
+        let (el, snap) = run_load(&man, &w, batch, 1, n_requests);
         table.row(&[
             batch.to_string(),
             format!("{:.0}", n_requests as f64 / el),
@@ -64,12 +85,40 @@ fn main() {
             snap.batches.to_string(),
             snap.padded_rows.to_string(),
         ]);
-        coord.shutdown();
     }
-
     println!(
         "\n== Coordinator throughput ({} variant, {} requests) ==\n",
         man.variant, n_requests
     );
     println!("{}", table.to_text());
+
+    // ---- shard scaling -------------------------------------------------
+    let batch = 64usize;
+    let mut shard_table = Table::new(&[
+        "shards", "throughput (vox/s)", "speedup", "p99 latency", "per-shard batches",
+    ]);
+    let mut base = None;
+    for shards in [1usize, 2, 4] {
+        let (el, snap) = run_load(&man, &w, batch, shards, n_requests);
+        let tput = n_requests as f64 / el;
+        let base_tput = *base.get_or_insert(tput); // shards=1 is the baseline
+        let per_shard: Vec<String> = snap
+            .per_shard
+            .iter()
+            .map(|s| s.batches.to_string())
+            .collect();
+        shard_table.row(&[
+            shards.to_string(),
+            format!("{tput:.0}"),
+            format!("{:.2}x", tput / base_tput),
+            fmt_time(snap.p99_request_us / 1e6),
+            per_shard.join("/"),
+        ]);
+    }
+    println!(
+        "== Shard scaling (batch {batch}, {} requests, host cores: {}) ==\n",
+        n_requests,
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    println!("{}", shard_table.to_text());
 }

@@ -19,7 +19,13 @@ fn main() {
             return;
         }
     };
-    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping: Table II benches the PJRT engine ({e})");
+            return;
+        }
+    };
     let w = Weights::load_init(&man).expect("init weights");
     let t = tables::table2(&man, &w, &rt, &config_from_env()).expect("table2");
     println!(

@@ -407,10 +407,12 @@ mod tests {
     use crate::ivim::synth::synth_dataset;
     use crate::model::manifest::artifacts_root;
 
+    /// Artifacts when exported, else the deterministic in-tree fixture
+    /// (same shapes) — these tests never skip.
     fn setup() -> Option<(Manifest, Weights)> {
         let dir = artifacts_root().join("tiny");
         if !dir.join("manifest.json").exists() {
-            return None;
+            return Some(crate::testing::fixture::tiny_fixture());
         }
         let man = Manifest::load(&dir).unwrap();
         let w = Weights::load_init(&man).unwrap();

@@ -73,6 +73,36 @@ impl LatencyHistogram {
     }
 }
 
+/// Per-shard counters: one worker thread owning one engine.
+#[derive(Default)]
+pub struct ShardMetrics {
+    pub batches: AtomicU64,
+    pub responses: AtomicU64,
+    pub engine_errors: AtomicU64,
+    /// Time the shard spent inside `infer_batch`.
+    pub busy_us: AtomicU64,
+}
+
+impl ShardMetrics {
+    pub fn snapshot(&self) -> ShardSnapshot {
+        ShardSnapshot {
+            batches: self.batches.load(Ordering::Relaxed),
+            responses: self.responses.load(Ordering::Relaxed),
+            engine_errors: self.engine_errors.load(Ordering::Relaxed),
+            busy_us: self.busy_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of one shard's counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardSnapshot {
+    pub batches: u64,
+    pub responses: u64,
+    pub engine_errors: u64,
+    pub busy_us: u64,
+}
+
 /// Aggregate serving metrics shared between the coordinator and its
 /// observers.
 #[derive(Default)]
@@ -84,11 +114,26 @@ pub struct ServingMetrics {
     pub batches: AtomicU64,
     pub padded_rows: AtomicU64,
     pub rejected: AtomicU64,
+    /// One slot per worker shard (`new()` allocates a single slot; the
+    /// sharded coordinator uses `with_shards(k)`).
+    pub shards: Vec<ShardMetrics>,
 }
 
 impl ServingMetrics {
     pub fn new() -> Self {
-        Self::default()
+        Self::with_shards(1)
+    }
+
+    /// Metrics block with `k` per-shard slots.
+    pub fn with_shards(k: usize) -> Self {
+        ServingMetrics {
+            shards: (0..k.max(1)).map(|_| ShardMetrics::default()).collect(),
+            ..Default::default()
+        }
+    }
+
+    pub fn shard(&self, k: usize) -> &ShardMetrics {
+        &self.shards[k]
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -101,12 +146,13 @@ impl ServingMetrics {
             mean_request_us: self.request_latency.mean_us(),
             p99_request_us: self.request_latency.percentile_us(99.0) as f64,
             mean_batch_us: self.batch_latency.mean_us(),
+            per_shard: self.shards.iter().map(|s| s.snapshot()).collect(),
         }
     }
 }
 
 /// Point-in-time copy of the counters.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub responses: u64,
@@ -116,6 +162,7 @@ pub struct MetricsSnapshot {
     pub mean_request_us: f64,
     pub p99_request_us: f64,
     pub mean_batch_us: f64,
+    pub per_shard: Vec<ShardSnapshot>,
 }
 
 #[cfg(test)]
@@ -164,5 +211,25 @@ mod tests {
         assert_eq!(s.requests, 5);
         assert_eq!(s.responses, 3);
         assert!(s.mean_request_us > 0.0);
+        assert_eq!(s.per_shard.len(), 1);
+    }
+
+    #[test]
+    fn per_shard_slots_are_independent() {
+        let m = ServingMetrics::with_shards(4);
+        m.shard(0).batches.fetch_add(2, Ordering::Relaxed);
+        m.shard(3).responses.fetch_add(7, Ordering::Relaxed);
+        m.shard(3).busy_us.fetch_add(123, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.per_shard.len(), 4);
+        assert_eq!(s.per_shard[0].batches, 2);
+        assert_eq!(s.per_shard[1].batches, 0);
+        assert_eq!(s.per_shard[3].responses, 7);
+        assert_eq!(s.per_shard[3].busy_us, 123);
+    }
+
+    #[test]
+    fn shard_count_clamped_to_one() {
+        assert_eq!(ServingMetrics::with_shards(0).shards.len(), 1);
     }
 }

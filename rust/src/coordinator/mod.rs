@@ -6,20 +6,27 @@
 //! Architecture (std threads + channels; tokio unavailable offline):
 //!
 //! ```text
-//! clients ──► RequestQueue ──► Batcher ──► worker thread (owns Engine)
-//!                 ▲  backpressure  │             │
-//!                 └────────────────┘             ▼
-//!                              UncertaintyAggregator ──► responses
+//! clients ──► submit() ──► dispatcher (owns the Batcher)
+//!                 ▲  backpressure  │ round-robin batches
+//!                 │        ┌───────┼────────┐
+//!                 │        ▼       ▼        ▼
+//!                 │    shard 0  shard 1 … shard K-1   (one Engine each,
+//!                 │        │       │        │          built in-thread)
+//!                 └────────┴── responses ───┘
 //! ```
 //!
 //! * [`batcher`] — groups requests into engine-sized batches under a
 //!   deadline (size-or-timeout policy), padding tail batches.
-//! * [`server`] — worker thread construction (engines are not `Send`;
-//!   the worker builds its engine from a factory inside the thread),
-//!   request/response plumbing, graceful shutdown.
+//! * [`server`] — the sharded worker pool (engines are not `Send`; each
+//!   shard builds its engine from a shared factory inside its thread),
+//!   round-robin batch dispatch, request/response plumbing, graceful
+//!   shutdown draining every shard.
 //! * [`uncertainty`] — per-voxel aggregation of the N mask samples into
 //!   prediction + relative uncertainty + confidence flag.
-//! * [`metrics`] — latency histogram, throughput, queue depth gauges.
+//! * [`metrics`] — latency histogram, throughput, queue depth gauges and
+//!   per-shard batch/response/busy counters.
+//!
+//! See rust/DESIGN.md for the layer map and the shard architecture notes.
 
 pub mod batcher;
 pub mod metrics;
@@ -27,5 +34,6 @@ pub mod server;
 pub mod uncertainty;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use metrics::{MetricsSnapshot, ServingMetrics, ShardSnapshot};
 pub use server::{Coordinator, CoordinatorConfig, VoxelRequest, VoxelResponse};
 pub use uncertainty::{UncertaintyReport, VoxelEstimate};

@@ -196,9 +196,9 @@ mod tests {
     #[test]
     fn sweep_shapes_hold_on_trained_tiny() {
         let Ok(man) = load_manifest("tiny") else { return };
-        let rt = Runtime::cpu().unwrap();
+        let Ok(rt) = Runtime::cpu() else { return };
         // quick training so uncertainty reflects data noise not init noise
-        let w = crate::experiments::resolve_weights(&man, &rt, None, 150, 20.0).unwrap();
+        let w = crate::experiments::resolve_weights(&man, Some(&rt), None, 150, 20.0).unwrap();
         let cfg = SweepConfig {
             n_voxels: 400,
             snrs: vec![5.0, 50.0],

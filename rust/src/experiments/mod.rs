@@ -69,10 +69,11 @@ pub fn build_engine(
 }
 
 /// Resolve weights: explicit stem > cached trained weights > train now >
-/// artifact init (when `train_steps == 0`).
+/// artifact init (when `train_steps == 0`).  Training needs a PJRT
+/// runtime; pass `None` to only allow the non-training paths.
 pub fn resolve_weights(
     man: &Manifest,
-    rt: &Runtime,
+    rt: Option<&Runtime>,
     weights_stem: Option<&str>,
     train_steps: usize,
     train_snr: f64,
@@ -101,6 +102,9 @@ pub fn resolve_weights(
             return Ok(w);
         }
     }
+    let rt = rt.ok_or_else(|| {
+        anyhow::anyhow!("training {train_steps} steps needs a PJRT runtime (none available)")
+    })?;
     let cfg = crate::train::TrainConfig {
         steps: train_steps,
         snr: train_snr,
@@ -131,8 +135,18 @@ mod tests {
         let w = Weights::load_init(&man).unwrap();
         assert!(build_engine(EngineKind::Native, &man, &w, None).is_ok());
         assert!(build_engine(EngineKind::AccelSim, &man, &w, None).is_ok());
-        let rt = Runtime::cpu().unwrap();
-        assert!(build_engine(EngineKind::Pjrt, &man, &w, Some(&rt)).is_ok());
         assert!(build_engine(EngineKind::Pjrt, &man, &w, None).is_err());
+        if let Ok(rt) = Runtime::cpu() {
+            assert!(build_engine(EngineKind::Pjrt, &man, &w, Some(&rt)).is_ok());
+        }
+    }
+
+    #[test]
+    fn resolve_weights_without_runtime() {
+        // Fixture-independent behaviour: asking for training without a
+        // runtime must error instead of panicking.
+        let (man, _) = crate::testing::fixture::tiny_fixture();
+        let r = resolve_weights(&man, None, None, 50, 20.0);
+        assert!(r.is_err());
     }
 }

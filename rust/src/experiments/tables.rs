@@ -236,7 +236,7 @@ mod tests {
         // paper-scale model (Nb=104, batch 64) — the tiny variant is so
         // small that the derived GPU row beats the simulated FPGA.
         let Ok(man) = load_manifest("paper") else { return };
-        let rt = Runtime::cpu().unwrap();
+        let Ok(rt) = Runtime::cpu() else { return };
         let w = Weights::load_init(&man).unwrap();
         let cfg = BenchConfig {
             target_s: 0.05,

@@ -10,8 +10,10 @@
 //! * **L3** (this crate) — the serving coordinator, PJRT runtime, cycle-
 //!   level FPGA accelerator simulator, classical baselines, metrics, CLI.
 //!
-//! See DESIGN.md for the system inventory and the experiment index that
-//! maps every table/figure of the paper onto modules and bench targets.
+//! See [rust/DESIGN.md](../DESIGN.md) for the system inventory — the
+//! L1/L2/L3 layering, the [`infer::Engine`] trait contract, the sharded
+//! coordinator architecture — and the experiment index that maps every
+//! table/figure of the paper onto modules and bench targets.
 
 pub mod accel;
 pub mod bayes;

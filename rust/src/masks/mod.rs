@@ -263,6 +263,67 @@ mod tests {
         assert_eq!(pyround(1.5), 2);
     }
 
+    /// Property: the empirical keep-rate (ones per row / width) tracks
+    /// the configured Bernoulli keep probability 1/scale.  At the widths
+    /// the paper uses the directed search concentrates tightly around it.
+    ///
+    /// n starts at 3: with only 2 masks the coverage constraint
+    /// (n * ones >= width, every column used by some mask) forces the
+    /// keep-rate up to ~0.5 regardless of the requested scale, so the
+    /// Bernoulli approximation only holds from n = 3 on.
+    #[test]
+    fn property_keep_rate_tracks_bernoulli_rate() {
+        use crate::testing::{forall, zip, Gen};
+        forall(
+            30,
+            zip(Gen::usize_in(48, 104), Gen::usize_in(3, 8)),
+            |&(c, n): &(usize, usize)| {
+                [1.5f64, 2.0, 3.0].iter().all(|&scale| {
+                    let m = for_width(c, n, scale, 17).unwrap();
+                    let want = 1.0 / scale;
+                    (0..n).all(|i| {
+                        let got = m.ones(i) as f64 / m.width as f64;
+                        (got - want).abs() < 0.12
+                    })
+                })
+            },
+        );
+    }
+
+    /// Property: generation is bit-exact in the seed — same (width, n,
+    /// scale, seed) always yields the identical bits, and a different
+    /// seed diverges.  This is what lets the Rust side regenerate the
+    /// AOT-baked masks from `manifest.json`'s `mask_seed` alone.
+    #[test]
+    fn property_bit_exact_determinism() {
+        use crate::testing::{forall, zip, Gen};
+        forall(
+            40,
+            zip(Gen::usize_in(8, 64), Gen::usize_in(2, 8)),
+            |&(c, n): &(usize, usize)| {
+                let a = for_width(c, n, 2.0, 99).unwrap();
+                let b = for_width(c, n, 2.0, 99).unwrap();
+                a.bits == b.bits && a.width == b.width && a.n == b.n
+            },
+        );
+    }
+
+    /// Property: the N masks of a set are pairwise distinct — identical
+    /// masks would collapse two Monte-Carlo samples into one and silently
+    /// shrink the ensemble.
+    #[test]
+    fn property_masks_distinct_across_samples() {
+        use crate::testing::{forall, zip, Gen};
+        forall(
+            30,
+            zip(Gen::usize_in(24, 96), Gen::usize_in(2, 6)),
+            |&(c, n): &(usize, usize)| {
+                let m = for_width(c, n, 2.0, 5).unwrap();
+                (0..n).all(|i| (i + 1..n).all(|j| m.row(i) != m.row(j)))
+            },
+        );
+    }
+
     #[test]
     fn property_shapes() {
         use crate::testing::{forall, zip, Gen};

@@ -1,4 +1,6 @@
-//! Typed wrappers over the two AOT executables:
+//! The real PJRT runtime (requires the `pjrt` feature and a vendored
+//! `xla` crate): CPU client, HLO-text compilation, literal plumbing and
+//! typed wrappers over the two AOT executables:
 //!
 //! * [`InferExecutable`] — `(params, bn, signals[B,Nb]) -> (d, dstar, f,
 //!   s0, recon)`, each output `[N,B]` (recon `[N,B,Nb]`).
@@ -8,10 +10,114 @@
 //! Both validate the golden vectors shipped with the artifacts on demand
 //! (`verify_golden`), which is the cross-language correctness gate.
 
-use super::{execute_untuple, literal_f32, literal_scalar, literal_to_vec, Runtime};
+use std::sync::Arc;
+
+use super::TrainState;
 use crate::infer::{Engine, InferOutput};
 use crate::ivim::Param;
 use crate::model::{Manifest, Weights};
+
+/// Shared PJRT CPU client.  Creating a client is expensive; one per
+/// process is plenty (thread-safe executions).
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> anyhow::Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(Runtime {
+            client: Arc::new(client),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text file and compile it to a loaded executable.
+    pub fn compile_hlo_text(
+        &self,
+        path: &std::path::Path,
+    ) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+        anyhow::ensure!(path.exists(), "HLO file missing: {}", path.display());
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse HLO {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))
+    }
+}
+
+/// Convert a f32 slice into a literal of the given dims.
+fn literal_f32(data: &[f32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+    let numel: i64 = dims.iter().product();
+    anyhow::ensure!(
+        numel as usize == data.len(),
+        "literal shape {:?} wants {} elements, got {}",
+        dims,
+        numel,
+        data.len()
+    );
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        Ok(lit)
+    } else {
+        lit.reshape(dims)
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+    }
+}
+
+/// Scalar f32 literal.
+fn literal_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract a Vec<f32> out of a literal.
+fn literal_to_vec(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("literal to_vec: {e:?}"))
+}
+
+/// Execute a loaded executable on literals, untupling the single tuple
+/// result into its element literals.
+fn execute_untuple(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[xla::Literal],
+) -> anyhow::Result<Vec<xla::Literal>> {
+    let result = exe
+        .execute::<xla::Literal>(args)
+        .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+    anyhow::ensure!(!result.is_empty() && !result[0].is_empty(), "empty result");
+    let mut outs = Vec::new();
+    for buf in &result[0] {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: a single tuple literal.
+        match lit.shape() {
+            Ok(xla::Shape::Tuple(_)) => {
+                let mut l = lit;
+                outs.extend(
+                    l.decompose_tuple()
+                        .map_err(|e| anyhow::anyhow!("decompose: {e:?}"))?,
+                );
+            }
+            _ => outs.push(lit),
+        }
+    }
+    Ok(outs)
+}
 
 /// Compiled inference executable bound to its manifest and weights.
 pub struct InferExecutable {
@@ -117,27 +223,6 @@ impl Engine for InferExecutable {
     }
 }
 
-/// Mutable optimisation state for the trainer.
-#[derive(Debug, Clone)]
-pub struct TrainState {
-    pub weights: Weights,
-    pub m: Vec<f32>,
-    pub v: Vec<f32>,
-    pub step: u64,
-}
-
-impl TrainState {
-    pub fn fresh(weights: Weights) -> Self {
-        let z = vec![0.0f32; weights.params.len()];
-        TrainState {
-            m: z.clone(),
-            v: z,
-            step: 0,
-            weights,
-        }
-    }
-}
-
 /// Compiled train-step executable.
 pub struct TrainExecutable {
     exe: xla::PjRtLoadedExecutable,
@@ -221,6 +306,13 @@ mod tests {
         dir.join("manifest.json")
             .exists()
             .then(|| Manifest::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn cpu_client_boots() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.device_count() >= 1);
+        assert!(!rt.platform().is_empty());
     }
 
     #[test]

@@ -1,0 +1,96 @@
+//! No-op stand-ins for the PJRT runtime, used when the crate is built
+//! without the `pjrt` feature (the `xla` crate is absent from the offline
+//! registry).  Constructors fail with a clear error; the types exist so
+//! every call site compiles unchanged and callers can degrade to the
+//! native / accelerator-sim engines.
+
+use super::TrainState;
+use crate::infer::{Engine, InferOutput};
+use crate::model::{Manifest, Weights};
+
+fn unavailable(what: &str) -> anyhow::Error {
+    anyhow::anyhow!(
+        "{what} unavailable: built without the `pjrt` cargo feature \
+         (the `xla` crate is not in the offline registry); use the \
+         native or accel engines instead"
+    )
+}
+
+/// Stub PJRT client.  `cpu()` always errors, so instances never exist.
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    pub fn cpu() -> anyhow::Result<Runtime> {
+        Err(unavailable("PJRT runtime"))
+    }
+
+    pub fn platform(&self) -> String {
+        "pjrt-stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+}
+
+/// Stub inference executable; `load` always errors.
+pub struct InferExecutable {
+    man: Manifest,
+}
+
+impl InferExecutable {
+    pub fn load(_rt: &Runtime, _man: &Manifest, _weights: &Weights) -> anyhow::Result<Self> {
+        Err(unavailable("PJRT inference executable"))
+    }
+
+    pub fn set_weights(&mut self, _weights: &Weights) {}
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.man
+    }
+
+    pub fn infer_with_recon(&self, _signals: &[f32]) -> anyhow::Result<(InferOutput, Vec<f32>)> {
+        Err(unavailable("PJRT inference executable"))
+    }
+
+    pub fn verify_golden(&self) -> anyhow::Result<()> {
+        Err(unavailable("PJRT inference executable"))
+    }
+}
+
+impl Engine for InferExecutable {
+    fn name(&self) -> &str {
+        "pjrt-stub"
+    }
+    fn batch_size(&self) -> usize {
+        self.man.batch_infer
+    }
+    fn infer_batch(&mut self, _signals: &[f32]) -> anyhow::Result<InferOutput> {
+        Err(unavailable("PJRT inference executable"))
+    }
+}
+
+/// Stub train-step executable; `load` always errors.
+pub struct TrainExecutable {
+    man: Manifest,
+}
+
+impl TrainExecutable {
+    pub fn load(_rt: &Runtime, _man: &Manifest) -> anyhow::Result<Self> {
+        Err(unavailable("PJRT train executable"))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.man
+    }
+
+    pub fn step(&self, _state: &mut TrainState, _signals: &[f32]) -> anyhow::Result<f32> {
+        Err(unavailable("PJRT train executable"))
+    }
+
+    pub fn verify_golden(&self) -> anyhow::Result<()> {
+        Err(unavailable("PJRT train executable"))
+    }
+}

@@ -174,6 +174,156 @@ pub fn forall_seeded<T: Clone + std::fmt::Debug>(
     }
 }
 
+/// Deterministic in-memory artifact fixtures, so engine / coordinator /
+/// masks tests run everywhere instead of skipping when the Python-side
+/// artifacts (`make artifacts`) are absent.
+///
+/// The fixture mirrors the real compile path's conventions exactly:
+/// layout names (`{subnet}.w1` …), mask keys (`{subnet}.mask{1,2}`), the
+/// per-(subnet, layer) mask-seed rule, and `batch_train % n_samples == 0`
+/// — so `Manifest::validate` and `verify_mask_parity` both pass on it.
+pub mod fixture {
+    use std::collections::BTreeMap;
+
+    use crate::masks::{for_width, subnet_layer_seed};
+    use crate::model::manifest::{AdamHyper, LayoutEntry, Manifest};
+    use crate::model::Weights;
+
+    /// Fixture knobs; `Default` is the "tiny-like" shape used by most
+    /// unit tests.
+    #[derive(Debug, Clone)]
+    pub struct FixtureConfig {
+        pub nb: usize,
+        pub n_samples: usize,
+        pub scale: f64,
+        pub mask_seed: u64,
+        pub batch_infer: usize,
+        pub weight_seed: u64,
+    }
+
+    impl Default for FixtureConfig {
+        fn default() -> Self {
+            FixtureConfig {
+                nb: 11,
+                n_samples: 4,
+                scale: 2.0,
+                mask_seed: 2024,
+                batch_infer: 16,
+                weight_seed: 7,
+            }
+        }
+    }
+
+    /// Synthetic b-value protocol of length `nb` (starts at b=0 so the
+    /// data generator's normalisation works).
+    pub fn fixture_bvalues(nb: usize) -> Vec<f64> {
+        (0..nb)
+            .map(|i| {
+                if nb < 2 {
+                    0.0
+                } else {
+                    800.0 * (i as f64 / (nb - 1) as f64).powi(2)
+                }
+            })
+            .collect()
+    }
+
+    /// Build a validated manifest + deterministic He-initialised weights.
+    pub fn build(cfg: &FixtureConfig) -> (Manifest, Weights) {
+        let nb = cfg.nb;
+        let subnets: Vec<String> =
+            ["d", "dstar", "f", "s0"].iter().map(|s| s.to_string()).collect();
+
+        let mut param_layout = Vec::new();
+        let mut bn_layout = Vec::new();
+        let mut p_off = 0usize;
+        let mut b_off = 0usize;
+        let mut push_p = |layout: &mut Vec<LayoutEntry>, name: String, shape: Vec<usize>| {
+            let len: usize = shape.iter().product();
+            layout.push(LayoutEntry {
+                name,
+                offset: p_off,
+                shape,
+            });
+            p_off += len;
+        };
+        for sn in &subnets {
+            push_p(&mut param_layout, format!("{sn}.w1"), vec![nb, nb]);
+            push_p(&mut param_layout, format!("{sn}.b1"), vec![nb]);
+            push_p(&mut param_layout, format!("{sn}.g1"), vec![nb]);
+            push_p(&mut param_layout, format!("{sn}.be1"), vec![nb]);
+            push_p(&mut param_layout, format!("{sn}.w2"), vec![nb, nb]);
+            push_p(&mut param_layout, format!("{sn}.b2"), vec![nb]);
+            push_p(&mut param_layout, format!("{sn}.g2"), vec![nb]);
+            push_p(&mut param_layout, format!("{sn}.be2"), vec![nb]);
+            push_p(&mut param_layout, format!("{sn}.w3"), vec![nb]);
+            push_p(&mut param_layout, format!("{sn}.b3"), vec![1]);
+            for bn_name in ["m1", "v1", "m2", "v2"] {
+                bn_layout.push(LayoutEntry {
+                    name: format!("{sn}.{bn_name}"),
+                    offset: b_off,
+                    shape: vec![nb],
+                });
+                b_off += nb;
+            }
+        }
+
+        let mut masks = BTreeMap::new();
+        for (si, sn) in subnets.iter().enumerate() {
+            for layer in 1..=2usize {
+                let seed = subnet_layer_seed(cfg.mask_seed, si, layer);
+                let m = for_width(nb, cfg.n_samples, cfg.scale, seed)
+                    .expect("fixture mask generation");
+                masks.insert(format!("{sn}.mask{layer}"), m);
+            }
+        }
+
+        let man = Manifest {
+            variant: "fixture".to_string(),
+            nb,
+            n_samples: cfg.n_samples,
+            scale: cfg.scale,
+            mask_seed: cfg.mask_seed,
+            batch_infer: cfg.batch_infer,
+            batch_train: cfg.n_samples * 8,
+            param_count: p_off,
+            bn_count: b_off,
+            bvalues: fixture_bvalues(nb),
+            subnets,
+            adam: AdamHyper {
+                lr: 1e-3,
+                beta1: 0.9,
+                beta2: 0.999,
+                eps: 1e-8,
+            },
+            bn_momentum: 0.1,
+            param_layout,
+            bn_layout,
+            masks,
+            files: BTreeMap::new(),
+            dir: std::env::temp_dir().join("uivim_fixture"),
+        };
+        man.validate().expect("fixture manifest is self-consistent");
+        let weights = Weights::init_random(&man, cfg.weight_seed);
+        (man, weights)
+    }
+
+    /// The default small fixture (nb=11, 4 mask samples, scale 2.0).
+    pub fn tiny_fixture() -> (Manifest, Weights) {
+        build(&FixtureConfig::default())
+    }
+
+    /// A paper-scale fixture (nb=104, the Table II shape) for perf tests
+    /// and benches.
+    pub fn paper_fixture() -> (Manifest, Weights) {
+        build(&FixtureConfig {
+            nb: 104,
+            batch_infer: 64,
+            ..Default::default()
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -219,6 +369,53 @@ mod tests {
         forall(100, Gen::<Vec<f64>>::f64_vec(1, 16, -1.0, 1.0), |v| {
             (1..=16).contains(&v.len()) && v.iter().all(|x| (-1.0..1.0).contains(x))
         });
+    }
+
+    #[test]
+    fn fixture_manifest_is_valid_and_parity_checked() {
+        let (man, w) = fixture::tiny_fixture();
+        man.validate().unwrap();
+        man.verify_mask_parity().unwrap();
+        assert_eq!(man.nb, 11);
+        assert_eq!(man.bvalues.len(), man.nb);
+        assert_eq!(man.masks.len(), 8); // 4 subnets x 2 layers
+        assert_eq!(w.params.len(), man.param_count);
+        assert_eq!(w.bn.len(), man.bn_count);
+        // subnet views resolve with the right shapes
+        for sn in &man.subnets {
+            let s = w.subnet(&man, sn);
+            assert_eq!(s.w1.len(), man.nb * man.nb);
+            assert_eq!(s.b3.len(), 1);
+            assert_eq!(s.v2.len(), man.nb);
+        }
+    }
+
+    #[test]
+    fn fixture_is_deterministic() {
+        let (a_man, a_w) = fixture::tiny_fixture();
+        let (b_man, b_w) = fixture::tiny_fixture();
+        assert_eq!(a_man.masks, b_man.masks);
+        assert_eq!(a_w.params, b_w.params);
+        assert_eq!(a_w.bn, b_w.bn);
+    }
+
+    #[test]
+    fn fixture_custom_shapes() {
+        let (man, w) = fixture::build(&fixture::FixtureConfig {
+            nb: 21,
+            n_samples: 6,
+            batch_infer: 5,
+            ..Default::default()
+        });
+        assert_eq!(man.nb, 21);
+        assert_eq!(man.n_samples, 6);
+        assert_eq!(man.batch_train % man.n_samples, 0);
+        assert_eq!(w.params.len(), man.param_count);
+        // an engine built on the fixture actually runs
+        let mut eng = crate::infer::native::NativeEngine::new(&man, &w).unwrap();
+        let ds = crate::ivim::synth::synth_dataset(man.batch_infer, &man.bvalues, 20.0, 1);
+        let out = crate::infer::Engine::infer_batch(&mut eng, &ds.signals).unwrap();
+        assert_eq!(out.batch, 5);
     }
 
     #[test]

@@ -97,7 +97,7 @@ pub fn train(
         losses.push(loss);
 
         if cfg.log_every > 0 && step % cfg.log_every == 0 {
-            log::info!("step {step}: loss {loss:.6}");
+            eprintln!("step {step}: loss {loss:.6}");
         }
         if cfg.early_stop_rel > 0.0 && losses.len() >= 2 * window {
             let prev: f64 = losses[losses.len() - 2 * window..losses.len() - window]
@@ -158,7 +158,7 @@ mod tests {
     #[test]
     fn loss_decreases_over_training() {
         let Some(man) = tiny() else { return };
-        let rt = Runtime::cpu().unwrap();
+        let Ok(rt) = Runtime::cpu() else { return };
         let cfg = TrainConfig {
             steps: 60,
             snr: 30.0,
@@ -183,7 +183,7 @@ mod tests {
     #[test]
     fn early_stop_halts() {
         let Some(man) = tiny() else { return };
-        let rt = Runtime::cpu().unwrap();
+        let Ok(rt) = Runtime::cpu() else { return };
         let cfg = TrainConfig {
             steps: 400,
             snr: 50.0,
@@ -198,7 +198,7 @@ mod tests {
     #[test]
     fn resume_from_weights() {
         let Some(man) = tiny() else { return };
-        let rt = Runtime::cpu().unwrap();
+        let Ok(rt) = Runtime::cpu() else { return };
         let cfg = TrainConfig {
             steps: 10,
             snr: 20.0,

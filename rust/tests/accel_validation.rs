@@ -8,12 +8,24 @@ use uivim::infer::native::NativeEngine;
 use uivim::infer::Engine;
 use uivim::ivim::synth::synth_dataset;
 use uivim::ivim::Param;
-use uivim::model::Weights;
+use uivim::model::{Manifest, Weights};
+use uivim::testing::fixture;
+
+/// Artifacts when exported, else the deterministic in-tree fixture so
+/// the validation suite always runs.
+fn setup() -> (Manifest, Weights) {
+    match load_manifest("tiny") {
+        Ok(man) => {
+            let w = Weights::load_init(&man).unwrap();
+            (man, w)
+        }
+        Err(_) => fixture::tiny_fixture(),
+    }
+}
 
 #[test]
 fn quantised_outputs_track_oracle_across_snrs() {
-    let Ok(man) = load_manifest("tiny") else { return };
-    let w = Weights::load_init(&man).unwrap();
+    let (man, w) = setup();
     let mut native = NativeEngine::new(&man, &w).unwrap();
     for (i, snr) in [5.0, 20.0, 50.0].into_iter().enumerate() {
         let ds = synth_dataset(man.batch_infer, &man.bvalues, snr, 200 + i as u64);
@@ -45,8 +57,7 @@ fn quantised_outputs_track_oracle_across_snrs() {
 #[test]
 fn pe_count_does_not_change_results() {
     // Parallelism is a scheduling choice; numerics must be invariant.
-    let Ok(man) = load_manifest("tiny") else { return };
-    let w = Weights::load_init(&man).unwrap();
+    let (man, w) = setup();
     let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 300);
     let run = |n_pe: usize| {
         let mut sim = AccelSimulator::new(
@@ -71,8 +82,7 @@ fn pe_count_does_not_change_results() {
 
 #[test]
 fn mask_zero_skipping_saves_storage_and_ops_system_level() {
-    let Ok(man) = load_manifest("tiny") else { return };
-    let w = Weights::load_init(&man).unwrap();
+    let (man, w) = setup();
     let sim = AccelSimulator::new(
         &man,
         &w,
@@ -92,8 +102,7 @@ fn mask_zero_skipping_saves_storage_and_ops_system_level() {
 
 #[test]
 fn batch_level_scheme_cuts_energy_not_accuracy() {
-    let Ok(man) = load_manifest("tiny") else { return };
-    let w = Weights::load_init(&man).unwrap();
+    let (man, w) = setup();
     let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 400);
     let cfg = AccelConfig {
         batch: man.batch_infer,
@@ -123,7 +132,7 @@ fn batch_level_scheme_cuts_energy_not_accuracy() {
 fn fit_baselines_vs_network_on_clean_data() {
     // Classical fits are accurate on clean voxels — the network's value
     // is speed and uncertainty, not noiseless accuracy (paper §II-B).
-    let Ok(man) = load_manifest("tiny") else { return };
+    let (man, _) = setup();
     let ds = synth_dataset(32, &man.bvalues, 1e6, 500); // ~noiseless
     for i in 0..8 {
         let sig: Vec<f64> = ds.voxel(i).iter().map(|&v| v as f64).collect();
