@@ -1,14 +1,17 @@
 //! Bench: coordinator end-to-end throughput/latency under load — the
 //! §VI-C real-time requirement (0.8 ms/batch) exercised at the serving
-//! layer, the batch-size trade-off, and the shard-pool scaling that is
-//! the acceptance bar of ISSUE #1 (4 shards >= 3x one worker).
+//! layer, the batch-size trade-off, and the shard-pool scaling of the
+//! work-stealing pull dispatcher.
+//!
+//! Emits `BENCH_coordinator_throughput.json` at the repo root (name,
+//! p50/p99 request latency, voxels/s) so the perf trajectory is tracked
+//! across PRs.
 
 use std::time::Duration;
-use uivim::bench::fmt_time;
+use uivim::bench::{fmt_time, write_bench_json, BenchRecord};
 use uivim::coordinator::{Coordinator, CoordinatorConfig, VoxelRequest};
 use uivim::experiments::load_manifest;
-use uivim::infer::native::NativeEngine;
-use uivim::infer::Engine;
+use uivim::infer::registry::{factory, EngineName, EngineOpts};
 use uivim::ivim::synth::synth_dataset;
 use uivim::metrics::report::Table;
 use uivim::model::{Manifest, Weights};
@@ -22,14 +25,17 @@ fn run_load(
     shards: usize,
     n_requests: usize,
 ) -> (f64, uivim::coordinator::MetricsSnapshot) {
-    let man2 = man.clone();
-    let w2 = w.clone();
     let mut cfg = CoordinatorConfig::sharded(man.nb, batch, shards);
     cfg.batcher.max_wait = Duration::from_millis(1);
     cfg.batcher.queue_capacity = n_requests + 1;
-    let coord = Coordinator::start(cfg, move || {
-        Ok(Box::new(NativeEngine::with_batch(&man2, &w2, batch)?) as Box<dyn Engine>)
-    })
+    let opts = EngineOpts {
+        batch: Some(batch),
+        ..Default::default()
+    };
+    let coord = Coordinator::start(
+        cfg,
+        factory(EngineName::Native, man.clone(), w.clone(), opts),
+    )
     .expect("coordinator");
 
     let ds = synth_dataset(n_requests, &man.bvalues, 20.0, 41);
@@ -70,6 +76,7 @@ fn main() {
         }
     };
     let n_requests = if fast { 500 } else { 5000 };
+    let mut records: Vec<BenchRecord> = Vec::new();
 
     // ---- batch-size trade-off (single worker) --------------------------
     let mut table = Table::new(&[
@@ -85,6 +92,12 @@ fn main() {
             snap.batches.to_string(),
             snap.padded_rows.to_string(),
         ]);
+        records.push(BenchRecord {
+            name: format!("serve_batch{batch}_shards1"),
+            p50_us: snap.p50_request_us,
+            p99_us: snap.p99_request_us,
+            throughput: n_requests as f64 / el,
+        });
     }
     println!(
         "\n== Coordinator throughput ({} variant, {} requests) ==\n",
@@ -92,7 +105,7 @@ fn main() {
     );
     println!("{}", table.to_text());
 
-    // ---- shard scaling -------------------------------------------------
+    // ---- shard scaling (work-stealing pull) ----------------------------
     let batch = 64usize;
     let mut shard_table = Table::new(&[
         "shards", "throughput (vox/s)", "speedup", "p99 latency", "per-shard batches",
@@ -114,6 +127,12 @@ fn main() {
             fmt_time(snap.p99_request_us / 1e6),
             per_shard.join("/"),
         ]);
+        records.push(BenchRecord {
+            name: format!("serve_batch{batch}_shards{shards}"),
+            p50_us: snap.p50_request_us,
+            p99_us: snap.p99_request_us,
+            throughput: tput,
+        });
     }
     println!(
         "== Shard scaling (batch {batch}, {} requests, host cores: {}) ==\n",
@@ -121,4 +140,9 @@ fn main() {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     );
     println!("{}", shard_table.to_text());
+
+    match write_bench_json("coordinator_throughput", &records) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write BENCH json: {e}"),
+    }
 }

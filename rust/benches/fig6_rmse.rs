@@ -5,7 +5,8 @@
 //! prints the table + ASCII plot.  Env: `UIVIM_VARIANT`,
 //! `UIVIM_BENCH_FAST=1` (fewer voxels / steps).
 
-use uivim::experiments::{fig67, load_manifest, resolve_weights, EngineKind};
+use uivim::experiments::{fig67, load_manifest, resolve_weights};
+use uivim::infer::registry::EngineName;
 use uivim::runtime::Runtime;
 
 fn main() {
@@ -28,10 +29,10 @@ fn main() {
     let w = resolve_weights(&man, rt.as_ref(), None, steps, 20.0).expect("weights");
     let cfg = fig67::SweepConfig {
         n_voxels: if fast { 500 } else { 2000 },
-        engine: EngineKind::Native,
+        engine: EngineName::Native,
         ..Default::default()
     };
-    let rows = fig67::snr_sweep(&man, &w, rt.as_ref(), &cfg).expect("sweep");
+    let rows = fig67::snr_sweep(&man, &w, &cfg).expect("sweep");
     println!(
         "\n== Fig. 6 ({} variant, {} voxels/SNR, {} train steps) ==\n",
         man.variant, cfg.n_voxels, steps

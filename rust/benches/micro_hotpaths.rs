@@ -4,10 +4,13 @@
 
 use uivim::accel::fixed::{quantize_slice, Fx};
 use uivim::accel::pu::{pu_dot, PuConfig};
-use uivim::bench::{bench, black_box, config_from_env, print_results};
+use uivim::bench::{
+    bench, black_box, config_from_env, print_results, write_bench_json, BenchRecord,
+};
 use uivim::experiments::load_manifest;
-use uivim::infer::native::{masked_linear_reference, BlockedMaskedLinear, NativeEngine};
-use uivim::infer::Engine;
+use uivim::infer::native::{masked_linear_reference, BlockedMaskedLinear};
+use uivim::infer::registry::{build, EngineName, EngineOpts};
+use uivim::infer::InferOutput;
 use uivim::ivim::synth::synth_dataset;
 use uivim::masks;
 use uivim::model::Weights;
@@ -22,7 +25,7 @@ use uivim::util::rng::Pcg32;
 fn masked_linear_blocked_vs_scalar(
     cfg: &uivim::bench::BenchConfig,
     results: &mut Vec<uivim::bench::BenchResult>,
-) {
+) -> f64 {
     let nb = 104usize;
     let batch = 64usize;
     let n_samples = 4usize;
@@ -94,13 +97,14 @@ fn masked_linear_blocked_vs_scalar(
     );
     results.push(r_scalar);
     results.push(r_blocked);
+    speedup
 }
 
 fn main() {
     let cfg = config_from_env();
     let mut results = Vec::new();
 
-    masked_linear_blocked_vs_scalar(&cfg, &mut results);
+    let blocked_speedup = masked_linear_blocked_vs_scalar(&cfg, &mut results);
 
     // fixed-point multiply-accumulate chain
     let xs: Vec<Fx> = (0..1024).map(|i| Fx::from_f32((i % 13) as f32 * 0.01)).collect();
@@ -156,7 +160,8 @@ fn main() {
     }));
 
     // native engine batch at each variant (artifacts if present, else
-    // the deterministic in-tree fixtures at the same shapes)
+    // the deterministic in-tree fixtures at the same shapes), on the
+    // two-phase zero-allocation hot path (registry-constructed)
     for variant in ["tiny", "paper"] {
         let (man, w) = match load_manifest(variant) {
             Ok(man) => {
@@ -171,16 +176,33 @@ fn main() {
                 }
             }
         };
-        let mut eng = NativeEngine::new(&man, &w).unwrap();
+        let mut eng = build(EngineName::Native, &man, &w, &EngineOpts::default()).unwrap();
         let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 8);
+        let mut out = InferOutput::new(eng.n_samples(), eng.batch_size());
         results.push(bench(
-            &format!("native_infer_batch_{variant}"),
+            &format!("native_execute_into_batch_{variant}"),
             &cfg,
             || {
-                black_box(eng.infer_batch(&ds.signals).unwrap());
+                eng.execute_into(&ds.signals, &mut out).unwrap();
+                black_box(&out);
             },
         ));
     }
 
     print_results("micro hot paths", &results);
+
+    // Machine-readable trajectory: every case plus the headline
+    // blocked-vs-scalar speedup (throughput column = the speedup factor).
+    let mut records: Vec<BenchRecord> =
+        results.iter().map(|r| BenchRecord::from_result(r, 1)).collect();
+    records.push(BenchRecord {
+        name: "blocked_vs_scalar_speedup_p0.5".into(),
+        p50_us: 0.0,
+        p99_us: 0.0,
+        throughput: blocked_speedup,
+    });
+    match write_bench_json("micro_hotpaths", &records) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write BENCH json: {e}"),
+    }
 }

@@ -189,6 +189,10 @@ pub struct AccelSimulator {
     subnets: Vec<QuantSubnet>,
     /// Stats of the last `infer_batch` call.
     pub last_stats: CycleStats,
+    // scratch reused across calls (hot path: no allocation)
+    x0: Vec<Fx>,
+    h1: Vec<Fx>,
+    h2: Vec<Fx>,
 }
 
 impl AccelSimulator {
@@ -223,6 +227,7 @@ impl AccelSimulator {
             r_m: cfg.r_m,
             r_a: cfg.r_a,
         };
+        let scratch = cfg.batch * man.nb;
         Ok(AccelSimulator {
             cfg,
             pu,
@@ -231,6 +236,9 @@ impl AccelSimulator {
             scheme,
             subnets,
             last_stats: CycleStats::default(),
+            x0: vec![Fx::ZERO; scratch],
+            h1: vec![Fx::ZERO; scratch],
+            h2: vec![Fx::ZERO; scratch],
         })
     }
 
@@ -296,11 +304,16 @@ impl AccelSimulator {
         macs
     }
 
-    /// Run one batch through the full model under the configured scheme.
-    pub fn infer_batch_stats(
+    /// Two-phase hot path: run one batch through the full model under
+    /// the configured scheme, writing predictions into a caller-provided
+    /// output and returning the cycle stats.  All simulator scratch
+    /// (quantised input, layer activations) is pre-sized at construction
+    /// — zero steady-state allocations.
+    pub fn execute_into_stats(
         &mut self,
         signals: &[f32],
-    ) -> anyhow::Result<(InferOutput, CycleStats)> {
+        out: &mut InferOutput,
+    ) -> anyhow::Result<CycleStats> {
         let batch = self.cfg.batch;
         let nb = self.nb;
         anyhow::ensure!(
@@ -308,11 +321,19 @@ impl AccelSimulator {
             "expected {batch}x{nb} signals, got {}",
             signals.len()
         );
-        let x0: Vec<Fx> = quantize_slice(signals);
-        let mut out = InferOutput::new(self.n_samples, batch);
+        out.reset(self.n_samples, batch);
+        // Scratch is moved out for the duration of the call so the
+        // per-layer helper can borrow `self` immutably alongside it.
+        let mut x0 = std::mem::take(&mut self.x0);
+        let mut h1 = std::mem::take(&mut self.h1);
+        let mut h2 = std::mem::take(&mut self.h2);
+        x0.clear();
+        x0.extend(signals.iter().map(|&v| Fx::from_f32(v)));
+        h1.clear();
+        h1.resize(batch * nb, Fx::ZERO);
+        h2.clear();
+        h2.resize(batch * nb, Fx::ZERO);
         let mut stats = CycleStats::default();
-        let mut h1 = vec![Fx::ZERO; batch * nb];
-        let mut h2 = vec![Fx::ZERO; batch * nb];
 
         // The functional result is scheme-independent (verified by test);
         // cycle/load accounting follows the configured scheme.
@@ -378,7 +399,21 @@ impl AccelSimulator {
             }
         }
 
+        self.x0 = x0;
+        self.h1 = h1;
+        self.h2 = h2;
         self.last_stats = stats;
+        Ok(stats)
+    }
+
+    /// Allocating wrapper over [`Self::execute_into_stats`] for cold
+    /// paths (experiments, DSE sweeps).
+    pub fn infer_batch_stats(
+        &mut self,
+        signals: &[f32],
+    ) -> anyhow::Result<(InferOutput, CycleStats)> {
+        let mut out = InferOutput::new(self.n_samples, self.cfg.batch);
+        let stats = self.execute_into_stats(signals, &mut out)?;
         Ok((out, stats))
     }
 
@@ -395,8 +430,11 @@ impl Engine for AccelSimulator {
     fn batch_size(&self) -> usize {
         self.cfg.batch
     }
-    fn infer_batch(&mut self, signals: &[f32]) -> anyhow::Result<InferOutput> {
-        self.infer_batch_stats(signals).map(|(o, _)| o)
+    fn n_samples(&self) -> usize {
+        self.n_samples
+    }
+    fn execute_into(&mut self, signals: &[f32], out: &mut InferOutput) -> anyhow::Result<()> {
+        self.execute_into_stats(signals, out).map(|_| ())
     }
 }
 

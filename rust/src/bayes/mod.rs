@@ -4,11 +4,19 @@
 //!
 //! * [`McDropout`] — random Bernoulli masks drawn *per forward pass*
 //!   (the runtime randomness the paper's hardware specifically removes;
-//!   its cost shows up in the Table I sampler-energy ablation).
+//!   its cost shows up in the Table I sampler-energy ablation).  The
+//!   per-sample engine rebuild inside `execute_into` *is* that sampler
+//!   cost — it is the one backend that allocates in steady state, by
+//!   construction of the method.
 //! * [`DeepEnsemble`] — N independently initialised weight sets; the
-//!   calibration gold standard at N-times the memory cost.
+//!   calibration gold standard at N-times the memory cost.  Member
+//!   engines are built once at construction (the plan phase), so its
+//!   hot path is allocation-free like the native engine's.
+//!
+//! Both are registry backends (`mc-dropout`, `ensemble`) and reach the
+//! native engine only through [`registry::build`].
 
-use crate::infer::native::NativeEngine;
+use crate::infer::registry::{self, EngineName, EngineOpts};
 use crate::infer::{Engine, InferOutput};
 use crate::ivim::Param;
 use crate::masks::MaskSet;
@@ -25,17 +33,25 @@ pub struct McDropout {
     n_samples: usize,
     keep_prob: f64,
     rng: Pcg32,
+    /// One-sample output reused across the per-sample engine runs.
+    scratch: InferOutput,
 }
 
 impl McDropout {
     pub fn new(man: &Manifest, weights: &Weights, seed: u64) -> Self {
+        Self::with_batch(man, weights, man.batch_infer, seed)
+    }
+
+    /// MC-Dropout head with an explicit batch size (registry path).
+    pub fn with_batch(man: &Manifest, weights: &Weights, batch: usize, seed: u64) -> Self {
         McDropout {
             man: man.clone(),
             weights: weights.clone(),
-            batch: man.batch_infer,
+            batch,
             n_samples: man.n_samples,
             keep_prob: 1.0 / man.scale,
             rng: Pcg32::new(seed),
+            scratch: InferOutput::new(1, batch),
         }
     }
 
@@ -64,11 +80,15 @@ impl Engine for McDropout {
     fn batch_size(&self) -> usize {
         self.batch
     }
+    fn n_samples(&self) -> usize {
+        self.n_samples
+    }
 
-    fn infer_batch(&mut self, signals: &[f32]) -> anyhow::Result<InferOutput> {
-        let mut out = InferOutput::new(self.n_samples, self.batch);
+    fn execute_into(&mut self, signals: &[f32], out: &mut InferOutput) -> anyhow::Result<()> {
+        out.reset(self.n_samples, self.batch);
         for s in 0..self.n_samples {
-            // Build a one-sample manifest clone with random masks.
+            // Build a one-sample manifest clone with random masks — the
+            // runtime-sampler cost Masksembles' fixed masks avoid.
             let mut man = self.man.clone();
             man.n_samples = 1;
             for sn in man.subnets.clone() {
@@ -77,43 +97,77 @@ impl Engine for McDropout {
                     man.masks.insert(format!("{sn}.mask{layer}"), m);
                 }
             }
-            let mut eng = NativeEngine::with_batch(&man, &self.weights, self.batch)?;
-            let one = eng.infer_batch(signals)?;
+            let opts = EngineOpts {
+                batch: Some(self.batch),
+                ..Default::default()
+            };
+            let mut eng = registry::build(EngineName::Native, &man, &self.weights, &opts)?;
+            eng.execute_into(signals, &mut self.scratch)?;
             for p in Param::ALL {
                 for v in 0..self.batch {
-                    out.set(p, s, v, one.get(p, 0, v));
+                    out.set(p, s, v, self.scratch.get(p, 0, v));
                 }
             }
         }
-        Ok(out)
+        Ok(())
     }
 }
 
 /// Deep Ensemble: N independently initialised (optionally independently
-/// trained) weight vectors, no masks (all-ones).
+/// trained) weight vectors, no masks (all-ones).  Member engines are
+/// built once up front; `execute_into` just runs them in turn.
 pub struct DeepEnsemble {
-    man: Manifest,
-    members: Vec<Weights>,
+    members: Vec<Box<dyn Engine>>,
     batch: usize,
+    /// One-sample output reused across member runs.
+    scratch: InferOutput,
 }
 
 impl DeepEnsemble {
     /// Build from explicit member weights.
     pub fn new(man: &Manifest, members: Vec<Weights>) -> anyhow::Result<Self> {
-        anyhow::ensure!(!members.is_empty(), "ensemble needs members");
+        Self::with_batch(man, members, man.batch_infer)
+    }
+
+    /// Ensemble with an explicit batch size (registry path).
+    pub fn with_batch(
+        man: &Manifest,
+        member_weights: Vec<Weights>,
+        batch: usize,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(!member_weights.is_empty(), "ensemble needs members");
+        let dense = Self::all_ones_manifest(man);
+        let opts = EngineOpts {
+            batch: Some(batch),
+            ..Default::default()
+        };
+        let members = member_weights
+            .iter()
+            .map(|w| registry::build(EngineName::Native, &dense, w, &opts))
+            .collect::<anyhow::Result<Vec<_>>>()?;
         Ok(DeepEnsemble {
-            man: Self::all_ones_manifest(man),
             members,
-            batch: man.batch_infer,
+            batch,
+            scratch: InferOutput::new(1, batch),
         })
     }
 
     /// Fresh ensemble with random independent initialisations.
     pub fn init_random(man: &Manifest, n: usize, seed: u64) -> anyhow::Result<Self> {
+        Self::init_random_with_batch(man, n, seed, man.batch_infer)
+    }
+
+    /// `init_random` with an explicit batch size (registry path).
+    pub fn init_random_with_batch(
+        man: &Manifest,
+        n: usize,
+        seed: u64,
+        batch: usize,
+    ) -> anyhow::Result<Self> {
         let members = (0..n)
             .map(|i| Weights::init_random(man, seed + i as u64))
             .collect();
-        Self::new(man, members)
+        Self::with_batch(man, members, batch)
     }
 
     fn all_ones_manifest(man: &Manifest) -> Manifest {
@@ -155,20 +209,24 @@ impl Engine for DeepEnsemble {
     fn batch_size(&self) -> usize {
         self.batch
     }
+    fn n_samples(&self) -> usize {
+        self.members.len()
+    }
 
-    fn infer_batch(&mut self, signals: &[f32]) -> anyhow::Result<InferOutput> {
+    fn execute_into(&mut self, signals: &[f32], out: &mut InferOutput) -> anyhow::Result<()> {
         let n = self.members.len();
-        let mut out = InferOutput::new(n, self.batch);
-        for (s, w) in self.members.iter().enumerate() {
-            let mut eng = NativeEngine::with_batch(&self.man, w, self.batch)?;
-            let one = eng.infer_batch(signals)?;
+        out.reset(n, self.batch);
+        let batch = self.batch;
+        let scratch = &mut self.scratch;
+        for (s, eng) in self.members.iter_mut().enumerate() {
+            eng.execute_into(signals, scratch)?;
             for p in Param::ALL {
-                for v in 0..self.batch {
-                    out.set(p, s, v, one.get(p, 0, v));
+                for v in 0..batch {
+                    out.set(p, s, v, scratch.get(p, 0, v));
                 }
             }
         }
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -215,10 +273,24 @@ mod tests {
         let mut de = DeepEnsemble::init_random(&man, 3, 7).unwrap();
         assert_eq!(de.len(), 3);
         assert_eq!(de.memory_ratio(), 3.0);
+        assert_eq!(de.n_samples(), 3);
         let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 3);
         let out = de.infer_batch(&ds.signals).unwrap();
         let spread: f64 = (0..out.batch).map(|v| out.std(Param::D, v)).sum();
         assert!(spread > 0.0);
+    }
+
+    #[test]
+    fn deep_ensemble_hot_path_reuses_output() {
+        let Some((man, _)) = setup() else { return };
+        let mut de = DeepEnsemble::init_random(&man, 2, 9).unwrap();
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 4);
+        let mut out = InferOutput::new(de.n_samples(), de.batch_size());
+        de.execute_into(&ds.signals, &mut out).unwrap();
+        let before: Vec<*const f32> = out.samples.iter().map(|p| p.as_ptr()).collect();
+        de.execute_into(&ds.signals, &mut out).unwrap();
+        let after: Vec<*const f32> = out.samples.iter().map(|p| p.as_ptr()).collect();
+        assert_eq!(before, after, "ensemble hot path must not reallocate");
     }
 
     #[test]

@@ -137,6 +137,68 @@ pub fn black_box<T>(v: T) -> T {
     std::hint::black_box(v)
 }
 
+/// One machine-readable bench record for the cross-PR perf trajectory
+/// (`BENCH_<bench>.json` at the repository root).
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub name: String,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    /// Items per second (iterations/s when `items == 1`).
+    pub throughput: f64,
+}
+
+impl BenchRecord {
+    /// Record from a harness result; `items` is the per-iteration item
+    /// count the throughput is reported in (1 = iterations/s).
+    pub fn from_result(r: &BenchResult, items: usize) -> BenchRecord {
+        BenchRecord {
+            name: r.name.clone(),
+            p50_us: r.median_s * 1e6,
+            p99_us: r.p99_s * 1e6,
+            throughput: r.items_per_s(items),
+        }
+    }
+}
+
+/// The repository root (one level above this crate's manifest) — where
+/// the `BENCH_*.json` trajectory files live.
+pub fn repo_root() -> std::path::PathBuf {
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    manifest
+        .parent()
+        .unwrap_or(manifest)
+        .to_path_buf()
+}
+
+/// Write `BENCH_<bench>.json` at the repository root: an array of
+/// `{name, p50_us, p99_us, throughput}` objects, so the perf trajectory
+/// is diffable across PRs.  Returns the path written.
+pub fn write_bench_json(
+    bench_name: &str,
+    records: &[BenchRecord],
+) -> std::io::Result<std::path::PathBuf> {
+    use crate::util::json::Json;
+    let rows: Vec<Json> = records
+        .iter()
+        .map(|r| {
+            crate::json_obj! {
+                "name" => r.name.clone(),
+                "p50_us" => r.p50_us,
+                "p99_us" => r.p99_us,
+                "throughput" => r.throughput,
+            }
+        })
+        .collect();
+    let doc = crate::json_obj! {
+        "bench" => bench_name,
+        "results" => rows,
+    };
+    let path = repo_root().join(format!("BENCH_{bench_name}.json"));
+    std::fs::write(&path, doc.to_string_pretty())?;
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,5 +239,29 @@ mod tests {
         assert!(fmt_time(2e-3).ends_with(" ms"));
         assert!(fmt_time(2e-6).ends_with(" us"));
         assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn bench_record_converts_units() {
+        let r = BenchResult {
+            name: "case".into(),
+            iters: 10,
+            mean_s: 0.002,
+            median_s: 0.001,
+            std_s: 0.0,
+            min_s: 0.0009,
+            p99_s: 0.004,
+        };
+        let rec = BenchRecord::from_result(&r, 500);
+        assert_eq!(rec.name, "case");
+        assert!((rec.p50_us - 1000.0).abs() < 1e-9);
+        assert!((rec.p99_us - 4000.0).abs() < 1e-9);
+        assert!((rec.throughput - 250_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn repo_root_is_above_the_crate() {
+        let root = repo_root();
+        assert!(root.join("rust").exists() || root.exists());
     }
 }

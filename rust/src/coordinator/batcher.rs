@@ -5,8 +5,10 @@
 //!
 //! 1. a batch never exceeds `B` voxels;
 //! 2. a request never waits longer than `max_wait` before being flushed;
-//! 3. tail batches are padded (with the last real voxel repeated) up to
-//!    `B` — padding rows are marked so their outputs are dropped;
+//! 3. tail batches are zero-padded up to `B` — padding rows are marked
+//!    (`real`) so their outputs are dropped, and the zero fill makes a
+//!    padding leak deterministic and obvious rather than a silent copy
+//!    of a neighbouring patient's voxel;
 //! 4. FIFO order is preserved within and across batches.
 
 use std::collections::VecDeque;
@@ -110,7 +112,7 @@ impl<T> Batcher<T> {
     }
 
     /// Cut a batch (caller checked `ready`, but cutting an early batch is
-    /// legal too).  Pads the tail by repeating the last real row.
+    /// legal too).  Zero-fills the tail up to the static shape.
     pub fn cut(&mut self) -> Option<Batch<T>> {
         if self.queue.is_empty() {
             return None;
@@ -123,12 +125,8 @@ impl<T> Batcher<T> {
             signals.extend_from_slice(&p.signals);
             tags.push(p.tag);
         }
-        // Pad to the static shape with copies of the last row.
-        let last_row_start = (take - 1) * self.nb;
-        let last_row: Vec<f32> = signals[last_row_start..last_row_start + self.nb].to_vec();
-        for _ in take..self.cfg.batch_size {
-            signals.extend_from_slice(&last_row);
-        }
+        // Zero-pad to the static shape; padded rows are dropped by `real`.
+        signals.resize(self.cfg.batch_size * self.nb, 0.0);
         Some(Batch {
             signals,
             tags,
@@ -188,9 +186,11 @@ mod tests {
         assert_eq!(batch.real, 2);
         assert_eq!(batch.tags, vec![7, 8]);
         assert_eq!(batch.signals.len(), 16);
-        // padding rows repeat the last real row
-        assert_eq!(&batch.signals[8..12], &[8.0, 8.0, 8.0, 8.0]);
-        assert_eq!(&batch.signals[12..16], &[8.0, 8.0, 8.0, 8.0]);
+        // real rows intact, padding rows zero-filled
+        assert_eq!(&batch.signals[0..4], &[7.0, 7.0, 7.0, 7.0]);
+        assert_eq!(&batch.signals[4..8], &[8.0, 8.0, 8.0, 8.0]);
+        assert_eq!(&batch.signals[8..12], &[0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(&batch.signals[12..16], &[0.0, 0.0, 0.0, 0.0]);
     }
 
     #[test]
@@ -258,6 +258,140 @@ mod tests {
                     seen.extend(batch.tags);
                 }
                 seen == (0..n).collect::<Vec<_>>()
+            },
+        );
+    }
+
+    #[test]
+    fn property_tail_padding_is_zero_filled() {
+        use crate::testing::{forall, zip, Gen};
+        let nb = 3usize;
+        // For any batch size and queue length: every padding row of every
+        // cut batch is exactly zero, and every real row carries its own
+        // (non-zero) signals untouched.
+        forall(
+            80,
+            zip(Gen::usize_in(1, 24), Gen::usize_in(1, 80)),
+            |&(bs, n): &(usize, usize)| {
+                let mut b = Batcher::new(
+                    BatcherConfig {
+                        batch_size: bs,
+                        max_wait: Duration::from_millis(1),
+                        queue_capacity: 1000,
+                    },
+                    nb,
+                );
+                for i in 0..n {
+                    b.push(Pending {
+                        signals: vec![(i + 1) as f32; nb], // never zero
+                        tag: i,
+                        enqueued: Instant::now(),
+                    })
+                    .unwrap();
+                }
+                let mut next = 0usize;
+                while let Some(batch) = b.cut() {
+                    for row in 0..bs {
+                        let r = &batch.signals[row * nb..(row + 1) * nb];
+                        if row < batch.real {
+                            if r != vec![(next + 1) as f32; nb].as_slice() {
+                                return false;
+                            }
+                            next += 1;
+                        } else if r.iter().any(|&v| v != 0.0) {
+                            return false;
+                        }
+                    }
+                }
+                next == n
+            },
+        );
+    }
+
+    #[test]
+    fn property_fifo_holds_within_and_across_batches() {
+        use crate::testing::{forall, zip, Gen};
+        // Interleave pushes and cuts: tags must still come out in global
+        // FIFO order.  `cut_every` controls how often a cut is forced
+        // mid-stream (early partial cuts are legal).
+        forall(
+            60,
+            zip(Gen::usize_in(1, 16), Gen::usize_in(1, 7)),
+            |&(bs, cut_every): &(usize, usize)| {
+                let mut b = Batcher::new(
+                    BatcherConfig {
+                        batch_size: bs,
+                        max_wait: Duration::from_millis(1),
+                        queue_capacity: 1000,
+                    },
+                    2,
+                );
+                let n = 40usize;
+                let mut seen = Vec::new();
+                for i in 0..n {
+                    b.push(Pending {
+                        signals: vec![i as f32; 2],
+                        tag: i,
+                        enqueued: Instant::now(),
+                    })
+                    .unwrap();
+                    if (i + 1) % cut_every == 0 {
+                        if let Some(batch) = b.cut() {
+                            seen.extend(batch.tags);
+                        }
+                    }
+                }
+                while let Some(batch) = b.cut() {
+                    seen.extend(batch.tags);
+                }
+                seen == (0..n).collect::<Vec<_>>()
+            },
+        );
+    }
+
+    #[test]
+    fn property_deadline_flush_fires_with_partial_batch() {
+        use crate::testing::{forall, zip, Gen};
+        // For any batch size >= 2 and any shorter queue: the batch is not
+        // ready before the deadline, becomes ready after it, and the
+        // flush yields exactly one partial batch with all queued rows.
+        forall(
+            80,
+            zip(Gen::usize_in(2, 32), Gen::usize_in(1, 31)),
+            |&(bs, k): &(usize, usize)| {
+                let k = k.min(bs - 1); // strictly partial
+                let max_wait = Duration::from_millis(5);
+                let mut b = Batcher::new(
+                    BatcherConfig {
+                        batch_size: bs,
+                        max_wait,
+                        queue_capacity: 1000,
+                    },
+                    2,
+                );
+                let t0 = Instant::now();
+                for i in 0..k {
+                    b.push(Pending {
+                        signals: vec![i as f32; 2],
+                        tag: i,
+                        enqueued: t0,
+                    })
+                    .unwrap();
+                }
+                // not full, not old -> not ready at enqueue time
+                if b.ready(t0) {
+                    return false;
+                }
+                // past the deadline -> ready despite being partial
+                let late = t0 + max_wait * 2;
+                if !b.ready(late) {
+                    return false;
+                }
+                let Some(batch) = b.cut() else { return false };
+                batch.real == k
+                    && batch.tags == (0..k).collect::<Vec<_>>()
+                    && b.is_empty()
+                    && b.cut().is_none()
             },
         );
     }

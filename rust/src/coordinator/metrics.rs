@@ -144,6 +144,7 @@ impl ServingMetrics {
             padded_rows: self.padded_rows.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             mean_request_us: self.request_latency.mean_us(),
+            p50_request_us: self.request_latency.percentile_us(50.0) as f64,
             p99_request_us: self.request_latency.percentile_us(99.0) as f64,
             mean_batch_us: self.batch_latency.mean_us(),
             per_shard: self.shards.iter().map(|s| s.snapshot()).collect(),
@@ -160,6 +161,7 @@ pub struct MetricsSnapshot {
     pub padded_rows: u64,
     pub rejected: u64,
     pub mean_request_us: f64,
+    pub p50_request_us: f64,
     pub p99_request_us: f64,
     pub mean_batch_us: f64,
     pub per_shard: Vec<ShardSnapshot>,

@@ -7,20 +7,23 @@
 //!
 //! ```text
 //! clients ──► submit() ──► dispatcher (owns the Batcher)
-//!                 ▲  backpressure  │ round-robin batches
-//!                 │        ┌───────┼────────┐
-//!                 │        ▼       ▼        ▼
+//!                 ▲  backpressure  │ pushes full batches
+//!                 │                ▼
+//!                 │        ┌─ shared queue ─┐
+//!                 │        ▼       ▼        ▼   shards PULL when idle
 //!                 │    shard 0  shard 1 … shard K-1   (one Engine each,
 //!                 │        │       │        │          built in-thread)
 //!                 └────────┴── responses ───┘
 //! ```
 //!
 //! * [`batcher`] — groups requests into engine-sized batches under a
-//!   deadline (size-or-timeout policy), padding tail batches.
+//!   deadline (size-or-timeout policy), zero-padding tail batches.
 //! * [`server`] — the sharded worker pool (engines are not `Send`; each
-//!   shard builds its engine from a shared factory inside its thread),
-//!   round-robin batch dispatch, request/response plumbing, graceful
-//!   shutdown draining every shard.
+//!   shard builds its engine from a shared factory inside its thread).
+//!   Shards *pull* formed batches from a shared queue (work-stealing: a
+//!   slow shard never strands batches behind it) and run the two-phase
+//!   `execute_into` hot path into output buffers recycled through a
+//!   shared `infer::OutputPool`.  Graceful shutdown drains every shard.
 //! * [`uncertainty`] — per-voxel aggregation of the N mask samples into
 //!   prediction + relative uncertainty + confidence flag.
 //! * [`metrics`] — latency histogram, throughput, queue depth gauges and

@@ -164,4 +164,104 @@ mod tests {
         assert_eq!(r.get(Param::F).std, 0.0);
         assert_eq!(r.get(Param::F).relative, 0.0);
     }
+
+    /// Output whose F-parameter samples give an exactly representable
+    /// relative uncertainty of 0.5 (mean 2, std 1), with the other
+    /// parameters held constant (relative 0).
+    fn half_relative_output() -> InferOutput {
+        let mut out = InferOutput::new(4, 1);
+        for (s, v) in [(0usize, 1.0f32), (1, 1.0), (2, 3.0), (3, 3.0)] {
+            out.set(Param::F, s, 0, v);
+        }
+        for p in [Param::D, Param::DStar, Param::S0] {
+            for s in 0..4 {
+                out.set(p, s, 0, 1.0);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn std_and_relative_follow_definition() {
+        let out = half_relative_output();
+        let r = aggregate_voxel(&out, 0, &Thresholds::default());
+        let e = r.get(Param::F);
+        assert_eq!(e.mean, 2.0);
+        assert_eq!(e.std, 1.0);
+        assert_eq!(e.relative, 0.5);
+    }
+
+    #[test]
+    fn confidence_flag_is_strict_greater_than_threshold() {
+        let out = half_relative_output();
+        let mut thr = Thresholds {
+            d: 10.0,
+            dstar: 10.0,
+            f: 0.5,
+            s0: 10.0,
+        };
+        // relative == threshold exactly -> still confident (strict >)
+        let r = aggregate_voxel(&out, 0, &thr);
+        assert_eq!(r.get(Param::F).relative, thr.f);
+        assert!(r.confident, "exactly-at-threshold must not be flagged");
+        // nudge the threshold below -> flagged
+        thr.f = 0.5 - 1e-9;
+        assert!(!aggregate_voxel(&out, 0, &thr).confident);
+        // one bad parameter flips the whole voxel even when others pass:
+        // D has relative 0.0, and 0.0 > -eps, so D alone trips the flag
+        thr.f = 10.0;
+        thr.d = -f64::EPSILON;
+        assert!(!aggregate_voxel(&out, 0, &thr).confident);
+    }
+
+    #[test]
+    fn near_zero_mean_defines_relative_as_zero() {
+        let mut out = InferOutput::new(2, 1);
+        // mean ~ 0 but nonzero std: the guard must zero the relative
+        // uncertainty instead of dividing by ~0
+        out.set(Param::DStar, 0, 0, 1e-13);
+        out.set(Param::DStar, 1, 0, -1e-13);
+        let r = aggregate_voxel(&out, 0, &Thresholds::default());
+        let e = r.get(Param::DStar);
+        assert!(e.mean.abs() < 1e-12);
+        assert_eq!(e.relative, 0.0);
+    }
+
+    /// End-to-end: aggregate a real engine output built from the in-tree
+    /// fixture and check the reports' internal consistency.
+    #[test]
+    fn aggregates_fixture_engine_output_consistently() {
+        use crate::infer::registry::{build, EngineName, EngineOpts};
+        use crate::testing::fixture;
+        let (man, w) = fixture::tiny_fixture();
+        let mut eng = build(EngineName::Native, &man, &w, &EngineOpts::default()).unwrap();
+        let ds = crate::ivim::synth::synth_dataset(man.batch_infer, &man.bvalues, 20.0, 31);
+        let out = eng.infer_batch(&ds.signals).unwrap();
+        let thr = Thresholds::default();
+        let reports = aggregate_batch(&out, &thr);
+        assert_eq!(reports.len(), man.batch_infer);
+        for (v, r) in reports.iter().enumerate() {
+            let mut all_under = true;
+            for p in Param::ALL {
+                let e = r.get(p);
+                assert!(e.mean.is_finite() && e.std >= 0.0, "voxel {v} {p:?}");
+                // definition: relative = std/mean with the ~0-mean guard
+                let want = if e.mean.abs() < 1e-12 {
+                    0.0
+                } else {
+                    e.std / e.mean
+                };
+                assert_eq!(e.relative, want, "voxel {v} {p:?}");
+                if e.relative > thr.get(p) {
+                    all_under = false;
+                }
+            }
+            assert_eq!(r.confident, all_under, "voxel {v} flag disagrees");
+        }
+        // the batch helper and the per-voxel path agree
+        let m = mean_relative(&reports, Param::F);
+        let direct: f64 =
+            reports.iter().map(|r| r.get(Param::F).relative).sum::<f64>() / reports.len() as f64;
+        assert_eq!(m, direct);
+    }
 }

@@ -8,9 +8,8 @@
 //! weight memory multiplier, and whether a runtime sampler is needed
 //! (the paper's Fig. 4 hardware penalty).
 
-use crate::bayes::{DeepEnsemble, McDropout};
 use crate::experiments::fig67::run_batches;
-use crate::infer::native::NativeEngine;
+use crate::infer::registry::{self, EngineName, EngineOpts};
 use crate::infer::Engine;
 use crate::ivim::synth::synth_dataset;
 use crate::ivim::Param;
@@ -78,13 +77,14 @@ fn eval_engine(
     Ok((calibration, unc_noisy, unc_clean, max_delta))
 }
 
-/// Run the three-method ablation with the given weights.
+/// Run the three-method ablation with the given weights.  All three
+/// heads come from the engine registry, like every other consumer.
 pub fn ablation(man: &Manifest, weights: &Weights) -> anyhow::Result<Vec<AblationRow>> {
     let mut rows = Vec::new();
 
     // Masksembles (the paper's method): fixed masks from the manifest.
-    let mut ours = NativeEngine::new(man, weights)?;
-    let (cal, un, uc, rep) = eval_engine(&mut ours, man, 61)?;
+    let mut ours = registry::build(EngineName::Native, man, weights, &EngineOpts::default())?;
+    let (cal, un, uc, rep) = eval_engine(ours.as_mut(), man, 61)?;
     rows.push(AblationRow {
         method: "Masksembles (ours)".into(),
         calibration: cal,
@@ -96,8 +96,12 @@ pub fn ablation(man: &Manifest, weights: &Weights) -> anyhow::Result<Vec<Ablatio
     });
 
     // MC-Dropout: random Bernoulli masks per pass.
-    let mut mcd = McDropout::new(man, weights, 62);
-    let (cal, un, uc, rep) = eval_engine(&mut mcd, man, 61)?;
+    let mcd_opts = EngineOpts {
+        seed: 62,
+        ..Default::default()
+    };
+    let mut mcd = registry::build(EngineName::McDropout, man, weights, &mcd_opts)?;
+    let (cal, un, uc, rep) = eval_engine(mcd.as_mut(), man, 61)?;
     rows.push(AblationRow {
         method: "MC-Dropout".into(),
         calibration: cal,
@@ -110,9 +114,14 @@ pub fn ablation(man: &Manifest, weights: &Weights) -> anyhow::Result<Vec<Ablatio
 
     // Deep Ensemble: N independent weight sets (untrained members carry
     // init-diversity; with trained members this is the gold standard).
-    let mut de = DeepEnsemble::init_random(man, man.n_samples, 63)?;
-    let memory_x = de.memory_ratio();
-    let (cal, un, uc, rep) = eval_engine(&mut de, man, 61)?;
+    let ens_opts = EngineOpts {
+        seed: 63,
+        members: Some(man.n_samples),
+        ..Default::default()
+    };
+    let mut de = registry::build(EngineName::Ensemble, man, weights, &ens_opts)?;
+    let memory_x = de.n_samples() as f64;
+    let (cal, un, uc, rep) = eval_engine(de.as_mut(), man, 61)?;
     rows.push(AblationRow {
         method: "Deep Ensemble".into(),
         calibration: cal,

@@ -8,13 +8,12 @@
 //! * relative uncertainty falls as SNR rises — "less noise … leads to …
 //!   low uncertainty (more confident)" (Fig. 7).
 
-use super::EngineKind;
+use crate::infer::registry::{self, EngineName, EngineOpts};
 use crate::infer::{Engine, InferOutput};
 use crate::ivim::synth::{synth_dataset, Dataset};
 use crate::ivim::{Param, PAPER_SNRS};
 use crate::metrics;
 use crate::model::{Manifest, Weights};
-use crate::runtime::Runtime;
 
 /// One SNR level's evaluation results.
 #[derive(Debug, Clone)]
@@ -34,7 +33,8 @@ pub struct SweepConfig {
     /// Voxels per SNR level (paper: 10,000).
     pub n_voxels: usize,
     pub snrs: Vec<f64>,
-    pub engine: EngineKind,
+    /// Registry name of the backend the sweep runs on.
+    pub engine: EngineName,
     pub seed: u64,
 }
 
@@ -43,7 +43,7 @@ impl Default for SweepConfig {
         SweepConfig {
             n_voxels: 2000,
             snrs: PAPER_SNRS.to_vec(),
-            engine: EngineKind::Native,
+            engine: EngineName::Native,
             seed: 11,
         }
     }
@@ -77,13 +77,12 @@ pub fn run_batches(engine: &mut dyn Engine, ds: &Dataset) -> anyhow::Result<Vec<
 pub fn snr_sweep(
     man: &Manifest,
     weights: &Weights,
-    rt: Option<&Runtime>,
     cfg: &SweepConfig,
 ) -> anyhow::Result<Vec<SnrRow>> {
     let mut rows = Vec::with_capacity(cfg.snrs.len());
     for (i, &snr) in cfg.snrs.iter().enumerate() {
         let ds = synth_dataset(cfg.n_voxels, &man.bvalues, snr, cfg.seed + i as u64);
-        let mut engine = super::build_engine(cfg.engine, man, weights, rt)?;
+        let mut engine = registry::build(cfg.engine, man, weights, &EngineOpts::default())?;
         let outs = run_batches(engine.as_mut(), &ds)?;
         let mut rmse = [0.0; 4];
         let mut unc = [0.0; 4];
@@ -195,6 +194,7 @@ mod tests {
 
     #[test]
     fn sweep_shapes_hold_on_trained_tiny() {
+        use crate::runtime::Runtime;
         let Ok(man) = load_manifest("tiny") else { return };
         let Ok(rt) = Runtime::cpu() else { return };
         // quick training so uncertainty reflects data noise not init noise
@@ -202,10 +202,10 @@ mod tests {
         let cfg = SweepConfig {
             n_voxels: 400,
             snrs: vec![5.0, 50.0],
-            engine: EngineKind::Native,
+            engine: EngineName::Native,
             seed: 3,
         };
-        let rows = snr_sweep(&man, &w, None, &cfg).unwrap();
+        let rows = snr_sweep(&man, &w, &cfg).unwrap();
         assert_eq!(rows.len(), 2);
         // Fig. 6 shape: clean data fits better (reconstruction-driven
         // params D*, f dominate; use recon proxy via f RMSE)

@@ -7,30 +7,9 @@ pub mod fig67;
 pub mod fig8;
 pub mod tables;
 
-use crate::infer::native::NativeEngine;
-use crate::infer::Engine;
 use crate::model::manifest::{artifacts_root, Manifest};
 use crate::model::Weights;
-use crate::runtime::{InferExecutable, Runtime};
-
-/// Which inference backend an experiment runs on.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum EngineKind {
-    Native,
-    Pjrt,
-    AccelSim,
-}
-
-impl EngineKind {
-    pub fn parse(s: &str) -> anyhow::Result<EngineKind> {
-        Ok(match s {
-            "native" => EngineKind::Native,
-            "pjrt" => EngineKind::Pjrt,
-            "accel" => EngineKind::AccelSim,
-            other => anyhow::bail!("unknown engine '{other}' (native|pjrt|accel)"),
-        })
-    }
-}
+use crate::runtime::Runtime;
 
 /// Load a variant manifest from the artifacts root.
 pub fn load_manifest(variant: &str) -> anyhow::Result<Manifest> {
@@ -41,31 +20,6 @@ pub fn load_manifest(variant: &str) -> anyhow::Result<Manifest> {
         artifacts_root().display()
     );
     Manifest::load(&dir)
-}
-
-/// Build an engine of the requested kind.  `rt` is required for PJRT.
-pub fn build_engine(
-    kind: EngineKind,
-    man: &Manifest,
-    weights: &Weights,
-    rt: Option<&Runtime>,
-) -> anyhow::Result<Box<dyn Engine>> {
-    Ok(match kind {
-        EngineKind::Native => Box::new(NativeEngine::new(man, weights)?),
-        EngineKind::Pjrt => {
-            let rt = rt.ok_or_else(|| anyhow::anyhow!("PJRT engine needs a runtime"))?;
-            Box::new(InferExecutable::load(rt, man, weights)?)
-        }
-        EngineKind::AccelSim => Box::new(crate::accel::AccelSimulator::new(
-            man,
-            weights,
-            crate::accel::AccelConfig {
-                batch: man.batch_infer,
-                ..Default::default()
-            },
-            crate::accel::Scheme::BatchLevel,
-        )?),
-    })
 }
 
 /// Resolve weights: explicit stem > cached trained weights > train now >
@@ -122,22 +76,17 @@ mod tests {
     use super::*;
 
     #[test]
-    fn engine_kind_parse() {
-        assert_eq!(EngineKind::parse("native").unwrap(), EngineKind::Native);
-        assert_eq!(EngineKind::parse("pjrt").unwrap(), EngineKind::Pjrt);
-        assert_eq!(EngineKind::parse("accel").unwrap(), EngineKind::AccelSim);
-        assert!(EngineKind::parse("gpu").is_err());
-    }
-
-    #[test]
-    fn builds_all_engines_tiny() {
+    fn builds_registry_engines_on_artifacts() {
+        use crate::infer::registry::{build, EngineName, EngineOpts};
         let Ok(man) = load_manifest("tiny") else { return };
         let w = Weights::load_init(&man).unwrap();
-        assert!(build_engine(EngineKind::Native, &man, &w, None).is_ok());
-        assert!(build_engine(EngineKind::AccelSim, &man, &w, None).is_ok());
-        assert!(build_engine(EngineKind::Pjrt, &man, &w, None).is_err());
-        if let Ok(rt) = Runtime::cpu() {
-            assert!(build_engine(EngineKind::Pjrt, &man, &w, Some(&rt)).is_ok());
+        let opts = EngineOpts::default();
+        assert!(build(EngineName::Native, &man, &w, &opts).is_ok());
+        assert!(build(EngineName::Accel, &man, &w, &opts).is_ok());
+        if Runtime::cpu().is_ok() {
+            assert!(build(EngineName::Pjrt, &man, &w, &opts).is_ok());
+        } else {
+            assert!(build(EngineName::Pjrt, &man, &w, &opts).is_err());
         }
     }
 

@@ -15,11 +15,10 @@ use crate::accel::power::estimate;
 use crate::accel::resource::usage;
 use crate::accel::{AccelConfig, AccelSimulator, Scheme};
 use crate::bench::{bench, BenchConfig};
-use crate::infer::native::NativeEngine;
-use crate::infer::Engine;
+use crate::infer::registry::{self, EngineName, EngineOpts};
+use crate::infer::InferOutput;
 use crate::ivim::synth::synth_dataset;
 use crate::model::{Manifest, Weights};
-use crate::runtime::{InferExecutable, Runtime};
 
 /// Paper-reported constants used for context rows.
 pub mod paper {
@@ -63,25 +62,27 @@ pub struct Table2 {
     pub meets_realtime: bool,
 }
 
-/// Run Table II on a variant.
+/// Run Table II on a variant.  Errors when the PJRT runtime is
+/// unavailable (the table's point is CPU-native vs CPU-PJRT vs FPGA).
 pub fn table2(
     man: &Manifest,
     weights: &Weights,
-    rt: &Runtime,
     bench_cfg: &BenchConfig,
 ) -> anyhow::Result<Table2> {
     let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 21);
 
-    // CPU (native f32) — measured.
-    let mut native = NativeEngine::new(man, weights)?;
+    // CPU (native f32) — measured on the zero-allocation hot path.
+    let mut native = registry::build(EngineName::Native, man, weights, &EngineOpts::default())?;
+    let mut native_out = InferOutput::new(native.n_samples(), native.batch_size());
     let r_native = bench("cpu-native", bench_cfg, || {
-        let _ = native.infer_batch(&ds.signals).unwrap();
+        native.execute_into(&ds.signals, &mut native_out).unwrap();
     });
 
     // CPU (PJRT/XLA) — measured.
-    let mut pjrt = InferExecutable::load(rt, man, weights)?;
+    let mut pjrt = registry::build(EngineName::Pjrt, man, weights, &EngineOpts::default())?;
+    let mut pjrt_out = InferOutput::new(pjrt.n_samples(), pjrt.batch_size());
     let r_pjrt = bench("cpu-pjrt", bench_cfg, || {
-        let _ = pjrt.infer_batch(&ds.signals).unwrap();
+        pjrt.execute_into(&ds.signals, &mut pjrt_out).unwrap();
     });
 
     let cpu_ms = r_native.mean_ms().min(r_pjrt.mean_ms());
@@ -236,7 +237,9 @@ mod tests {
         // paper-scale model (Nb=104, batch 64) — the tiny variant is so
         // small that the derived GPU row beats the simulated FPGA.
         let Ok(man) = load_manifest("paper") else { return };
-        let Ok(rt) = Runtime::cpu() else { return };
+        if crate::runtime::Runtime::cpu().is_err() {
+            return; // stub build: Table II needs the PJRT engine
+        }
         let w = Weights::load_init(&man).unwrap();
         let cfg = BenchConfig {
             target_s: 0.05,
@@ -244,7 +247,7 @@ mod tests {
             min_iters: 2,
             max_iters: 50,
         };
-        let t = table2(&man, &w, &rt, &cfg).unwrap();
+        let t = table2(&man, &w, &cfg).unwrap();
         assert_eq!(t.rows.len(), 4);
         // ordering claim: FPGA < GPU < CPU latency
         let fpga = t.rows[3].latency_ms;

@@ -22,7 +22,7 @@ pub mod gridsearch;
 use crate::accel::dse::{best_fitting, sweep};
 use crate::accel::Scheme;
 use crate::experiments::fig67::{run_batches, snr_sweep, SnrRow, SweepConfig};
-use crate::experiments::EngineKind;
+use crate::infer::registry::EngineName;
 use crate::ivim::{Param, PAPER_SNRS};
 use crate::model::{Manifest, Weights};
 use crate::runtime::Runtime;
@@ -88,10 +88,10 @@ pub fn evaluate_requirements(
     let cfg = SweepConfig {
         n_voxels,
         snrs: PAPER_SNRS.to_vec(),
-        engine: EngineKind::Native,
+        engine: EngineName::Native,
         seed: 23,
     };
-    let rows = snr_sweep(man, weights, None, &cfg)?;
+    let rows = snr_sweep(man, weights, &cfg)?;
     let mut violations = Vec::new();
 
     // caps at the reference SNR
@@ -218,8 +218,13 @@ pub fn quick_uncertainty(
     n_voxels: usize,
 ) -> anyhow::Result<f64> {
     let ds = crate::ivim::synth::synth_dataset(n_voxels, &man.bvalues, snr, 31);
-    let mut eng = crate::infer::native::NativeEngine::new(man, weights)?;
-    let outs = run_batches(&mut eng, &ds)?;
+    let mut eng = crate::infer::registry::build(
+        crate::infer::registry::EngineName::Native,
+        man,
+        weights,
+        &crate::infer::registry::EngineOpts::default(),
+    )?;
+    let outs = run_batches(eng.as_mut(), &ds)?;
     Ok(Param::ALL
         .iter()
         .map(|&p| crate::metrics::mean_relative_uncertainty(&outs, p))

@@ -1,18 +1,27 @@
 //! Inference engines.
 //!
-//! Two implementations of the same uIVIM-NET forward pass:
+//! Five implementations of the same uIVIM-NET forward pass, all behind
+//! the [`Engine`] trait and constructed through [`registry`]:
 //!
 //! * [`native`] — pure-Rust f32 engine.  This is the measured "CPU"
 //!   baseline of Table II and the numeric oracle the accelerator
 //!   simulator is validated against.
+//! * `accel::AccelSimulator` — the Q4.12 cycle-level FPGA simulator.
+//! * `bayes::{McDropout, DeepEnsemble}` — uncertainty-method baselines.
 //! * `runtime::InferExecutable` — the AOT XLA executable (L2-lowered
 //!   model incl. the Pallas kernel) driven through PJRT.
 //!
-//! Both produce [`InferOutput`]: per-mask-sample parameter predictions,
+//! All produce [`InferOutput`]: per-mask-sample parameter predictions,
 //! from which the coordinator computes mean (prediction) and std/mean
-//! (relative uncertainty).
+//! (relative uncertainty).  The hot path is two-phase: engines size all
+//! internal scratch at construction (the *plan* step) and
+//! [`Engine::execute_into`] writes into a caller-provided, recyclable
+//! [`InferOutput`] — zero steady-state allocations.
 
 pub mod native;
+pub mod registry;
+
+use std::sync::Mutex;
 
 use crate::ivim::Param;
 
@@ -35,6 +44,20 @@ impl InferOutput {
             n_samples,
             batch,
             samples: [plane.clone(), plane.clone(), plane.clone(), plane],
+        }
+    }
+
+    /// Re-shape the buffer to `[n_samples][batch]` reusing its existing
+    /// allocations (a no-op beyond zeroing when the shape is unchanged).
+    /// This is what lets the coordinator's buffer pool recycle outputs
+    /// across batches without allocating on the hot path.
+    pub fn reset(&mut self, n_samples: usize, batch: usize) {
+        let len = n_samples * batch;
+        self.n_samples = n_samples;
+        self.batch = batch;
+        for plane in &mut self.samples {
+            plane.clear();
+            plane.resize(len, 0.0);
         }
     }
 
@@ -85,6 +108,12 @@ impl InferOutput {
 /// Common interface over inference engines so the coordinator, benches
 /// and examples can swap CPU / PJRT / accelerator-sim backends.
 ///
+/// The contract is two-phase: construction (via [`registry`]) sizes all
+/// internal scratch for a fixed batch shape, and [`Engine::execute_into`]
+/// is the steady-state hot path — it writes into a caller-provided
+/// [`InferOutput`] and allocates nothing.  [`Engine::infer_batch`] is the
+/// allocating convenience wrapper for cold paths and tests.
+///
 /// NOT `Send`: the xla crate's PJRT handles are `Rc`-based, so engines
 /// live on the thread that created them.  The coordinator accordingly
 /// takes an engine *factory* and constructs the engine inside its worker
@@ -95,9 +124,65 @@ pub trait Engine {
     /// Fixed batch size the engine processes per call (PJRT executables
     /// have a static batch; native engines adopt the same for fairness).
     fn batch_size(&self) -> usize;
-    /// Run one batch: `signals` is row-major `[batch][nb]`.  Implementors
-    /// must accept exactly `batch_size()` voxels.
-    fn infer_batch(&mut self, signals: &[f32]) -> anyhow::Result<InferOutput>;
+    /// Mask/ensemble samples per voxel in this engine's output (the N of
+    /// the `[N][batch]` output planes) — lets callers size buffers.
+    fn n_samples(&self) -> usize;
+    /// Run one batch into `out`: `signals` is row-major `[batch][nb]`.
+    /// Implementors must accept exactly `batch_size()` voxels, call
+    /// `out.reset(self.n_samples(), self.batch_size())` (which reuses the
+    /// buffer's allocations), and perform no other steady-state
+    /// allocation.
+    fn execute_into(&mut self, signals: &[f32], out: &mut InferOutput) -> anyhow::Result<()>;
+    /// Allocating wrapper over [`Engine::execute_into`] for cold paths.
+    fn infer_batch(&mut self, signals: &[f32]) -> anyhow::Result<InferOutput> {
+        let mut out = InferOutput::new(self.n_samples(), self.batch_size());
+        self.execute_into(signals, &mut out)?;
+        Ok(out)
+    }
+}
+
+/// Recycling pool of [`InferOutput`] buffers.
+///
+/// The coordinator's shards pull batches from a shared queue, execute
+/// into a pooled buffer and return it once the responses are aggregated,
+/// so steady-state serving performs no output allocation.  Bounded so a
+/// burst cannot hoard memory forever.
+pub struct OutputPool {
+    slots: Mutex<Vec<InferOutput>>,
+    cap: usize,
+}
+
+impl OutputPool {
+    /// Pool keeping at most `cap` idle buffers (min 1).
+    pub fn new(cap: usize) -> Self {
+        OutputPool {
+            slots: Mutex::new(Vec::new()),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Take a buffer, recycling a returned one when available.  Recycled
+    /// buffers come back with **stale shape and contents**: the
+    /// [`Engine::execute_into`] contract already reshapes and re-zeroes
+    /// via [`InferOutput::reset`], and doing it here too would pay a
+    /// second full-plane fill per batch on the hot path.
+    pub fn take(&self, n_samples: usize, batch: usize) -> InferOutput {
+        let recycled = self.slots.lock().expect("pool lock").pop();
+        recycled.unwrap_or_else(|| InferOutput::new(n_samples, batch))
+    }
+
+    /// Return a buffer to the pool (dropped when the pool is full).
+    pub fn put(&self, out: InferOutput) {
+        let mut slots = self.slots.lock().expect("pool lock");
+        if slots.len() < self.cap {
+            slots.push(out);
+        }
+    }
+
+    /// Idle buffers currently pooled.
+    pub fn idle(&self) -> usize {
+        self.slots.lock().expect("pool lock").len()
+    }
 }
 
 #[cfg(test)]
@@ -117,5 +202,48 @@ mod tests {
         );
         // untouched voxel 1 is all zeros -> relative uncertainty defined as 0
         assert_eq!(out.relative_uncertainty(Param::F, 1), 0.0);
+    }
+
+    #[test]
+    fn reset_reshapes_and_zeroes_without_losing_capacity() {
+        let mut out = InferOutput::new(4, 8);
+        out.set(Param::D, 3, 7, 1.5);
+        let cap_before = out.samples[0].capacity();
+        out.reset(2, 4);
+        assert_eq!(out.n_samples, 2);
+        assert_eq!(out.batch, 4);
+        for p in Param::ALL {
+            assert_eq!(out.samples[p.index()].len(), 8);
+            assert!(out.samples[p.index()].iter().all(|&v| v == 0.0));
+        }
+        // shrinking never reallocates
+        assert_eq!(out.samples[0].capacity(), cap_before);
+    }
+
+    #[test]
+    fn pool_recycles_and_bounds_idle_buffers() {
+        let pool = OutputPool::new(2);
+        let a = pool.take(4, 8);
+        let b = pool.take(4, 8);
+        let c = pool.take(4, 8);
+        assert_eq!(pool.idle(), 0);
+        pool.put(a);
+        pool.put(b);
+        pool.put(c); // beyond cap: dropped
+        assert_eq!(pool.idle(), 2);
+        // recycled buffers keep their stale shape (engines reset them);
+        // a single reset reshapes, re-zeroes, and keeps the allocation
+        let mut d = pool.take(2, 2);
+        assert_eq!(pool.idle(), 1);
+        assert_eq!(d.n_samples, 4, "take() must not pay a redundant reset");
+        let cap = d.samples[0].capacity();
+        d.reset(2, 2);
+        assert_eq!((d.n_samples, d.batch), (2, 2));
+        assert_eq!(d.samples[0].capacity(), cap);
+        d.set(Param::F, 0, 0, 3.0);
+        pool.put(d);
+        let mut e = pool.take(2, 2);
+        e.reset(2, 2);
+        assert_eq!(e.get(Param::F, 0, 0), 0.0, "reset() re-zeroes recycled buffers");
     }
 }

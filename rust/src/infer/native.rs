@@ -471,7 +471,11 @@ impl Engine for NativeEngine {
         self.batch
     }
 
-    fn infer_batch(&mut self, signals: &[f32]) -> anyhow::Result<InferOutput> {
+    fn n_samples(&self) -> usize {
+        self.n_samples
+    }
+
+    fn execute_into(&mut self, signals: &[f32], out: &mut InferOutput) -> anyhow::Result<()> {
         anyhow::ensure!(
             signals.len() == self.batch * self.nb,
             "expected {}x{} signals, got {}",
@@ -479,11 +483,11 @@ impl Engine for NativeEngine {
             self.nb,
             signals.len()
         );
-        let mut out = InferOutput::new(self.n_samples, self.batch);
+        out.reset(self.n_samples, self.batch);
         for si in 0..self.subnets.len() {
-            self.subnet_forward(si, signals, &mut out);
+            self.subnet_forward(si, signals, out);
         }
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -573,7 +577,10 @@ pub mod oracle {
         fn batch_size(&self) -> usize {
             self.batch
         }
-        fn infer_batch(&mut self, signals: &[f32]) -> anyhow::Result<InferOutput> {
+        fn n_samples(&self) -> usize {
+            self.n_samples
+        }
+        fn execute_into(&mut self, signals: &[f32], out: &mut InferOutput) -> anyhow::Result<()> {
             anyhow::ensure!(
                 signals.len() == self.batch * self.nb,
                 "expected {}x{} signals, got {}",
@@ -583,7 +590,7 @@ pub mod oracle {
             );
             let nb = self.nb;
             let batch = self.batch;
-            let mut out = InferOutput::new(self.n_samples, batch);
+            out.reset(self.n_samples, batch);
             for sn in &self.subnets {
                 for s in 0..self.n_samples {
                     masked_linear_reference(
@@ -619,7 +626,7 @@ pub mod oracle {
                     }
                 }
             }
-            Ok(out)
+            Ok(())
         }
     }
 }
@@ -694,6 +701,19 @@ mod tests {
     }
 
     #[test]
+    fn execute_into_reuses_buffers_across_calls() {
+        let (man, w) = setup();
+        let mut eng = NativeEngine::new(&man, &w).unwrap();
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 14);
+        let mut out = InferOutput::new(man.n_samples, man.batch_infer);
+        eng.execute_into(&ds.signals, &mut out).unwrap();
+        let before: Vec<*const f32> = out.samples.iter().map(|p| p.as_ptr()).collect();
+        eng.execute_into(&ds.signals, &mut out).unwrap();
+        let after: Vec<*const f32> = out.samples.iter().map(|p| p.as_ptr()).collect();
+        assert_eq!(before, after, "steady-state execute_into must not reallocate");
+    }
+
+    #[test]
     fn custom_batch_size_works() {
         let (man, w) = setup();
         let mut eng = NativeEngine::with_batch(&man, &w, 3).unwrap();
@@ -704,9 +724,14 @@ mod tests {
 
     /// Golden-vector regression: the blocked engine must be bit-for-bit
     /// identical to the seed scalar oracle on a fixed manifest — the
-    /// blocking/reordering may change nothing but wall-clock.
+    /// blocking/reordering may change nothing but wall-clock.  Runs
+    /// through the two-phase `execute_into` hot path with output buffers
+    /// *reused across shapes*, so buffer recycling is covered by the
+    /// golden gate too.
     #[test]
     fn blocked_matches_scalar_oracle_bit_for_bit() {
+        let mut a = InferOutput::new(1, 1);
+        let mut b = InferOutput::new(1, 1);
         for (tag, (man, w)) in [
             ("fixture", fixture::tiny_fixture()),
             (
@@ -723,8 +748,10 @@ mod tests {
             let mut blocked = NativeEngine::new(&man, &w).unwrap();
             let mut scalar = oracle::ScalarEngine::with_batch(&man, &w, man.batch_infer).unwrap();
             let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 11);
-            let a = blocked.infer_batch(&ds.signals).unwrap();
-            let b = scalar.infer_batch(&ds.signals).unwrap();
+            blocked.execute_into(&ds.signals, &mut a).unwrap();
+            scalar.execute_into(&ds.signals, &mut b).unwrap();
+            assert_eq!(a.n_samples, man.n_samples, "{tag}: reset reshaped the output");
+            assert_eq!(a.batch, man.batch_infer);
             for p in Param::ALL {
                 assert_eq!(
                     a.samples[p.index()],

@@ -1,0 +1,223 @@
+//! Engine registry — the single construction path for every inference
+//! backend.
+//!
+//! CLI (`repro serve --engine accel`), coordinator shards, experiments
+//! and benches all resolve engines by name here instead of hand-rolling
+//! their own construction:
+//!
+//! | name         | backend                                        |
+//! |--------------|------------------------------------------------|
+//! | `native`     | [`crate::infer::native::NativeEngine`]         |
+//! | `accel`      | [`crate::accel::AccelSimulator`] (batch-level) |
+//! | `mc-dropout` | [`crate::bayes::McDropout`]                    |
+//! | `ensemble`   | [`crate::bayes::DeepEnsemble`]                 |
+//! | `pjrt`       | `runtime::InferExecutable` (needs the `pjrt`   |
+//! |              | feature; errors cleanly on the stub build)     |
+//!
+//! Construction is the *plan* phase of the two-phase execution API: the
+//! returned engine has all scratch sized for its batch shape, and
+//! [`super::Engine::execute_into`] is the zero-allocation hot path.
+//!
+//! Engines are not `Send` (PJRT handles are `Rc`-based), so the
+//! coordinator takes [`factory`], which captures owned manifest/weights
+//! and builds the engine inside each shard's own thread.
+
+use super::Engine;
+use crate::model::{Manifest, Weights};
+
+/// A backend name resolvable by the registry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineName {
+    Native,
+    Accel,
+    McDropout,
+    Ensemble,
+    Pjrt,
+}
+
+impl EngineName {
+    /// Every registered backend, in help-text order.
+    pub const ALL: [EngineName; 5] = [
+        EngineName::Native,
+        EngineName::Accel,
+        EngineName::McDropout,
+        EngineName::Ensemble,
+        EngineName::Pjrt,
+    ];
+
+    /// The registry name (what `--engine` accepts).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EngineName::Native => "native",
+            EngineName::Accel => "accel",
+            EngineName::McDropout => "mc-dropout",
+            EngineName::Ensemble => "ensemble",
+            EngineName::Pjrt => "pjrt",
+        }
+    }
+
+    /// Parse a registry name.
+    pub fn parse(s: &str) -> anyhow::Result<EngineName> {
+        EngineName::ALL
+            .into_iter()
+            .find(|n| n.as_str() == s)
+            .ok_or_else(|| {
+                anyhow::anyhow!("unknown engine '{s}' (expected one of: {})", names_help())
+            })
+    }
+}
+
+/// `"native|accel|mc-dropout|ensemble|pjrt"` — for CLI help text.
+pub fn names_help() -> String {
+    EngineName::ALL
+        .iter()
+        .map(|n| n.as_str())
+        .collect::<Vec<_>>()
+        .join("|")
+}
+
+/// Construction options shared by every backend.  `Default` follows the
+/// manifest: batch = `batch_infer`, ensemble members = `n_samples`.
+#[derive(Debug, Clone)]
+pub struct EngineOpts {
+    /// Batch-size override (`None` = the manifest's `batch_infer`).  The
+    /// PJRT executable has a static batch and rejects overrides.
+    pub batch: Option<usize>,
+    /// Seed for the stochastic backends (mc-dropout mask stream,
+    /// ensemble member initialisation).
+    pub seed: u64,
+    /// Ensemble member count (`None` = the manifest's `n_samples`).
+    pub members: Option<usize>,
+}
+
+impl Default for EngineOpts {
+    fn default() -> Self {
+        EngineOpts {
+            batch: None,
+            seed: 42,
+            members: None,
+        }
+    }
+}
+
+/// Build an engine by registry name.  This is the only construction path
+/// for backends — everything else (CLI, coordinator, experiments,
+/// benches) goes through here.
+pub fn build(
+    name: EngineName,
+    man: &Manifest,
+    weights: &Weights,
+    opts: &EngineOpts,
+) -> anyhow::Result<Box<dyn Engine>> {
+    let batch = opts.batch.unwrap_or(man.batch_infer);
+    anyhow::ensure!(batch > 0, "engine batch must be positive");
+    Ok(match name {
+        EngineName::Native => Box::new(crate::infer::native::NativeEngine::with_batch(
+            man, weights, batch,
+        )?),
+        EngineName::Accel => Box::new(crate::accel::AccelSimulator::new(
+            man,
+            weights,
+            crate::accel::AccelConfig {
+                batch,
+                ..Default::default()
+            },
+            crate::accel::Scheme::BatchLevel,
+        )?),
+        EngineName::McDropout => Box::new(crate::bayes::McDropout::with_batch(
+            man, weights, batch, opts.seed,
+        )),
+        EngineName::Ensemble => Box::new(crate::bayes::DeepEnsemble::init_random_with_batch(
+            man,
+            opts.members.unwrap_or(man.n_samples),
+            opts.seed,
+            batch,
+        )?),
+        EngineName::Pjrt => {
+            anyhow::ensure!(
+                batch == man.batch_infer,
+                "pjrt executable has a static batch of {} (asked for {batch})",
+                man.batch_infer
+            );
+            let rt = crate::runtime::Runtime::cpu()?;
+            Box::new(crate::runtime::InferExecutable::load(&rt, man, weights)?)
+        }
+    })
+}
+
+/// A `Send + Sync` engine factory for the coordinator's shards: captures
+/// owned manifest/weights and constructs the engine inside the calling
+/// thread (engines themselves are not `Send`).
+pub fn factory(
+    name: EngineName,
+    man: Manifest,
+    weights: Weights,
+    opts: EngineOpts,
+) -> impl Fn() -> anyhow::Result<Box<dyn Engine>> + Send + Sync + 'static {
+    move || build(name, &man, &weights, &opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ivim::synth::synth_dataset;
+    use crate::testing::fixture;
+
+    #[test]
+    fn parse_roundtrips_every_name() {
+        for n in EngineName::ALL {
+            assert_eq!(EngineName::parse(n.as_str()).unwrap(), n);
+        }
+        assert!(EngineName::parse("gpu").is_err());
+        assert!(names_help().contains("mc-dropout"));
+    }
+
+    #[test]
+    fn builds_every_non_pjrt_backend_on_the_fixture() {
+        let (man, w) = fixture::tiny_fixture();
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 23);
+        for name in [
+            EngineName::Native,
+            EngineName::Accel,
+            EngineName::McDropout,
+            EngineName::Ensemble,
+        ] {
+            let mut eng = build(name, &man, &w, &EngineOpts::default()).unwrap();
+            assert_eq!(eng.batch_size(), man.batch_infer, "{name:?}");
+            assert!(eng.n_samples() >= 1, "{name:?}");
+            let out = eng.infer_batch(&ds.signals).unwrap();
+            assert_eq!(out.batch, man.batch_infer, "{name:?}");
+            assert_eq!(out.n_samples, eng.n_samples(), "{name:?}");
+        }
+    }
+
+    #[test]
+    fn batch_override_applies() {
+        let (man, w) = fixture::tiny_fixture();
+        let opts = EngineOpts {
+            batch: Some(3),
+            ..Default::default()
+        };
+        let mut eng = build(EngineName::Native, &man, &w, &opts).unwrap();
+        assert_eq!(eng.batch_size(), 3);
+        let ds = synth_dataset(3, &man.bvalues, 20.0, 24);
+        assert!(eng.infer_batch(&ds.signals).is_ok());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_unavailable_errors_cleanly() {
+        let (man, w) = fixture::tiny_fixture();
+        let e = build(EngineName::Pjrt, &man, &w, &EngineOpts::default()).unwrap_err();
+        assert!(e.to_string().contains("pjrt"), "{e}");
+    }
+
+    #[test]
+    fn factory_is_send_and_builds() {
+        let (man, w) = fixture::tiny_fixture();
+        let f = factory(EngineName::Native, man, w, EngineOpts::default());
+        let handle = std::thread::spawn(move || f().map(|e| e.batch_size()));
+        let batch = handle.join().unwrap().unwrap();
+        assert!(batch > 0);
+    }
+}

@@ -8,7 +8,8 @@ use uivim::accel::{AccelConfig, AccelSimulator, Scheme};
 use uivim::bench;
 use uivim::cli::{flag, opt, Args, Cli, CommandSpec};
 use uivim::coordinator::{Coordinator, CoordinatorConfig, VoxelRequest};
-use uivim::experiments::{self, fig67, fig8, tables, EngineKind};
+use uivim::experiments::{self, fig67, fig8, tables};
+use uivim::infer::registry::{self, EngineName, EngineOpts};
 use uivim::ivim::synth::synth_dataset;
 use uivim::ivim::Param;
 use uivim::masks;
@@ -20,7 +21,13 @@ use uivim::util::Timer;
 
 fn cli() -> Cli {
     let variant = || opt("variant", "artifact variant (tiny|paper)", Some("tiny"));
-    let engine = || opt("engine", "engine (native|pjrt|accel)", Some("native"));
+    let engine = || {
+        opt(
+            "engine",
+            "registry engine (native|accel|mc-dropout|ensemble|pjrt)",
+            Some("native"),
+        )
+    };
     let weights_opt = || opt("weights", "weights stem (<stem>.params.bin/.bn.bin)", None);
     let train_steps = || {
         opt(
@@ -179,9 +186,9 @@ fn main() {
 fn engine_and_weights(
     args: &Args,
     rt: Option<&Runtime>,
-) -> anyhow::Result<(uivim::model::Manifest, Weights, EngineKind)> {
+) -> anyhow::Result<(uivim::model::Manifest, Weights, EngineName)> {
     let man = experiments::load_manifest(args.get_or("variant", "tiny"))?;
-    let kind = EngineKind::parse(args.get_or("engine", "native"))?;
+    let kind = EngineName::parse(args.get_or("engine", "native"))?;
     let steps = args.get_usize("train-steps")?.unwrap_or(0);
     let w = experiments::resolve_weights(&man, rt, args.get("weights"), steps, 20.0)?;
     Ok((man, w, kind))
@@ -258,7 +265,8 @@ fn run(args: &Args) -> anyhow::Result<()> {
             let n = args.get_usize("n")?.unwrap_or(64);
             let snr = args.get_f64("snr")?.unwrap_or(20.0);
             let ds = synth_dataset(n, &man.bvalues, snr, 17);
-            let mut engine = experiments::build_engine(kind, &man, &w, rt.as_ref())?;
+            // the registry owns runtime creation for pjrt
+            let mut engine = registry::build(kind, &man, &w, &EngineOpts::default())?;
             let t = Timer::start();
             let outs = fig67::run_batches(engine.as_mut(), &ds)?;
             let el = t.elapsed_ms();
@@ -287,11 +295,12 @@ fn run(args: &Args) -> anyhow::Result<()> {
             let batch = args.get_usize("batch")?.unwrap_or(man.batch_infer).max(1);
             let shards = args.get_usize("shards")?.unwrap_or(1).max(1);
             let cfg = CoordinatorConfig::sharded(man.nb, batch, shards);
-            let man2 = man.clone();
-            let coord = Coordinator::start(cfg, move || {
-                let rt = Runtime::cpu().ok();
-                experiments::build_engine(kind, &man2, &w, rt.as_ref())
-            })?;
+            let opts = EngineOpts {
+                batch: Some(batch),
+                ..Default::default()
+            };
+            let coord =
+                Coordinator::start(cfg, registry::factory(kind, man.clone(), w, opts))?;
             let ds = synth_dataset(n, &man.bvalues, 20.0, 18);
             let t = Timer::start();
             let rxs: Vec<_> = (0..n)
@@ -342,7 +351,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 engine: kind,
                 ..Default::default()
             };
-            let rows = fig67::snr_sweep(&man, &w, rt.as_ref(), &cfg)?;
+            let rows = fig67::snr_sweep(&man, &w, &cfg)?;
             if args.command == "fig6" {
                 println!("{}", fig67::render_fig6(&rows));
             } else {
@@ -375,9 +384,10 @@ fn run(args: &Args) -> anyhow::Result<()> {
         }
         "table2" => {
             let man = experiments::load_manifest(args.get_or("variant", "tiny"))?;
-            let rt = Runtime::cpu()?; // Table II benches the PJRT engine itself
-            let w = experiments::resolve_weights(&man, Some(&rt), args.get("weights"), 0, 20.0)?;
-            let t = tables::table2(&man, &w, &rt, &bench::config_from_env())?;
+            // Table II benches the PJRT engine itself; the registry
+            // surfaces a clear error when the runtime is unavailable.
+            let w = experiments::resolve_weights(&man, None, args.get("weights"), 0, 20.0)?;
+            let t = tables::table2(&man, &w, &bench::config_from_env())?;
             println!("{}", tables::render_table2(&t));
         }
         "schemes" => {

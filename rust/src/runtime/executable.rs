@@ -218,8 +218,22 @@ impl Engine for InferExecutable {
     fn batch_size(&self) -> usize {
         self.man.batch_infer
     }
-    fn infer_batch(&mut self, signals: &[f32]) -> anyhow::Result<InferOutput> {
-        self.infer_with_recon(signals).map(|(o, _)| o)
+    fn n_samples(&self) -> usize {
+        self.man.n_samples
+    }
+    fn execute_into(&mut self, signals: &[f32], out: &mut InferOutput) -> anyhow::Result<()> {
+        // The PJRT FFI boundary materialises literals on its side of the
+        // fence regardless; reuse the caller's planes for the copy-out
+        // (clear+extend, not reset: every element is copied anyway, so
+        // the zero-fill would be a redundant second write pass).
+        let (res, _) = self.infer_with_recon(signals)?;
+        out.n_samples = res.n_samples;
+        out.batch = res.batch;
+        for (dst, src) in out.samples.iter_mut().zip(res.samples.iter()) {
+            dst.clear();
+            dst.extend_from_slice(src);
+        }
+        Ok(())
     }
 }
 

@@ -67,7 +67,10 @@ impl Engine for InferExecutable {
     fn batch_size(&self) -> usize {
         self.man.batch_infer
     }
-    fn infer_batch(&mut self, _signals: &[f32]) -> anyhow::Result<InferOutput> {
+    fn n_samples(&self) -> usize {
+        self.man.n_samples
+    }
+    fn execute_into(&mut self, _signals: &[f32], _out: &mut InferOutput) -> anyhow::Result<()> {
         Err(unavailable("PJRT inference executable"))
     }
 }

@@ -10,8 +10,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use uivim::coordinator::{Coordinator, CoordinatorConfig, VoxelRequest};
-use uivim::infer::native::NativeEngine;
-use uivim::infer::Engine;
+use uivim::infer::registry::{factory, EngineName, EngineOpts};
 use uivim::ivim::synth::synth_dataset;
 use uivim::ivim::Param;
 use uivim::model::Manifest;
@@ -19,14 +18,15 @@ use uivim::testing::fixture;
 
 fn start(batch: usize, capacity: usize, shards: usize) -> (Arc<Coordinator>, Manifest) {
     let (man, w) = fixture::tiny_fixture();
-    let man2 = man.clone();
     let mut cfg = CoordinatorConfig::sharded(man.nb, batch, shards);
     cfg.batcher.queue_capacity = capacity;
     cfg.batcher.max_wait = Duration::from_millis(1);
-    let coord = Coordinator::start(cfg, move || {
-        Ok(Box::new(NativeEngine::with_batch(&man2, &w, batch)?) as Box<dyn Engine>)
-    })
-    .expect("coordinator start");
+    let opts = EngineOpts {
+        batch: Some(batch),
+        ..Default::default()
+    };
+    let coord = Coordinator::start(cfg, factory(EngineName::Native, man.clone(), w, opts))
+        .expect("coordinator start");
     (Arc::new(coord), man)
 }
 
@@ -130,7 +130,7 @@ fn metrics_batch_sizes_are_batched_under_burst() {
 }
 
 #[test]
-fn sharded_burst_all_responses_delivered_no_starvation() {
+fn sharded_burst_all_responses_delivered() {
     let shards = 4;
     let (coord, man) = start(8, 100_000, shards);
     let n_clients = 4;
@@ -171,14 +171,18 @@ fn sharded_burst_all_responses_delivered_no_starvation() {
     assert_eq!(snap.rejected, 0);
     assert_eq!(coord.queue_depth(), 0);
 
-    // Per-shard accounting: responses partition across shards, and with
-    // ~125 round-robin batches no shard can have been starved.
+    // Per-shard accounting: responses and batches partition exactly
+    // across shards.  (Batch ownership itself is demand-driven under the
+    // work-stealing pull dispatcher, so only the totals are
+    // deterministic — a fast shard legitimately serves more.)
     assert_eq!(snap.per_shard.len(), shards);
     let by_shard: u64 = snap.per_shard.iter().map(|s| s.responses).sum();
     assert_eq!(by_shard, total, "shard counters must partition responses");
-    for (k, s) in snap.per_shard.iter().enumerate() {
-        assert!(s.batches > 0, "shard {k} starved: {:?}", snap.per_shard);
-    }
+    let batches_by_shard: u64 = snap.per_shard.iter().map(|s| s.batches).sum();
+    assert_eq!(
+        batches_by_shard, snap.batches,
+        "every batch claimed by exactly one shard"
+    );
 }
 
 #[test]
