@@ -6,7 +6,6 @@
 //! `UIVIM_BENCH_FAST=1` (fewer voxels / steps).
 
 use uivim::experiments::{fig67, load_manifest, resolve_weights};
-use uivim::infer::registry::EngineName;
 use uivim::runtime::Runtime;
 
 fn main() {
@@ -29,7 +28,7 @@ fn main() {
     let w = resolve_weights(&man, rt.as_ref(), None, steps, 20.0).expect("weights");
     let cfg = fig67::SweepConfig {
         n_voxels: if fast { 500 } else { 2000 },
-        engine: EngineName::Native,
+        engine: "native".into(),
         ..Default::default()
     };
     let rows = fig67::snr_sweep(&man, &w, &cfg).expect("sweep");

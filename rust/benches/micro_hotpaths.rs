@@ -8,11 +8,11 @@ use uivim::bench::{
     bench, black_box, config_from_env, print_results, write_bench_json, BenchRecord,
 };
 use uivim::experiments::load_manifest;
-use uivim::infer::native::{masked_linear_reference, BlockedMaskedLinear};
-use uivim::infer::registry::{build, EngineName, EngineOpts};
+use uivim::infer::native::{masked_linear_reference, BlockedMaskedLinear, NativeEngine};
+use uivim::infer::registry::{build, EngineOpts};
 use uivim::infer::InferOutput;
 use uivim::ivim::synth::synth_dataset;
-use uivim::masks;
+use uivim::masks::{self, MaskPlan};
 use uivim::model::Weights;
 use uivim::testing::fixture;
 use uivim::util::rng::Pcg32;
@@ -100,11 +100,51 @@ fn masked_linear_blocked_vs_scalar(
     speedup
 }
 
+/// Mask lifecycle at paper scale (nb=104): the per-redraw cost of the
+/// in-place `resample + swap_masks` hot path vs tearing the engine down
+/// and rebuilding it with the new masks baked in (the pre-refactor
+/// `McDropout` sampler cost).  Both include the Bernoulli redraw.
+fn mask_swap_vs_fresh_rebuild(
+    cfg: &uivim::bench::BenchConfig,
+    results: &mut Vec<uivim::bench::BenchResult>,
+) -> f64 {
+    let (man, w) = fixture::paper_fixture();
+    let mut rng = Pcg32::new(55);
+    let mut plan = MaskPlan::bernoulli(&man, 1.0 / man.scale, &mut rng);
+
+    let mut eng = NativeEngine::with_batch(&man, &w, man.batch_infer).unwrap();
+    let r_swap = bench("mask_swap_paper", cfg, || {
+        plan.resample(&mut rng);
+        eng.swap_masks(&plan).unwrap();
+        black_box(&eng);
+    });
+
+    let r_fresh = bench("mask_fresh_rebuild_paper", cfg, || {
+        plan.resample(&mut rng);
+        let mut man2 = man.clone();
+        plan.apply_to_manifest(&mut man2);
+        let fresh = NativeEngine::with_batch(&man2, &w, man.batch_infer).unwrap();
+        black_box(&fresh);
+    });
+
+    let speedup = r_fresh.mean_s / r_swap.mean_s;
+    println!(
+        "mask swap vs fresh engine rebuild @ nb=104: {speedup:.2}x \
+         ({:.2} us -> {:.2} us per mask redraw)",
+        r_fresh.mean_us(),
+        r_swap.mean_us()
+    );
+    results.push(r_fresh);
+    results.push(r_swap);
+    speedup
+}
+
 fn main() {
     let cfg = config_from_env();
     let mut results = Vec::new();
 
     let blocked_speedup = masked_linear_blocked_vs_scalar(&cfg, &mut results);
+    let swap_speedup = mask_swap_vs_fresh_rebuild(&cfg, &mut results);
 
     // fixed-point multiply-accumulate chain
     let xs: Vec<Fx> = (0..1024).map(|i| Fx::from_f32((i % 13) as f32 * 0.01)).collect();
@@ -176,7 +216,7 @@ fn main() {
                 }
             }
         };
-        let mut eng = build(EngineName::Native, &man, &w, &EngineOpts::default()).unwrap();
+        let mut eng = build("native", &man, &w, &EngineOpts::default()).unwrap();
         let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 8);
         let mut out = InferOutput::new(eng.n_samples(), eng.batch_size());
         results.push(bench(
@@ -200,6 +240,12 @@ fn main() {
         p50_us: 0.0,
         p99_us: 0.0,
         throughput: blocked_speedup,
+    });
+    records.push(BenchRecord {
+        name: "mask_swap_vs_fresh_rebuild_speedup".into(),
+        p50_us: 0.0,
+        p99_us: 0.0,
+        throughput: swap_speedup,
     });
     match write_bench_json("micro_hotpaths", &records) {
         Ok(p) => println!("wrote {}", p.display()),

@@ -199,6 +199,119 @@ pub fn write_bench_json(
     Ok(path)
 }
 
+/// Read a `BENCH_*.json` file back into records (the inverse of
+/// [`write_bench_json`]; tolerant of extra fields).
+pub fn read_bench_json(path: &std::path::Path) -> anyhow::Result<Vec<BenchRecord>> {
+    use crate::util::json::Json;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+    let arr = j
+        .get("results")
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{}: no 'results' array", path.display()))?;
+    Ok(arr
+        .iter()
+        .map(|r| BenchRecord {
+            name: r.get("name").as_str().unwrap_or("").to_string(),
+            p50_us: r.get("p50_us").as_f64().unwrap_or(0.0),
+            p99_us: r.get("p99_us").as_f64().unwrap_or(0.0),
+            throughput: r.get("throughput").as_f64().unwrap_or(0.0),
+        })
+        .collect())
+}
+
+/// Compare a fresh bench run against a committed baseline: any case
+/// whose p50 regressed by more than `max_regress` (0.20 = +20%) is a
+/// failure.  Baseline records with `p50_us == 0` are **unmeasured**
+/// sentinels (committed before a toolchain was available, or synthetic
+/// rows like speedup factors) and are skipped, as are cases missing
+/// from either side.  Returns the human-readable comparison table;
+/// `Err` carries the same table plus the offending cases.
+pub fn compare_bench_records(
+    baseline: &[BenchRecord],
+    current: &[BenchRecord],
+    max_regress: f64,
+) -> anyhow::Result<String> {
+    use crate::metrics::report::Table;
+    let mut t = Table::new(&["case", "baseline p50", "current p50", "delta", "verdict"]);
+    let mut regressions = Vec::new();
+    for b in baseline {
+        let Some(c) = current.iter().find(|c| c.name == b.name) else {
+            t.row(&[
+                b.name.clone(),
+                format!("{:.2} us", b.p50_us),
+                "-".into(),
+                "-".into(),
+                "missing (skipped)".into(),
+            ]);
+            continue;
+        };
+        if b.p50_us <= 0.0 {
+            t.row(&[
+                b.name.clone(),
+                "unmeasured".into(),
+                format!("{:.2} us", c.p50_us),
+                "-".into(),
+                "baseline pending".into(),
+            ]);
+            continue;
+        }
+        let delta = c.p50_us / b.p50_us - 1.0;
+        let regressed = delta > max_regress;
+        t.row(&[
+            b.name.clone(),
+            format!("{:.2} us", b.p50_us),
+            format!("{:.2} us", c.p50_us),
+            format!("{:+.1}%", delta * 100.0),
+            if regressed { "REGRESSED" } else { "ok" }.into(),
+        ]);
+        if regressed {
+            regressions.push(format!(
+                "{}: p50 {:.2} us -> {:.2} us ({:+.1}% > allowed {:+.1}%)",
+                b.name,
+                b.p50_us,
+                c.p50_us,
+                delta * 100.0,
+                max_regress * 100.0
+            ));
+        }
+    }
+    // Cases with no baseline row are not gated, but surfacing them keeps
+    // "add a bench case" honest about also committing its baseline.
+    for c in current {
+        if !baseline.iter().any(|b| b.name == c.name) {
+            t.row(&[
+                c.name.clone(),
+                "-".into(),
+                format!("{:.2} us", c.p50_us),
+                "-".into(),
+                "new (no baseline)".into(),
+            ]);
+        }
+    }
+    let report = t.to_text();
+    if regressions.is_empty() {
+        Ok(report)
+    } else {
+        anyhow::bail!(
+            "{report}\np50 regressions beyond the budget:\n  {}",
+            regressions.join("\n  ")
+        )
+    }
+}
+
+/// [`compare_bench_records`] over two `BENCH_*.json` files.
+pub fn compare_bench_files(
+    baseline: &std::path::Path,
+    current: &std::path::Path,
+    max_regress: f64,
+) -> anyhow::Result<String> {
+    let b = read_bench_json(baseline)?;
+    let c = read_bench_json(current)?;
+    compare_bench_records(&b, &c, max_regress)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -263,5 +376,57 @@ mod tests {
     fn repo_root_is_above_the_crate() {
         let root = repo_root();
         assert!(root.join("rust").exists() || root.exists());
+    }
+
+    fn rec(name: &str, p50: f64) -> BenchRecord {
+        BenchRecord {
+            name: name.into(),
+            p50_us: p50,
+            p99_us: p50 * 2.0,
+            throughput: 1.0,
+        }
+    }
+
+    #[test]
+    fn compare_flags_only_regressions_beyond_budget() {
+        let baseline = vec![rec("a", 100.0), rec("b", 100.0), rec("c", 0.0), rec("gone", 5.0)];
+        // a: +10% (ok), b: +50% (regressed), c: unmeasured (skipped),
+        // gone: missing from current (skipped), new: not in baseline
+        let current = vec![rec("a", 110.0), rec("b", 150.0), rec("c", 9.0), rec("new", 1.0)];
+        let err = compare_bench_records(&baseline, &current, 0.20).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("b: p50"), "{msg}");
+        assert!(!msg.contains("a: p50"), "{msg}");
+        assert!(!msg.contains("gone: p50"), "{msg}");
+        // within budget passes and reports every case
+        let ok = compare_bench_records(&baseline, &current, 0.60).unwrap();
+        assert!(ok.contains("unmeasured") && ok.contains("+50.0%"), "{ok}");
+    }
+
+    #[test]
+    fn compare_roundtrips_through_json_files() {
+        let dir = std::env::temp_dir().join("uivim_bench_diff_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let records = vec![rec("x", 10.0), rec("y", 20.0)];
+        let rows: Vec<crate::util::json::Json> = records
+            .iter()
+            .map(|r| {
+                crate::json_obj! {
+                    "name" => r.name.clone(),
+                    "p50_us" => r.p50_us,
+                    "p99_us" => r.p99_us,
+                    "throughput" => r.throughput,
+                }
+            })
+            .collect();
+        let doc = crate::json_obj! { "bench" => "t", "results" => rows };
+        let base = dir.join("base.json");
+        std::fs::write(&base, doc.to_string_pretty()).unwrap();
+        let back = read_bench_json(&base).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].name, "x");
+        assert!((back[1].p50_us - 20.0).abs() < 1e-9);
+        assert!(compare_bench_files(&base, &base, 0.2).is_ok());
+        assert!(compare_bench_files(&dir.join("nope.json"), &base, 0.2).is_err());
     }
 }

@@ -12,7 +12,10 @@
 //! 4. FIFO order is preserved within and across batches.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use crate::util::pool::VecPool;
 
 /// Configuration of the dynamic batcher.
 #[derive(Debug, Clone)]
@@ -60,6 +63,10 @@ pub struct Batcher<T> {
     cfg: BatcherConfig,
     nb: usize,
     queue: VecDeque<Pending<T>>,
+    /// Recycling pool for the per-batch signal buffers (`cut` would
+    /// otherwise allocate one `Vec<f32>` per batch).  Shared with
+    /// whoever consumes the batches, which returns buffers after use.
+    signal_pool: Option<Arc<VecPool>>,
 }
 
 impl<T> Batcher<T> {
@@ -69,7 +76,16 @@ impl<T> Batcher<T> {
             cfg,
             nb,
             queue: VecDeque::new(),
+            signal_pool: None,
         }
+    }
+
+    /// Batcher whose cut batches draw their signal buffers from (and,
+    /// via the consumer, return them to) `pool`.
+    pub fn with_pool(cfg: BatcherConfig, nb: usize, pool: Arc<VecPool>) -> Self {
+        let mut b = Self::new(cfg, nb);
+        b.signal_pool = Some(pool);
+        b
     }
 
     pub fn len(&self) -> usize {
@@ -118,7 +134,11 @@ impl<T> Batcher<T> {
             return None;
         }
         let take = self.queue.len().min(self.cfg.batch_size);
-        let mut signals = Vec::with_capacity(self.cfg.batch_size * self.nb);
+        let want = self.cfg.batch_size * self.nb;
+        let mut signals = match &self.signal_pool {
+            Some(pool) => pool.take(want),
+            None => Vec::with_capacity(want),
+        };
         let mut tags = Vec::with_capacity(take);
         for _ in 0..take {
             let p = self.queue.pop_front().expect("non-empty");
@@ -223,6 +243,34 @@ mod tests {
     fn empty_cut_is_none() {
         let mut b = mk(4, 10);
         assert!(b.cut().is_none());
+    }
+
+    /// A pool-backed batcher recycles returned signal buffers: the
+    /// second cut reuses the first cut's allocation instead of
+    /// allocating a fresh `Vec` per batch.
+    #[test]
+    fn pooled_cut_recycles_signal_buffers() {
+        let pool = Arc::new(VecPool::new(4));
+        let mut b = Batcher::with_pool(
+            BatcherConfig {
+                batch_size: 4,
+                max_wait: Duration::from_millis(1),
+                queue_capacity: 100,
+            },
+            4,
+            Arc::clone(&pool),
+        );
+        for i in 0..8 {
+            b.push(pend(i, 4)).unwrap();
+        }
+        let first = b.cut().unwrap();
+        assert_eq!(first.tags, vec![0, 1, 2, 3]);
+        let ptr = first.signals.as_ptr();
+        pool.put(first.signals); // the consumer's hand-back
+        let second = b.cut().unwrap();
+        assert_eq!(second.signals.as_ptr(), ptr, "cut must reuse the pooled buffer");
+        assert_eq!(second.tags, vec![4, 5, 6, 7]);
+        assert_eq!(&second.signals[0..4], &[4.0; 4]);
     }
 
     #[test]

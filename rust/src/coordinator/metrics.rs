@@ -147,12 +147,18 @@ impl ServingMetrics {
             p50_request_us: self.request_latency.percentile_us(50.0) as f64,
             p99_request_us: self.request_latency.percentile_us(99.0) as f64,
             mean_batch_us: self.batch_latency.mean_us(),
+            pooled_outputs: 0,
+            pooled_signals: 0,
+            queue_depth: 0,
             per_shard: self.shards.iter().map(|s| s.snapshot()).collect(),
         }
     }
 }
 
-/// Point-in-time copy of the counters.
+/// Point-in-time copy of the counters, plus the coordinator's live
+/// gauges (buffer-pool occupancy and pending queue depth — filled by
+/// `Coordinator::snapshot()`; zero when snapshotting the bare counter
+/// block, which cannot see the pools).
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
     pub requests: u64,
@@ -164,6 +170,12 @@ pub struct MetricsSnapshot {
     pub p50_request_us: f64,
     pub p99_request_us: f64,
     pub mean_batch_us: f64,
+    /// Idle recycled `InferOutput` buffers in the coordinator pool.
+    pub pooled_outputs: usize,
+    /// Idle recycled batch signal buffers in the coordinator pool.
+    pub pooled_signals: usize,
+    /// Requests admitted but not yet answered (pending queue length).
+    pub queue_depth: usize,
     pub per_shard: Vec<ShardSnapshot>,
 }
 

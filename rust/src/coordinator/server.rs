@@ -43,9 +43,10 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::batcher::{Batch, Batcher, BatcherConfig, Pending};
-use super::metrics::ServingMetrics;
+use super::metrics::{MetricsSnapshot, ServingMetrics};
 use super::uncertainty::{aggregate_voxel, Thresholds};
 use crate::infer::{Engine, OutputPool};
+use crate::util::pool::VecPool;
 
 pub use super::uncertainty::UncertaintyReport;
 
@@ -207,6 +208,7 @@ pub struct Coordinator {
     metrics: Arc<ServingMetrics>,
     depth: Arc<AtomicUsize>,
     pool: Arc<OutputPool>,
+    signal_pool: Arc<VecPool>,
     capacity: usize,
     nb: usize,
     shards: usize,
@@ -218,6 +220,7 @@ struct ShardCtx {
     index: usize,
     queue: Arc<WorkQueue>,
     pool: Arc<OutputPool>,
+    signal_pool: Arc<VecPool>,
     metrics: Arc<ServingMetrics>,
     depth: Arc<AtomicUsize>,
     thresholds: Thresholds,
@@ -242,6 +245,9 @@ impl Coordinator {
         // Enough pooled buffers for every shard to hold one in flight
         // plus one ready for hand-off.
         let pool = Arc::new(OutputPool::new(2 * shards));
+        // Same bound for the recycled batch *signal* buffers (one being
+        // filled by the dispatcher + one in flight per shard).
+        let signal_pool = Arc::new(VecPool::new(2 * shards));
 
         // Spawn the shard workers first; each builds its engine in-thread
         // and reports readiness (engine batch size) or the build error.
@@ -253,6 +259,7 @@ impl Coordinator {
                 index: k,
                 queue: Arc::clone(&queue),
                 pool: Arc::clone(&pool),
+                signal_pool: Arc::clone(&signal_pool),
                 metrics: Arc::clone(&metrics),
                 depth: Arc::clone(&depth),
                 thresholds: cfg.thresholds,
@@ -332,11 +339,13 @@ impl Coordinator {
         let d_metrics = Arc::clone(&metrics);
         let d_depth = Arc::clone(&depth);
         let d_queue = Arc::clone(&queue);
+        let d_signal_pool = Arc::clone(&signal_pool);
         let d_cfg = cfg.clone();
         let dispatcher = match std::thread::Builder::new()
             .name("uivim-dispatcher".into())
-            .spawn(move || dispatcher_loop(d_cfg, rx, &d_queue, &d_metrics, &d_depth))
-        {
+            .spawn(move || {
+                dispatcher_loop(d_cfg, rx, &d_queue, &d_metrics, &d_depth, d_signal_pool)
+            }) {
             Ok(h) => h,
             Err(e) => {
                 // shards are parked on the queue: release and join them
@@ -355,6 +364,7 @@ impl Coordinator {
             metrics,
             depth,
             pool,
+            signal_pool,
             capacity,
             nb,
             shards,
@@ -413,6 +423,22 @@ impl Coordinator {
         self.pool.idle()
     }
 
+    /// Idle recycled batch signal buffers.
+    pub fn pooled_signals(&self) -> usize {
+        self.signal_pool.idle()
+    }
+
+    /// Point-in-time metrics **including the live gauges** (pool sizes,
+    /// pending queue depth) that the raw counter block cannot see.
+    /// Prefer this over `metrics().snapshot()` for dashboards.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut s = self.metrics.snapshot();
+        s.pooled_outputs = self.pooled_outputs();
+        s.pooled_signals = self.pooled_signals();
+        s.queue_depth = self.queue_depth();
+        s
+    }
+
     fn stop(&mut self) {
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(d) = self.dispatcher.take() {
@@ -443,8 +469,10 @@ fn dispatcher_loop(
     queue: &WorkQueue,
     metrics: &ServingMetrics,
     depth: &AtomicUsize,
+    signal_pool: Arc<VecPool>,
 ) {
-    let mut batcher: Batcher<RowTag> = Batcher::new(cfg.batcher.clone(), cfg.nb);
+    let mut batcher: Batcher<RowTag> =
+        Batcher::with_pool(cfg.batcher.clone(), cfg.nb, signal_pool);
     let mut shutting_down = false;
 
     loop {
@@ -527,18 +555,19 @@ fn shard_loop(ctx: ShardCtx, engine: &mut dyn Engine) {
     let shard = ctx.metrics.shard(ctx.index);
     let n_samples = engine.n_samples();
     while let Some(batch) = ctx.queue.pull() {
+        let Batch { signals, tags, real } = batch;
         let mut out = ctx.pool.take(n_samples, ctx.batch_size);
         let t0 = Instant::now();
         // A panicking engine must not leak this batch's queue-depth
         // slots: release them, then let the unwind continue so the
         // thread's ShardExitGuard handles the rest of the queue.
         let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            engine.execute_into(&batch.signals, &mut out)
+            engine.execute_into(&signals, &mut out)
         }));
         let run = match run {
             Ok(r) => r,
             Err(payload) => {
-                for _ in &batch.tags {
+                for _ in &tags {
                     ctx.depth.fetch_sub(1, Ordering::AcqRel);
                 }
                 std::panic::resume_unwind(payload);
@@ -550,12 +579,12 @@ fn shard_loop(ctx: ShardCtx, engine: &mut dyn Engine) {
                 ctx.metrics.batch_latency.record_us(batch_us);
                 ctx.metrics.batches.fetch_add(1, Ordering::Relaxed);
                 ctx.metrics.padded_rows.fetch_add(
-                    (ctx.batch_size - batch.real) as u64,
+                    (ctx.batch_size - real) as u64,
                     Ordering::Relaxed,
                 );
                 shard.busy_us.fetch_add(batch_us, Ordering::Relaxed);
                 shard.batches.fetch_add(1, Ordering::Relaxed);
-                for (row, (id, resp_tx, enq)) in batch.tags.into_iter().enumerate() {
+                for (row, (id, resp_tx, enq)) in tags.into_iter().enumerate() {
                     let report = aggregate_voxel(&out, row, &ctx.thresholds);
                     ctx.metrics
                         .request_latency
@@ -569,20 +598,22 @@ fn shard_loop(ctx: ShardCtx, engine: &mut dyn Engine) {
             Err(e) => {
                 eprintln!("uivim-shard-{}: engine failure: {e:#}", ctx.index);
                 shard.engine_errors.fetch_add(1, Ordering::Relaxed);
-                for (_, _resp_tx, _) in batch.tags.into_iter() {
+                for (_, _resp_tx, _) in tags.into_iter() {
                     ctx.depth.fetch_sub(1, Ordering::AcqRel);
                     // dropping resp_tx signals the error to the caller
                 }
             }
         }
         ctx.pool.put(out);
+        // hand the batch's signal buffer back for the dispatcher's next cut
+        ctx.signal_pool.put(signals);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::infer::registry::{factory, EngineName, EngineOpts};
+    use crate::infer::registry::{factory, EngineOpts};
     use crate::infer::InferOutput;
     use crate::ivim::synth::synth_dataset;
     use crate::model::manifest::Manifest;
@@ -602,8 +633,7 @@ mod tests {
             batch: Some(batch),
             ..Default::default()
         };
-        let coord =
-            Coordinator::start(cfg, factory(EngineName::Native, man2, w, opts)).unwrap();
+        let coord = Coordinator::start(cfg, factory("native", man2, w, opts).unwrap()).unwrap();
         (coord, man)
     }
 
@@ -737,14 +767,15 @@ mod tests {
         cfg.batcher.max_wait = Duration::from_millis(1);
         let built = Arc::new(AtomicUsize::new(0));
         let inner = factory(
-            EngineName::Native,
+            "native",
             man.clone(),
             w,
             EngineOpts {
                 batch: Some(batch),
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         let coord = Coordinator::start(cfg, move || {
             // the first engine constructed is the slow one
             let delay = if built.fetch_add(1, Ordering::SeqCst) == 0 {
@@ -824,14 +855,15 @@ mod tests {
         cfg.batcher.queue_capacity = 10_000;
         cfg.batcher.max_wait = Duration::from_millis(1);
         let inner = factory(
-            EngineName::Native,
+            "native",
             man.clone(),
             w,
             EngineOpts {
                 batch: Some(batch),
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         let coord = Coordinator::start(cfg, move || {
             Ok(Box::new(PanicEngine { inner: inner()? }) as Box<dyn Engine>)
         })
@@ -880,16 +912,26 @@ mod tests {
         let deadline = Instant::now() + Duration::from_secs(5);
         loop {
             let pooled = coord.pooled_outputs();
-            assert!(pooled <= 4, "pool exceeded its bound: {pooled}");
-            if pooled >= 1 {
+            let signals = coord.pooled_signals();
+            assert!(pooled <= 4, "output pool exceeded its bound: {pooled}");
+            assert!(signals <= 4, "signal pool exceeded its bound: {signals}");
+            if pooled >= 1 && signals >= 1 {
                 break;
             }
             assert!(
                 Instant::now() < deadline,
-                "shards never returned buffers to the pool"
+                "shards never returned buffers to the pools \
+                 (outputs {pooled}, signals {signals})"
             );
             std::thread::sleep(Duration::from_millis(5));
         }
+        // the gauge-bearing snapshot sees what the raw counters cannot
+        let snap = coord.snapshot();
+        assert!(snap.pooled_outputs >= 1);
+        assert!(snap.pooled_signals >= 1);
+        assert_eq!(snap.queue_depth, 0, "all requests answered");
+        let bare = coord.metrics().snapshot();
+        assert_eq!(bare.pooled_outputs, 0, "bare counters cannot see the pools");
         coord.shutdown();
     }
 
@@ -980,7 +1022,7 @@ mod tests {
             batch: Some(16),
             ..Default::default()
         };
-        let r = Coordinator::start(cfg, factory(EngineName::Native, man, w, opts));
+        let r = Coordinator::start(cfg, factory("native", man, w, opts).unwrap());
         assert!(r.is_err());
     }
 }

@@ -231,10 +231,10 @@ mod tests {
     /// fixture and check the reports' internal consistency.
     #[test]
     fn aggregates_fixture_engine_output_consistently() {
-        use crate::infer::registry::{build, EngineName, EngineOpts};
+        use crate::infer::registry::{build, EngineOpts};
         use crate::testing::fixture;
         let (man, w) = fixture::tiny_fixture();
-        let mut eng = build(EngineName::Native, &man, &w, &EngineOpts::default()).unwrap();
+        let mut eng = build("native", &man, &w, &EngineOpts::default()).unwrap();
         let ds = crate::ivim::synth::synth_dataset(man.batch_infer, &man.bvalues, 20.0, 31);
         let out = eng.infer_batch(&ds.signals).unwrap();
         let thr = Thresholds::default();

@@ -6,15 +6,23 @@
 //! and monotonicity across SNR) and the hardware-relevant costs:
 //! repeatability (fixed masks are deterministic; MC-Dropout is not),
 //! weight memory multiplier, and whether a runtime sampler is needed
-//! (the paper's Fig. 4 hardware penalty).
+//! (the paper's Fig. 4 hardware penalty) — plus, for the sampler
+//! methods, the **per-sample sampler overhead in isolation**: what one
+//! mask redraw costs as a fresh engine build (the pre-refactor
+//! lifecycle) vs an in-place mask swap ([`sampler_overhead`]), which
+//! the mask-lifecycle refactor finally makes measurable.
 
 use crate::experiments::fig67::run_batches;
-use crate::infer::registry::{self, EngineName, EngineOpts};
+use crate::infer::native::NativeEngine;
+use crate::infer::registry::{self, EngineOpts};
 use crate::infer::Engine;
 use crate::ivim::synth::synth_dataset;
 use crate::ivim::Param;
+use crate::masks::MaskPlan;
 use crate::metrics;
 use crate::model::{Manifest, Weights};
+use crate::util::rng::Pcg32;
+use crate::util::Timer;
 
 /// One method's ablation row.
 #[derive(Debug, Clone)]
@@ -34,6 +42,47 @@ pub struct AblationRow {
     pub memory_x: f64,
     /// Needs a runtime RNG/sampler module in hardware.
     pub runtime_sampler: bool,
+    /// Per-sample sampler overhead when masks are applied by rebuilding
+    /// the engine (us; 0 = no runtime sampler needed).
+    pub sampler_fresh_us: f64,
+    /// Per-sample sampler overhead via the in-place mask swap (us).
+    pub sampler_swap_us: f64,
+}
+
+/// Measure the runtime-sampler overhead in isolation, per mask redraw:
+///
+/// * **fresh-build** — clone the manifest, bake the redrawn masks in,
+///   construct a new `NativeEngine` (the pre-refactor `McDropout`
+///   lifecycle: transpose + BN-fold + pack + allocate, every sample);
+/// * **mask-swap** — `MaskPlan::resample` + `NativeEngine::swap_masks`
+///   (the current hot path: in-place redraw + union re-pack).
+///
+/// Both include the Bernoulli redraw itself, so the difference is purely
+/// the mask-application machinery.  Returns `(fresh_us, swap_us)`.
+pub fn sampler_overhead(man: &Manifest, weights: &Weights) -> anyhow::Result<(f64, f64)> {
+    let iters = 50usize;
+    let mut rng = Pcg32::new(71);
+    let mut plan = MaskPlan::bernoulli(man, 1.0 / man.scale, &mut rng);
+
+    let t = Timer::start();
+    for _ in 0..iters {
+        plan.resample(&mut rng);
+        let mut man2 = man.clone();
+        plan.apply_to_manifest(&mut man2);
+        let eng = NativeEngine::with_batch(&man2, weights, man.batch_infer)?;
+        std::hint::black_box(&eng);
+    }
+    let fresh_us = t.elapsed_s() * 1e6 / iters as f64;
+
+    let mut eng = NativeEngine::with_batch(man, weights, man.batch_infer)?;
+    let t = Timer::start();
+    for _ in 0..iters {
+        plan.resample(&mut rng);
+        eng.swap_masks(&plan)?;
+    }
+    std::hint::black_box(&eng);
+    let swap_us = t.elapsed_s() * 1e6 / iters as f64;
+    Ok((fresh_us, swap_us))
 }
 
 fn eval_engine(
@@ -83,7 +132,7 @@ pub fn ablation(man: &Manifest, weights: &Weights) -> anyhow::Result<Vec<Ablatio
     let mut rows = Vec::new();
 
     // Masksembles (the paper's method): fixed masks from the manifest.
-    let mut ours = registry::build(EngineName::Native, man, weights, &EngineOpts::default())?;
+    let mut ours = registry::build("native", man, weights, &EngineOpts::default())?;
     let (cal, un, uc, rep) = eval_engine(ours.as_mut(), man, 61)?;
     rows.push(AblationRow {
         method: "Masksembles (ours)".into(),
@@ -93,14 +142,18 @@ pub fn ablation(man: &Manifest, weights: &Weights) -> anyhow::Result<Vec<Ablatio
         repeatability: rep,
         memory_x: 1.0, // mask-zero skipping: N partial copies ≈ 1 dense set
         runtime_sampler: false,
+        sampler_fresh_us: 0.0,
+        sampler_swap_us: 0.0,
     });
 
-    // MC-Dropout: random Bernoulli masks per pass.
+    // MC-Dropout: random Bernoulli masks per pass.  The sampler columns
+    // isolate what one redraw costs under the two mask lifecycles.
     let mcd_opts = EngineOpts {
         seed: 62,
         ..Default::default()
     };
-    let mut mcd = registry::build(EngineName::McDropout, man, weights, &mcd_opts)?;
+    let (sampler_fresh_us, sampler_swap_us) = sampler_overhead(man, weights)?;
+    let mut mcd = registry::build("mc-dropout", man, weights, &mcd_opts)?;
     let (cal, un, uc, rep) = eval_engine(mcd.as_mut(), man, 61)?;
     rows.push(AblationRow {
         method: "MC-Dropout".into(),
@@ -110,6 +163,8 @@ pub fn ablation(man: &Manifest, weights: &Weights) -> anyhow::Result<Vec<Ablatio
         repeatability: rep,
         memory_x: 1.0,
         runtime_sampler: true, // the Fig.-4 hardware penalty
+        sampler_fresh_us,
+        sampler_swap_us,
     });
 
     // Deep Ensemble: N independent weight sets (untrained members carry
@@ -119,7 +174,7 @@ pub fn ablation(man: &Manifest, weights: &Weights) -> anyhow::Result<Vec<Ablatio
         members: Some(man.n_samples),
         ..Default::default()
     };
-    let mut de = registry::build(EngineName::Ensemble, man, weights, &ens_opts)?;
+    let mut de = registry::build("ensemble", man, weights, &ens_opts)?;
     let memory_x = de.n_samples() as f64;
     let (cal, un, uc, rep) = eval_engine(de.as_mut(), man, 61)?;
     rows.push(AblationRow {
@@ -130,6 +185,8 @@ pub fn ablation(man: &Manifest, weights: &Weights) -> anyhow::Result<Vec<Ablatio
         repeatability: rep,
         memory_x,
         runtime_sampler: false,
+        sampler_fresh_us: 0.0,
+        sampler_swap_us: 0.0,
     });
 
     Ok(rows)
@@ -139,9 +196,17 @@ pub fn ablation(man: &Manifest, weights: &Weights) -> anyhow::Result<Vec<Ablatio
 pub fn render(rows: &[AblationRow]) -> String {
     use crate::metrics::report::Table;
     let mut t = Table::new(&[
-        "method", "calibration", "unc@SNR5", "unc@SNR50", "repeatability", "memory", "runtime sampler",
+        "method", "calibration", "unc@SNR5", "unc@SNR50", "repeatability", "memory",
+        "runtime sampler", "sampler fresh-build", "sampler mask-swap",
     ]);
     for r in rows {
+        let sampler_col = |us: f64| {
+            if r.runtime_sampler {
+                format!("{us:.1} us/sample")
+            } else {
+                "-".into()
+            }
+        };
         t.row(&[
             r.method.clone(),
             format!("{:.3}", r.calibration),
@@ -154,6 +219,8 @@ pub fn render(rows: &[AblationRow]) -> String {
             },
             format!("{:.0}x", r.memory_x),
             if r.runtime_sampler { "REQUIRED" } else { "none" }.into(),
+            sampler_col(r.sampler_fresh_us),
+            sampler_col(r.sampler_swap_us),
         ]);
     }
     t.to_text()
@@ -178,6 +245,9 @@ mod tests {
         assert!(mcd.repeatability > 0.0, "MC-Dropout is not repeatable");
         assert!(!ours.runtime_sampler && mcd.runtime_sampler);
         assert!(de.memory_x >= 2.0, "ensembles pay the memory cost");
+        // Sampler overhead is reported (and only) for the sampler method.
+        assert!(mcd.sampler_fresh_us > 0.0 && mcd.sampler_swap_us > 0.0);
+        assert_eq!(ours.sampler_fresh_us, 0.0);
         // All three methods show more uncertainty on noisier data.
         for r in &rows {
             assert!(
@@ -189,5 +259,21 @@ mod tests {
             );
         }
         assert!(render(&rows).contains("Masksembles"));
+        let rendered = render(&rows);
+        assert!(rendered.contains("sampler fresh-build"));
+        assert!(rendered.contains("sampler mask-swap"));
+    }
+
+    /// Fixture-backed (never skips): both sampler lifecycles are
+    /// measurable.  The swap-vs-fresh *magnitude* claim lives in the
+    /// `micro_hotpaths` bench, not here — wall-clock comparisons on a
+    /// contended CI runner are a flaky-test class, so the unit test
+    /// only asserts the measurement machinery works.
+    #[test]
+    fn sampler_overhead_is_measurable() {
+        let (man, w) = crate::testing::fixture::tiny_fixture();
+        let (fresh_us, swap_us) = sampler_overhead(&man, &w).unwrap();
+        assert!(fresh_us > 0.0 && fresh_us.is_finite());
+        assert!(swap_us > 0.0 && swap_us.is_finite());
     }
 }

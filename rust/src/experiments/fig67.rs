@@ -8,7 +8,7 @@
 //! * relative uncertainty falls as SNR rises — "less noise … leads to …
 //!   low uncertainty (more confident)" (Fig. 7).
 
-use crate::infer::registry::{self, EngineName, EngineOpts};
+use crate::infer::registry::{self, EngineOpts};
 use crate::infer::{Engine, InferOutput};
 use crate::ivim::synth::{synth_dataset, Dataset};
 use crate::ivim::{Param, PAPER_SNRS};
@@ -34,7 +34,7 @@ pub struct SweepConfig {
     pub n_voxels: usize,
     pub snrs: Vec<f64>,
     /// Registry name of the backend the sweep runs on.
-    pub engine: EngineName,
+    pub engine: String,
     pub seed: u64,
 }
 
@@ -43,7 +43,7 @@ impl Default for SweepConfig {
         SweepConfig {
             n_voxels: 2000,
             snrs: PAPER_SNRS.to_vec(),
-            engine: EngineName::Native,
+            engine: "native".into(),
             seed: 11,
         }
     }
@@ -82,7 +82,7 @@ pub fn snr_sweep(
     let mut rows = Vec::with_capacity(cfg.snrs.len());
     for (i, &snr) in cfg.snrs.iter().enumerate() {
         let ds = synth_dataset(cfg.n_voxels, &man.bvalues, snr, cfg.seed + i as u64);
-        let mut engine = registry::build(cfg.engine, man, weights, &EngineOpts::default())?;
+        let mut engine = registry::build(&cfg.engine, man, weights, &EngineOpts::default())?;
         let outs = run_batches(engine.as_mut(), &ds)?;
         let mut rmse = [0.0; 4];
         let mut unc = [0.0; 4];
@@ -202,7 +202,7 @@ mod tests {
         let cfg = SweepConfig {
             n_voxels: 400,
             snrs: vec![5.0, 50.0],
-            engine: EngineName::Native,
+            engine: "native".into(),
             seed: 3,
         };
         let rows = snr_sweep(&man, &w, &cfg).unwrap();

@@ -77,16 +77,16 @@ mod tests {
 
     #[test]
     fn builds_registry_engines_on_artifacts() {
-        use crate::infer::registry::{build, EngineName, EngineOpts};
+        use crate::infer::registry::{build, EngineOpts};
         let Ok(man) = load_manifest("tiny") else { return };
         let w = Weights::load_init(&man).unwrap();
         let opts = EngineOpts::default();
-        assert!(build(EngineName::Native, &man, &w, &opts).is_ok());
-        assert!(build(EngineName::Accel, &man, &w, &opts).is_ok());
+        assert!(build("native", &man, &w, &opts).is_ok());
+        assert!(build("accel", &man, &w, &opts).is_ok());
         if Runtime::cpu().is_ok() {
-            assert!(build(EngineName::Pjrt, &man, &w, &opts).is_ok());
+            assert!(build("pjrt", &man, &w, &opts).is_ok());
         } else {
-            assert!(build(EngineName::Pjrt, &man, &w, &opts).is_err());
+            assert!(build("pjrt", &man, &w, &opts).is_err());
         }
     }
 

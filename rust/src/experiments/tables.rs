@@ -15,7 +15,7 @@ use crate::accel::power::estimate;
 use crate::accel::resource::usage;
 use crate::accel::{AccelConfig, AccelSimulator, Scheme};
 use crate::bench::{bench, BenchConfig};
-use crate::infer::registry::{self, EngineName, EngineOpts};
+use crate::infer::registry::{self, EngineOpts};
 use crate::infer::InferOutput;
 use crate::ivim::synth::synth_dataset;
 use crate::model::{Manifest, Weights};
@@ -72,14 +72,14 @@ pub fn table2(
     let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 21);
 
     // CPU (native f32) — measured on the zero-allocation hot path.
-    let mut native = registry::build(EngineName::Native, man, weights, &EngineOpts::default())?;
+    let mut native = registry::build("native", man, weights, &EngineOpts::default())?;
     let mut native_out = InferOutput::new(native.n_samples(), native.batch_size());
     let r_native = bench("cpu-native", bench_cfg, || {
         native.execute_into(&ds.signals, &mut native_out).unwrap();
     });
 
     // CPU (PJRT/XLA) — measured.
-    let mut pjrt = registry::build(EngineName::Pjrt, man, weights, &EngineOpts::default())?;
+    let mut pjrt = registry::build("pjrt", man, weights, &EngineOpts::default())?;
     let mut pjrt_out = InferOutput::new(pjrt.n_samples(), pjrt.batch_size());
     let r_pjrt = bench("cpu-pjrt", bench_cfg, || {
         pjrt.execute_into(&ds.signals, &mut pjrt_out).unwrap();

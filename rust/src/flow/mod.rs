@@ -22,7 +22,6 @@ pub mod gridsearch;
 use crate::accel::dse::{best_fitting, sweep};
 use crate::accel::Scheme;
 use crate::experiments::fig67::{run_batches, snr_sweep, SnrRow, SweepConfig};
-use crate::infer::registry::EngineName;
 use crate::ivim::{Param, PAPER_SNRS};
 use crate::model::{Manifest, Weights};
 use crate::runtime::Runtime;
@@ -88,7 +87,7 @@ pub fn evaluate_requirements(
     let cfg = SweepConfig {
         n_voxels,
         snrs: PAPER_SNRS.to_vec(),
-        engine: EngineName::Native,
+        engine: "native".into(),
         seed: 23,
     };
     let rows = snr_sweep(man, weights, &cfg)?;
@@ -219,7 +218,7 @@ pub fn quick_uncertainty(
 ) -> anyhow::Result<f64> {
     let ds = crate::ivim::synth::synth_dataset(n_voxels, &man.bvalues, snr, 31);
     let mut eng = crate::infer::registry::build(
-        crate::infer::registry::EngineName::Native,
+        "native",
         man,
         weights,
         &crate::infer::registry::EngineOpts::default(),

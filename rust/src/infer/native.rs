@@ -34,7 +34,7 @@
 
 use super::{Engine, InferOutput};
 use crate::ivim::Param;
-use crate::masks::MaskSet;
+use crate::masks::{LayerPlan, MaskPlan, MaskSet};
 use crate::model::{Manifest, SubnetWeights, Weights};
 
 const EPS: f32 = 1e-5;
@@ -172,8 +172,21 @@ pub fn masked_linear_reference(
 /// Storage is the union of kept outputs across all N mask samples — the
 /// mask-zero-skipped "stored weights" of the paper's Fig. 4, shared by
 /// every sample — plus per-sample index lists into that block.
+///
+/// The layer also retains the full folded-BN dense tensors so the union
+/// block can be re-packed **in place** for a new mask plan
+/// ([`BlockedMaskedLinear::swap_masks`]): every packed buffer is
+/// reserved for the worst case (union = all `nb` outputs) at
+/// construction, so a swap never allocates and the weights are read
+/// from the retained dense copy, never re-derived.
 pub struct BlockedMaskedLinear {
     nb: usize,
+    /// Retained dense tensors (transposed weights, bias, folded BN) —
+    /// the source every re-pack reads from.
+    dense_w: Vec<f32>,
+    dense_b: Vec<f32>,
+    dense_scale: Vec<f32>,
+    dense_shift: Vec<f32>,
     /// Output indices present in at least one sample's mask, ascending.
     union: Vec<usize>,
     /// Packed transposed weight rows: `w[p*nb..(p+1)*nb]` is the row of
@@ -184,6 +197,8 @@ pub struct BlockedMaskedLinear {
     shift: Vec<f32>,
     /// Per sample: positions into `union` of that sample's kept outputs.
     kept_pos: Vec<Vec<u32>>,
+    /// Scratch: output index -> packed position (`u32::MAX` = dropped).
+    pos_of: Vec<u32>,
 }
 
 impl BlockedMaskedLinear {
@@ -198,38 +213,97 @@ impl BlockedMaskedLinear {
         mask: &MaskSet,
     ) -> Self {
         assert_eq!(mask.width, nb, "mask width must match the layer");
-        let union: Vec<usize> = (0..nb)
-            .filter(|&o| (0..mask.n).any(|s| mask.row(s)[o] == 1))
+        let union: Vec<u32> = (0..nb as u32)
+            .filter(|&o| (0..mask.n).any(|s| mask.row(s)[o as usize] == 1))
             .collect();
-        let mut pos_of = vec![u32::MAX; nb];
-        let mut pw = Vec::with_capacity(union.len() * nb);
-        let mut pb = Vec::with_capacity(union.len());
-        let mut pscale = Vec::with_capacity(union.len());
-        let mut pshift = Vec::with_capacity(union.len());
-        for (p, &o) in union.iter().enumerate() {
-            pos_of[o] = p as u32;
-            pw.extend_from_slice(&w_t[o * nb..(o + 1) * nb]);
-            pb.push(b[o]);
-            pscale.push(scale[o]);
-            pshift.push(shift[o]);
-        }
-        let kept_pos = (0..mask.n)
+        let kept: Vec<Vec<u32>> = (0..mask.n)
             .map(|s| {
                 mask.kept_indices(s)
                     .into_iter()
-                    .map(|o| pos_of[o])
+                    .map(|o| o as u32)
                     .collect()
             })
             .collect();
-        BlockedMaskedLinear {
+        let mut layer = BlockedMaskedLinear {
             nb,
-            union,
-            w: pw,
-            b: pb,
-            scale: pscale,
-            shift: pshift,
-            kept_pos,
+            dense_w: w_t.to_vec(),
+            dense_b: b.to_vec(),
+            dense_scale: scale.to_vec(),
+            dense_shift: shift.to_vec(),
+            union: Vec::with_capacity(nb),
+            w: Vec::with_capacity(nb * nb),
+            b: Vec::with_capacity(nb),
+            scale: Vec::with_capacity(nb),
+            shift: Vec::with_capacity(nb),
+            kept_pos: (0..mask.n).map(|_| Vec::with_capacity(nb)).collect(),
+            pos_of: vec![u32::MAX; nb],
+        };
+        layer.apply_masks(&union, &kept);
+        layer
+    }
+
+    /// Re-pack the union block and per-sample index lists for a new set
+    /// of masks, entirely inside the capacity reserved at construction.
+    /// Dense weights/bias/BN are untouched — only which rows are packed
+    /// (and in which positions) changes.
+    fn apply_masks(&mut self, union: &[u32], kept: &[Vec<u32>]) {
+        let nb = self.nb;
+        debug_assert_eq!(kept.len(), self.kept_pos.len());
+        self.union.clear();
+        self.union.extend(union.iter().map(|&o| o as usize));
+        self.pos_of.fill(u32::MAX);
+        self.w.clear();
+        self.b.clear();
+        self.scale.clear();
+        self.shift.clear();
+        for (p, &o) in union.iter().enumerate() {
+            let o = o as usize;
+            self.pos_of[o] = p as u32;
+            self.w.extend_from_slice(&self.dense_w[o * nb..(o + 1) * nb]);
+            self.b.push(self.dense_b[o]);
+            self.scale.push(self.dense_scale[o]);
+            self.shift.push(self.dense_shift[o]);
         }
+        for (s, ks) in kept.iter().enumerate() {
+            let pos_of = &self.pos_of;
+            let kp = &mut self.kept_pos[s];
+            kp.clear();
+            kp.extend(ks.iter().map(|&o| pos_of[o as usize]));
+        }
+    }
+
+    /// Hot-swap this layer's masks from a [`LayerPlan`] (same width,
+    /// same sample count).  Zero-allocation: see [`Self::apply_masks`].
+    pub fn swap_masks(&mut self, layer: &LayerPlan) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            layer.width() == self.nb,
+            "plan width {} != layer width {}",
+            layer.width(),
+            self.nb
+        );
+        anyhow::ensure!(
+            layer.n() == self.kept_pos.len(),
+            "plan has {} samples, layer packed for {}",
+            layer.n(),
+            self.kept_pos.len()
+        );
+        self.apply_masks(layer.union(), layer.kept_lists());
+        Ok(())
+    }
+
+    /// Capacities of every owned buffer — the no-allocation witness for
+    /// the steady-state swap tests.
+    pub fn alloc_signature(&self) -> Vec<usize> {
+        let mut sig = vec![
+            self.w.capacity(),
+            self.b.capacity(),
+            self.scale.capacity(),
+            self.shift.capacity(),
+            self.union.capacity(),
+            self.pos_of.capacity(),
+        ];
+        sig.extend(self.kept_pos.iter().map(|k| k.capacity()));
+        sig
     }
 
     pub fn nb(&self) -> usize {
@@ -410,20 +484,83 @@ impl NativeEngine {
     pub fn with_batch(man: &Manifest, weights: &Weights, batch: usize) -> anyhow::Result<Self> {
         anyhow::ensure!(batch > 0, "batch must be positive");
         let subnets = build_subnets(man, weights)?;
-        let max_union = subnets
-            .iter()
-            .map(|s| s.l1.union_len())
-            .max()
-            .unwrap_or(0);
         Ok(NativeEngine {
             nb: man.nb,
             n_samples: man.n_samples,
             batch,
             subnets,
-            act1: vec![0.0; max_union * batch],
+            // Sized for the worst-case union (all nb outputs), not the
+            // current masks': a later `swap_masks` may grow the union
+            // and must never reallocate.
+            act1: vec![0.0; man.nb * batch],
             h1: vec![0.0; batch * man.nb],
             h2: vec![0.0; batch * man.nb],
         })
+    }
+
+    /// Hot-swap the engine's masks from a [`MaskPlan`] without touching
+    /// weights or scratch: each layer re-packs its union weight block in
+    /// place from its retained dense tensors (zero allocation), and the
+    /// per-sample index lists are rebuilt.  The plan must match the
+    /// engine's shape (`nb`, `n_samples`) and subnet names.
+    ///
+    /// Contract: after a swap the engine behaves **bit-for-bit** like a
+    /// freshly constructed engine whose manifest carried the plan's
+    /// masks; batch size, weights and output layout all survive the
+    /// swap unchanged.
+    pub fn swap_masks(&mut self, plan: &MaskPlan) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            plan.nb() == self.nb,
+            "plan width {} != engine width {}",
+            plan.nb(),
+            self.nb
+        );
+        anyhow::ensure!(
+            plan.n_samples() == self.n_samples,
+            "plan has {} samples, engine runs {}",
+            plan.n_samples(),
+            self.n_samples
+        );
+        // Validate every lookup and layer shape BEFORE mutating
+        // anything: a failed swap must leave the engine exactly as it
+        // was, never half-swapped.
+        for sn in &self.subnets {
+            let name = sn.param.name();
+            for layer in [1usize, 2] {
+                let lp = plan
+                    .layer_for(name, layer)
+                    .ok_or_else(|| anyhow::anyhow!("plan has no subnet '{name}'"))?;
+                anyhow::ensure!(
+                    lp.width() == self.nb && lp.n() == self.n_samples,
+                    "plan layer {name}.{layer} is {}x{}, engine needs {}x{}",
+                    lp.n(),
+                    lp.width(),
+                    self.n_samples,
+                    self.nb
+                );
+            }
+        }
+        for sn in &mut self.subnets {
+            let name = sn.param.name();
+            for (layer, l) in [(1usize, &mut sn.l1), (2usize, &mut sn.l2)] {
+                let lp = plan.layer_for(name, layer).expect("validated above");
+                l.swap_masks(lp)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Capacities of every scratch/packed buffer (layers + activation
+    /// scratch) — stable across `swap_masks`/`execute_into` calls in
+    /// steady state.
+    pub fn alloc_signature(&self) -> Vec<usize> {
+        let mut sig = vec![self.act1.capacity(), self.h1.capacity(), self.h2.capacity()];
+        for sn in &self.subnets {
+            sig.extend(sn.l1.alloc_signature());
+            sig.extend(sn.l2.alloc_signature());
+            sig.push(sn.w3.capacity());
+        }
+        sig
     }
 
     pub fn nb(&self) -> usize {
@@ -807,6 +944,117 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Tentpole golden gate (ISSUE #3): a hot mask swap must be
+    /// **bit-for-bit** indistinguishable from tearing the engine down
+    /// and rebuilding it with the new masks baked into the manifest —
+    /// across several resamples, on two fixture shapes.
+    #[test]
+    fn swap_masks_matches_fresh_engine_bit_for_bit() {
+        use crate::masks::MaskPlan;
+        use crate::util::rng::Pcg32;
+        let mut a = InferOutput::new(1, 1);
+        let mut b = InferOutput::new(1, 1);
+        for (tag, (man, w)) in [
+            ("fixture", fixture::tiny_fixture()),
+            (
+                "fixture-nb17",
+                fixture::build(&fixture::FixtureConfig {
+                    nb: 17,
+                    n_samples: 6,
+                    batch_infer: 9,
+                    weight_seed: 12,
+                    ..Default::default()
+                }),
+            ),
+        ] {
+            let mut eng = NativeEngine::new(&man, &w).unwrap();
+            let mut plan = MaskPlan::from_manifest(&man).unwrap();
+            let mut rng = Pcg32::new(77);
+            let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 21);
+            for round in 0..4 {
+                plan.resample(&mut rng);
+                eng.swap_masks(&plan).unwrap();
+                eng.execute_into(&ds.signals, &mut a).unwrap();
+                let mut man2 = man.clone();
+                plan.apply_to_manifest(&mut man2);
+                let mut fresh = NativeEngine::new(&man2, &w).unwrap();
+                fresh.execute_into(&ds.signals, &mut b).unwrap();
+                for p in Param::ALL {
+                    assert_eq!(
+                        a.samples[p.index()],
+                        b.samples[p.index()],
+                        "{tag} round {round}: swap != fresh for {p:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Swapping back to the manifest's own masks restores the original
+    /// outputs exactly (nothing beyond the index lists mutated).
+    #[test]
+    fn swap_masks_roundtrips_to_original() {
+        use crate::masks::MaskPlan;
+        use crate::util::rng::Pcg32;
+        let (man, w) = fixture::tiny_fixture();
+        let mut eng = NativeEngine::new(&man, &w).unwrap();
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 22);
+        let original = eng.infer_batch(&ds.signals).unwrap();
+        let mut plan = MaskPlan::from_manifest(&man).unwrap();
+        let mut rng = Pcg32::new(5);
+        plan.resample(&mut rng);
+        eng.swap_masks(&plan).unwrap();
+        let perturbed = eng.infer_batch(&ds.signals).unwrap();
+        assert_ne!(
+            original.samples[Param::F.index()],
+            perturbed.samples[Param::F.index()],
+            "resampled masks should change predictions"
+        );
+        let baked = MaskPlan::from_manifest(&man).unwrap();
+        eng.swap_masks(&baked).unwrap();
+        let restored = eng.infer_batch(&ds.signals).unwrap();
+        for p in Param::ALL {
+            assert_eq!(original.samples[p.index()], restored.samples[p.index()]);
+        }
+    }
+
+    /// The swap path must stay inside the capacity reserved at
+    /// construction — no allocation in steady state, even when the
+    /// resampled union grows past the manifest masks' union.
+    #[test]
+    fn swap_masks_never_reallocates() {
+        use crate::masks::MaskPlan;
+        use crate::util::rng::Pcg32;
+        let (man, w) = fixture::tiny_fixture();
+        let mut eng = NativeEngine::new(&man, &w).unwrap();
+        let mut plan = MaskPlan::from_manifest(&man).unwrap();
+        let mut rng = Pcg32::new(9);
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 23);
+        let mut out = InferOutput::new(man.n_samples, man.batch_infer);
+        let sig = eng.alloc_signature();
+        for _ in 0..25 {
+            plan.resample(&mut rng);
+            eng.swap_masks(&plan).unwrap();
+            eng.execute_into(&ds.signals, &mut out).unwrap();
+            assert_eq!(eng.alloc_signature(), sig, "swap or execute reallocated");
+        }
+    }
+
+    #[test]
+    fn swap_masks_rejects_mismatched_plans() {
+        use crate::masks::MaskPlan;
+        let (man, w) = fixture::tiny_fixture();
+        let mut eng = NativeEngine::new(&man, &w).unwrap();
+        // wrong width
+        let (other, _) = fixture::build(&fixture::FixtureConfig {
+            nb: 17,
+            ..Default::default()
+        });
+        assert!(eng.swap_masks(&MaskPlan::from_manifest(&other).unwrap()).is_err());
+        // wrong sample count
+        assert!(eng.swap_masks(&MaskPlan::all_ones(&man, man.n_samples + 1)).is_err());
     }
 
     #[test]

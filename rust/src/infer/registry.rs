@@ -1,9 +1,14 @@
 //! Engine registry — the single construction path for every inference
 //! backend.
 //!
-//! CLI (`repro serve --engine accel`), coordinator shards, experiments
-//! and benches all resolve engines by name here instead of hand-rolling
-//! their own construction:
+//! A [`Registry`] is a *value* holding named engine factories.  The
+//! built-in table ([`Registry::builtin`]) covers the five in-tree
+//! backends; downstream code can [`Registry::register`] its own
+//! factories without editing this file (ROADMAP: user-registerable
+//! engines).  The process-wide default instance
+//! ([`default_registry`]) backs the module-level [`build`] /
+//! [`factory`] conveniences the CLI, coordinator, experiments and
+//! benches use:
 //!
 //! | name         | backend                                        |
 //! |--------------|------------------------------------------------|
@@ -22,59 +27,10 @@
 //! coordinator takes [`factory`], which captures owned manifest/weights
 //! and builds the engine inside each shard's own thread.
 
+use std::sync::{Arc, OnceLock};
+
 use super::Engine;
 use crate::model::{Manifest, Weights};
-
-/// A backend name resolvable by the registry.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum EngineName {
-    Native,
-    Accel,
-    McDropout,
-    Ensemble,
-    Pjrt,
-}
-
-impl EngineName {
-    /// Every registered backend, in help-text order.
-    pub const ALL: [EngineName; 5] = [
-        EngineName::Native,
-        EngineName::Accel,
-        EngineName::McDropout,
-        EngineName::Ensemble,
-        EngineName::Pjrt,
-    ];
-
-    /// The registry name (what `--engine` accepts).
-    pub fn as_str(&self) -> &'static str {
-        match self {
-            EngineName::Native => "native",
-            EngineName::Accel => "accel",
-            EngineName::McDropout => "mc-dropout",
-            EngineName::Ensemble => "ensemble",
-            EngineName::Pjrt => "pjrt",
-        }
-    }
-
-    /// Parse a registry name.
-    pub fn parse(s: &str) -> anyhow::Result<EngineName> {
-        EngineName::ALL
-            .into_iter()
-            .find(|n| n.as_str() == s)
-            .ok_or_else(|| {
-                anyhow::anyhow!("unknown engine '{s}' (expected one of: {})", names_help())
-            })
-    }
-}
-
-/// `"native|accel|mc-dropout|ensemble|pjrt"` — for CLI help text.
-pub fn names_help() -> String {
-    EngineName::ALL
-        .iter()
-        .map(|n| n.as_str())
-        .collect::<Vec<_>>()
-        .join("|")
-}
 
 /// Construction options shared by every backend.  `Default` follows the
 /// manifest: batch = `batch_infer`, ensemble members = `n_samples`.
@@ -100,61 +56,203 @@ impl Default for EngineOpts {
     }
 }
 
-/// Build an engine by registry name.  This is the only construction path
-/// for backends — everything else (CLI, coordinator, experiments,
-/// benches) goes through here.
-pub fn build(
-    name: EngineName,
-    man: &Manifest,
-    weights: &Weights,
-    opts: &EngineOpts,
-) -> anyhow::Result<Box<dyn Engine>> {
-    let batch = opts.batch.unwrap_or(man.batch_infer);
-    anyhow::ensure!(batch > 0, "engine batch must be positive");
-    Ok(match name {
-        EngineName::Native => Box::new(crate::infer::native::NativeEngine::with_batch(
-            man, weights, batch,
-        )?),
-        EngineName::Accel => Box::new(crate::accel::AccelSimulator::new(
-            man,
-            weights,
-            crate::accel::AccelConfig {
+/// A named engine factory: manifest + weights + options in, boxed engine
+/// out.  `Send + Sync` so coordinator shards can build in-thread.
+pub type BuildFn =
+    dyn Fn(&Manifest, &Weights, &EngineOpts) -> anyhow::Result<Box<dyn Engine>> + Send + Sync;
+
+struct Entry {
+    name: String,
+    build: Arc<BuildFn>,
+}
+
+/// A registry of named engine factories.  Insertion order is preserved
+/// (it is the `--engine` help order); names are unique.
+#[derive(Default)]
+pub struct Registry {
+    entries: Vec<Entry>,
+}
+
+impl Registry {
+    /// An empty registry (register your own factories).
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// The built-in backend table (see the module docs).
+    pub fn builtin() -> Registry {
+        let mut r = Registry::new();
+        r.register("native", |man: &Manifest, weights: &Weights, opts: &EngineOpts| {
+            let batch = opts.batch.unwrap_or(man.batch_infer);
+            Ok(Box::new(crate::infer::native::NativeEngine::with_batch(
+                man, weights, batch,
+            )?))
+        })
+        .expect("builtin name");
+        r.register("accel", |man: &Manifest, weights: &Weights, opts: &EngineOpts| {
+            let batch = opts.batch.unwrap_or(man.batch_infer);
+            Ok(Box::new(crate::accel::AccelSimulator::new(
+                man,
+                weights,
+                crate::accel::AccelConfig {
+                    batch,
+                    ..Default::default()
+                },
+                crate::accel::Scheme::BatchLevel,
+            )?))
+        })
+        .expect("builtin name");
+        r.register("mc-dropout", |man: &Manifest, weights: &Weights, opts: &EngineOpts| {
+            let batch = opts.batch.unwrap_or(man.batch_infer);
+            Ok(Box::new(crate::bayes::McDropout::with_batch(
+                man, weights, batch, opts.seed,
+            )?))
+        })
+        .expect("builtin name");
+        r.register("ensemble", |man: &Manifest, weights: &Weights, opts: &EngineOpts| {
+            let batch = opts.batch.unwrap_or(man.batch_infer);
+            Ok(Box::new(crate::bayes::DeepEnsemble::init_random_with_batch(
+                man,
+                opts.members.unwrap_or(man.n_samples),
+                opts.seed,
                 batch,
-                ..Default::default()
-            },
-            crate::accel::Scheme::BatchLevel,
-        )?),
-        EngineName::McDropout => Box::new(crate::bayes::McDropout::with_batch(
-            man, weights, batch, opts.seed,
-        )),
-        EngineName::Ensemble => Box::new(crate::bayes::DeepEnsemble::init_random_with_batch(
-            man,
-            opts.members.unwrap_or(man.n_samples),
-            opts.seed,
-            batch,
-        )?),
-        EngineName::Pjrt => {
+            )?))
+        })
+        .expect("builtin name");
+        r.register("pjrt", |man: &Manifest, weights: &Weights, opts: &EngineOpts| {
+            let batch = opts.batch.unwrap_or(man.batch_infer);
             anyhow::ensure!(
                 batch == man.batch_infer,
                 "pjrt executable has a static batch of {} (asked for {batch})",
                 man.batch_infer
             );
             let rt = crate::runtime::Runtime::cpu()?;
-            Box::new(crate::runtime::InferExecutable::load(&rt, man, weights)?)
-        }
-    })
+            Ok(Box::new(crate::runtime::InferExecutable::load(
+                &rt, man, weights,
+            )?))
+        })
+        .expect("builtin name");
+        r
+    }
+
+    /// Register a factory under `name`.  Errors on an empty or duplicate
+    /// name (names are the CLI/config contract; silent overrides would
+    /// make `--engine` ambiguous).
+    pub fn register<F>(&mut self, name: &str, build: F) -> anyhow::Result<()>
+    where
+        F: Fn(&Manifest, &Weights, &EngineOpts) -> anyhow::Result<Box<dyn Engine>>
+            + Send
+            + Sync
+            + 'static,
+    {
+        anyhow::ensure!(!name.is_empty(), "engine name must be non-empty");
+        anyhow::ensure!(!self.contains(name), "engine '{name}' is already registered");
+        self.entries.push(Entry {
+            name: name.to_string(),
+            build: Arc::new(build),
+        });
+        Ok(())
+    }
+
+    /// Is `name` registered?
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.iter().any(|e| e.name == name)
+    }
+
+    /// Validate a name without building — same error (and name list) as
+    /// [`Registry::build`], for callers that want to fail fast before
+    /// doing expensive work (e.g. resolving weights).
+    pub fn validate(&self, name: &str) -> anyhow::Result<()> {
+        self.resolve(name).map(|_| ())
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// `"native|accel|…"` — for CLI help text.
+    pub fn names_help(&self) -> String {
+        self.names().join("|")
+    }
+
+    fn resolve(&self, name: &str) -> anyhow::Result<Arc<BuildFn>> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .map(|e| Arc::clone(&e.build))
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown engine '{name}' (expected one of: {})",
+                    self.names_help()
+                )
+            })
+    }
+
+    /// Build an engine by name.
+    pub fn build(
+        &self,
+        name: &str,
+        man: &Manifest,
+        weights: &Weights,
+        opts: &EngineOpts,
+    ) -> anyhow::Result<Box<dyn Engine>> {
+        let batch = opts.batch.unwrap_or(man.batch_infer);
+        anyhow::ensure!(batch > 0, "engine batch must be positive");
+        let build = self.resolve(name)?;
+        build.as_ref()(man, weights, opts)
+    }
+
+    /// A `Send + Sync` engine factory for the coordinator's shards:
+    /// resolves `name` eagerly (unknown names fail here, not inside a
+    /// worker thread), captures owned manifest/weights, and constructs
+    /// the engine inside the calling thread (engines are not `Send`).
+    pub fn factory(
+        &self,
+        name: &str,
+        man: Manifest,
+        weights: Weights,
+        opts: EngineOpts,
+    ) -> anyhow::Result<impl Fn() -> anyhow::Result<Box<dyn Engine>> + Send + Sync + 'static> {
+        let batch = opts.batch.unwrap_or(man.batch_infer);
+        anyhow::ensure!(batch > 0, "engine batch must be positive");
+        let build = self.resolve(name)?;
+        Ok(move || build.as_ref()(&man, &weights, &opts))
+    }
 }
 
-/// A `Send + Sync` engine factory for the coordinator's shards: captures
-/// owned manifest/weights and constructs the engine inside the calling
-/// thread (engines themselves are not `Send`).
+/// The process-wide default registry (the built-in table).  Code that
+/// wants additional engines builds its own [`Registry`] value and
+/// registers into it.
+pub fn default_registry() -> &'static Registry {
+    static DEFAULT: OnceLock<Registry> = OnceLock::new();
+    DEFAULT.get_or_init(Registry::builtin)
+}
+
+/// Build an engine from the default registry (the common path for CLI,
+/// experiments and benches).
+pub fn build(
+    name: &str,
+    man: &Manifest,
+    weights: &Weights,
+    opts: &EngineOpts,
+) -> anyhow::Result<Box<dyn Engine>> {
+    default_registry().build(name, man, weights, opts)
+}
+
+/// Shard factory from the default registry (see [`Registry::factory`]).
 pub fn factory(
-    name: EngineName,
+    name: &str,
     man: Manifest,
     weights: Weights,
     opts: EngineOpts,
-) -> impl Fn() -> anyhow::Result<Box<dyn Engine>> + Send + Sync + 'static {
-    move || build(name, &man, &weights, &opts)
+) -> anyhow::Result<impl Fn() -> anyhow::Result<Box<dyn Engine>> + Send + Sync + 'static> {
+    default_registry().factory(name, man, weights, opts)
+}
+
+/// `"native|accel|mc-dropout|ensemble|pjrt"` — for CLI help text.
+pub fn names_help() -> String {
+    default_registry().names_help()
 }
 
 #[cfg(test)]
@@ -164,30 +262,37 @@ mod tests {
     use crate::testing::fixture;
 
     #[test]
-    fn parse_roundtrips_every_name() {
-        for n in EngineName::ALL {
-            assert_eq!(EngineName::parse(n.as_str()).unwrap(), n);
-        }
-        assert!(EngineName::parse("gpu").is_err());
+    fn builtin_registers_every_backend_name() {
+        let r = Registry::builtin();
+        assert_eq!(
+            r.names(),
+            vec!["native", "accel", "mc-dropout", "ensemble", "pjrt"]
+        );
+        assert!(r.contains("native") && !r.contains("gpu"));
         assert!(names_help().contains("mc-dropout"));
+    }
+
+    #[test]
+    fn unknown_engine_error_lists_names() {
+        let (man, w) = fixture::tiny_fixture();
+        let e = build("gpu", &man, &w, &EngineOpts::default()).unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("unknown engine 'gpu'"), "{msg}");
+        assert!(msg.contains("native") && msg.contains("ensemble"), "{msg}");
+        assert!(default_registry().factory("gpu", man, w, EngineOpts::default()).is_err());
     }
 
     #[test]
     fn builds_every_non_pjrt_backend_on_the_fixture() {
         let (man, w) = fixture::tiny_fixture();
         let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 23);
-        for name in [
-            EngineName::Native,
-            EngineName::Accel,
-            EngineName::McDropout,
-            EngineName::Ensemble,
-        ] {
+        for name in ["native", "accel", "mc-dropout", "ensemble"] {
             let mut eng = build(name, &man, &w, &EngineOpts::default()).unwrap();
-            assert_eq!(eng.batch_size(), man.batch_infer, "{name:?}");
-            assert!(eng.n_samples() >= 1, "{name:?}");
+            assert_eq!(eng.batch_size(), man.batch_infer, "{name}");
+            assert!(eng.n_samples() >= 1, "{name}");
             let out = eng.infer_batch(&ds.signals).unwrap();
-            assert_eq!(out.batch, man.batch_infer, "{name:?}");
-            assert_eq!(out.n_samples, eng.n_samples(), "{name:?}");
+            assert_eq!(out.batch, man.batch_infer, "{name}");
+            assert_eq!(out.n_samples, eng.n_samples(), "{name}");
         }
     }
 
@@ -198,7 +303,7 @@ mod tests {
             batch: Some(3),
             ..Default::default()
         };
-        let mut eng = build(EngineName::Native, &man, &w, &opts).unwrap();
+        let mut eng = build("native", &man, &w, &opts).unwrap();
         assert_eq!(eng.batch_size(), 3);
         let ds = synth_dataset(3, &man.bvalues, 20.0, 24);
         assert!(eng.infer_batch(&ds.signals).is_ok());
@@ -208,16 +313,40 @@ mod tests {
     #[test]
     fn pjrt_unavailable_errors_cleanly() {
         let (man, w) = fixture::tiny_fixture();
-        let e = build(EngineName::Pjrt, &man, &w, &EngineOpts::default()).unwrap_err();
+        let e = build("pjrt", &man, &w, &EngineOpts::default()).unwrap_err();
         assert!(e.to_string().contains("pjrt"), "{e}");
     }
 
     #[test]
     fn factory_is_send_and_builds() {
         let (man, w) = fixture::tiny_fixture();
-        let f = factory(EngineName::Native, man, w, EngineOpts::default());
+        let f = factory("native", man, w, EngineOpts::default()).unwrap();
         let handle = std::thread::spawn(move || f().map(|e| e.batch_size()));
         let batch = handle.join().unwrap().unwrap();
         assert!(batch > 0);
+    }
+
+    /// The ROADMAP item this registry closes: downstream code plugs an
+    /// engine in by value, without editing this file.
+    #[test]
+    fn user_registered_factory_builds_and_rejects_duplicates() {
+        let mut r = Registry::builtin();
+        r.register("native-half-batch", |man: &Manifest, weights: &Weights, opts: &EngineOpts| {
+            let batch = opts.batch.unwrap_or(man.batch_infer).div_ceil(2);
+            Ok(Box::new(crate::infer::native::NativeEngine::with_batch(
+                man, weights, batch,
+            )?))
+        })
+        .unwrap();
+        assert!(r.contains("native-half-batch"));
+        assert!(
+            r.register("native", |_, _, _| anyhow::bail!("dup")).is_err(),
+            "duplicate names must be rejected"
+        );
+        let (man, w) = fixture::tiny_fixture();
+        let eng = r.build("native-half-batch", &man, &w, &EngineOpts::default()).unwrap();
+        assert_eq!(eng.batch_size(), man.batch_infer.div_ceil(2));
+        // the default registry is unaffected by the private value
+        assert!(!default_registry().contains("native-half-batch"));
     }
 }

@@ -9,7 +9,7 @@ use uivim::bench;
 use uivim::cli::{flag, opt, Args, Cli, CommandSpec};
 use uivim::coordinator::{Coordinator, CoordinatorConfig, VoxelRequest};
 use uivim::experiments::{self, fig67, fig8, tables};
-use uivim::infer::registry::{self, EngineName, EngineOpts};
+use uivim::infer::registry::{self, EngineOpts};
 use uivim::ivim::synth::synth_dataset;
 use uivim::ivim::Param;
 use uivim::masks;
@@ -154,6 +154,19 @@ fn cli() -> Cli {
                 opts: vec![variant(), weights_opt(), train_steps()],
             },
             CommandSpec {
+                name: "bench-diff",
+                help: "compare a fresh BENCH_*.json against a committed baseline (CI perf gate)",
+                opts: vec![
+                    opt("baseline", "baseline BENCH json (committed)", None),
+                    opt("current", "freshly emitted BENCH json", None),
+                    opt(
+                        "max-regress",
+                        "allowed p50 regression fraction before failing",
+                        Some("0.20"),
+                    ),
+                ],
+            },
+            CommandSpec {
                 name: "masks",
                 help: "generate and inspect Masksembles masks",
                 opts: vec![
@@ -186,9 +199,11 @@ fn main() {
 fn engine_and_weights(
     args: &Args,
     rt: Option<&Runtime>,
-) -> anyhow::Result<(uivim::model::Manifest, Weights, EngineName)> {
+) -> anyhow::Result<(uivim::model::Manifest, Weights, String)> {
     let man = experiments::load_manifest(args.get_or("variant", "tiny"))?;
-    let kind = EngineName::parse(args.get_or("engine", "native"))?;
+    let kind = args.get_or("engine", "native").to_string();
+    // fail fast (registry's own error message) before resolving weights
+    registry::default_registry().validate(&kind)?;
     let steps = args.get_usize("train-steps")?.unwrap_or(0);
     let w = experiments::resolve_weights(&man, rt, args.get("weights"), steps, 20.0)?;
     Ok((man, w, kind))
@@ -266,7 +281,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
             let snr = args.get_f64("snr")?.unwrap_or(20.0);
             let ds = synth_dataset(n, &man.bvalues, snr, 17);
             // the registry owns runtime creation for pjrt
-            let mut engine = registry::build(kind, &man, &w, &EngineOpts::default())?;
+            let mut engine = registry::build(&kind, &man, &w, &EngineOpts::default())?;
             let t = Timer::start();
             let outs = fig67::run_batches(engine.as_mut(), &ds)?;
             let el = t.elapsed_ms();
@@ -299,8 +314,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 batch: Some(batch),
                 ..Default::default()
             };
-            let coord =
-                Coordinator::start(cfg, registry::factory(kind, man.clone(), w, opts))?;
+            let coord = Coordinator::start(cfg, registry::factory(&kind, man.clone(), w, opts)?)?;
             let ds = synth_dataset(n, &man.bvalues, 20.0, 18);
             let t = Timer::start();
             let rxs: Vec<_> = (0..n)
@@ -321,7 +335,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 }
             }
             let el = t.elapsed_s();
-            let snap = coord.metrics().snapshot();
+            let snap = coord.snapshot();
             println!(
                 "{n} requests in {:.2}s -> {:.0} vox/s | batches {} | padded rows {} | \
                  mean request latency {:.2} ms | p99 {:.2} ms | confident {:.1}%",
@@ -332,6 +346,10 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 snap.mean_request_us / 1e3,
                 snap.p99_request_us / 1e3,
                 100.0 * confident as f64 / n as f64
+            );
+            println!(
+                "gauges: pooled outputs {} | pooled signal buffers {} | pending queue {}",
+                snap.pooled_outputs, snap.pooled_signals, snap.queue_depth
             );
             for (k, s) in snap.per_shard.iter().enumerate() {
                 println!(
@@ -468,6 +486,22 @@ fn run(args: &Args) -> anyhow::Result<()> {
             let (man, w, _) = engine_and_weights(args, rt.as_ref())?;
             let rows = experiments::ablation::ablation(&man, &w)?;
             println!("{}", experiments::ablation::render(&rows));
+        }
+        "bench-diff" => {
+            let baseline = args
+                .get("baseline")
+                .ok_or_else(|| anyhow::anyhow!("--baseline is required"))?;
+            let current = args
+                .get("current")
+                .ok_or_else(|| anyhow::anyhow!("--current is required"))?;
+            let max_regress = args.get_f64("max-regress")?.unwrap_or(0.20);
+            let report = bench::compare_bench_files(
+                std::path::Path::new(baseline),
+                std::path::Path::new(current),
+                max_regress,
+            )?;
+            println!("{report}");
+            println!("no p50 regressions beyond {:.0}%", max_regress * 100.0);
         }
         "masks" => {
             let width = args.get_usize("width")?.unwrap_or(11);

@@ -8,6 +8,10 @@
 //! weights (mask-zero skipping) and reorders the sampling loop
 //! (batch-level scheme).
 
+pub mod plan;
+
+pub use plan::{LayerPlan, MaskPlan};
+
 use crate::util::rng::Pcg32;
 
 /// A set of N binary masks over a layer of `width` neurons.

@@ -1,0 +1,464 @@
+//! Mask *lifecycle* state — the hot-swappable side of the Masksembles
+//! machinery.
+//!
+//! `generate_masks`/`for_width` (mod.rs) answer "which masks exist"; a
+//! [`MaskPlan`] answers "which masks is the engine running **right
+//! now**".  The plan owns, per (subnet, layer), the mask bits plus the
+//! precomputed index lists the blocked engine consumes (per-sample kept
+//! lists and the ascending union of kept columns), and can regenerate
+//! all of it **in place**:
+//!
+//! * [`MaskPlan::resample`] redraws every row as an independent
+//!   Bernoulli mask (the MC-Dropout sampler) without allocating — every
+//!   `Vec` is cleared and refilled inside capacity reserved at
+//!   construction, and the union is maintained *incrementally* via
+//!   per-column use counts (only flipped bits touch the counts).
+//! * `NativeEngine::swap_masks(&plan)` (infer/native.rs) then re-packs
+//!   its union weight block from the plan, again in place — masks become
+//!   runtime state instead of construction-time configuration, which is
+//!   exactly the economy the paper's fixed-mask hardware exploits and
+//!   what makes the runtime-sampler overhead measurable in isolation.
+//!
+//! Everything here is deterministic in the caller-supplied [`Pcg32`].
+
+use super::MaskSet;
+use crate::model::Manifest;
+use crate::util::rng::Pcg32;
+
+/// One layer's live mask state: bits plus the derived index lists, all
+/// resampleable in place.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    width: usize,
+    n: usize,
+    /// Row-major `[n][width]`, values 0/1.
+    bits: Vec<u8>,
+    /// Per sample: ascending kept column indices.
+    kept: Vec<Vec<u32>>,
+    /// Ascending column indices kept by at least one sample.
+    union: Vec<u32>,
+    /// Per column: number of samples keeping it (incremental union —
+    /// membership is `use_count[c] > 0`).
+    use_count: Vec<u32>,
+}
+
+impl LayerPlan {
+    /// Plan seeded from an existing mask set (capacity reserved for any
+    /// later resample: kept/union can grow up to `width`).
+    pub fn from_mask_set(m: &MaskSet) -> LayerPlan {
+        let mut p = LayerPlan {
+            width: m.width,
+            n: m.n,
+            bits: m.bits.clone(),
+            kept: (0..m.n).map(|_| Vec::with_capacity(m.width)).collect(),
+            union: Vec::with_capacity(m.width),
+            use_count: vec![0u32; m.width],
+        };
+        p.rebuild_from_bits();
+        p
+    }
+
+    /// All-ones (dense) plan: every sample keeps every column.
+    pub fn all_ones(width: usize, n: usize) -> LayerPlan {
+        LayerPlan::from_mask_set(&MaskSet {
+            n,
+            width,
+            bits: vec![1u8; n * width],
+        })
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+    pub fn n(&self) -> usize {
+        self.n
+    }
+    /// Ascending union of kept columns.
+    pub fn union(&self) -> &[u32] {
+        &self.union
+    }
+    /// Sample `s`'s ascending kept columns.
+    pub fn kept(&self, s: usize) -> &[u32] {
+        &self.kept[s]
+    }
+    /// All per-sample kept lists (`[n]` slices of column indices).
+    pub fn kept_lists(&self) -> &[Vec<u32>] {
+        &self.kept
+    }
+
+    /// Snapshot the bits as a standalone [`MaskSet`] (allocates — cold
+    /// path: manifest round-trips, golden tests).
+    pub fn to_mask_set(&self) -> MaskSet {
+        MaskSet {
+            n: self.n,
+            width: self.width,
+            bits: self.bits.clone(),
+        }
+    }
+
+    /// Recompute counts, kept lists and union from `bits` (construction
+    /// path; `resample` maintains the counts incrementally instead).
+    fn rebuild_from_bits(&mut self) {
+        self.use_count.fill(0);
+        for s in 0..self.n {
+            let row = &self.bits[s * self.width..(s + 1) * self.width];
+            for (c, &b) in row.iter().enumerate() {
+                self.use_count[c] += b as u32;
+            }
+        }
+        self.refresh_index_lists();
+    }
+
+    /// Refill kept/union in place from bits + counts (no allocation:
+    /// capacities were reserved at construction).
+    fn refresh_index_lists(&mut self) {
+        for s in 0..self.n {
+            let row = &self.bits[s * self.width..(s + 1) * self.width];
+            let ks = &mut self.kept[s];
+            ks.clear();
+            ks.extend(
+                row.iter()
+                    .enumerate()
+                    .filter(|(_, &b)| b == 1)
+                    .map(|(c, _)| c as u32),
+            );
+        }
+        self.union.clear();
+        self.union.extend(
+            self.use_count
+                .iter()
+                .enumerate()
+                .filter(|(_, &cnt)| cnt > 0)
+                .map(|(c, _)| c as u32),
+        );
+    }
+
+    /// Redraw every row as an independent Bernoulli(`keep_prob`) mask,
+    /// in place.  All-zero rows are redrawn (a dead layer would silently
+    /// zero the subnet); the union's use counts are updated only for the
+    /// bits that actually flipped.  Redraws are bounded: a degenerate
+    /// `keep_prob` (~0) falls back to forcing one uniformly-drawn kept
+    /// column instead of looping forever.
+    fn resample(&mut self, keep_prob: f64, rng: &mut Pcg32) {
+        const MAX_REDRAWS: usize = 64;
+        for s in 0..self.n {
+            for attempt in 0.. {
+                let row = &mut self.bits[s * self.width..(s + 1) * self.width];
+                let mut ones = 0usize;
+                for (c, bit) in row.iter_mut().enumerate() {
+                    let new = u8::from(rng.next_f64() < keep_prob);
+                    ones += new as usize;
+                    if new != *bit {
+                        // incremental union update: only flipped bits
+                        // touch the per-column counts
+                        if new == 1 {
+                            self.use_count[c] += 1;
+                        } else {
+                            self.use_count[c] -= 1;
+                        }
+                        *bit = new;
+                    }
+                }
+                if ones > 0 {
+                    break;
+                }
+                if attempt >= MAX_REDRAWS {
+                    let c = rng.below(self.width as u32) as usize;
+                    self.bits[s * self.width + c] = 1;
+                    self.use_count[c] += 1;
+                    break;
+                }
+            }
+        }
+        self.refresh_index_lists();
+    }
+
+    /// Capacities of every owned buffer — the no-allocation witness for
+    /// the steady-state tests (stable across `resample` calls).
+    pub fn alloc_signature(&self) -> Vec<usize> {
+        let mut sig = vec![self.bits.capacity(), self.union.capacity(), self.use_count.capacity()];
+        sig.extend(self.kept.iter().map(|k| k.capacity()));
+        sig
+    }
+}
+
+/// The full model's live mask state: one [`LayerPlan`] per
+/// (subnet, masked layer), in manifest subnet order.
+///
+/// Layer keys follow the manifest convention: subnets are indexed in
+/// `Manifest::subnets` order and masked layers are `1` and `2`.
+#[derive(Debug, Clone)]
+pub struct MaskPlan {
+    nb: usize,
+    n_samples: usize,
+    keep_prob: f64,
+    subnets: Vec<String>,
+    /// `layers[si * 2 + (layer - 1)]`.
+    layers: Vec<LayerPlan>,
+}
+
+impl MaskPlan {
+    /// Plan seeded with the manifest's fixed Masksembles masks
+    /// (`keep_prob` defaults to the Masksembles keep fraction
+    /// `1 / scale`, so a later `resample` matches the paper's density).
+    pub fn from_manifest(man: &Manifest) -> anyhow::Result<MaskPlan> {
+        let mut layers = Vec::with_capacity(man.subnets.len() * 2);
+        for sn in &man.subnets {
+            for layer in 1..=2usize {
+                let m = man
+                    .mask(sn, layer)
+                    .ok_or_else(|| anyhow::anyhow!("manifest missing mask {sn}.mask{layer}"))?;
+                layers.push(LayerPlan::from_mask_set(m));
+            }
+        }
+        Ok(MaskPlan {
+            nb: man.nb,
+            n_samples: man.n_samples,
+            keep_prob: (1.0 / man.scale).min(1.0),
+            subnets: man.subnets.clone(),
+            layers,
+        })
+    }
+
+    /// Dense plan: `n_samples` all-ones masks per layer (Deep-Ensemble
+    /// members run every neuron).
+    pub fn all_ones(man: &Manifest, n_samples: usize) -> MaskPlan {
+        MaskPlan {
+            nb: man.nb,
+            n_samples,
+            keep_prob: 1.0,
+            subnets: man.subnets.clone(),
+            layers: (0..man.subnets.len() * 2)
+                .map(|_| LayerPlan::all_ones(man.nb, n_samples))
+                .collect(),
+        }
+    }
+
+    /// Random Bernoulli plan at `keep_prob` (the MC-Dropout sampler's
+    /// initial draw) — `all_ones` shape plus one `resample`.
+    pub fn bernoulli(man: &Manifest, keep_prob: f64, rng: &mut Pcg32) -> MaskPlan {
+        let mut p = MaskPlan::all_ones(man, man.n_samples);
+        p.keep_prob = keep_prob.clamp(0.0, 1.0);
+        p.resample(rng);
+        p
+    }
+
+    pub fn nb(&self) -> usize {
+        self.nb
+    }
+    pub fn n_samples(&self) -> usize {
+        self.n_samples
+    }
+    pub fn keep_prob(&self) -> f64 {
+        self.keep_prob
+    }
+    pub fn subnets(&self) -> &[String] {
+        &self.subnets
+    }
+
+    /// Layer plan for subnet index `si`, masked layer `layer` (1 or 2).
+    pub fn layer(&self, si: usize, layer: usize) -> &LayerPlan {
+        assert!(layer == 1 || layer == 2, "masked layers are 1 and 2");
+        &self.layers[si * 2 + (layer - 1)]
+    }
+
+    /// Layer plan looked up by subnet *name* (what the engine uses —
+    /// robust to subnet ordering).
+    pub fn layer_for(&self, subnet: &str, layer: usize) -> Option<&LayerPlan> {
+        let si = self.subnets.iter().position(|s| s == subnet)?;
+        Some(self.layer(si, layer))
+    }
+
+    /// Redraw every layer's masks in place (no allocation).
+    pub fn resample(&mut self, rng: &mut Pcg32) {
+        for l in &mut self.layers {
+            l.resample(self.keep_prob, rng);
+        }
+    }
+
+    /// Write this plan's masks (and sample count) into a manifest — the
+    /// construction-time path the hot swap replaces, kept for fresh
+    /// engine builds (golden tests, the ablation's fresh-build column).
+    pub fn apply_to_manifest(&self, man: &mut Manifest) {
+        man.n_samples = self.n_samples;
+        for (si, sn) in self.subnets.iter().enumerate() {
+            for layer in 1..=2usize {
+                man.masks.insert(
+                    format!("{sn}.mask{layer}"),
+                    self.layer(si, layer).to_mask_set(),
+                );
+            }
+        }
+    }
+
+    /// Concatenated buffer capacities of every layer (no-alloc witness).
+    pub fn alloc_signature(&self) -> Vec<usize> {
+        self.layers.iter().flat_map(|l| l.alloc_signature()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::fixture;
+
+    fn plan() -> MaskPlan {
+        let (man, _) = fixture::tiny_fixture();
+        MaskPlan::from_manifest(&man).unwrap()
+    }
+
+    fn layer_invariants(l: &LayerPlan) {
+        // kept lists match bits, ascending
+        for s in 0..l.n() {
+            let row = &l.bits[s * l.width()..(s + 1) * l.width()];
+            let want: Vec<u32> = row
+                .iter()
+                .enumerate()
+                .filter(|(_, &b)| b == 1)
+                .map(|(c, _)| c as u32)
+                .collect();
+            assert_eq!(l.kept(s), want.as_slice());
+            assert!(!want.is_empty(), "all-zero mask row survived");
+        }
+        // union == columns kept by any sample, and counts agree
+        let want_union: Vec<u32> = (0..l.width())
+            .filter(|&c| (0..l.n()).any(|s| l.bits[s * l.width() + c] == 1))
+            .map(|c| c as u32)
+            .collect();
+        assert_eq!(l.union(), want_union.as_slice());
+        for (c, &got) in l.use_count.iter().enumerate() {
+            let cnt = (0..l.n())
+                .filter(|&s| l.bits[s * l.width() + c] == 1)
+                .count() as u32;
+            assert_eq!(got, cnt, "incremental count drifted at col {c}");
+        }
+    }
+
+    #[test]
+    fn from_manifest_matches_mask_sets() {
+        let (man, _) = fixture::tiny_fixture();
+        let p = MaskPlan::from_manifest(&man).unwrap();
+        assert_eq!(p.n_samples(), man.n_samples);
+        for (si, sn) in man.subnets.iter().enumerate() {
+            for layer in 1..=2usize {
+                let m = man.mask(sn, layer).unwrap();
+                let l = p.layer(si, layer);
+                assert_eq!(l.to_mask_set(), *m);
+                assert_eq!(p.layer_for(sn, layer).unwrap().to_mask_set(), *m);
+                for s in 0..m.n {
+                    let want: Vec<u32> = m.kept_indices(s).into_iter().map(|c| c as u32).collect();
+                    assert_eq!(l.kept(s), want.as_slice());
+                }
+                layer_invariants(l);
+            }
+        }
+    }
+
+    #[test]
+    fn resample_changes_masks_and_keeps_invariants() {
+        let mut p = plan();
+        let before: Vec<MaskSet> = (0..4).map(|si| p.layer(si, 1).to_mask_set()).collect();
+        let mut rng = Pcg32::new(99);
+        p.resample(&mut rng);
+        let after: Vec<MaskSet> = (0..4).map(|si| p.layer(si, 1).to_mask_set()).collect();
+        assert_ne!(before, after, "resample left the masks unchanged");
+        for si in 0..4 {
+            layer_invariants(p.layer(si, 1));
+            layer_invariants(p.layer(si, 2));
+        }
+    }
+
+    #[test]
+    fn resample_is_deterministic_in_seed() {
+        let mut a = plan();
+        let mut b = plan();
+        let mut ra = Pcg32::new(5);
+        let mut rb = Pcg32::new(5);
+        for _ in 0..3 {
+            a.resample(&mut ra);
+            b.resample(&mut rb);
+        }
+        for si in 0..4 {
+            for layer in 1..=2 {
+                assert_eq!(a.layer(si, layer).to_mask_set(), b.layer(si, layer).to_mask_set());
+            }
+        }
+    }
+
+    #[test]
+    fn resample_never_allocates_in_steady_state() {
+        let mut p = plan();
+        let mut rng = Pcg32::new(3);
+        p.resample(&mut rng); // first call may touch nothing either
+        let sig = p.alloc_signature();
+        for _ in 0..50 {
+            p.resample(&mut rng);
+            assert_eq!(p.alloc_signature(), sig, "resample reallocated");
+        }
+    }
+
+    #[test]
+    fn tiny_keep_prob_still_yields_nonempty_rows() {
+        let (man, _) = fixture::tiny_fixture();
+        let mut rng = Pcg32::new(1);
+        let mut p = MaskPlan::bernoulli(&man, 0.01, &mut rng);
+        for _ in 0..5 {
+            p.resample(&mut rng);
+            for si in 0..4 {
+                for layer in 1..=2 {
+                    let l = p.layer(si, layer);
+                    for s in 0..l.n() {
+                        assert!(!l.kept(s).is_empty());
+                    }
+                }
+            }
+        }
+    }
+
+    /// keep_prob = 0 is degenerate: the bounded-redraw fallback must
+    /// still terminate with exactly one forced kept column per row.
+    #[test]
+    fn zero_keep_prob_terminates_with_forced_column() {
+        let (man, _) = fixture::tiny_fixture();
+        let mut rng = Pcg32::new(2);
+        let mut p = MaskPlan::bernoulli(&man, 0.0, &mut rng);
+        p.resample(&mut rng);
+        for si in 0..4 {
+            for layer in 1..=2 {
+                let l = p.layer(si, layer);
+                for s in 0..l.n() {
+                    assert_eq!(l.kept(s).len(), 1, "exactly the forced column survives");
+                }
+                layer_invariants(l);
+            }
+        }
+    }
+
+    #[test]
+    fn all_ones_and_apply_roundtrip() {
+        let (man, _) = fixture::tiny_fixture();
+        let p = MaskPlan::all_ones(&man, 2);
+        assert_eq!(p.n_samples(), 2);
+        for si in 0..4 {
+            let l = p.layer(si, 1);
+            assert_eq!(l.union().len(), man.nb);
+            assert_eq!(l.kept(0).len(), man.nb);
+        }
+        let mut m2 = man.clone();
+        p.apply_to_manifest(&mut m2);
+        assert_eq!(m2.n_samples, 2);
+        let m = m2.mask("d", 1).unwrap();
+        assert!(m.bits.iter().all(|&b| b == 1));
+        assert_eq!((m.n, m.width), (2, man.nb));
+    }
+
+    #[test]
+    fn bernoulli_tracks_keep_prob() {
+        let (man, _) = fixture::paper_fixture(); // nb = 104: enough columns
+        let mut rng = Pcg32::new(7);
+        let p = MaskPlan::bernoulli(&man, 0.5, &mut rng);
+        let l = p.layer(0, 1);
+        let rate = l.kept(0).len() as f64 / l.width() as f64;
+        assert!((rate - 0.5).abs() < 0.2, "keep rate {rate}");
+    }
+}

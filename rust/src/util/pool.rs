@@ -1,9 +1,14 @@
-//! Fixed-size thread pool on std threads + channels.
+//! Fixed-size thread pool on std threads + channels, plus a bounded
+//! recycling buffer pool.
 //!
 //! tokio is unavailable in the offline registry (DESIGN.md §6); the
 //! coordinator and benches use this pool for fan-out work.  Jobs are
 //! `FnOnce` closures; `scope`-style joining is provided by waiting on a
-//! completion counter.
+//! completion counter.  [`VecPool`] is the f32-buffer twin of
+//! `infer::OutputPool`: the coordinator's batcher takes recycled signal
+//! buffers from it when cutting batches, and shards hand the buffers
+//! back after serving — closing the last per-batch allocation on the
+//! serving hot path.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -96,6 +101,53 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Bounded recycling pool of `Vec<f32>` buffers.
+///
+/// `take` hands out a **cleared** buffer (recycled capacity when one is
+/// pooled, freshly reserved otherwise); `put` returns a buffer for
+/// reuse, dropping it when the pool already holds `cap` idle buffers so
+/// a burst cannot hoard memory forever.
+pub struct VecPool {
+    slots: Mutex<Vec<Vec<f32>>>,
+    cap: usize,
+}
+
+impl VecPool {
+    /// Pool keeping at most `cap` idle buffers (min 1).
+    pub fn new(cap: usize) -> Self {
+        VecPool {
+            slots: Mutex::new(Vec::new()),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Take an empty buffer with at least `capacity_hint` reserved.
+    pub fn take(&self, capacity_hint: usize) -> Vec<f32> {
+        let recycled = self.slots.lock().expect("pool lock").pop();
+        match recycled {
+            Some(mut v) => {
+                v.clear();
+                v.reserve(capacity_hint);
+                v
+            }
+            None => Vec::with_capacity(capacity_hint),
+        }
+    }
+
+    /// Return a buffer to the pool (dropped when the pool is full).
+    pub fn put(&self, v: Vec<f32>) {
+        let mut slots = self.slots.lock().expect("pool lock");
+        if slots.len() < self.cap {
+            slots.push(v);
+        }
+    }
+
+    /// Idle buffers currently pooled.
+    pub fn idle(&self) -> usize {
+        self.slots.lock().expect("pool lock").len()
+    }
+}
+
 /// Run a closure over each item of a slice in parallel, collecting results
 /// in order.  Convenience built on `std::thread::scope` (no pool needed
 /// for one-shot fan-out).
@@ -171,5 +223,33 @@ mod tests {
     fn par_map_empty() {
         let items: Vec<u64> = vec![];
         assert!(par_map(&items, 4, |&x| x).is_empty());
+    }
+
+    #[test]
+    fn vec_pool_recycles_capacity_and_bounds_idle() {
+        let pool = VecPool::new(2);
+        let mut a = pool.take(64);
+        assert!(a.is_empty() && a.capacity() >= 64);
+        a.extend_from_slice(&[1.0; 64]);
+        let ptr = a.as_ptr();
+        pool.put(a);
+        assert_eq!(pool.idle(), 1);
+        // recycled: same allocation, cleared
+        let b = pool.take(64);
+        assert_eq!(b.as_ptr(), ptr);
+        assert!(b.is_empty() && b.capacity() >= 64);
+        // cap bounds idle buffers
+        pool.put(b);
+        pool.put(Vec::with_capacity(8));
+        pool.put(Vec::with_capacity(8)); // beyond cap: dropped
+        assert_eq!(pool.idle(), 2);
+    }
+
+    #[test]
+    fn vec_pool_take_grows_small_recycled_buffers() {
+        let pool = VecPool::new(1);
+        pool.put(Vec::with_capacity(4));
+        let v = pool.take(128);
+        assert!(v.capacity() >= 128);
     }
 }

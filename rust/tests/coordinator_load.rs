@@ -10,7 +10,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use uivim::coordinator::{Coordinator, CoordinatorConfig, VoxelRequest};
-use uivim::infer::registry::{factory, EngineName, EngineOpts};
+use uivim::infer::registry::{factory, EngineOpts};
 use uivim::ivim::synth::synth_dataset;
 use uivim::ivim::Param;
 use uivim::model::Manifest;
@@ -25,8 +25,11 @@ fn start(batch: usize, capacity: usize, shards: usize) -> (Arc<Coordinator>, Man
         batch: Some(batch),
         ..Default::default()
     };
-    let coord = Coordinator::start(cfg, factory(EngineName::Native, man.clone(), w, opts))
-        .expect("coordinator start");
+    let coord = Coordinator::start(
+        cfg,
+        factory("native", man.clone(), w, opts).expect("known engine"),
+    )
+    .expect("coordinator start");
     (Arc::new(coord), man)
 }
 
