@@ -1,15 +1,18 @@
 //! Bench: coordinator end-to-end throughput/latency under load — the
 //! §VI-C real-time requirement (0.8 ms/batch) exercised at the serving
 //! layer, the batch-size trade-off, and the shard-pool scaling of the
-//! work-stealing pull dispatcher.
+//! per-shard work-stealing deque dispatcher vs the legacy single shared
+//! MPMC queue (the ROADMAP ">8 shards" contention item).
 //!
 //! Emits `BENCH_coordinator_throughput.json` at the repo root (name,
 //! p50/p99 request latency, voxels/s) so the perf trajectory is tracked
-//! across PRs.
+//! across PRs.  Deque-mode rows keep the `serve_*` names; the legacy
+//! queue is recorded as `serve_sharedq_*` so the CI p50 gate tracks both
+//! and the deque-vs-shared comparison is archived, not just printed.
 
 use std::time::Duration;
 use uivim::bench::{fmt_time, write_bench_json, BenchRecord};
-use uivim::coordinator::{Coordinator, CoordinatorConfig, VoxelRequest};
+use uivim::coordinator::{Coordinator, CoordinatorConfig, DispatchMode};
 use uivim::experiments::load_manifest;
 use uivim::infer::registry::{factory, EngineOpts};
 use uivim::ivim::synth::synth_dataset;
@@ -24,10 +27,12 @@ fn run_load(
     batch: usize,
     shards: usize,
     n_requests: usize,
+    mode: DispatchMode,
 ) -> (f64, uivim::coordinator::MetricsSnapshot) {
     let mut cfg = CoordinatorConfig::sharded(man.nb, batch, shards);
     cfg.batcher.max_wait = Duration::from_millis(1);
     cfg.batcher.queue_capacity = n_requests + 1;
+    cfg.dispatch = mode;
     let opts = EngineOpts {
         batch: Some(batch),
         ..Default::default()
@@ -40,13 +45,13 @@ fn run_load(
 
     let ds = synth_dataset(n_requests, &man.bvalues, 20.0, 41);
     let t = Timer::start();
+    // the zero-alloc client path: leased request buffers throughout
     let rxs: Vec<_> = (0..n_requests)
         .map(|i| {
+            let mut lease = coord.lease();
+            lease.copy_from(ds.voxel(i));
             coord
-                .submit(VoxelRequest {
-                    id: i as u64,
-                    signals: ds.voxel(i).to_vec(),
-                })
+                .submit_leased(i as u64, lease)
                 .expect("queue sized for the run")
         })
         .collect();
@@ -54,7 +59,7 @@ fn run_load(
         rx.recv().expect("response");
     }
     let el = t.elapsed_s();
-    // gauge-bearing snapshot: includes pool occupancy / queue depth
+    // gauge-bearing snapshot: pools, deque depths, steal counters
     let snap = coord.snapshot();
     coord.shutdown();
     (el, snap)
@@ -79,13 +84,13 @@ fn main() {
     let n_requests = if fast { 500 } else { 5000 };
     let mut records: Vec<BenchRecord> = Vec::new();
 
-    // ---- batch-size trade-off (single worker) --------------------------
+    // ---- batch-size trade-off (single worker, deque dispatch) ----------
     let mut table = Table::new(&[
         "batch", "throughput (vox/s)", "mean latency", "p99 latency", "batches", "padded",
-        "pools out/sig",
+        "pools out/sig/req",
     ]);
     for batch in [8usize, 32, 64] {
-        let (el, snap) = run_load(&man, &w, batch, 1, n_requests);
+        let (el, snap) = run_load(&man, &w, batch, 1, n_requests, DispatchMode::Deques);
         table.row(&[
             batch.to_string(),
             format!("{:.0}", n_requests as f64 / el),
@@ -93,7 +98,10 @@ fn main() {
             fmt_time(snap.p99_request_us / 1e6),
             snap.batches.to_string(),
             snap.padded_rows.to_string(),
-            format!("{}/{}", snap.pooled_outputs, snap.pooled_signals),
+            format!(
+                "{}/{}/{}",
+                snap.pooled_outputs, snap.pooled_signals, snap.pooled_requests
+            ),
         ]);
         records.push(BenchRecord {
             name: format!("serve_batch{batch}_shards1"),
@@ -108,34 +116,45 @@ fn main() {
     );
     println!("{}", table.to_text());
 
-    // ---- shard scaling (work-stealing pull) ----------------------------
-    let batch = 64usize;
+    // ---- shard scaling: per-shard deques vs the legacy shared queue ----
+    // Smaller batches -> more hand-offs per second, so the dispatch
+    // structure (not the engine) is what the scaling column measures.
+    let batch = 16usize;
     let mut shard_table = Table::new(&[
-        "shards", "throughput (vox/s)", "speedup", "p99 latency", "per-shard batches",
+        "shards", "dispatch", "throughput (vox/s)", "speedup", "p99 latency",
+        "local/stolen batches",
     ]);
-    let mut base = None;
-    for shards in [1usize, 2, 4] {
-        let (el, snap) = run_load(&man, &w, batch, shards, n_requests);
-        let tput = n_requests as f64 / el;
-        let base_tput = *base.get_or_insert(tput); // shards=1 is the baseline
-        let per_shard: Vec<String> = snap
-            .per_shard
-            .iter()
-            .map(|s| s.batches.to_string())
-            .collect();
-        shard_table.row(&[
-            shards.to_string(),
-            format!("{tput:.0}"),
-            format!("{:.2}x", tput / base_tput),
-            fmt_time(snap.p99_request_us / 1e6),
-            per_shard.join("/"),
-        ]);
-        // shards=1 at this batch size is already recorded by the
-        // batch-size loop above; a duplicate name would make the CI
-        // p50 gate ambiguous about which measurement it checks.
-        if shards > 1 {
+    let mut base: Option<f64> = None;
+    let mut deque_tput = std::collections::BTreeMap::new();
+    let mut shared_tput = std::collections::BTreeMap::new();
+    for shards in [1usize, 2, 4, 16] {
+        for mode in [DispatchMode::Deques, DispatchMode::SharedQueue] {
+            let (el, snap) = run_load(&man, &w, batch, shards, n_requests, mode);
+            let tput = n_requests as f64 / el;
+            // shards=1 deque run is the speedup baseline
+            let base_tput = *base.get_or_insert(tput);
+            let (mode_name, prefix) = match mode {
+                DispatchMode::Deques => ("deques", "serve"),
+                DispatchMode::SharedQueue => ("shared-q", "serve_sharedq"),
+            };
+            match mode {
+                DispatchMode::Deques => {
+                    deque_tput.insert(shards, tput);
+                }
+                DispatchMode::SharedQueue => {
+                    shared_tput.insert(shards, tput);
+                }
+            }
+            shard_table.row(&[
+                shards.to_string(),
+                mode_name.into(),
+                format!("{tput:.0}"),
+                format!("{:.2}x", tput / base_tput),
+                fmt_time(snap.p99_request_us / 1e6),
+                format!("{}/{}", snap.local_batches(), snap.stolen_batches()),
+            ]);
             records.push(BenchRecord {
-                name: format!("serve_batch{batch}_shards{shards}"),
+                name: format!("{prefix}_batch{batch}_shards{shards}"),
                 p50_us: snap.p50_request_us,
                 p99_us: snap.p99_request_us,
                 throughput: tput,
@@ -148,6 +167,14 @@ fn main() {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     );
     println!("{}", shard_table.to_text());
+    for (shards, d) in &deque_tput {
+        if let Some(s) = shared_tput.get(shards) {
+            println!(
+                "deques vs shared queue @ {shards} shards: {:.2}x ({d:.0} vs {s:.0} vox/s)",
+                d / s
+            );
+        }
+    }
 
     match write_bench_json("coordinator_throughput", &records) {
         Ok(p) => println!("wrote {}", p.display()),

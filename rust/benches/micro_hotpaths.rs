@@ -187,6 +187,33 @@ fn main() {
         black_box(s);
     }));
 
+    // dispatch-structure overhead in isolation: 64 p2c pushes + 64
+    // claims (local pops + steal scans) through a 16-shard deque set —
+    // the pure protocol cost a batch pays on top of the engine
+    let deques: uivim::coordinator::ShardDeques<usize> =
+        uivim::coordinator::ShardDeques::new(16, 64);
+    let mut push_rng = Pcg32::new(61);
+    let mut claim_rng = Pcg32::new(62);
+    results.push(bench("deque_push_claim_64x16", &cfg, || {
+        for i in 0..64usize {
+            deques.push_balanced(i, &mut push_rng).unwrap();
+        }
+        while let Some((item, _)) = deques.try_pop(0, &mut claim_rng) {
+            black_box(item);
+        }
+    }));
+
+    // the lease slab's take/put cycle (per-request buffer recycling)
+    let slab = uivim::util::pool::VecPool::new(8);
+    results.push(bench("vecpool_lease_cycle_x64", &cfg, || {
+        for _ in 0..64 {
+            let mut v = slab.take(104);
+            v.resize(104, 1.0);
+            black_box(&v);
+            slab.put(v);
+        }
+    }));
+
     // classical fit baselines (paper §II-B motivation: "long fitting
     // times" of least squares vs the network's one-pass inference)
     let bt = uivim::ivim::bvalues_tiny();

@@ -403,6 +403,51 @@ mod tests {
         assert!(ok.contains("unmeasured") && ok.contains("+50.0%"), "{ok}");
     }
 
+    /// The armed CI gate end to end at the file level (exactly what
+    /// `repro bench-diff --baseline … --current …` runs): a synthetic
+    /// baseline/current pair with a 21% p50 regression must FAIL, and
+    /// the same pair under a 25% budget must pass — proving the gate
+    /// actually bites once baselines carry real (non-zero) p50s.
+    #[test]
+    fn bench_diff_gate_fails_a_21_percent_regression() {
+        let dir = std::env::temp_dir().join("uivim_bench_gate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let write = |name: &str, recs: &[BenchRecord]| -> std::path::PathBuf {
+            let rows: Vec<crate::util::json::Json> = recs
+                .iter()
+                .map(|r| {
+                    crate::json_obj! {
+                        "name" => r.name.clone(),
+                        "p50_us" => r.p50_us,
+                        "p99_us" => r.p99_us,
+                        "throughput" => r.throughput,
+                    }
+                })
+                .collect();
+            let doc = crate::json_obj! { "bench" => "gate", "results" => rows };
+            let path = dir.join(name);
+            std::fs::write(&path, doc.to_string_pretty()).unwrap();
+            path
+        };
+        let baseline = write(
+            "baseline.json",
+            &[rec("serve_batch16_shards4", 100.0), rec("steady", 50.0)],
+        );
+        let current = write(
+            "current.json",
+            &[rec("serve_batch16_shards4", 121.0), rec("steady", 50.0)],
+        );
+        let err = compare_bench_files(&baseline, &current, 0.20).unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("serve_batch16_shards4") && msg.contains("REGRESSED"),
+            "the gate must name the regressed case: {msg}"
+        );
+        assert!(!msg.contains("steady: p50"), "{msg}");
+        // the same pair under a looser budget passes
+        assert!(compare_bench_files(&baseline, &current, 0.25).is_ok());
+    }
+
     #[test]
     fn compare_roundtrips_through_json_files() {
         let dir = std::env::temp_dir().join("uivim_bench_diff_test");

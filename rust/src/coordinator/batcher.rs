@@ -67,6 +67,13 @@ pub struct Batcher<T> {
     /// otherwise allocate one `Vec<f32>` per batch).  Shared with
     /// whoever consumes the batches, which returns buffers after use.
     signal_pool: Option<Arc<VecPool>>,
+    /// Recycling pool for the **per-request** signal buffers: once `cut`
+    /// has copied a pending request's signals into the batch buffer, the
+    /// request's own `Vec` is dead weight — with a pool it goes back to
+    /// `Coordinator::lease()` for the next caller instead of being
+    /// dropped, closing the last caller-side allocation on the serving
+    /// path.
+    request_pool: Option<Arc<VecPool>>,
 }
 
 impl<T> Batcher<T> {
@@ -77,6 +84,7 @@ impl<T> Batcher<T> {
             nb,
             queue: VecDeque::new(),
             signal_pool: None,
+            request_pool: None,
         }
     }
 
@@ -85,6 +93,20 @@ impl<T> Batcher<T> {
     pub fn with_pool(cfg: BatcherConfig, nb: usize, pool: Arc<VecPool>) -> Self {
         let mut b = Self::new(cfg, nb);
         b.signal_pool = Some(pool);
+        b
+    }
+
+    /// [`Batcher::with_pool`] plus a **request** pool: `cut` reclaims
+    /// each pending request's own signal `Vec` into `request_pool` the
+    /// moment its rows are copied into the batch buffer.
+    pub fn with_pools(
+        cfg: BatcherConfig,
+        nb: usize,
+        signal_pool: Arc<VecPool>,
+        request_pool: Arc<VecPool>,
+    ) -> Self {
+        let mut b = Self::with_pool(cfg, nb, signal_pool);
+        b.request_pool = Some(request_pool);
         b
     }
 
@@ -144,6 +166,11 @@ impl<T> Batcher<T> {
             let p = self.queue.pop_front().expect("non-empty");
             signals.extend_from_slice(&p.signals);
             tags.push(p.tag);
+            // the request's own buffer is consumed: back to the lease
+            // slab for the next caller
+            if let Some(pool) = &self.request_pool {
+                pool.put(p.signals);
+            }
         }
         // Zero-pad to the static shape; padded rows are dropped by `real`.
         signals.resize(self.cfg.batch_size * self.nb, 0.0);
@@ -271,6 +298,60 @@ mod tests {
         assert_eq!(second.signals.as_ptr(), ptr, "cut must reuse the pooled buffer");
         assert_eq!(second.tags, vec![4, 5, 6, 7]);
         assert_eq!(&second.signals[0..4], &[4.0; 4]);
+    }
+
+    /// A request-pool-backed batcher hands each consumed pending's own
+    /// signal `Vec` back at cut time — the lease slab's reclaim point.
+    #[test]
+    fn cut_reclaims_request_buffers_into_the_lease_pool() {
+        let signal_pool = Arc::new(VecPool::new(4));
+        let request_pool = Arc::new(VecPool::new(8));
+        let mut b = Batcher::with_pools(
+            BatcherConfig {
+                batch_size: 4,
+                max_wait: Duration::from_millis(1),
+                queue_capacity: 100,
+            },
+            4,
+            Arc::clone(&signal_pool),
+            Arc::clone(&request_pool),
+        );
+        for i in 0..6 {
+            let mut signals = request_pool.take(4);
+            signals.resize(4, i as f32);
+            b.push(Pending {
+                signals,
+                tag: i,
+                enqueued: Instant::now(),
+            })
+            .unwrap();
+        }
+        assert_eq!(request_pool.created(), 6);
+        assert_eq!(request_pool.idle(), 0, "all six buffers are leased out");
+        let batch = b.cut().unwrap();
+        assert_eq!(batch.real, 4);
+        assert_eq!(
+            request_pool.idle(),
+            4,
+            "cut returns each consumed request's buffer"
+        );
+        let tail = b.cut().unwrap();
+        assert_eq!(tail.real, 2);
+        assert_eq!(request_pool.idle(), 6);
+        // steady state: a new wave of requests reuses the reclaimed
+        // buffers — the high-water mark does not move
+        for i in 0..6 {
+            let mut signals = request_pool.take(4);
+            signals.resize(4, i as f32);
+            b.push(Pending {
+                signals,
+                tag: 10 + i,
+                enqueued: Instant::now(),
+            })
+            .unwrap();
+        }
+        while b.cut().is_some() {}
+        assert_eq!(request_pool.created(), 6, "wave 2 allocated nothing");
     }
 
     #[test]

@@ -1,0 +1,473 @@
+//! Per-shard bounded work deques with steal-on-idle — the successor to
+//! the single shared MPMC batch queue.
+//!
+//! One `Mutex`+`Condvar` in front of K shards serialises every claim;
+//! past ~8 shards the lock convoy erodes exactly the per-sample headroom
+//! the mask-based BayesNN datapath wins (ROADMAP).  Here each shard owns
+//! a bounded deque:
+//!
+//! * the **dispatcher pushes** to a shard's local deque, balancing with
+//!   power-of-two-choices on depth (two random deques, take the
+//!   shallower);
+//! * a **shard pops LIFO** from its own deque (the freshest batch is the
+//!   cache-warm one);
+//! * an **idle shard steals FIFO** from a victim, scanning the other
+//!   deques from a seeded-random start offset (the oldest batch is the
+//!   one closest to its deadline, so stealing drains the victim's
+//!   backlog in arrival order).
+//!
+//! Contention is now per-deque: the dispatcher and at most one thief
+//! touch any given lock, instead of K shards convoying on one.
+//!
+//! Every operation short of the blocking [`ShardDeques::pop`] is a
+//! single non-blocking atomic protocol step ([`ShardDeques::try_pop`],
+//! [`ShardDeques::pop_local`], [`ShardDeques::steal_from`],
+//! [`ShardDeques::push_to`], …).  That is deliberate: the deterministic
+//! concurrency harness (`testing::sched`) replays interleavings of these
+//! exact steps from a script, so races like "steal racing shutdown" are
+//! table rows, not sleep-based flakes.  Victim/placement randomness is
+//! always drawn from a caller-supplied [`Pcg32`], never from ambient
+//! state, so a fixed seed reproduces a schedule bit-for-bit.
+//!
+//! Shutdown contract (mirrors the old shared queue): [`close`] wakes
+//! every sleeper and makes pushes fail, but **claims keep succeeding
+//! until all deques are empty** — including cross-shard steals — so no
+//! admitted item is stranded.  [`drain`] (the dead-pool failsafe) empties
+//! every deque and hands the items back to the caller to fail them fast.
+//!
+//! [`close`]: ShardDeques::close
+//! [`drain`]: ShardDeques::drain
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use crate::util::rng::Pcg32;
+
+/// How a claimed item was obtained — feeds the per-shard
+/// `local_batches` / `stolen_batches` counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Claim {
+    /// Popped LIFO from the shard's own deque.
+    Local,
+    /// Stolen FIFO from `victim`'s deque.
+    Stolen { victim: usize },
+}
+
+/// The soft per-deque cap for a coordinator admitting at most
+/// `queue_capacity` requests, batched into groups of `batch_size`,
+/// spread over `shards` deques: the worst-case admitted backlog, in
+/// batches, split evenly.  One definition shared by the production
+/// `WorkSource` and the `testing::sched` harness, so the deterministic
+/// coverage always exercises the placement bound that ships.
+pub fn cap_for(queue_capacity: usize, batch_size: usize, shards: usize) -> usize {
+    queue_capacity
+        .div_ceil(batch_size.max(1))
+        .div_ceil(shards.max(1))
+        .max(2)
+}
+
+/// K bounded deques plus the sleep/wake machinery for blocking pops.
+pub struct ShardDeques<T> {
+    deques: Vec<Mutex<VecDeque<T>>>,
+    /// Lock-free mirrors of each deque's length: the balance signal for
+    /// power-of-two-choices pushes, the cheap emptiness peek before a
+    /// steal locks a victim, and the `deque_depth` metrics gauge.
+    depths: Vec<AtomicUsize>,
+    /// Items across all deques.  SeqCst: paired with `sleepers` in a
+    /// store-then-load (Dekker) protocol against lost wakeups.
+    total: AtomicUsize,
+    closed: AtomicBool,
+    /// Shards park here only after a full local+steal scan found
+    /// nothing — the slow path; pushes touch it only when a sleeper is
+    /// registered.
+    sleep: Mutex<()>,
+    wake: Condvar,
+    sleepers: AtomicUsize,
+    /// Soft per-deque bound: `push_balanced` routes around deques at
+    /// this depth while any other has room.  It is a balancing hint,
+    /// not admission control (the coordinator gates admission at
+    /// `submit()`); only [`ShardDeques::close`] makes a push fail.
+    cap: usize,
+}
+
+impl<T> ShardDeques<T> {
+    /// `shards` deques (min 1), each soft-bounded at `cap_per_shard`
+    /// items (min 1).
+    pub fn new(shards: usize, cap_per_shard: usize) -> Self {
+        let shards = shards.max(1);
+        ShardDeques {
+            deques: (0..shards).map(|_| Mutex::new(VecDeque::new())).collect(),
+            depths: (0..shards).map(|_| AtomicUsize::new(0)).collect(),
+            total: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            sleep: Mutex::new(()),
+            wake: Condvar::new(),
+            sleepers: AtomicUsize::new(0),
+            cap: cap_per_shard.max(1),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.deques.len()
+    }
+
+    /// Current depth of shard `k`'s deque (gauge; racy by nature).
+    pub fn depth(&self, k: usize) -> usize {
+        self.depths[k].load(Ordering::Acquire)
+    }
+
+    /// Items across all deques (gauge; racy by nature).
+    pub fn total(&self) -> usize {
+        self.total.load(Ordering::SeqCst)
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
+    }
+
+    /// Push to shard `k`'s deque.  `Err` hands the item back once the
+    /// deques are closed (every shard dead, or shutdown already
+    /// flushed); the caller must fail it rather than strand it.
+    pub fn push_to(&self, k: usize, item: T) -> Result<(), T> {
+        if self.is_closed() {
+            return Err(item);
+        }
+        {
+            let mut q = self.deques[k].lock().expect("deque lock");
+            // `close` → `drain` takes each deque lock once *after*
+            // setting the flag, so re-checking under the lock means a
+            // racing push either fails here or lands before the drain
+            // sweeps this deque — an item is never stranded.
+            if self.is_closed() {
+                return Err(item);
+            }
+            q.push_back(item);
+            self.depths[k].fetch_add(1, Ordering::Release);
+            // inside the critical section: a claimer can only reach this
+            // item after the lock is released, so its decrement always
+            // follows this increment — `total` never transiently
+            // underflows.
+            self.total.fetch_add(1, Ordering::SeqCst);
+        }
+        self.notify_one();
+        Ok(())
+    }
+
+    /// Balanced push: power-of-two-choices on depth (two seeded-random
+    /// deques, take the shallower), routing around deques at the soft
+    /// cap while an alternative has room.  Returns the chosen shard, or
+    /// `Err` with the item once closed.
+    pub fn push_balanced(&self, item: T, rng: &mut Pcg32) -> Result<usize, T> {
+        let n = self.deques.len();
+        let mut k = if n == 1 {
+            0
+        } else {
+            let a = rng.below(n as u32) as usize;
+            let b = rng.below(n as u32) as usize;
+            if self.depth(a) <= self.depth(b) {
+                a
+            } else {
+                b
+            }
+        };
+        if self.depth(k) >= self.cap {
+            // both picks saturated: take any deque with room, else keep
+            // the pick (soft bound — admission control lives upstream)
+            if let Some(open) = (0..n).find(|&i| self.depth(i) < self.cap) {
+                k = open;
+            }
+        }
+        self.push_to(k, item).map(|()| k)
+    }
+
+    /// Non-blocking LIFO pop from shard `k`'s own deque.
+    pub fn pop_local(&self, k: usize) -> Option<T> {
+        if self.depth(k) == 0 {
+            return None;
+        }
+        let popped = self.deques[k].lock().expect("deque lock").pop_back();
+        if popped.is_some() {
+            self.depths[k].fetch_sub(1, Ordering::Release);
+            self.total.fetch_sub(1, Ordering::SeqCst);
+        }
+        popped
+    }
+
+    /// Non-blocking FIFO steal from `victim`'s deque (front = oldest =
+    /// closest to its deadline).  Succeeds even after [`close`]: steals
+    /// are how a surviving shard drains a stalled sibling's backlog
+    /// during shutdown.
+    ///
+    /// [`close`]: ShardDeques::close
+    pub fn steal_from(&self, victim: usize) -> Option<T> {
+        if self.depth(victim) == 0 {
+            return None;
+        }
+        let stolen = self.deques[victim].lock().expect("deque lock").pop_front();
+        if stolen.is_some() {
+            self.depths[victim].fetch_sub(1, Ordering::Release);
+            self.total.fetch_sub(1, Ordering::SeqCst);
+        }
+        stolen
+    }
+
+    /// One non-blocking claim attempt for shard `k`: local LIFO pop,
+    /// else one FIFO steal scan over the other deques from a
+    /// seeded-random start offset.  `None` means every deque *looked*
+    /// empty at the moment it was peeked (a concurrent push may already
+    /// have changed that — [`ShardDeques::pop`] handles the retry).
+    pub fn try_pop(&self, k: usize, rng: &mut Pcg32) -> Option<(T, Claim)> {
+        if let Some(item) = self.pop_local(k) {
+            return Some((item, Claim::Local));
+        }
+        let n = self.deques.len();
+        if n > 1 {
+            let start = rng.below((n - 1) as u32) as usize;
+            for i in 0..n - 1 {
+                let victim = (k + 1 + (start + i) % (n - 1)) % n;
+                if let Some(item) = self.steal_from(victim) {
+                    return Some((item, Claim::Stolen { victim }));
+                }
+            }
+        }
+        None
+    }
+
+    /// Blocking claim for shard worker loops.  Returns `None` only once
+    /// the deques are closed **and** fully drained, so shutdown never
+    /// drops an admitted item.
+    pub fn pop(&self, k: usize, rng: &mut Pcg32) -> Option<(T, Claim)> {
+        loop {
+            if let Some(got) = self.try_pop(k, rng) {
+                return Some(got);
+            }
+            if self.is_closed() && self.total() == 0 {
+                return None;
+            }
+            // Park, guarding against the lost-wakeup race: register as
+            // a sleeper *then* re-check, while the pusher increments
+            // `total` *then* checks for sleepers (both SeqCst).  One of
+            // the two always observes the other.
+            let guard = self.sleep.lock().expect("sleep lock");
+            self.sleepers.fetch_add(1, Ordering::SeqCst);
+            if self.total() == 0 && !self.is_closed() {
+                let _g = self.wake.wait(guard).expect("sleep lock");
+            }
+            self.sleepers.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    fn notify_one(&self) {
+        if self.sleepers.load(Ordering::SeqCst) > 0 {
+            // Taking the sleep lock first means a shard between its
+            // re-check and its wait (it holds the lock there) cannot
+            // miss this notification.
+            let _g = self.sleep.lock().expect("sleep lock");
+            self.wake.notify_one();
+        }
+    }
+
+    /// Close: pushes start failing, every sleeper wakes.  Claims keep
+    /// draining whatever is already queued.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        let _g = self.sleep.lock().expect("sleep lock");
+        self.wake.notify_all();
+    }
+
+    /// Empty every deque and hand the items back (the dead-pool
+    /// failsafe: when no shard survives to claim them, the caller fails
+    /// them fast instead of stranding their requests).  Call after
+    /// [`ShardDeques::close`].
+    pub fn drain(&self) -> Vec<T> {
+        let mut out = Vec::new();
+        for (k, dq) in self.deques.iter().enumerate() {
+            let mut q = dq.lock().expect("deque lock");
+            while let Some(item) = q.pop_front() {
+                self.depths[k].fetch_sub(1, Ordering::Release);
+                self.total.fetch_sub(1, Ordering::SeqCst);
+                out.push(item);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::sync::Arc;
+
+    #[test]
+    fn local_pop_is_lifo_steal_is_fifo() {
+        let d: ShardDeques<u32> = ShardDeques::new(2, 16);
+        for v in [1, 2, 3] {
+            d.push_to(0, v).unwrap();
+        }
+        assert_eq!(d.depth(0), 3);
+        assert_eq!(d.total(), 3);
+        // owner pops the freshest
+        assert_eq!(d.pop_local(0), Some(3));
+        // thief steals the oldest
+        assert_eq!(d.steal_from(0), Some(1));
+        assert_eq!(d.pop_local(0), Some(2));
+        assert_eq!(d.total(), 0);
+        assert_eq!(d.pop_local(0), None);
+        assert_eq!(d.steal_from(0), None);
+    }
+
+    #[test]
+    fn try_pop_prefers_local_then_steals() {
+        let d: ShardDeques<u32> = ShardDeques::new(3, 16);
+        let mut rng = Pcg32::new(7);
+        d.push_to(0, 10).unwrap();
+        d.push_to(1, 20).unwrap();
+        let (v, how) = d.try_pop(0, &mut rng).unwrap();
+        assert_eq!((v, how), (10, Claim::Local));
+        let (v, how) = d.try_pop(0, &mut rng).unwrap();
+        assert_eq!(v, 20);
+        assert_eq!(how, Claim::Stolen { victim: 1 });
+        assert!(d.try_pop(0, &mut rng).is_none());
+    }
+
+    #[test]
+    fn push_balanced_prefers_the_shallower_deque() {
+        let d: ShardDeques<u32> = ShardDeques::new(2, 100);
+        let mut rng = Pcg32::new(1);
+        // preload shard 0 so every two-choice pick favours shard 1
+        for v in 0..10 {
+            d.push_to(0, v).unwrap();
+        }
+        let mut to_one = 0;
+        for v in 0..10 {
+            if d.push_balanced(v, &mut rng).unwrap() == 1 {
+                to_one += 1;
+            }
+        }
+        // p2c sends at least the clear majority to the empty deque
+        // (deterministic for the fixed seed)
+        assert!(to_one >= 8, "p2c ignored the depth signal: {to_one}/10");
+    }
+
+    #[test]
+    fn push_balanced_routes_around_the_soft_cap() {
+        let d: ShardDeques<u32> = ShardDeques::new(3, 2);
+        let mut rng = Pcg32::new(3);
+        // 6 pushes exactly fill 3 deques of cap 2 — none may exceed the
+        // cap while a sibling has room
+        for v in 0..6 {
+            d.push_balanced(v, &mut rng).unwrap();
+        }
+        for k in 0..3 {
+            assert_eq!(d.depth(k), 2, "deque {k} missed the cap route-around");
+        }
+        // saturated: the soft bound still admits (admission control is
+        // upstream)
+        d.push_balanced(99, &mut rng).unwrap();
+        assert_eq!(d.total(), 7);
+    }
+
+    #[test]
+    fn close_fails_pushes_but_steals_keep_draining() {
+        let d: ShardDeques<u32> = ShardDeques::new(2, 16);
+        d.push_to(1, 5).unwrap();
+        d.close();
+        assert!(d.push_to(0, 6).is_err(), "push must fail after close");
+        assert!(d.push_balanced(7, &mut Pcg32::new(1)).is_err());
+        // the queued item is still claimable — cross-shard
+        assert_eq!(d.steal_from(1), Some(5));
+        assert_eq!(d.total(), 0);
+    }
+
+    #[test]
+    fn drain_returns_everything_in_deque_order() {
+        let d: ShardDeques<u32> = ShardDeques::new(2, 16);
+        d.push_to(0, 1).unwrap();
+        d.push_to(0, 2).unwrap();
+        d.push_to(1, 3).unwrap();
+        d.close();
+        let got = d.drain();
+        assert_eq!(got, vec![1, 2, 3]);
+        assert_eq!(d.total(), 0);
+        assert_eq!(d.depth(0), 0);
+        assert_eq!(d.depth(1), 0);
+    }
+
+    #[test]
+    fn blocking_pop_returns_none_only_after_close_and_drain() {
+        let d: Arc<ShardDeques<u64>> = Arc::new(ShardDeques::new(2, 1024));
+        let seen = Arc::new(AtomicU64::new(0));
+        let n_items = 200u64;
+        let workers: Vec<_> = (0..2)
+            .map(|k| {
+                let d = Arc::clone(&d);
+                let seen = Arc::clone(&seen);
+                std::thread::spawn(move || {
+                    let mut rng = Pcg32::with_stream(99, k as u64);
+                    let mut count = 0u64;
+                    while d.pop(k, &mut rng).is_some() {
+                        count += 1;
+                    }
+                    seen.fetch_add(count, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        let mut rng = Pcg32::new(4);
+        for v in 0..n_items {
+            d.push_balanced(v, &mut rng).unwrap();
+        }
+        d.close();
+        for w in workers {
+            w.join().unwrap();
+        }
+        assert_eq!(seen.load(Ordering::SeqCst), n_items, "drained exactly once each");
+        assert_eq!(d.total(), 0);
+    }
+
+    #[test]
+    fn concurrent_claims_never_lose_or_duplicate() {
+        // Every push lands on shard 0, whose worker never runs — the
+        // three thief workers (shards 1..4) can only claim by stealing,
+        // so every item is claimed exactly once *and* every claim is a
+        // steal, deterministically.  The sum of claimed values equals
+        // the pushed sum iff nothing was lost or duplicated.
+        let shards = 4usize;
+        let d: Arc<ShardDeques<u64>> = Arc::new(ShardDeques::new(shards, 4096));
+        let sum = Arc::new(AtomicU64::new(0));
+        let stolen = Arc::new(AtomicU64::new(0));
+        let workers: Vec<_> = (1..shards)
+            .map(|k| {
+                let d = Arc::clone(&d);
+                let sum = Arc::clone(&sum);
+                let stolen = Arc::clone(&stolen);
+                std::thread::spawn(move || {
+                    let mut rng = Pcg32::with_stream(7, k as u64);
+                    while let Some((v, how)) = d.pop(k, &mut rng) {
+                        sum.fetch_add(v, Ordering::SeqCst);
+                        if matches!(how, Claim::Stolen { victim: 0 }) {
+                            stolen.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                })
+            })
+            .collect();
+        let n = 2000u64;
+        let mut want = 0u64;
+        for v in 1..=n {
+            d.push_to(0, v).unwrap();
+            want += v;
+        }
+        d.close();
+        for w in workers {
+            w.join().unwrap();
+        }
+        assert_eq!(sum.load(Ordering::SeqCst), want);
+        assert_eq!(
+            stolen.load(Ordering::SeqCst),
+            n,
+            "with no shard-0 worker, every claim must be a steal from shard 0"
+        );
+    }
+}

@@ -81,6 +81,11 @@ pub struct ShardMetrics {
     pub engine_errors: AtomicU64,
     /// Time the shard spent inside `infer_batch`.
     pub busy_us: AtomicU64,
+    /// Batches claimed LIFO from this shard's own deque (equals
+    /// `batches` under the legacy shared-queue dispatch).
+    pub local_batches: AtomicU64,
+    /// Batches this shard stole FIFO from a sibling's deque while idle.
+    pub stolen_batches: AtomicU64,
 }
 
 impl ShardMetrics {
@@ -90,17 +95,28 @@ impl ShardMetrics {
             responses: self.responses.load(Ordering::Relaxed),
             engine_errors: self.engine_errors.load(Ordering::Relaxed),
             busy_us: self.busy_us.load(Ordering::Relaxed),
+            local_batches: self.local_batches.load(Ordering::Relaxed),
+            stolen_batches: self.stolen_batches.load(Ordering::Relaxed),
+            deque_depth: 0,
         }
     }
 }
 
-/// Point-in-time copy of one shard's counters.
+/// Point-in-time copy of one shard's counters, plus the shard's live
+/// deque-depth gauge (filled by `Coordinator::snapshot()`; zero when
+/// snapshotting the bare counter block, which cannot see the deques).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ShardSnapshot {
     pub batches: u64,
     pub responses: u64,
     pub engine_errors: u64,
     pub busy_us: u64,
+    /// Batches claimed from this shard's own deque.
+    pub local_batches: u64,
+    /// Batches stolen from a sibling while idle.
+    pub stolen_batches: u64,
+    /// Batches currently queued in this shard's deque (gauge).
+    pub deque_depth: usize,
 }
 
 /// Aggregate serving metrics shared between the coordinator and its
@@ -149,6 +165,7 @@ impl ServingMetrics {
             mean_batch_us: self.batch_latency.mean_us(),
             pooled_outputs: 0,
             pooled_signals: 0,
+            pooled_requests: 0,
             queue_depth: 0,
             per_shard: self.shards.iter().map(|s| s.snapshot()).collect(),
         }
@@ -174,9 +191,24 @@ pub struct MetricsSnapshot {
     pub pooled_outputs: usize,
     /// Idle recycled batch signal buffers in the coordinator pool.
     pub pooled_signals: usize,
+    /// Idle leased per-request signal buffers (the `Coordinator::lease`
+    /// slab) waiting for the next caller.
+    pub pooled_requests: usize,
     /// Requests admitted but not yet answered (pending queue length).
     pub queue_depth: usize,
     pub per_shard: Vec<ShardSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// Batches claimed from the claiming shard's own deque, summed.
+    pub fn local_batches(&self) -> u64 {
+        self.per_shard.iter().map(|s| s.local_batches).sum()
+    }
+
+    /// Batches stolen across shards, summed.
+    pub fn stolen_batches(&self) -> u64 {
+        self.per_shard.iter().map(|s| s.stolen_batches).sum()
+    }
 }
 
 #[cfg(test)]
@@ -245,5 +277,21 @@ mod tests {
     #[test]
     fn shard_count_clamped_to_one() {
         assert_eq!(ServingMetrics::with_shards(0).shards.len(), 1);
+    }
+
+    #[test]
+    fn steal_counters_partition_and_sum() {
+        let m = ServingMetrics::with_shards(2);
+        m.shard(0).local_batches.fetch_add(3, Ordering::Relaxed);
+        m.shard(1).stolen_batches.fetch_add(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.per_shard[0].local_batches, 3);
+        assert_eq!(s.per_shard[0].stolen_batches, 0);
+        assert_eq!(s.per_shard[1].stolen_batches, 2);
+        assert_eq!(s.local_batches(), 3);
+        assert_eq!(s.stolen_batches(), 2);
+        // gauges are zero on the bare counter snapshot
+        assert!(s.per_shard.iter().all(|p| p.deque_depth == 0));
+        assert_eq!(s.pooled_requests, 0);
     }
 }

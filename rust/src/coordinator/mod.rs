@@ -6,37 +6,48 @@
 //! Architecture (std threads + channels; tokio unavailable offline):
 //!
 //! ```text
-//! clients ──► submit() ──► dispatcher (owns the Batcher)
-//!                 ▲  backpressure  │ pushes full batches
-//!                 │                ▼
-//!                 │        ┌─ shared queue ─┐
-//!                 │        ▼       ▼        ▼   shards PULL when idle
-//!                 │    shard 0  shard 1 … shard K-1   (one Engine each,
-//!                 │        │       │        │          built in-thread)
-//!                 └────────┴── responses ───┘
+//! clients ──► lease()/submit() ──► dispatcher (owns the Batcher)
+//!                 ▲  backpressure   │ pushes batches (p2c on depth)
+//!                 │      ┌──────────┼──────────┐
+//!                 │      ▼          ▼          ▼
+//!                 │  [deque 0]  [deque 1] … [deque K-1]  LIFO local pop,
+//!                 │      ▼          ▼          ▼         FIFO steal-on-idle
+//!                 │   shard 0    shard 1 …  shard K-1    (one Engine each,
+//!                 │      │          │          │          built in-thread)
+//!                 └──────┴────── responses ───┘
 //! ```
 //!
 //! * [`batcher`] — groups requests into engine-sized batches under a
 //!   deadline (size-or-timeout policy), zero-padding tail batches.
+//! * [`deque`] — the per-shard bounded work deques: power-of-two-choices
+//!   placement, LIFO local pops, FIFO steal-on-idle from a seeded-random
+//!   victim; every step is a non-blocking atomic op so `testing::sched`
+//!   can replay interleavings deterministically.
 //! * [`server`] — the sharded worker pool (engines are not `Send`; each
 //!   shard builds its engine from a shared factory inside its thread).
-//!   Shards *pull* formed batches from a shared queue (work-stealing: a
-//!   slow shard never strands batches behind it) and run the two-phase
-//!   `execute_into` hot path into output buffers recycled through a
-//!   shared `infer::OutputPool`.  Graceful shutdown drains every shard.
+//!   Shards claim batches from their own deque and steal from stalled
+//!   siblings (a slow shard never strands batches behind it), then run
+//!   the two-phase `execute_into` hot path into output buffers recycled
+//!   through a shared `infer::OutputPool`.  `Coordinator::lease` hands
+//!   out pooled per-request signal buffers that the dispatcher reclaims
+//!   at batch-cut time.  Graceful shutdown drains every shard.
 //! * [`uncertainty`] — per-voxel aggregation of the N mask samples into
 //!   prediction + relative uncertainty + confidence flag.
-//! * [`metrics`] — latency histogram, throughput, queue depth gauges and
-//!   per-shard batch/response/busy counters.
+//! * [`metrics`] — latency histogram, throughput, queue/deque gauges and
+//!   per-shard batch/response/steal/busy counters.
 //!
 //! See rust/DESIGN.md for the layer map and the shard architecture notes.
 
 pub mod batcher;
+pub mod deque;
 pub mod metrics;
 pub mod server;
 pub mod uncertainty;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use deque::{Claim, ShardDeques};
 pub use metrics::{MetricsSnapshot, ServingMetrics, ShardSnapshot};
-pub use server::{Coordinator, CoordinatorConfig, VoxelRequest, VoxelResponse};
+pub use server::{
+    Coordinator, CoordinatorConfig, DispatchMode, SignalLease, VoxelRequest, VoxelResponse,
+};
 pub use uncertainty::{UncertaintyReport, VoxelEstimate};

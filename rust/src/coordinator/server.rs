@@ -1,39 +1,47 @@
 //! The coordinator proper: a sharded pool of worker threads, each owning
-//! its own inference engine, pulling formed batches from a shared queue
-//! (work-stealing pull model) and recycling output buffers through a
-//! shared pool.
+//! its own inference engine, claiming formed batches from per-shard
+//! work-stealing deques and recycling every serving-path buffer through
+//! shared pools.
 //!
 //! ```text
-//! clients ──► submit() ──► dispatcher thread (owns the Batcher)
-//!                               │ pushes full batches
-//!                               ▼
-//!                       ┌─ shared batch queue ─┐
-//!                       ▼          ▼           ▼   each shard PULLS its
-//!                   shard 0    shard 1 ... shard K-1  next batch when idle
-//!                       │          │           │   (one Engine each,
-//!                       └───── responses ──────┘    built in-thread)
+//! clients ──► lease()/submit() ──► dispatcher thread (owns the Batcher)
+//!                               │ pushes batches (p2c on deque depth)
+//!                   ┌───────────┼───────────┐
+//!                   ▼           ▼           ▼
+//!               [deque 0]   [deque 1] … [deque K-1]   local pop = LIFO
+//!                   ▼           ▼           ▼         steal-on-idle = FIFO
+//!                shard 0     shard 1 ... shard K-1    from a random victim
+//!                   │           │           │     (one Engine each,
+//!                   └────── responses ──────┘      built in-thread)
 //! ```
 //!
-//! The pull model is what keeps the datapath saturated under skewed load:
-//! with dispatcher-push round-robin, one slow shard strands every batch
-//! queued behind it while its siblings idle — exactly the imbalance
-//! multi-sample inference amplifies, since all N mask samples ride on one
-//! batch.  Here a batch is only ever claimed by a shard that is ready to
-//! run it, so a stalled shard delays at most the single batch it already
-//! holds.
+//! Stealing is what keeps the datapath saturated under skewed load: a
+//! stalled shard delays at most the single batch it already holds — an
+//! idle sibling steals the rest of its backlog in arrival (FIFO) order.
+//! Unlike the previous single shared MPMC queue (one `Mutex`+`Condvar`
+//! all K shards convoyed on), contention is per-deque: the dispatcher
+//! and at most one thief touch any given lock.  The legacy shared queue
+//! survives behind [`DispatchMode::SharedQueue`] as the contention
+//! baseline the `coordinator_throughput` bench compares against.
 //!
 //! Engines are not `Send` (PJRT handles are `Rc`-based), so the
 //! coordinator takes an engine *factory* and each shard constructs its
 //! engine inside its own thread.  Shards run the two-phase hot path:
 //! `execute_into` writes into an `InferOutput` recycled through a shared
-//! [`OutputPool`], so steady-state serving performs no output allocation.
-//! Each request carries its own response channel (one-shot style), so
-//! cross-shard completion order never scrambles routing.
+//! [`OutputPool`], batch signal buffers recycle through one [`VecPool`]
+//! and per-request signal buffers through another (the
+//! [`Coordinator::lease`] slab) — steady-state serving performs no
+//! allocation on any side of the path.  Each request carries its own
+//! response channel (one-shot style), so cross-shard completion order
+//! never scrambles routing.
 //!
 //! Graceful shutdown drains everything: the dispatcher flushes the
-//! batcher into the queue, closes the queue, and the coordinator joins
-//! all threads — shards keep pulling until the closed queue is empty, so
-//! no request admitted before `shutdown()` is dropped.
+//! batcher into the deques, closes them, and the coordinator joins all
+//! threads — shards keep claiming (local pops *and* steals) until the
+//! closed deques are empty, so no request admitted before `shutdown()`
+//! is dropped.  If every shard dies (engine panics), the last exit
+//! closes and drains the deques so stranded callers fail fast instead of
+//! hanging.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -43,12 +51,19 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::batcher::{Batch, Batcher, BatcherConfig, Pending};
+use super::deque::{Claim, ShardDeques};
 use super::metrics::{MetricsSnapshot, ServingMetrics};
 use super::uncertainty::{aggregate_voxel, Thresholds};
 use crate::infer::{Engine, OutputPool};
 use crate::util::pool::VecPool;
+use crate::util::rng::Pcg32;
 
 pub use super::uncertainty::UncertaintyReport;
+
+/// Seed for the dispatcher's power-of-two-choices placement stream.
+const DISPATCH_SEED: u64 = 0x00D1_5BA1;
+/// Stream family for per-shard steal-victim selection (stream = shard).
+const STEAL_SEED: u64 = 0x0005_7EA1;
 
 /// A request: one voxel's normalised signals.
 #[derive(Debug, Clone)]
@@ -143,13 +158,151 @@ impl WorkQueue {
     }
 }
 
+/// How formed batches travel from the dispatcher to the shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DispatchMode {
+    /// Per-shard bounded deques: p2c placement, LIFO local pop, FIFO
+    /// steal-on-idle (the default — contention is per-deque).
+    #[default]
+    Deques,
+    /// The legacy single shared MPMC queue (one `Mutex`+`Condvar` every
+    /// shard convoys on).  Kept as the contention baseline for the
+    /// `coordinator_throughput` bench and as a fallback.
+    SharedQueue,
+}
+
+/// The dispatcher→shard hand-off structure, unified over both dispatch
+/// modes so the dispatcher/shard/failsafe loops are written once.
+enum WorkSource {
+    Shared(WorkQueue),
+    Deques(ShardDeques<Batch<RowTag>>),
+}
+
+impl WorkSource {
+    fn new(mode: DispatchMode, shards: usize, cfg: &BatcherConfig) -> Self {
+        match mode {
+            DispatchMode::SharedQueue => WorkSource::Shared(WorkQueue::new()),
+            DispatchMode::Deques => {
+                // Soft per-deque balance bound: the admitted backlog
+                // (queue_capacity requests) split across shards, in
+                // batches.  Admission control stays at `submit()`.
+                let cap = super::deque::cap_for(cfg.queue_capacity, cfg.batch_size, shards);
+                WorkSource::Deques(ShardDeques::new(shards, cap))
+            }
+        }
+    }
+
+    /// Hand a formed batch to the shards.  `Err` returns the batch once
+    /// the source is closed (every shard dead): the caller must fail its
+    /// requests fast rather than strand them.
+    fn push(&self, batch: Batch<RowTag>, rng: &mut Pcg32) -> Result<(), Batch<RowTag>> {
+        match self {
+            WorkSource::Shared(q) => q.push(batch),
+            WorkSource::Deques(d) => d.push_balanced(batch, rng).map(|_| ()),
+        }
+    }
+
+    /// Blocking claim for shard `k`.  `None` only once closed **and**
+    /// drained.  Shared-queue claims count as local.
+    fn pop(&self, k: usize, rng: &mut Pcg32) -> Option<(Batch<RowTag>, Claim)> {
+        match self {
+            WorkSource::Shared(q) => q.pull().map(|b| (b, Claim::Local)),
+            WorkSource::Deques(d) => d.pop(k, rng),
+        }
+    }
+
+    fn close(&self) {
+        match self {
+            WorkSource::Shared(q) => q.close(),
+            WorkSource::Deques(d) => d.close(),
+        }
+    }
+
+    /// Empty every queue/deque, handing the batches back (dead-pool
+    /// failsafe; call after `close`).
+    fn drain(&self) -> Vec<Batch<RowTag>> {
+        match self {
+            WorkSource::Shared(q) => {
+                let mut out = Vec::new();
+                while let Some(b) = q.try_pull() {
+                    out.push(b);
+                }
+                out
+            }
+            WorkSource::Deques(d) => d.drain(),
+        }
+    }
+
+    /// Shard `k`'s deque depth gauge (0 under the shared queue, which
+    /// has no per-shard backlog).
+    fn deque_depth(&self, k: usize) -> usize {
+        match self {
+            WorkSource::Shared(_) => 0,
+            WorkSource::Deques(d) => d.depth(k),
+        }
+    }
+}
+
+/// A pooled per-request signal buffer handed out by
+/// [`Coordinator::lease`]: fill it (it is pre-sized to `nb`, zeroed) and
+/// pass it to [`Coordinator::submit_leased`].  The buffer's `Vec` is
+/// reclaimed into the lease slab when the dispatcher copies it into a
+/// batch — and an **unused** lease returns its buffer on drop, so
+/// abandoning one leaks nothing.
+pub struct SignalLease {
+    buf: Option<Vec<f32>>,
+    pool: Arc<VecPool>,
+}
+
+impl SignalLease {
+    /// The signal slots, in b-value order (length = the coordinator's
+    /// `nb`).
+    pub fn signals_mut(&mut self) -> &mut [f32] {
+        self.buf.as_mut().expect("lease holds its buffer")
+    }
+
+    pub fn signals(&self) -> &[f32] {
+        self.buf.as_ref().expect("lease holds its buffer")
+    }
+
+    /// Copy a voxel's signals in (`src.len()` must equal `nb`).
+    pub fn copy_from(&mut self, src: &[f32]) {
+        self.signals_mut().copy_from_slice(src);
+    }
+
+    fn into_vec(mut self) -> Vec<f32> {
+        self.buf.take().expect("lease holds its buffer")
+    }
+}
+
+impl Drop for SignalLease {
+    fn drop(&mut self) {
+        if let Some(buf) = self.buf.take() {
+            self.pool.put(buf);
+        }
+    }
+}
+
+impl std::ops::Deref for SignalLease {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        self.signals()
+    }
+}
+
+impl std::ops::DerefMut for SignalLease {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        self.signals_mut()
+    }
+}
+
 /// Runs when a shard thread exits for any reason — normal shutdown,
 /// factory failure, or an engine panic unwinding the thread.  When the
-/// *last* shard goes away, close and drain the queue so stranded batches
-/// drop their responders (callers see an error instead of hanging
-/// forever) and release their queue-depth slots.
+/// *last* shard goes away, close and drain the work source so stranded
+/// batches drop their responders (callers see an error instead of
+/// hanging forever) and release their queue-depth slots.
 struct ShardExitGuard {
-    queue: Arc<WorkQueue>,
+    source: Arc<WorkSource>,
     depth: Arc<AtomicUsize>,
     alive: Arc<AtomicUsize>,
 }
@@ -157,8 +310,8 @@ struct ShardExitGuard {
 impl Drop for ShardExitGuard {
     fn drop(&mut self) {
         if self.alive.fetch_sub(1, Ordering::AcqRel) == 1 {
-            self.queue.close();
-            while let Some(batch) = self.queue.try_pull() {
+            self.source.close();
+            for batch in self.source.drain() {
                 for _ in batch.tags {
                     self.depth.fetch_sub(1, Ordering::AcqRel);
                 }
@@ -176,6 +329,8 @@ pub struct CoordinatorConfig {
     pub nb: usize,
     /// Worker shards, each owning one engine (min 1).
     pub shards: usize,
+    /// Dispatcher→shard hand-off structure (default: per-shard deques).
+    pub dispatch: DispatchMode,
 }
 
 impl CoordinatorConfig {
@@ -188,6 +343,7 @@ impl CoordinatorConfig {
             thresholds: Thresholds::default(),
             nb,
             shards: 1,
+            dispatch: DispatchMode::default(),
         }
     }
 
@@ -207,8 +363,10 @@ pub struct Coordinator {
     shard_workers: Vec<JoinHandle<()>>,
     metrics: Arc<ServingMetrics>,
     depth: Arc<AtomicUsize>,
+    source: Arc<WorkSource>,
     pool: Arc<OutputPool>,
     signal_pool: Arc<VecPool>,
+    request_pool: Arc<VecPool>,
     capacity: usize,
     nb: usize,
     shards: usize,
@@ -218,7 +376,7 @@ pub struct Coordinator {
 /// readable.
 struct ShardCtx {
     index: usize,
-    queue: Arc<WorkQueue>,
+    source: Arc<WorkSource>,
     pool: Arc<OutputPool>,
     signal_pool: Arc<VecPool>,
     metrics: Arc<ServingMetrics>,
@@ -241,13 +399,19 @@ impl Coordinator {
         let capacity = cfg.batcher.queue_capacity;
         let nb = cfg.nb;
         let factory = Arc::new(engine_factory);
-        let queue = Arc::new(WorkQueue::new());
+        let source = Arc::new(WorkSource::new(cfg.dispatch, shards, &cfg.batcher));
         // Enough pooled buffers for every shard to hold one in flight
         // plus one ready for hand-off.
         let pool = Arc::new(OutputPool::new(2 * shards));
         // Same bound for the recycled batch *signal* buffers (one being
         // filled by the dispatcher + one in flight per shard).
         let signal_pool = Arc::new(VecPool::new(2 * shards));
+        // The lease slab: per-request signal buffers.  Bounded by the
+        // admission gate — there can never be more than `queue_capacity`
+        // leased-and-admitted requests in flight, so at that cap the
+        // steady state allocates nothing and a burst cannot hoard more
+        // than the backlog it was admitted for.
+        let request_pool = Arc::new(VecPool::new(capacity.max(1)));
 
         // Spawn the shard workers first; each builds its engine in-thread
         // and reports readiness (engine batch size) or the build error.
@@ -257,7 +421,7 @@ impl Coordinator {
         for k in 0..shards {
             let ctx = ShardCtx {
                 index: k,
-                queue: Arc::clone(&queue),
+                source: Arc::clone(&source),
                 pool: Arc::clone(&pool),
                 signal_pool: Arc::clone(&signal_pool),
                 metrics: Arc::clone(&metrics),
@@ -268,7 +432,7 @@ impl Coordinator {
             let factory = Arc::clone(&factory);
             let ready = ready_tx.clone();
             let guard = ShardExitGuard {
-                queue: Arc::clone(&queue),
+                source: Arc::clone(&source),
                 depth: Arc::clone(&depth),
                 alive: Arc::clone(&alive),
             };
@@ -293,8 +457,8 @@ impl Coordinator {
                 Ok(h) => shard_workers.push(h),
                 Err(e) => {
                     // don't leave already-spawned shards parked on the
-                    // queue forever
-                    queue.close();
+                    // work source forever
+                    source.close();
                     for w in shard_workers {
                         let _ = w.join();
                     }
@@ -327,29 +491,38 @@ impl Coordinator {
             }
         }
         if let Some(e) = build_err {
-            queue.close();
+            source.close();
             for w in shard_workers {
                 let _ = w.join();
             }
             return Err(e);
         }
 
-        // Dispatcher thread: owns the batcher, feeds the shared queue.
+        // Dispatcher thread: owns the batcher, feeds the work source.
         let (tx, rx) = channel::<Msg>();
         let d_metrics = Arc::clone(&metrics);
         let d_depth = Arc::clone(&depth);
-        let d_queue = Arc::clone(&queue);
+        let d_source = Arc::clone(&source);
         let d_signal_pool = Arc::clone(&signal_pool);
+        let d_request_pool = Arc::clone(&request_pool);
         let d_cfg = cfg.clone();
         let dispatcher = match std::thread::Builder::new()
             .name("uivim-dispatcher".into())
             .spawn(move || {
-                dispatcher_loop(d_cfg, rx, &d_queue, &d_metrics, &d_depth, d_signal_pool)
+                dispatcher_loop(
+                    d_cfg,
+                    rx,
+                    &d_source,
+                    &d_metrics,
+                    &d_depth,
+                    d_signal_pool,
+                    d_request_pool,
+                )
             }) {
             Ok(h) => h,
             Err(e) => {
-                // shards are parked on the queue: release and join them
-                queue.close();
+                // shards are parked on the work source: release and join
+                source.close();
                 for w in shard_workers {
                     let _ = w.join();
                 }
@@ -363,8 +536,10 @@ impl Coordinator {
             shard_workers,
             metrics,
             depth,
+            source,
             pool,
             signal_pool,
+            request_pool,
             capacity,
             nb,
             shards,
@@ -374,27 +549,84 @@ impl Coordinator {
     /// Submit a voxel; returns a receiver for the response, or an error
     /// immediately under backpressure.
     pub fn submit(&self, req: VoxelRequest) -> anyhow::Result<Receiver<VoxelResponse>> {
-        anyhow::ensure!(
-            req.signals.len() == self.nb,
-            "voxel has {} values, expected {}",
-            req.signals.len(),
-            self.nb
-        );
+        self.submit_inner(req).map_err(|(e, _)| e)
+    }
+
+    /// `submit` that hands the request back on failure, so pooled
+    /// buffers can be reclaimed instead of dropped.
+    fn submit_inner(
+        &self,
+        req: VoxelRequest,
+    ) -> Result<Receiver<VoxelResponse>, (anyhow::Error, VoxelRequest)> {
+        if req.signals.len() != self.nb {
+            return Err((
+                anyhow::anyhow!(
+                    "voxel has {} values, expected {}",
+                    req.signals.len(),
+                    self.nb
+                ),
+                req,
+            ));
+        }
         if self.depth.load(Ordering::Acquire) >= self.capacity {
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            anyhow::bail!("queue full ({} requests)", self.capacity);
+            return Err((
+                anyhow::anyhow!("queue full ({} requests)", self.capacity),
+                req,
+            ));
         }
         let (resp_tx, resp_rx) = channel();
         self.depth.fetch_add(1, Ordering::AcqRel);
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .send(Msg::Request(Envelope {
-                req,
-                resp_tx,
-                enqueued: Instant::now(),
-            }))
-            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
-        Ok(resp_rx)
+        match self.tx.send(Msg::Request(Envelope {
+            req,
+            resp_tx,
+            enqueued: Instant::now(),
+        })) {
+            Ok(()) => Ok(resp_rx),
+            Err(send_err) => {
+                self.depth.fetch_sub(1, Ordering::AcqRel);
+                let Msg::Request(env) = send_err.0 else {
+                    unreachable!("submit only sends requests")
+                };
+                Err((anyhow::anyhow!("coordinator stopped"), env.req))
+            }
+        }
+    }
+
+    /// Take a pooled per-request signal buffer (pre-sized to `nb`,
+    /// zeroed).  Fill it and pass it to [`Coordinator::submit_leased`]:
+    /// together they close the last caller-side allocation on the
+    /// serving path — the buffer cycles lease → batcher → back to the
+    /// slab, and dropping an unfilled lease returns it too.
+    pub fn lease(&self) -> SignalLease {
+        let mut buf = self.request_pool.take(self.nb);
+        buf.resize(self.nb, 0.0);
+        SignalLease {
+            buf: Some(buf),
+            pool: Arc::clone(&self.request_pool),
+        }
+    }
+
+    /// Submit a leased buffer as voxel `id`.  On rejection
+    /// (backpressure / shutdown) the buffer goes straight back to the
+    /// slab — a failed submit leaks nothing.
+    pub fn submit_leased(
+        &self,
+        id: u64,
+        lease: SignalLease,
+    ) -> anyhow::Result<Receiver<VoxelResponse>> {
+        let req = VoxelRequest {
+            id,
+            signals: lease.into_vec(),
+        };
+        match self.submit_inner(req) {
+            Ok(rx) => Ok(rx),
+            Err((e, req)) => {
+                self.request_pool.put(req.signals);
+                Err(e)
+            }
+        }
     }
 
     /// Submit and wait.
@@ -428,14 +660,31 @@ impl Coordinator {
         self.signal_pool.idle()
     }
 
+    /// Idle per-request signal buffers in the lease slab.
+    pub fn pooled_requests(&self) -> usize {
+        self.request_pool.idle()
+    }
+
+    /// Fresh allocations the lease slab has made so far — the
+    /// capacity-stability signature (stable once leases recycle in
+    /// steady state).
+    pub fn lease_high_water(&self) -> usize {
+        self.request_pool.created()
+    }
+
     /// Point-in-time metrics **including the live gauges** (pool sizes,
-    /// pending queue depth) that the raw counter block cannot see.
-    /// Prefer this over `metrics().snapshot()` for dashboards.
+    /// per-shard deque depths, pending queue depth) that the raw counter
+    /// block cannot see.  Prefer this over `metrics().snapshot()` for
+    /// dashboards.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let mut s = self.metrics.snapshot();
         s.pooled_outputs = self.pooled_outputs();
         s.pooled_signals = self.pooled_signals();
+        s.pooled_requests = self.pooled_requests();
         s.queue_depth = self.queue_depth();
+        for (k, shard) in s.per_shard.iter_mut().enumerate() {
+            shard.deque_depth = self.source.deque_depth(k);
+        }
         s
     }
 
@@ -462,17 +711,24 @@ impl Drop for Coordinator {
     }
 }
 
-/// Dispatcher: batch formation + shared-queue hand-off.
+/// Dispatcher: batch formation + work-source hand-off (p2c placement
+/// under deque dispatch).
 fn dispatcher_loop(
     cfg: CoordinatorConfig,
     rx: Receiver<Msg>,
-    queue: &WorkQueue,
+    source: &WorkSource,
     metrics: &ServingMetrics,
     depth: &AtomicUsize,
     signal_pool: Arc<VecPool>,
+    request_pool: Arc<VecPool>,
 ) {
-    let mut batcher: Batcher<RowTag> =
-        Batcher::with_pool(cfg.batcher.clone(), cfg.nb, signal_pool);
+    let mut batcher: Batcher<RowTag> = Batcher::with_pools(
+        cfg.batcher.clone(),
+        cfg.nb,
+        signal_pool,
+        Arc::clone(&request_pool),
+    );
+    let mut rng = Pcg32::new(DISPATCH_SEED);
     let mut shutting_down = false;
 
     loop {
@@ -495,10 +751,12 @@ fn dispatcher_loop(
                         enqueued: env.enqueued,
                     };
                     // capacity is enforced on submit; push cannot fail
-                    // here unless capacity raced — drop in that case.
-                    if batcher.push(pend).is_err() {
+                    // here unless capacity raced — shed in that case,
+                    // reclaiming the request's buffer into the slab.
+                    if let Err(p) = batcher.push(pend) {
                         metrics.rejected.fetch_add(1, Ordering::Relaxed);
                         depth.fetch_sub(1, Ordering::AcqRel);
+                        request_pool.put(p.signals);
                     }
                 }
                 Msg::Shutdown => *shutting_down = true,
@@ -524,13 +782,15 @@ fn dispatcher_loop(
             }
         }
 
-        // Cut every ready batch (all pending on shutdown) into the shared
-        // queue; whichever shard is free next claims it.  Batch/padding
-        // counters are recorded by the shard that actually serves the
-        // batch, so dropped batches never inflate the aggregate metrics.
+        // Cut every ready batch (all pending on shutdown) into the work
+        // source; under deque dispatch p2c picks the shallowest of two
+        // random deques, and an idle shard steals whatever lands badly.
+        // Batch/padding counters are recorded by the shard that actually
+        // serves the batch, so dropped batches never inflate the
+        // aggregate metrics.
         while (shutting_down && !batcher.is_empty()) || batcher.ready(Instant::now()) {
             let Some(batch) = batcher.cut() else { break };
-            if let Err(batch) = queue.push(batch) {
+            if let Err(batch) = source.push(batch, &mut rng) {
                 // every shard is dead: fail these requests fast by
                 // dropping their responders and releasing their slots
                 for _ in batch.tags {
@@ -544,17 +804,26 @@ fn dispatcher_loop(
         }
     }
 
-    // Close the queue: shards drain whatever is left, then exit.
-    queue.close();
+    // Close the source: shards drain whatever is left, then exit.
+    source.close();
 }
 
-/// One shard: pull batches from the shared queue, run the engine into a
-/// recycled output buffer, answer requests.
+/// One shard: claim batches (local LIFO pop, FIFO steal when idle), run
+/// the engine into a recycled output buffer, answer requests.
 fn shard_loop(ctx: ShardCtx, engine: &mut dyn Engine) {
     debug_assert_eq!(engine.batch_size(), ctx.batch_size);
     let shard = ctx.metrics.shard(ctx.index);
     let n_samples = engine.n_samples();
-    while let Some(batch) = ctx.queue.pull() {
+    let mut rng = Pcg32::with_stream(STEAL_SEED, ctx.index as u64);
+    while let Some((batch, claim)) = ctx.source.pop(ctx.index, &mut rng) {
+        match claim {
+            Claim::Local => {
+                shard.local_batches.fetch_add(1, Ordering::Relaxed);
+            }
+            Claim::Stolen { .. } => {
+                shard.stolen_batches.fetch_add(1, Ordering::Relaxed);
+            }
+        }
         let Batch { signals, tags, real } = batch;
         let mut out = ctx.pool.take(n_samples, ctx.batch_size);
         let t0 = Instant::now();
@@ -933,6 +1202,172 @@ mod tests {
         let bare = coord.metrics().snapshot();
         assert_eq!(bare.pooled_outputs, 0, "bare counters cannot see the pools");
         coord.shutdown();
+    }
+
+    /// The lease slab's capacity-stability signature (the PR-3
+    /// `McDropout` zero-alloc test style): once warm, >= 100 further
+    /// leased submits must not allocate a single new request buffer.
+    #[test]
+    fn lease_lifecycle_reuses_buffers_with_stable_high_water() {
+        let (coord, man) = start_native(8, 10_000, 2);
+        let ds = synth_dataset(1, &man.bvalues, 20.0, 11);
+        for i in 0..20u64 {
+            let mut lease = coord.lease();
+            lease.copy_from(ds.voxel(0));
+            let rx = coord.submit_leased(i, lease).unwrap();
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        let hw = coord.lease_high_water();
+        assert!(hw >= 1, "warm-up must have populated the slab");
+        for i in 0..120u64 {
+            let mut lease = coord.lease();
+            lease.copy_from(ds.voxel(0));
+            let rx = coord.submit_leased(100 + i, lease).unwrap();
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        assert_eq!(
+            coord.lease_high_water(),
+            hw,
+            "lease slab grew in steady state (allocation on the hot path)"
+        );
+        let snap = coord.snapshot();
+        assert!(snap.pooled_requests >= 1, "reclaimed buffers are visible");
+        coord.shutdown();
+    }
+
+    /// Dropping a lease without submitting returns the buffer to the
+    /// slab instead of leaking it.
+    #[test]
+    fn dropping_an_unused_lease_returns_the_buffer() {
+        let (coord, _man) = start_native(8, 1000, 1);
+        assert_eq!(coord.pooled_requests(), 0);
+        let lease = coord.lease();
+        assert_eq!(coord.lease_high_water(), 1);
+        assert_eq!(lease.signals().len(), coord.nb);
+        drop(lease);
+        assert_eq!(coord.pooled_requests(), 1, "abandoned lease came back");
+        // and it is reused, not re-allocated
+        let lease2 = coord.lease();
+        assert_eq!(coord.lease_high_water(), 1);
+        drop(lease2);
+        coord.shutdown();
+    }
+
+    /// A leased submit that is rejected (wrong width is impossible by
+    /// construction, so force backpressure) reclaims its buffer.
+    #[test]
+    fn rejected_leased_submit_reclaims_the_buffer() {
+        let (coord, man) = start_native(64, 1, 1);
+        let ds = synth_dataset(3, &man.bvalues, 20.0, 13);
+        // first fills the only capacity slot...
+        let mut l0 = coord.lease();
+        l0.copy_from(ds.voxel(0));
+        let _rx = coord.submit_leased(0, l0).unwrap();
+        // ...hammer until one is rejected by the depth gate (the first
+        // request may complete quickly, so loop until a rejection)
+        let mut rejected = false;
+        for i in 0..50u64 {
+            let mut l = coord.lease();
+            l.copy_from(ds.voxel(1));
+            if coord.submit_leased(1 + i, l).is_err() {
+                rejected = true;
+                break;
+            }
+        }
+        assert!(rejected, "capacity 1 must reject a same-instant burst");
+        // the rejected buffer goes straight back to the slab (the
+        // dispatcher's cut-time reclaim cannot have run for it)
+        assert!(
+            coord.pooled_requests() >= 1,
+            "rejected lease must return its buffer"
+        );
+        coord.shutdown();
+    }
+
+    /// Every served batch was claimed exactly once, locally or by
+    /// stealing — the new counters partition the batch total.
+    #[test]
+    fn claim_counters_partition_served_batches() {
+        let (coord, man) = start_native(4, 100_000, 3);
+        let n = 120;
+        let ds = synth_dataset(n, &man.bvalues, 20.0, 14);
+        let rxs: Vec<_> = (0..n)
+            .map(|i| {
+                coord
+                    .submit(VoxelRequest {
+                        id: i as u64,
+                        signals: ds.voxel(i).to_vec(),
+                    })
+                    .unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        let snap = coord.snapshot();
+        assert_eq!(snap.responses, n as u64);
+        assert_eq!(
+            snap.local_batches() + snap.stolen_batches(),
+            snap.batches,
+            "claims must partition batches: {:?}",
+            snap.per_shard
+        );
+        // all answered -> every deque is empty
+        assert!(snap.per_shard.iter().all(|s| s.deque_depth == 0));
+        coord.shutdown();
+    }
+
+    /// The legacy shared queue survives behind `DispatchMode::SharedQueue`
+    /// and produces identical per-voxel results (dispatch is a
+    /// scheduling choice, not a numeric one).
+    #[test]
+    fn shared_queue_mode_serves_identically() {
+        let (man, w) = fixture::tiny_fixture();
+        let run = |mode: DispatchMode| -> Vec<f64> {
+            let mut cfg = CoordinatorConfig::sharded(man.nb, 8, 3);
+            cfg.batcher.queue_capacity = 100_000;
+            cfg.batcher.max_wait = Duration::from_millis(1);
+            cfg.dispatch = mode;
+            let opts = EngineOpts {
+                batch: Some(8),
+                ..Default::default()
+            };
+            let coord = Coordinator::start(
+                cfg,
+                factory("native", man.clone(), w.clone(), opts).unwrap(),
+            )
+            .unwrap();
+            let ds = synth_dataset(48, &man.bvalues, 20.0, 12);
+            let rxs: Vec<_> = (0..48)
+                .map(|i| {
+                    coord
+                        .submit(VoxelRequest {
+                            id: i as u64,
+                            signals: ds.voxel(i).to_vec(),
+                        })
+                        .unwrap()
+                })
+                .collect();
+            let out: Vec<f64> = rxs
+                .into_iter()
+                .map(|rx| {
+                    rx.recv_timeout(Duration::from_secs(10))
+                        .unwrap()
+                        .report
+                        .get(crate::ivim::Param::D)
+                        .mean
+                })
+                .collect();
+            let snap = coord.snapshot();
+            assert_eq!(snap.responses, 48);
+            if mode == DispatchMode::SharedQueue {
+                assert_eq!(snap.stolen_batches(), 0, "shared queue cannot steal");
+                assert_eq!(snap.local_batches(), snap.batches);
+            }
+            coord.shutdown();
+            out
+        };
+        assert_eq!(run(DispatchMode::Deques), run(DispatchMode::SharedQueue));
     }
 
     #[test]

@@ -150,6 +150,9 @@ pub trait Engine {
 pub struct OutputPool {
     slots: Mutex<Vec<InferOutput>>,
     cap: usize,
+    /// Fresh `InferOutput` allocations (high-water signature — stable
+    /// once serving recycles in steady state; see `VecPool::created`).
+    created: std::sync::atomic::AtomicUsize,
 }
 
 impl OutputPool {
@@ -158,6 +161,7 @@ impl OutputPool {
         OutputPool {
             slots: Mutex::new(Vec::new()),
             cap: cap.max(1),
+            created: std::sync::atomic::AtomicUsize::new(0),
         }
     }
 
@@ -168,7 +172,11 @@ impl OutputPool {
     /// second full-plane fill per batch on the hot path.
     pub fn take(&self, n_samples: usize, batch: usize) -> InferOutput {
         let recycled = self.slots.lock().expect("pool lock").pop();
-        recycled.unwrap_or_else(|| InferOutput::new(n_samples, batch))
+        recycled.unwrap_or_else(|| {
+            self.created
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            InferOutput::new(n_samples, batch)
+        })
     }
 
     /// Return a buffer to the pool (dropped when the pool is full).
@@ -182,6 +190,12 @@ impl OutputPool {
     /// Idle buffers currently pooled.
     pub fn idle(&self) -> usize {
         self.slots.lock().expect("pool lock").len()
+    }
+
+    /// Total fresh allocations so far (high-water mark of buffers in
+    /// circulation).
+    pub fn created(&self) -> usize {
+        self.created.load(std::sync::atomic::Ordering::Relaxed)
     }
 }
 
@@ -227,6 +241,7 @@ mod tests {
         let b = pool.take(4, 8);
         let c = pool.take(4, 8);
         assert_eq!(pool.idle(), 0);
+        assert_eq!(pool.created(), 3, "three fresh buffers so far");
         pool.put(a);
         pool.put(b);
         pool.put(c); // beyond cap: dropped
@@ -245,5 +260,6 @@ mod tests {
         let mut e = pool.take(2, 2);
         e.reset(2, 2);
         assert_eq!(e.get(Param::F, 0, 0), 0.0, "reset() re-zeroes recycled buffers");
+        assert_eq!(pool.created(), 3, "recycled takes never move the high-water mark");
     }
 }

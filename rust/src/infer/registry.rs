@@ -126,7 +126,12 @@ impl Registry {
                 "pjrt executable has a static batch of {} (asked for {batch})",
                 man.batch_infer
             );
-            let rt = crate::runtime::Runtime::cpu()?;
+            // one cached PJRT client shared across builds (per process
+            // on the stub, per thread under the real feature — see
+            // `runtime::shared_cpu`): repeated builds (one engine per
+            // SNR level in `snr_sweep`, one per coordinator shard's
+            // thread) stop re-loading the plugin each time (ROADMAP)
+            let rt = crate::runtime::shared_cpu()?;
             Ok(Box::new(crate::runtime::InferExecutable::load(
                 &rt, man, weights,
             )?))
@@ -315,6 +320,27 @@ mod tests {
         let (man, w) = fixture::tiny_fixture();
         let e = build("pjrt", &man, &w, &EngineOpts::default()).unwrap_err();
         assert!(e.to_string().contains("pjrt"), "{e}");
+    }
+
+    /// The ROADMAP per-call client churn fix: two `build("pjrt")` calls
+    /// share **one** client construction through the
+    /// `runtime::shared_cpu()` cache (process-wide on this stub build;
+    /// per-thread success-only under the real feature).  On the stub
+    /// runtime both builds fail (cleanly), but the cache still records
+    /// exactly one construction attempt — the sharing contract itself.
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_builds_share_one_cached_client_construction() {
+        let (man, w) = fixture::tiny_fixture();
+        assert!(build("pjrt", &man, &w, &EngineOpts::default()).is_err());
+        let after_first = crate::runtime::shared_cpu_attempts();
+        assert_eq!(after_first, 1, "first build constructs the client once");
+        assert!(build("pjrt", &man, &w, &EngineOpts::default()).is_err());
+        assert_eq!(
+            crate::runtime::shared_cpu_attempts(),
+            1,
+            "second build reuses the cached client (slot), constructing nothing"
+        );
     }
 
     #[test]

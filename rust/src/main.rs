@@ -7,7 +7,7 @@
 use uivim::accel::{AccelConfig, AccelSimulator, Scheme};
 use uivim::bench;
 use uivim::cli::{flag, opt, Args, Cli, CommandSpec};
-use uivim::coordinator::{Coordinator, CoordinatorConfig, VoxelRequest};
+use uivim::coordinator::{Coordinator, CoordinatorConfig};
 use uivim::experiments::{self, fig67, fig8, tables};
 use uivim::infer::registry::{self, EngineOpts};
 use uivim::ivim::synth::synth_dataset;
@@ -317,13 +317,14 @@ fn run(args: &Args) -> anyhow::Result<()> {
             let coord = Coordinator::start(cfg, registry::factory(&kind, man.clone(), w, opts)?)?;
             let ds = synth_dataset(n, &man.bvalues, 20.0, 18);
             let t = Timer::start();
+            // the zero-alloc client path: leased buffers, reclaimed by
+            // the dispatcher at batch-cut time
             let rxs: Vec<_> = (0..n)
                 .map(|i| {
+                    let mut lease = coord.lease();
+                    lease.copy_from(ds.voxel(i));
                     coord
-                        .submit(VoxelRequest {
-                            id: i as u64,
-                            signals: ds.voxel(i).to_vec(),
-                        })
+                        .submit_leased(i as u64, lease)
                         .expect("no backpressure expected in demo")
                 })
                 .collect();
@@ -348,15 +349,29 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 100.0 * confident as f64 / n as f64
             );
             println!(
-                "gauges: pooled outputs {} | pooled signal buffers {} | pending queue {}",
-                snap.pooled_outputs, snap.pooled_signals, snap.queue_depth
+                "gauges: pooled outputs {} | pooled signal buffers {} | leased request \
+                 buffers {} (high-water {}) | pending queue {}",
+                snap.pooled_outputs,
+                snap.pooled_signals,
+                snap.pooled_requests,
+                coord.lease_high_water(),
+                snap.queue_depth
+            );
+            println!(
+                "steals: {} local / {} stolen batch claims",
+                snap.local_batches(),
+                snap.stolen_batches()
             );
             for (k, s) in snap.per_shard.iter().enumerate() {
                 println!(
-                    "  shard {k}: {} batches, {} responses, busy {:.1} ms",
+                    "  shard {k}: {} batches ({} local, {} stolen), {} responses, \
+                     busy {:.1} ms, deque depth {}",
                     s.batches,
+                    s.local_batches,
+                    s.stolen_batches,
                     s.responses,
-                    s.busy_us as f64 / 1e3
+                    s.busy_us as f64 / 1e3,
+                    s.deque_depth
                 );
             }
             coord.shutdown();

@@ -23,7 +23,77 @@ mod stub;
 #[cfg(not(feature = "pjrt"))]
 pub use stub::{InferExecutable, Runtime, TrainExecutable};
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use crate::model::Weights;
+
+static SHARED_CPU_ATTEMPTS: AtomicUsize = AtomicUsize::new(0);
+
+/// The shared PJRT CPU client handle [`shared_cpu`] hands out:
+/// `&'static` on the stub build (process-wide cache), `Rc` under the
+/// real `pjrt` feature (per-thread cache — PJRT handles are `Rc`-based
+/// and must never cross threads).  Both deref to [`Runtime`].
+#[cfg(not(feature = "pjrt"))]
+pub type SharedRuntime = &'static Runtime;
+#[cfg(feature = "pjrt")]
+pub type SharedRuntime = std::rc::Rc<Runtime>;
+
+/// The shared PJRT CPU client.
+///
+/// PJRT client construction is the expensive part of the `pjrt` engine
+/// (plugin load + device enumeration); building one per
+/// `registry::build("pjrt")` call meant one client per SNR level in
+/// `snr_sweep --engine pjrt` (ROADMAP).  Repeated builds now share a
+/// cached client instead of re-constructing.
+///
+/// Stub build: the outcome is decided at compile time (`Runtime::cpu()`
+/// always fails without the `pjrt` feature), so the first result —
+/// including that permanent failure — is cached process-wide in a
+/// `OnceLock` and every later build shares the single construction
+/// attempt (what the registry test pins down).  Real `pjrt` build: the
+/// client is cached **per thread** (engines and their runtimes are
+/// `Rc`-based, not `Send`, and each coordinator shard builds in its own
+/// thread), and only *successes* are cached — a transient init failure
+/// is retried on the next build rather than poisoning the process.
+#[cfg(not(feature = "pjrt"))]
+pub fn shared_cpu() -> anyhow::Result<SharedRuntime> {
+    static SHARED: std::sync::OnceLock<Result<Runtime, String>> = std::sync::OnceLock::new();
+    let cached = SHARED.get_or_init(|| {
+        SHARED_CPU_ATTEMPTS.fetch_add(1, Ordering::SeqCst);
+        Runtime::cpu().map_err(|e| format!("{e:#}"))
+    });
+    match cached {
+        Ok(rt) => Ok(rt),
+        Err(msg) => Err(anyhow::anyhow!("{msg}")),
+    }
+}
+
+/// See the stub-side docs above: per-thread success-only cache.
+#[cfg(feature = "pjrt")]
+pub fn shared_cpu() -> anyhow::Result<SharedRuntime> {
+    use std::cell::RefCell;
+    use std::rc::Rc;
+    thread_local! {
+        static CLIENT: RefCell<Option<Rc<Runtime>>> = const { RefCell::new(None) };
+    }
+    CLIENT.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if let Some(rt) = slot.as_ref() {
+            return Ok(Rc::clone(rt));
+        }
+        SHARED_CPU_ATTEMPTS.fetch_add(1, Ordering::SeqCst);
+        let rt = Rc::new(Runtime::cpu()?);
+        *slot = Some(Rc::clone(&rt));
+        Ok(rt)
+    })
+}
+
+/// How many times [`shared_cpu`] actually constructed (or tried to
+/// construct) a client — observability hook.  Stub build: exactly 1
+/// after any number of calls.
+pub fn shared_cpu_attempts() -> usize {
+    SHARED_CPU_ATTEMPTS.load(Ordering::SeqCst)
+}
 
 /// Mutable optimisation state for the trainer (plain data — shared by the
 /// real executables and the stub).
@@ -69,5 +139,15 @@ mod tests {
     fn stub_runtime_reports_unavailable() {
         let e = Runtime::cpu().unwrap_err();
         assert!(e.to_string().contains("pjrt"), "{e}");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn shared_cpu_constructs_exactly_once_per_process() {
+        let a = shared_cpu().unwrap_err().to_string();
+        let b = shared_cpu().unwrap_err().to_string();
+        assert_eq!(a, b, "cached outcome is stable");
+        assert!(a.contains("pjrt"), "{a}");
+        assert_eq!(shared_cpu_attempts(), 1, "one construction, ever");
     }
 }

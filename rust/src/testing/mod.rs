@@ -12,6 +12,8 @@
 
 use crate::util::rng::Pcg32;
 
+pub mod sched;
+
 /// A seeded generator of values of `T` plus a shrinking strategy.
 pub struct Gen<T> {
     gen: Box<dyn Fn(&mut Pcg32) -> T>,

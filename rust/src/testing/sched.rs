@@ -1,0 +1,725 @@
+//! Deterministic concurrency harness for the coordinator's serving
+//! protocol — batcher, per-shard work-stealing deques, and the pooled
+//! signal-buffer lifecycle — driven in **virtual time** with **no
+//! threads, no sleeps, no retries**.
+//!
+//! Real threads interleave the protocol's atomic steps (push a batch,
+//! pop locally, steal from a victim, close, exit) in whatever order the
+//! OS scheduler picks; a bug is a *bad ordering*.  Here the ordering is
+//! explicit: a [`Sim`] executes a script of [`Op`]s, each op being
+//! exactly one atomic protocol step against the **real production
+//! structures** (`coordinator::Batcher`, `coordinator::ShardDeques`,
+//! `util::pool::VecPool`).  The script *is* the schedule, so races like
+//! "a steal overlapping shutdown" are reproducible table rows.  All
+//! randomness (p2c placement, steal-victim choice, generated scripts)
+//! comes from seeded [`Pcg32`] streams, and batch deadlines run on a
+//! virtual clock advanced only by [`Op::Tick`] — a fixed seed replays
+//! the exact trace, bit for bit.
+//!
+//! Request integrity is checked structurally: every arriving request's
+//! leased buffer is filled with a per-request fingerprint, and the
+//! harness asserts at claim time that each served row still carries its
+//! own fingerprint and every padding row is exactly zero — a scrambled
+//! route, a leaked padding row, or a recycled-buffer aliasing bug all
+//! fail loudly at the step that caused them.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::{Batcher, BatcherConfig, Pending};
+use crate::coordinator::deque::{Claim, ShardDeques};
+use crate::util::pool::VecPool;
+use crate::util::rng::Pcg32;
+
+/// One atomic protocol step of the simulated coordinator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// `n` requests arrive (leased buffers, sequential ids) at the
+    /// current virtual time.
+    Arrive(usize),
+    /// Advance virtual time by this many microseconds (drives the
+    /// batcher's deadline flush — the harness's only notion of waiting).
+    Tick(u64),
+    /// Dispatcher: cut every *ready* batch and place it with
+    /// power-of-two-choices on deque depth.
+    Cut,
+    /// Dispatcher: cut every ready batch onto shard `k`'s deque
+    /// (models a placement skew / stalled-victim backlog).
+    CutTo(usize),
+    /// Shard `k`: one claim attempt — local LIFO pop, else a FIFO steal
+    /// scan from a seeded-random victim offset.
+    Pop(usize),
+    /// Shard `k`: strictly local LIFO pop (no steal).
+    PopLocal(usize),
+    /// `thief` steals FIFO from exactly `victim`'s deque.
+    StealFrom { thief: usize, victim: usize },
+    /// Graceful shutdown: flush everything pending through the deques,
+    /// then close them (pushes fail from here on; claims keep
+    /// draining).
+    Shutdown,
+    /// Shard `k` exits.  When the last one goes, the dead-pool failsafe
+    /// closes and drains the deques, failing the backlog fast.
+    Exit(usize),
+}
+
+/// One served (real) row, in global service order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServedRow {
+    pub shard: usize,
+    pub id: u64,
+    pub claim: Claim,
+}
+
+/// The observable outcome of a script — `PartialEq` so reproducibility
+/// is a single `assert_eq!`.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct SimResult {
+    /// Real rows in the order shards served them.
+    pub served: Vec<ServedRow>,
+    /// Ids of each cut batch, in cut order (global FIFO of formation).
+    pub cut_order: Vec<Vec<u64>>,
+    /// Rows failed by the dead-pool drain or a push-after-close.
+    pub failed: Vec<u64>,
+    /// Rows shed by batcher backpressure at arrival.
+    pub rejected: Vec<u64>,
+    /// Batches claimed from the claimer's own deque / stolen.
+    pub local: u64,
+    pub stolen: u64,
+    /// Lease-slab high-water mark (fresh request-buffer allocations).
+    pub lease_created: usize,
+    /// Idle lease buffers at the end of the script.
+    pub lease_idle: usize,
+    /// Batch signal-buffer pool high-water / idle.
+    pub batch_created: usize,
+    pub batch_idle: usize,
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    pub shards: usize,
+    /// Voxel width (signals per request).
+    pub nb: usize,
+    pub batch_size: usize,
+    /// Batcher deadline, in virtual microseconds.
+    pub max_wait_us: u64,
+    pub queue_capacity: usize,
+    /// Seeds the dispatcher's p2c stream, each shard's steal-victim
+    /// stream, and nothing else.
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            shards: 2,
+            nb: 3,
+            batch_size: 4,
+            max_wait_us: 100,
+            queue_capacity: 10_000,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// The simulated coordinator: real batcher + real deques + real pools,
+/// scheduled by a script instead of threads.
+pub struct Sim {
+    cfg: SimConfig,
+    base: Instant,
+    now_us: u64,
+    batcher: Batcher<u64>,
+    deques: ShardDeques<crate::coordinator::Batch<u64>>,
+    request_pool: Arc<VecPool>,
+    signal_pool: Arc<VecPool>,
+    dispatch_rng: Pcg32,
+    shard_rngs: Vec<Pcg32>,
+    alive: Vec<bool>,
+    next_id: u64,
+    out: SimResult,
+}
+
+impl Sim {
+    pub fn new(cfg: SimConfig) -> Sim {
+        let request_pool = Arc::new(VecPool::new(cfg.queue_capacity.max(1)));
+        let signal_pool = Arc::new(VecPool::new(2 * cfg.shards.max(1)));
+        let batcher = Batcher::with_pools(
+            BatcherConfig {
+                batch_size: cfg.batch_size,
+                max_wait: Duration::from_micros(cfg.max_wait_us),
+                queue_capacity: cfg.queue_capacity,
+            },
+            cfg.nb,
+            Arc::clone(&signal_pool),
+            Arc::clone(&request_pool),
+        );
+        // the production placement bound, not a copy of it
+        let cap = crate::coordinator::deque::cap_for(
+            cfg.queue_capacity,
+            cfg.batch_size,
+            cfg.shards,
+        );
+        Sim {
+            base: Instant::now(),
+            now_us: 0,
+            batcher,
+            deques: ShardDeques::new(cfg.shards, cap),
+            request_pool,
+            signal_pool,
+            dispatch_rng: Pcg32::with_stream(cfg.seed, 0xD15),
+            shard_rngs: (0..cfg.shards.max(1))
+                .map(|k| Pcg32::with_stream(cfg.seed, 0x57EA1 + k as u64))
+                .collect(),
+            alive: vec![true; cfg.shards.max(1)],
+            next_id: 0,
+            out: SimResult::default(),
+            cfg,
+        }
+    }
+
+    /// The per-request fingerprint: every signal slot of request `id`
+    /// carries this value (never zero, so padding leaks are visible).
+    fn fingerprint(id: u64) -> f32 {
+        (id + 1) as f32
+    }
+
+    fn virtual_now(&self) -> Instant {
+        self.base + Duration::from_micros(self.now_us)
+    }
+
+    /// Requests still waiting in the batcher.
+    pub fn pending(&self) -> usize {
+        self.batcher.len()
+    }
+
+    /// Batches queued across all deques.
+    pub fn queued(&self) -> usize {
+        self.deques.total()
+    }
+
+    pub fn lease_created(&self) -> usize {
+        self.request_pool.created()
+    }
+    pub fn lease_idle(&self) -> usize {
+        self.request_pool.idle()
+    }
+    pub fn batch_created(&self) -> usize {
+        self.signal_pool.created()
+    }
+    pub fn batch_idle(&self) -> usize {
+        self.signal_pool.idle()
+    }
+    pub fn is_closed(&self) -> bool {
+        self.deques.is_closed()
+    }
+
+    /// Execute one atomic protocol step.
+    pub fn step(&mut self, op: Op) {
+        match op {
+            Op::Arrive(n) => {
+                for _ in 0..n {
+                    let id = self.next_id;
+                    self.next_id += 1;
+                    let mut signals = self.request_pool.take(self.cfg.nb);
+                    signals.resize(self.cfg.nb, Self::fingerprint(id));
+                    let pend = Pending {
+                        signals,
+                        tag: id,
+                        enqueued: self.virtual_now(),
+                    };
+                    if let Err(p) = self.batcher.push(pend) {
+                        self.out.rejected.push(id);
+                        self.request_pool.put(p.signals);
+                    }
+                }
+            }
+            Op::Tick(us) => self.now_us += us,
+            Op::Cut => {
+                while self.batcher.ready(self.virtual_now()) {
+                    let Some(batch) = self.batcher.cut() else { break };
+                    self.out.cut_order.push(batch.tags.clone());
+                    if let Err(batch) = self.deques.push_balanced(batch, &mut self.dispatch_rng)
+                    {
+                        self.out.failed.extend(batch.tags.iter().copied());
+                    }
+                }
+            }
+            Op::CutTo(k) => {
+                while self.batcher.ready(self.virtual_now()) {
+                    let Some(batch) = self.batcher.cut() else { break };
+                    self.out.cut_order.push(batch.tags.clone());
+                    if let Err(batch) = self.deques.push_to(k, batch) {
+                        self.out.failed.extend(batch.tags.iter().copied());
+                    }
+                }
+            }
+            Op::Pop(k) => {
+                if self.alive[k] {
+                    if let Some((batch, claim)) = self.deques.try_pop(k, &mut self.shard_rngs[k])
+                    {
+                        self.serve(k, batch, claim);
+                    }
+                }
+            }
+            Op::PopLocal(k) => {
+                if self.alive[k] {
+                    if let Some(batch) = self.deques.pop_local(k) {
+                        self.serve(k, batch, Claim::Local);
+                    }
+                }
+            }
+            Op::StealFrom { thief, victim } => {
+                if self.alive[thief] {
+                    if let Some(batch) = self.deques.steal_from(victim) {
+                        self.serve(thief, batch, Claim::Stolen { victim });
+                    }
+                }
+            }
+            Op::Shutdown => {
+                // the dispatcher's graceful path: flush *everything*
+                // still pending, then close — claims keep draining
+                while let Some(batch) = self.batcher.cut() {
+                    self.out.cut_order.push(batch.tags.clone());
+                    if let Err(batch) = self.deques.push_balanced(batch, &mut self.dispatch_rng)
+                    {
+                        self.out.failed.extend(batch.tags.iter().copied());
+                    }
+                }
+                self.deques.close();
+            }
+            Op::Exit(k) => {
+                if self.alive[k] {
+                    self.alive[k] = false;
+                    if self.alive.iter().all(|a| !a) {
+                        // dead-pool failsafe: last exit closes + drains
+                        self.deques.close();
+                        for batch in self.deques.drain() {
+                            self.out.failed.extend(batch.tags.iter().copied());
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// "Run" a claimed batch: verify row integrity (each real row still
+    /// carries its own fingerprint, each padding row is exactly zero),
+    /// record the service, and hand the batch buffer back — the shard
+    /// side of the buffer lifecycle.
+    fn serve(&mut self, shard: usize, batch: crate::coordinator::Batch<u64>, claim: Claim) {
+        let nb = self.cfg.nb;
+        assert_eq!(
+            batch.signals.len(),
+            self.cfg.batch_size * nb,
+            "batch not padded to the static shape"
+        );
+        for (row, &id) in batch.tags.iter().enumerate() {
+            let r = &batch.signals[row * nb..(row + 1) * nb];
+            assert!(
+                r.iter().all(|&v| v == Self::fingerprint(id)),
+                "request {id} served with another request's signals (row {row}: {r:?})"
+            );
+            self.out.served.push(ServedRow { shard, id, claim });
+        }
+        for row in batch.real..self.cfg.batch_size {
+            let r = &batch.signals[row * nb..(row + 1) * nb];
+            assert!(
+                r.iter().all(|&v| v == 0.0),
+                "padding row {row} leaked data: {r:?}"
+            );
+        }
+        match claim {
+            Claim::Local => self.out.local += 1,
+            Claim::Stolen { .. } => self.out.stolen += 1,
+        }
+        self.signal_pool.put(batch.signals);
+    }
+
+    /// Drain to completion: flush + close (idempotent if the script
+    /// already shut down — arrivals admitted *after* a close still get
+    /// flushed, and fail fast at the closed deques), then round-robin
+    /// claim attempts across shards until every queued batch is served.
+    /// Panics rather than spinning forever — "it would eventually
+    /// finish" is not an acceptance bar here.
+    pub fn drain_to_completion(&mut self) {
+        self.step(Op::Shutdown);
+        let mut guard = 0usize;
+        let budget = 10_000 + 10 * (self.next_id as usize + 1);
+        while self.queued() > 0 {
+            for k in 0..self.cfg.shards {
+                self.step(Op::Pop(k));
+            }
+            guard += 1;
+            assert!(
+                guard < budget,
+                "drain did not converge: {} batches still queued",
+                self.queued()
+            );
+        }
+    }
+
+    /// Finish: capture the pool gauges and hand the trace over.
+    pub fn finish(mut self) -> SimResult {
+        self.out.lease_created = self.request_pool.created();
+        self.out.lease_idle = self.request_pool.idle();
+        self.out.batch_created = self.signal_pool.created();
+        self.out.batch_idle = self.signal_pool.idle();
+        self.out
+    }
+}
+
+/// Run a script end to end (no implicit drain — the script is the whole
+/// schedule).
+pub fn run_script(cfg: SimConfig, script: &[Op]) -> SimResult {
+    let mut sim = Sim::new(cfg);
+    for &op in script {
+        sim.step(op);
+    }
+    sim.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall_seeded, Gen};
+    use std::collections::BTreeSet;
+
+    fn ids(rows: &[ServedRow]) -> Vec<u64> {
+        rows.iter().map(|r| r.id).collect()
+    }
+
+    /// Every id arrives exactly once somewhere: served ∪ failed ∪
+    /// rejected partitions 0..n.
+    fn assert_conservation(r: &SimResult, n: u64) {
+        let mut seen = BTreeSet::new();
+        for &id in ids(&r.served).iter().chain(&r.failed).chain(&r.rejected) {
+            assert!(seen.insert(id), "request {id} delivered twice: {r:?}");
+        }
+        assert_eq!(
+            seen,
+            (0..n).collect::<BTreeSet<_>>(),
+            "lost requests (served {} / failed {} / rejected {} of {n})",
+            r.served.len(),
+            r.failed.len(),
+            r.rejected.len()
+        );
+    }
+
+    /// Batches form in global FIFO order: each cut batch is a
+    /// contiguous ascending id run, and the runs concatenate to 0..cut.
+    fn assert_fifo_formation(r: &SimResult) {
+        let mut next = 0u64;
+        for run in &r.cut_order {
+            for &id in run {
+                assert_eq!(id, next, "batch formation broke FIFO: {:?}", r.cut_order);
+                next += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_seed_reproduces_the_exact_trace() {
+        let cfg = SimConfig {
+            shards: 3,
+            seed: 42,
+            ..Default::default()
+        };
+        let script = [
+            Op::Arrive(10),
+            Op::Tick(200),
+            Op::Cut,
+            Op::Pop(2),
+            Op::Arrive(5),
+            Op::Pop(0),
+            Op::Tick(200),
+            Op::Cut,
+            Op::Pop(1),
+            Op::Pop(1),
+            Op::Shutdown,
+            Op::Pop(0),
+            Op::Pop(2),
+            Op::Pop(0),
+        ];
+        let a = run_script(cfg, &script);
+        let b = run_script(cfg, &script);
+        assert_eq!(a, b, "same seed + same script must replay bit-for-bit");
+        // nothing was served twice
+        assert_eq!(
+            ids(&a.served).iter().collect::<BTreeSet<_>>().len(),
+            a.served.len()
+        );
+    }
+
+    /// THE interleaving the old single-shared-queue tests could not
+    /// express: the dispatcher closes for shutdown while a batch still
+    /// sits in a *specific shard's* deque, and a *different* shard
+    /// claims it cross-shard (a steal) after the close.  With one
+    /// shared queue there is no "someone else's backlog" to steal —
+    /// post-close pops are indistinguishable from normal pops.
+    #[test]
+    fn steal_racing_shutdown_loses_nothing() {
+        let cfg = SimConfig {
+            shards: 2,
+            batch_size: 4,
+            ..Default::default()
+        };
+        let mut sim = Sim::new(cfg);
+        sim.step(Op::Arrive(8));
+        sim.step(Op::Tick(1_000)); // both batches past the deadline
+        sim.step(Op::CutTo(1)); // entire backlog lands on shard 1
+        assert_eq!(sim.queued(), 2);
+        // shard 1 takes its freshest batch (LIFO): ids 4..8
+        sim.step(Op::PopLocal(1));
+        // shutdown closes the deques with batch {0..4} still queued on
+        // shard 1
+        sim.step(Op::Shutdown);
+        assert!(sim.is_closed());
+        assert_eq!(sim.queued(), 1);
+        // shard 0, post-close, steals shard 1's remaining backlog
+        sim.step(Op::Pop(0));
+        let r = sim.finish();
+        assert_conservation(&r, 8);
+        assert!(r.failed.is_empty(), "close must not strand the backlog");
+        // the LIFO local pop served 4..8 first…
+        let served_ids = ids(&r.served);
+        assert_eq!(&served_ids[..4], &[4, 5, 6, 7]);
+        // …and the post-close claim was a genuine cross-shard steal
+        let last = &r.served[4..];
+        assert_eq!(ids(last), vec![0, 1, 2, 3], "steal is FIFO (oldest first)");
+        assert!(
+            last.iter()
+                .all(|row| row.shard == 0 && row.claim == Claim::Stolen { victim: 1 }),
+            "the post-shutdown claim must be shard 0 stealing from shard 1: {last:?}"
+        );
+        assert_eq!((r.local, r.stolen), (1, 1));
+    }
+
+    /// Shutdown-during-steal, both orderings: a steal immediately
+    /// before the close and immediately after it both succeed — close
+    /// stops *pushes*, never claims.
+    #[test]
+    fn shutdown_before_and_after_a_steal_both_drain() {
+        for close_first in [false, true] {
+            let cfg = SimConfig {
+                shards: 2,
+                batch_size: 4,
+                ..Default::default()
+            };
+            let mut sim = Sim::new(cfg);
+            sim.step(Op::Arrive(4));
+            sim.step(Op::Tick(1_000));
+            sim.step(Op::CutTo(1));
+            if close_first {
+                sim.step(Op::Shutdown);
+                sim.step(Op::StealFrom { thief: 0, victim: 1 });
+            } else {
+                sim.step(Op::StealFrom { thief: 0, victim: 1 });
+                sim.step(Op::Shutdown);
+            }
+            let r = sim.finish();
+            assert_conservation(&r, 4);
+            assert!(r.failed.is_empty(), "close_first={close_first}");
+            assert_eq!(r.stolen, 1);
+        }
+    }
+
+    /// Arrivals racing the shutdown flush: whatever was admitted to the
+    /// batcher before `Shutdown` is flushed and served; pushes after
+    /// the close fail fast into `failed` instead of hanging.
+    #[test]
+    fn arrivals_after_close_fail_fast_instead_of_stranding() {
+        let cfg = SimConfig {
+            shards: 2,
+            batch_size: 4,
+            ..Default::default()
+        };
+        let mut sim = Sim::new(cfg);
+        sim.step(Op::Arrive(3)); // partial batch, not yet ready
+        sim.step(Op::Shutdown); // flushes the partial batch, closes
+        sim.step(Op::Arrive(2)); // land in the batcher…
+        sim.step(Op::Shutdown); // …and the flush now hits closed deques
+        sim.step(Op::Pop(0));
+        sim.step(Op::Pop(1));
+        let r = sim.finish();
+        assert_conservation(&r, 5);
+        assert_eq!(ids(&r.served), vec![0, 1, 2], "pre-close batch served");
+        assert_eq!(r.failed, vec![3, 4], "post-close batch failed fast");
+    }
+
+    /// Dead-pool failsafe: when the last shard exits, the drained
+    /// backlog is failed — not stranded, not double-served.
+    #[test]
+    fn dead_pool_drains_and_fails_the_backlog() {
+        let cfg = SimConfig {
+            shards: 2,
+            batch_size: 4,
+            ..Default::default()
+        };
+        let mut sim = Sim::new(cfg);
+        sim.step(Op::Arrive(8));
+        sim.step(Op::Tick(1_000));
+        sim.step(Op::Cut);
+        sim.step(Op::Pop(0)); // one batch served before the crash
+        sim.step(Op::Exit(0));
+        assert!(!sim.is_closed(), "one shard still alive");
+        sim.step(Op::Exit(1)); // last exit: close + drain
+        assert!(sim.is_closed());
+        assert_eq!(sim.queued(), 0);
+        let r = sim.finish();
+        assert_conservation(&r, 8);
+        assert_eq!(r.served.len(), 4);
+        assert_eq!(r.failed.len(), 4);
+    }
+
+    /// The lease contract, step by step: arrivals own their buffers;
+    /// the cut reclaims them into the slab; the batch buffer belongs to
+    /// the deque until a shard serves and returns it.  Two full waves
+    /// through the cycle allocate nothing new — the capacity-stability
+    /// signature.
+    #[test]
+    fn lease_reclaim_ordering_is_exact() {
+        let cfg = SimConfig {
+            shards: 1,
+            nb: 3,
+            batch_size: 4,
+            ..Default::default()
+        };
+        let mut sim = Sim::new(cfg);
+        sim.step(Op::Arrive(4));
+        assert_eq!(sim.lease_created(), 4, "four fresh leases");
+        assert_eq!(sim.lease_idle(), 0, "arrivals own their buffers");
+        sim.step(Op::Cut); // full batch: size-triggered, no tick needed
+        assert_eq!(sim.lease_idle(), 4, "cut reclaims every request buffer");
+        assert_eq!(sim.batch_created(), 1);
+        assert_eq!(sim.batch_idle(), 0, "batch buffer is owned by the deque");
+        sim.step(Op::Pop(0));
+        assert_eq!(sim.batch_idle(), 1, "serving returns the batch buffer");
+        // wave 2: everything recycles, nothing allocates
+        sim.step(Op::Arrive(4));
+        assert_eq!(sim.lease_idle(), 0);
+        sim.step(Op::Cut);
+        sim.step(Op::Pop(0));
+        let r = sim.finish();
+        assert_eq!(r.lease_created, 4, "wave 2 allocated no request buffers");
+        assert_eq!(r.batch_created, 1, "wave 2 allocated no batch buffers");
+        assert_conservation(&r, 8);
+    }
+
+    /// Satellite property: over randomized arrival/deadline/claim
+    /// interleavings — including a mid-stream shutdown — delivery is
+    /// exactly-once (zero lost, zero duplicated) and batch formation is
+    /// globally FIFO.  Seeded: any failure replays.
+    #[test]
+    fn property_random_interleavings_conserve_and_stay_fifo() {
+        forall_seeded(
+            0x5EED_5EED,
+            60,
+            Gen::usize_in(0, 1 << 30),
+            |&case_seed| {
+                let mut script_rng = Pcg32::new(case_seed as u64);
+                let shards = 1 + script_rng.below(4) as usize;
+                let cfg = SimConfig {
+                    shards,
+                    nb: 2,
+                    batch_size: 1 + script_rng.below(5) as usize,
+                    max_wait_us: 50,
+                    queue_capacity: 10_000,
+                    seed: case_seed as u64,
+                };
+                let mut sim = Sim::new(cfg);
+                let steps = 30 + script_rng.below(50);
+                let shutdown_at = script_rng.below(steps);
+                for s in 0..steps {
+                    if s == shutdown_at {
+                        sim.step(Op::Shutdown);
+                        continue;
+                    }
+                    let k = script_rng.below(shards as u32) as usize;
+                    match script_rng.below(6) {
+                        0 => sim.step(Op::Arrive(1 + script_rng.below(3) as usize)),
+                        1 => sim.step(Op::Tick(script_rng.below(120) as u64)),
+                        2 => sim.step(Op::Cut),
+                        3 => sim.step(Op::CutTo(k)),
+                        4 => sim.step(Op::Pop(k)),
+                        _ => {
+                            let victim = script_rng.below(shards as u32) as usize;
+                            sim.step(Op::StealFrom { thief: k, victim });
+                        }
+                    }
+                }
+                let n = sim.next_id;
+                sim.drain_to_completion();
+                let r = sim.finish();
+                assert_conservation(&r, n);
+                assert_fifo_formation(&r);
+                assert_eq!(r.local + r.stolen, r.cut_order.len() as u64 - {
+                    // batches that were failed (pushed after close /
+                    // dead-pool) were cut but never claimed
+                    let failed_batches = r
+                        .cut_order
+                        .iter()
+                        .filter(|run| run.iter().all(|id| r.failed.contains(id)))
+                        .count();
+                    failed_batches as u64
+                });
+                true
+            },
+        );
+    }
+
+    /// Satellite property: a slow (never-claiming) victim shard cannot
+    /// strand its backlog — thieves drain it completely, in FIFO order,
+    /// even when the shutdown lands mid-drain.
+    #[test]
+    fn property_slow_victim_is_fully_drained_by_thieves() {
+        forall_seeded(
+            0xBAD_5EED,
+            40,
+            Gen::usize_in(0, 1 << 30),
+            |&case_seed| {
+                let mut script_rng = Pcg32::new(case_seed as u64);
+                let shards = 2 + script_rng.below(3) as usize;
+                let cfg = SimConfig {
+                    shards,
+                    nb: 2,
+                    batch_size: 2,
+                    max_wait_us: 50,
+                    queue_capacity: 10_000,
+                    seed: case_seed as u64,
+                };
+                let mut sim = Sim::new(cfg);
+                let n_arrive = 4 + script_rng.below(20) as usize;
+                sim.step(Op::Arrive(n_arrive));
+                sim.step(Op::Tick(1_000));
+                sim.step(Op::CutTo(0)); // shard 0 is the stalled victim
+                let early_shutdown = script_rng.below(2) == 0;
+                if early_shutdown {
+                    sim.step(Op::Shutdown);
+                }
+                // only the *other* shards ever claim
+                let mut guard = 0;
+                while sim.queued() > 0 {
+                    let thief = 1 + script_rng.below((shards - 1) as u32) as usize;
+                    sim.step(Op::StealFrom { thief, victim: 0 });
+                    guard += 1;
+                    assert!(guard < 10_000, "thieves failed to drain the victim");
+                }
+                if !early_shutdown {
+                    sim.step(Op::Shutdown);
+                }
+                let r = sim.finish();
+                assert_conservation(&r, n_arrive as u64);
+                assert!(r.failed.is_empty() && r.rejected.is_empty());
+                assert_eq!(r.local, 0, "the victim never claimed");
+                // steals drain the victim FIFO: service order == arrival
+                // order
+                assert_eq!(
+                    ids(&r.served),
+                    (0..n_arrive as u64).collect::<Vec<_>>(),
+                    "FIFO-per-request delivery under pure stealing"
+                );
+                true
+            },
+        );
+    }
+}

@@ -110,6 +110,12 @@ impl Drop for ThreadPool {
 pub struct VecPool {
     slots: Mutex<Vec<Vec<f32>>>,
     cap: usize,
+    /// Fresh allocations handed out because no recycled buffer was
+    /// idle.  This is the pool's **high-water signature**: in a steady
+    /// state where every taken buffer comes back, `created` stops
+    /// growing — the capacity-stability property the lease-lifecycle
+    /// tests pin down.
+    created: AtomicUsize,
 }
 
 impl VecPool {
@@ -118,6 +124,7 @@ impl VecPool {
         VecPool {
             slots: Mutex::new(Vec::new()),
             cap: cap.max(1),
+            created: AtomicUsize::new(0),
         }
     }
 
@@ -130,7 +137,10 @@ impl VecPool {
                 v.reserve(capacity_hint);
                 v
             }
-            None => Vec::with_capacity(capacity_hint),
+            None => {
+                self.created.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(capacity_hint)
+            }
         }
     }
 
@@ -145,6 +155,12 @@ impl VecPool {
     /// Idle buffers currently pooled.
     pub fn idle(&self) -> usize {
         self.slots.lock().expect("pool lock").len()
+    }
+
+    /// Total fresh allocations so far (the high-water mark of buffers
+    /// in circulation; stable once recycling reaches steady state).
+    pub fn created(&self) -> usize {
+        self.created.load(Ordering::Relaxed)
     }
 }
 
@@ -243,6 +259,23 @@ mod tests {
         pool.put(Vec::with_capacity(8));
         pool.put(Vec::with_capacity(8)); // beyond cap: dropped
         assert_eq!(pool.idle(), 2);
+    }
+
+    #[test]
+    fn vec_pool_created_counts_only_fresh_allocations() {
+        let pool = VecPool::new(4);
+        assert_eq!(pool.created(), 0);
+        let a = pool.take(16);
+        let b = pool.take(16);
+        assert_eq!(pool.created(), 2);
+        pool.put(a);
+        pool.put(b);
+        // steady state: recycled takes never move the high-water mark
+        for _ in 0..50 {
+            let v = pool.take(16);
+            pool.put(v);
+        }
+        assert_eq!(pool.created(), 2, "recycling must not allocate");
     }
 
     #[test]

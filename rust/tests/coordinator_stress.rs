@@ -1,0 +1,236 @@
+//! Integration: the work-stealing deque dispatcher under real threads at
+//! fleet width — 16 shards, burst traffic, forced steals, leased request
+//! buffers, shutdown while loaded.  The deterministic interleaving
+//! coverage lives in `testing::sched` (virtual time, table-driven); this
+//! file is the soak that makes the same protocol earn it on a real
+//! scheduler, and CI runs both in the `coordinator-stress` job.
+//!
+//! Runs on the deterministic in-tree fixture, so nothing here skips when
+//! the Python-exported artifacts are absent.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use uivim::coordinator::{Coordinator, CoordinatorConfig, VoxelRequest};
+use uivim::infer::registry::{factory, EngineOpts};
+use uivim::infer::{Engine, InferOutput};
+use uivim::ivim::synth::synth_dataset;
+use uivim::testing::fixture;
+
+/// Wraps an engine with a fixed per-batch delay — a deterministic "slow
+/// shard" whose deque backlog the fast shards must steal.
+struct SlowEngine {
+    inner: Box<dyn Engine>,
+    delay: Duration,
+}
+
+impl Engine for SlowEngine {
+    fn name(&self) -> &str {
+        "slow-wrapper"
+    }
+    fn batch_size(&self) -> usize {
+        self.inner.batch_size()
+    }
+    fn n_samples(&self) -> usize {
+        self.inner.n_samples()
+    }
+    fn execute_into(&mut self, signals: &[f32], out: &mut InferOutput) -> anyhow::Result<()> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        self.inner.execute_into(signals, out)
+    }
+}
+
+/// 16 shards, one fast and fifteen slow: the dispatcher's p2c spreads
+/// the burst across all deques, the slow shards each sit on one batch
+/// for 20 ms, and the fast shard — its own deque drained in
+/// microseconds — must steal the rest of the fleet's backlog.  Every
+/// request is answered exactly once, the claim counters partition the
+/// batch total, and steals are guaranteed by construction (the fast
+/// shard serves far more batches than its own deque ever received).
+#[test]
+fn soak_16_shards_burst_forces_steals_and_loses_nothing() {
+    let shards = 16usize;
+    let batch = 4usize;
+    let n = 1600usize; // 400 batches
+    let (man, w) = fixture::tiny_fixture();
+    let mut cfg = CoordinatorConfig::sharded(man.nb, batch, shards);
+    cfg.batcher.queue_capacity = n + 1;
+    cfg.batcher.max_wait = Duration::from_millis(1);
+    let built = Arc::new(AtomicUsize::new(0));
+    let inner = factory(
+        "native",
+        man.clone(),
+        w,
+        EngineOpts {
+            batch: Some(batch),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let coord = Coordinator::start(cfg, move || {
+        // the first engine constructed is the fast one; the other 15
+        // serve a batch per 20 ms
+        let delay = if built.fetch_add(1, Ordering::SeqCst) == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_millis(20)
+        };
+        Ok(Box::new(SlowEngine {
+            inner: inner()?,
+            delay,
+        }) as Box<dyn Engine>)
+    })
+    .unwrap();
+
+    let ds = synth_dataset(n, &man.bvalues, 20.0, 161);
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let mut lease = coord.lease();
+            lease.copy_from(ds.voxel(i));
+            coord
+                .submit_leased(i as u64, lease)
+                .expect("queue sized for the burst")
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(60))
+            .unwrap_or_else(|e| panic!("request {i} lost under stealing: {e}"));
+        assert_eq!(resp.id, i as u64, "response routed to the wrong caller");
+    }
+
+    let snap = coord.snapshot();
+    assert_eq!(snap.responses, n as u64);
+    assert_eq!(snap.rejected, 0);
+    assert_eq!(coord.queue_depth(), 0);
+    // exactly-once claim accounting across the whole fleet
+    assert_eq!(
+        snap.local_batches() + snap.stolen_batches(),
+        snap.batches,
+        "claims must partition batches: {:?}",
+        snap.per_shard
+    );
+    let by_shard: u64 = snap.per_shard.iter().map(|s| s.responses).sum();
+    assert_eq!(by_shard, n as u64, "shard counters partition responses");
+    // with 15 shards pinned at 20 ms/batch and ~25 batches p2c'd onto
+    // each deque, the fast shard can only have served the majority it
+    // did by stealing — zero steals would mean the backlog waited on
+    // stalled shards, the exact failure this dispatcher removes
+    assert!(
+        snap.stolen_batches() > 0,
+        "a skewed fleet must steal: {:?}",
+        snap.per_shard
+    );
+    // the deques are empty once everything is answered
+    assert!(snap.per_shard.iter().all(|s| s.deque_depth == 0));
+    coord.shutdown();
+}
+
+/// Concurrent leased clients reach a steady state where a second full
+/// wave of traffic allocates **zero** new request buffers — the lease
+/// slab's capacity-stability signature under real contention.
+#[test]
+fn leased_clients_hit_a_stable_high_water_mark() {
+    let (man, w) = fixture::tiny_fixture();
+    let mut cfg = CoordinatorConfig::sharded(man.nb, 8, 4);
+    cfg.batcher.queue_capacity = 100_000;
+    cfg.batcher.max_wait = Duration::from_millis(1);
+    let coord = Arc::new(
+        Coordinator::start(
+            cfg,
+            factory(
+                "native",
+                man.clone(),
+                w,
+                EngineOpts {
+                    batch: Some(8),
+                    ..Default::default()
+                },
+            )
+            .unwrap(),
+        )
+        .unwrap(),
+    );
+
+    let wave = |offset: u64| {
+        std::thread::scope(|s| {
+            for c in 0..4u64 {
+                let coord = Arc::clone(&coord);
+                let man = man.clone();
+                s.spawn(move || {
+                    let ds = synth_dataset(100, &man.bvalues, 20.0, 500 + c);
+                    for i in 0..100u64 {
+                        let mut lease = coord.lease();
+                        lease.copy_from(ds.voxel(i as usize));
+                        let rx = coord
+                            .submit_leased(offset + c * 100 + i, lease)
+                            .expect("capacity sized");
+                        rx.recv_timeout(Duration::from_secs(30)).expect("response");
+                    }
+                });
+            }
+        });
+    };
+
+    wave(0);
+    let hw = coord.lease_high_water();
+    assert!(hw >= 1, "wave 1 populated the slab");
+    wave(1000);
+    assert_eq!(
+        coord.lease_high_water(),
+        hw,
+        "wave 2 must reuse wave 1's buffers — the slab grew under load"
+    );
+    let snap = coord.snapshot();
+    assert_eq!(snap.responses, 800);
+    assert!(snap.pooled_requests >= 1);
+}
+
+/// Shutdown while 16 shards are mid-burst: every admitted request is
+/// still answered — the close-then-keep-claiming (and keep-stealing)
+/// drain contract at fleet width.
+#[test]
+fn shutdown_under_load_answers_every_admitted_request() {
+    let shards = 16usize;
+    let (man, w) = fixture::tiny_fixture();
+    let mut cfg = CoordinatorConfig::sharded(man.nb, 8, shards);
+    cfg.batcher.queue_capacity = 100_000;
+    cfg.batcher.max_wait = Duration::from_millis(1);
+    let coord = Coordinator::start(
+        cfg,
+        factory(
+            "native",
+            man.clone(),
+            w,
+            EngineOpts {
+                batch: Some(8),
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let n = 800;
+    let ds = synth_dataset(n, &man.bvalues, 20.0, 162);
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            coord
+                .submit(VoxelRequest {
+                    id: i as u64,
+                    signals: ds.voxel(i).to_vec(),
+                })
+                .unwrap()
+        })
+        .collect();
+    // tear down while most responses are still in flight
+    coord.shutdown();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap_or_else(|e| panic!("request {i} dropped during shutdown: {e}"));
+        assert_eq!(resp.id, i as u64);
+    }
+}
