@@ -4,6 +4,7 @@
 
 use uivim::accel::fixed::{quantize_slice, Fx};
 use uivim::accel::pu::{pu_dot, PuConfig};
+use uivim::accel::{AccelConfig, AccelSimulator, Scheme};
 use uivim::bench::{
     bench, black_box, config_from_env, print_results, write_bench_json, BenchRecord,
 };
@@ -139,12 +140,55 @@ fn mask_swap_vs_fresh_rebuild(
     speedup
 }
 
+/// Simulator-side mask lifecycle at paper scale (the ISSUE #5 tentpole):
+/// `resample + AccelSimulator::swap_masks` (in-place kept-column
+/// re-selection over the once-quantised weight block) vs a full datapath
+/// re-instantiation with the masks baked into the manifest.
+fn accel_mask_swap_vs_rebuild(
+    cfg: &uivim::bench::BenchConfig,
+    results: &mut Vec<uivim::bench::BenchResult>,
+) -> f64 {
+    let (man, w) = fixture::paper_fixture();
+    let mut rng = Pcg32::new(56);
+    let mut plan = MaskPlan::bernoulli(&man, 1.0 / man.scale, &mut rng);
+    let acfg = AccelConfig {
+        batch: man.batch_infer,
+        ..Default::default()
+    };
+    let mut sim = AccelSimulator::new(&man, &w, acfg, Scheme::BatchLevel).unwrap();
+    let r_swap = bench("accel_mask_swap_paper", cfg, || {
+        plan.resample(&mut rng);
+        sim.swap_masks(&plan).unwrap();
+        black_box(&sim);
+    });
+
+    let r_fresh = bench("accel_datapath_rebuild_paper", cfg, || {
+        plan.resample(&mut rng);
+        let mut man2 = man.clone();
+        plan.apply_to_manifest(&mut man2);
+        let fresh = AccelSimulator::new(&man2, &w, acfg, Scheme::BatchLevel).unwrap();
+        black_box(&fresh);
+    });
+
+    let speedup = r_fresh.mean_s / r_swap.mean_s;
+    println!(
+        "accel mask swap vs datapath re-instantiation @ nb=104: {speedup:.2}x \
+         ({:.2} us -> {:.2} us per mask redraw)",
+        r_fresh.mean_us(),
+        r_swap.mean_us()
+    );
+    results.push(r_fresh);
+    results.push(r_swap);
+    speedup
+}
+
 fn main() {
     let cfg = config_from_env();
     let mut results = Vec::new();
 
     let blocked_speedup = masked_linear_blocked_vs_scalar(&cfg, &mut results);
     let swap_speedup = mask_swap_vs_fresh_rebuild(&cfg, &mut results);
+    let accel_swap_speedup = accel_mask_swap_vs_rebuild(&cfg, &mut results);
 
     // fixed-point multiply-accumulate chain
     let xs: Vec<Fx> = (0..1024).map(|i| Fx::from_f32((i % 13) as f32 * 0.01)).collect();
@@ -273,6 +317,12 @@ fn main() {
         p50_us: 0.0,
         p99_us: 0.0,
         throughput: swap_speedup,
+    });
+    records.push(BenchRecord {
+        name: "accel_swap_vs_rebuild_speedup".into(),
+        p50_us: 0.0,
+        p99_us: 0.0,
+        throughput: accel_swap_speedup,
     });
     match write_bench_json("micro_hotpaths", &records) {
         Ok(p) => println!("wrote {}", p.display()),

@@ -2,7 +2,7 @@
 //! (paper Fig. 5): cycles, weight-load traffic, power and energy per
 //! batch, plus the mask-zero-skipping storage ablation (paper Fig. 4).
 
-use uivim::accel::power::estimate;
+use uivim::accel::power::{estimate, MaskSampler};
 use uivim::accel::resource::usage;
 use uivim::accel::{AccelConfig, AccelSimulator, Scheme};
 use uivim::experiments::load_manifest;
@@ -34,7 +34,7 @@ fn main() {
         let mut sim = AccelSimulator::new(&man, &w, cfg, scheme).expect("sim");
         let (_, st) = sim.infer_batch_stats(&ds.signals).expect("run");
         let u = usage(&cfg, man.nb, man.n_samples, &sim.weight_stores());
-        let p = estimate(&cfg, &u, &st, false);
+        let p = estimate(&cfg, &u, &st, MaskSampler::Offline);
         t.row(&[
             scheme.name().to_string(),
             st.cycles.to_string(),

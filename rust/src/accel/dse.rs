@@ -1,17 +1,30 @@
 //! Design-space exploration over the PE count — regenerates paper Fig. 8
 //! ("Relationship between resource utilization and performance") and the
-//! parallelism trade-off discussion of §VI-C.
+//! parallelism trade-off discussion of §VI-C — extended with the mask
+//! keep-rate axis the hot-swappable mask plan unlocks.
+//!
+//! All sweeps reuse **one** simulator: PE count is a scheduling knob
+//! ([`AccelSimulator::set_n_pe`] — numerics invariant, only accounting
+//! changes) and each mask-rate point is a `resample` + in-place
+//! [`AccelSimulator::swap_masks`] instead of a full datapath
+//! re-instantiation, so a PE-count × mask-rate grid quantises the
+//! weights exactly once.
 
-use super::power::{estimate, PowerReport};
+use super::power::{estimate, MaskSampler, PowerReport};
 use super::resource::{usage, AccelConfig, ResourceUsage};
 use super::schemes::Scheme;
 use super::sim::AccelSimulator;
+use crate::masks::MaskPlan;
 use crate::model::{Manifest, Weights};
+use crate::util::rng::Pcg32;
 
 /// One row of the Fig. 8 sweep.
 #[derive(Debug, Clone, Copy)]
 pub struct DsePoint {
     pub n_pe: usize,
+    /// Bernoulli keep rate of the swept mask plan (`None` = the
+    /// manifest's fixed Masksembles masks).
+    pub keep_prob: Option<f64>,
     pub usage: ResourceUsage,
     pub batch_ms: f64,
     pub voxels_per_s: f64,
@@ -19,7 +32,40 @@ pub struct DsePoint {
     pub fits: bool,
 }
 
-/// Sweep the PE counts (paper plots 4..64) on a reference batch.
+/// Evaluate `pe_counts` on a live simulator (whatever masks it currently
+/// carries), appending one row per PE count.
+fn sweep_points(
+    sim: &mut AccelSimulator,
+    man: &Manifest,
+    pe_counts: &[usize],
+    keep_prob: Option<f64>,
+    signals: &[f32],
+    rows: &mut Vec<DsePoint>,
+) -> anyhow::Result<()> {
+    // The stores only change on a mask swap, never with the PE count.
+    let stores = sim.weight_stores();
+    for &n_pe in pe_counts {
+        sim.set_n_pe(n_pe);
+        let (_, stats) = sim.infer_batch_stats(signals)?;
+        let cfg = sim.cfg;
+        let u = usage(&cfg, man.nb, man.n_samples, &stores);
+        let p = estimate(&cfg, &u, &stats, MaskSampler::Offline);
+        let batch_ms = stats.seconds(cfg.clock_hz) * 1e3;
+        rows.push(DsePoint {
+            n_pe,
+            keep_prob,
+            usage: u,
+            batch_ms,
+            voxels_per_s: man.batch_infer as f64 / (batch_ms / 1e3),
+            power: p,
+            fits: u.fits(),
+        });
+    }
+    Ok(())
+}
+
+/// Sweep the PE counts (paper plots 4..64) on a reference batch, under
+/// the manifest's fixed masks.  One simulator serves every point.
 pub fn sweep(
     man: &Manifest,
     weights: &Weights,
@@ -27,26 +73,43 @@ pub fn sweep(
     scheme: Scheme,
     signals: &[f32],
 ) -> anyhow::Result<Vec<DsePoint>> {
+    let cfg = AccelConfig {
+        batch: man.batch_infer,
+        ..Default::default()
+    };
+    let mut sim = AccelSimulator::new(man, weights, cfg, scheme)?;
     let mut rows = Vec::with_capacity(pe_counts.len());
-    for &n_pe in pe_counts {
-        let cfg = AccelConfig {
-            n_pe,
-            batch: man.batch_infer,
-            ..Default::default()
-        };
-        let mut sim = AccelSimulator::new(man, weights, cfg, scheme)?;
-        let (_, stats) = sim.infer_batch_stats(signals)?;
-        let u = usage(&cfg, man.nb, man.n_samples, &sim.weight_stores());
-        let p = estimate(&cfg, &u, &stats, false);
-        let batch_ms = stats.seconds(cfg.clock_hz) * 1e3;
-        rows.push(DsePoint {
-            n_pe,
-            usage: u,
-            batch_ms,
-            voxels_per_s: man.batch_infer as f64 / (batch_ms / 1e3),
-            power: p,
-            fits: u.fits(),
-        });
+    sweep_points(&mut sim, man, pe_counts, None, signals, &mut rows)?;
+    Ok(rows)
+}
+
+/// PE-count × mask-keep-rate grid: for each keep rate, redraw the plan
+/// at that density and hot-swap it into the **same** simulator, then
+/// walk the PE counts.  Rows come out keep-rate-major, PE-count-minor.
+pub fn sweep_grid(
+    man: &Manifest,
+    weights: &Weights,
+    pe_counts: &[usize],
+    keep_probs: &[f64],
+    scheme: Scheme,
+    signals: &[f32],
+    seed: u64,
+) -> anyhow::Result<Vec<DsePoint>> {
+    let cfg = AccelConfig {
+        batch: man.batch_infer,
+        ..Default::default()
+    };
+    let mut sim = AccelSimulator::new(man, weights, cfg, scheme)?;
+    let mut plan = MaskPlan::from_manifest(man)?;
+    let mut rng = Pcg32::new(seed);
+    let mut rows = Vec::with_capacity(pe_counts.len() * keep_probs.len());
+    for &kp in keep_probs {
+        plan.set_keep_prob(kp);
+        plan.resample(&mut rng);
+        sim.swap_masks(&plan)?;
+        // record the CLAMPED rate the masks were actually drawn at, not
+        // the caller's raw value
+        sweep_points(&mut sim, man, pe_counts, Some(plan.keep_prob()), signals, &mut rows)?;
     }
     Ok(rows)
 }
@@ -83,6 +146,7 @@ mod tests {
         let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 3);
         let rows = sweep(&man, &w, &[4, 8, 16, 32], Scheme::BatchLevel, &ds.signals).unwrap();
         assert_eq!(rows.len(), 4);
+        assert!(rows.iter().all(|r| r.keep_prob.is_none()));
         // DSP% strictly increases with PEs; speed increases (latency falls);
         // BRAM and IO stay flat (paper: "remain relatively constant").
         for w2 in rows.windows(2) {
@@ -93,6 +157,61 @@ mod tests {
         }
         // power increases with parallelism
         assert!(rows.last().unwrap().power.watts > rows[0].power.watts * 0.9);
+    }
+
+    /// The one-simulator contract: a reused simulator must produce the
+    /// same sweep as the old construct-per-point loop would — i.e. each
+    /// row matches a freshly built simulator at that PE count.
+    #[test]
+    fn reused_simulator_matches_fresh_per_point() {
+        let Some((man, w)) = setup() else { return };
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 5);
+        let rows = sweep(&man, &w, &[4, 16], Scheme::BatchLevel, &ds.signals).unwrap();
+        for row in &rows {
+            let cfg = AccelConfig {
+                n_pe: row.n_pe,
+                batch: man.batch_infer,
+                ..Default::default()
+            };
+            let mut fresh = AccelSimulator::new(&man, &w, cfg, Scheme::BatchLevel).unwrap();
+            let (_, st) = fresh.infer_batch_stats(&ds.signals).unwrap();
+            let fresh_ms = st.seconds(cfg.clock_hz) * 1e3;
+            assert_eq!(row.batch_ms, fresh_ms, "PE {} diverged", row.n_pe);
+        }
+    }
+
+    #[test]
+    fn grid_sweeps_mask_rates_on_one_simulator() {
+        let Some((man, w)) = setup() else { return };
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 4);
+        let rates = [0.9, 0.3];
+        let rows = sweep_grid(
+            &man,
+            &w,
+            &[8, 32],
+            &rates,
+            Scheme::BatchLevel,
+            &ds.signals,
+            17,
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].keep_prob, Some(0.9));
+        assert_eq!(rows[3].keep_prob, Some(0.3));
+        // sparser masks schedule fewer columns: at a fixed PE count the
+        // denser plan can never be faster
+        for pe in 0..2 {
+            let dense = &rows[pe];
+            let sparse = &rows[2 + pe];
+            assert_eq!(dense.n_pe, sparse.n_pe);
+            assert!(
+                sparse.batch_ms <= dense.batch_ms,
+                "keep 0.3 slower than keep 0.9 at {} PEs: {} vs {}",
+                dense.n_pe,
+                sparse.batch_ms,
+                dense.batch_ms
+            );
+        }
     }
 
     #[test]

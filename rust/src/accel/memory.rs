@@ -66,6 +66,21 @@ impl WeightStore {
         }
     }
 
+    /// Refresh the per-sample kept counts in place (the mask-swap path:
+    /// the store is sized once for its sample count and only the counts
+    /// change when masks are hot-swapped — no allocation).
+    pub fn refresh_kept_counts(&mut self, kept: impl IntoIterator<Item = usize>) {
+        let mut it = kept.into_iter();
+        let mut n = 0usize;
+        for slot in self.kept_per_sample.iter_mut() {
+            let Some(k) = it.next() else { break };
+            *slot = k;
+            n += 1;
+        }
+        debug_assert_eq!(n, self.kept_per_sample.len(), "fewer kept counts than samples");
+        debug_assert!(it.next().is_none(), "more kept counts than samples");
+    }
+
     /// Dense (no skipping) words for one sample: full `nb x nb` weights +
     /// nb biases + 2*nb folded-BN terms.
     pub fn dense_words_per_sample(&self) -> usize {
@@ -148,6 +163,17 @@ mod tests {
         let ws = WeightStore::from_mask(16, &mask);
         assert_eq!(ws.total_skipped_words(), ws.total_dense_words());
         assert_eq!(ws.savings_ratio(), 0.0);
+    }
+
+    #[test]
+    fn refresh_kept_counts_updates_words_without_realloc() {
+        let mask = for_width(16, 4, 2.0, 3).unwrap();
+        let mut ws = WeightStore::from_mask(16, &mask);
+        let cap = ws.kept_per_sample.capacity();
+        ws.refresh_kept_counts([1usize, 2, 3, 4]);
+        assert_eq!(ws.kept_per_sample, vec![1, 2, 3, 4]);
+        assert_eq!(ws.skipped_words(3), 4 * 16 + 3 * 4);
+        assert_eq!(ws.kept_per_sample.capacity(), cap);
     }
 
     #[test]

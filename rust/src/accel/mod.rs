@@ -28,6 +28,7 @@ pub mod resource;
 pub mod schemes;
 pub mod sim;
 
+pub use power::MaskSampler;
 pub use resource::AccelConfig;
 pub use schemes::Scheme;
 pub use sim::{AccelSimulator, CycleStats};

@@ -32,6 +32,21 @@ pub const E_WEIGHT_WORD_J: f64 = 12.0e-12;
 /// ablation in Table I discussion.
 pub const E_SAMPLER_J: f64 = 6.0e-12;
 
+/// Where the modelled design's Bernoulli masks come from — decides
+/// whether [`estimate`] charges the runtime sampler energy
+/// ([`E_SAMPLER_J`]).  A named enum so call sites read as the design
+/// they model, not a bare `false`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MaskSampler {
+    /// Masks folded offline (uIVIM-NET / Masksembles): no sampler
+    /// hardware, no sampler energy.
+    Offline,
+    /// Masks drawn at runtime (MC-Dropout-style prior designs
+    /// [33][35][36], paper Fig. 4 left): charges [`E_SAMPLER_J`] per
+    /// loaded weight word.
+    Runtime,
+}
+
 /// Power/energy report for one simulated run.
 #[derive(Debug, Clone, Copy)]
 pub struct PowerReport {
@@ -54,14 +69,15 @@ impl PowerReport {
 /// Estimate power for a run described by `stats` on configuration `cfg`
 /// with resource usage `usage`.
 ///
-/// `runtime_sampler`: charge the MC-Dropout sampler energy (for modelling
-/// the prior designs the paper compares against; `false` for uIVIM-NET,
-/// whose masks are folded offline).
+/// `sampler`: [`MaskSampler::Runtime`] charges the MC-Dropout sampler
+/// energy (for modelling the prior designs the paper compares against);
+/// [`MaskSampler::Offline`] for uIVIM-NET, whose masks are folded
+/// offline.
 pub fn estimate(
     cfg: &AccelConfig,
     usage: &ResourceUsage,
     stats: &CycleStats,
-    runtime_sampler: bool,
+    sampler: MaskSampler,
 ) -> PowerReport {
     let seconds = stats.cycles as f64 / cfg.clock_hz;
     // Utilisation-scaled DSP power: fraction of cycles the MAC array is
@@ -77,7 +93,7 @@ pub fn estimate(
     let base_w = P_STATIC_W + p_dsp + p_bram + p_pe;
 
     let mut weight_load_j = stats.weight_words_loaded as f64 * E_WEIGHT_WORD_J;
-    if runtime_sampler {
+    if sampler == MaskSampler::Runtime {
         weight_load_j += stats.weight_words_loaded as f64 * E_SAMPLER_J;
     }
     let energy_j = base_w * seconds + weight_load_j;
@@ -122,8 +138,8 @@ mod tests {
     fn more_loads_more_power() {
         let cfg = AccelConfig::default();
         let u = usage32();
-        let a = estimate(&cfg, &u, &stats(100_000, 10_000), false);
-        let b = estimate(&cfg, &u, &stats(100_000, 10_000 * 64), false);
+        let a = estimate(&cfg, &u, &stats(100_000, 10_000), MaskSampler::Offline);
+        let b = estimate(&cfg, &u, &stats(100_000, 10_000 * 64), MaskSampler::Offline);
         assert!(b.watts > a.watts, "{} !> {}", b.watts, a.watts);
         assert!(b.weight_load_j > a.weight_load_j * 50.0);
     }
@@ -133,8 +149,8 @@ mod tests {
         let cfg = AccelConfig::default();
         let u = usage32();
         let s = stats(100_000, 500_000);
-        let ours = estimate(&cfg, &u, &s, false);
-        let mcd = estimate(&cfg, &u, &s, true);
+        let ours = estimate(&cfg, &u, &s, MaskSampler::Offline);
+        let mcd = estimate(&cfg, &u, &s, MaskSampler::Runtime);
         assert!(mcd.energy_j > ours.energy_j);
     }
 
@@ -142,7 +158,7 @@ mod tests {
     fn energy_equals_power_times_time() {
         let cfg = AccelConfig::default();
         let u = usage32();
-        let r = estimate(&cfg, &u, &stats(250_000, 1000), false);
+        let r = estimate(&cfg, &u, &stats(250_000, 1000), MaskSampler::Offline);
         assert!((r.energy_j - r.watts * r.seconds).abs() < 1e-12);
         assert!(r.seconds > 0.0);
     }
@@ -173,7 +189,7 @@ mod tests {
         let ds = crate::ivim::synth::synth_dataset(man.batch_infer, &man.bvalues, 20.0, 77);
         let (_, st) = sim.infer_batch_stats(&ds.signals).unwrap();
         let u = crate::accel::resource::usage(&cfg, man.nb, man.n_samples, &sim.weight_stores());
-        let r = estimate(&cfg, &u, &st, false);
+        let r = estimate(&cfg, &u, &st, MaskSampler::Offline);
         assert!(
             r.watts > 11.78 * 0.65 && r.watts < 11.78 * 1.35,
             "calibration drifted: {} W vs paper 11.78 W",
@@ -185,7 +201,7 @@ mod tests {
     fn zero_cycles_degrades_gracefully() {
         let cfg = AccelConfig::default();
         let u = usage32();
-        let r = estimate(&cfg, &u, &stats(0, 0), false);
+        let r = estimate(&cfg, &u, &stats(0, 0), MaskSampler::Offline);
         assert!(r.watts > 0.0);
         assert_eq!(r.energy_j, 0.0);
     }

@@ -22,6 +22,12 @@
 //! Mask-zero skipping: dropped output neurons are never scheduled (no
 //! cycles, no weights stored); the sigmoid is the hardware-standard PLAN
 //! piecewise-linear approximation.
+//!
+//! Masks are hot-swappable runtime state ([`AccelSimulator::swap_masks`]):
+//! folded-BN columns are quantised once at construction (unmasked,
+//! worst-case capacity) and a swap only re-selects kept-column index
+//! lists in place — many mask draws over one fixed weight block, the
+//! economy SoftDropConnect-style mask sampling assumes.
 
 use super::fixed::{quantize_slice, Fx};
 use super::memory::WeightStore;
@@ -30,7 +36,7 @@ use super::resource::AccelConfig;
 use super::schemes::Scheme;
 use crate::infer::{Engine, InferOutput};
 use crate::ivim::Param;
-use crate::masks::MaskSet;
+use crate::masks::{LayerPlan, MaskPlan, MaskSet};
 use crate::model::{Manifest, Weights};
 
 /// Words fetched per cycle during a weight load (burst width).
@@ -84,7 +90,8 @@ pub fn plan_sigmoid(x: Fx) -> Fx {
     }
 }
 
-/// One kept output column of a masked layer after offline BN folding.
+/// One quantised output column of a masked layer after offline BN
+/// folding (stored for every column; masks select which are scheduled).
 ///
 /// The BatchNorm affine is folded into the column weights offline
 /// (standard FPGA quantisation flow): `h = (x·W + b)·scale + shift =
@@ -94,21 +101,34 @@ pub fn plan_sigmoid(x: Fx) -> Fx {
 /// and the wide accumulator is barrel-shifted left by `k` before
 /// saturation — free in fabric, bit-faithful here.
 struct QuantColumn {
-    out: usize,
     weights: Vec<Fx>,
     bias: Fx,
     shift_k: u32,
 }
 
-/// One masked layer's quantised, mask-skipped storage.
+/// One masked layer's quantised storage.
+///
+/// Mask lifecycle (the simulator-side half of the mask-lifecycle
+/// refactor): **every** output column's folded-BN data is quantised
+/// exactly once at construction, unmasked, into `dense` — the worst-case
+/// capacity a resampled mask can ever need.  Which columns a sample
+/// actually schedules is the per-sample `kept` index lists into that
+/// block, so a [`QuantLayer::swap`] only re-fills index lists and the
+/// [`WeightStore`] counts in place: no re-quantisation, no allocation.
+/// Column quantisation is mask-independent, which is what makes a swap
+/// bit-identical to a fresh build with the same masks.
 struct QuantLayer {
     nb_in: usize,
-    /// Per sample: ONLY kept outputs (mask-zero skipping).
-    samples: Vec<Vec<QuantColumn>>,
+    /// All `nb` output columns, quantised once from the folded-BN data.
+    dense: Vec<QuantColumn>,
+    /// Per sample: kept output column indices into `dense`, ascending
+    /// (mask-zero skipping — dropped columns are never scheduled).
+    kept: Vec<Vec<u32>>,
     store: WeightStore,
 }
 
 impl QuantLayer {
+    #[allow(clippy::too_many_arguments)]
     fn build(
         nb: usize,
         w: &[f32],
@@ -120,48 +140,69 @@ impl QuantLayer {
         mask: &MaskSet,
     ) -> QuantLayer {
         const EPS: f32 = 1e-5;
-        let mut samples = Vec::with_capacity(mask.n);
-        for s in 0..mask.n {
-            let mut kept = Vec::new();
-            for o in 0..nb {
-                if mask.row(s)[o] == 0 {
-                    continue;
-                }
-                let scale = g[o] / (v[o] + EPS).sqrt();
-                let shift = be[o] - m[o] * scale;
-                let col: Vec<f32> = (0..nb).map(|i| w[i * nb + o] * scale).collect();
-                let bias = b[o] * scale + shift;
-                // smallest k so the scaled column and bias fit Q4.12
-                let maxabs = col
-                    .iter()
-                    .map(|x| x.abs())
-                    .fold(bias.abs(), f32::max);
-                let mut k = 0u32;
-                while maxabs / (1u32 << k) as f32 >= 7.9 && k < 12 {
-                    k += 1;
-                }
-                let div = (1u32 << k) as f32;
-                kept.push(QuantColumn {
-                    out: o,
-                    weights: quantize_slice(
-                        &col.iter().map(|x| x / div).collect::<Vec<_>>(),
-                    ),
-                    bias: Fx::from_f32(bias / div),
-                    shift_k: k,
-                });
+        let mut dense = Vec::with_capacity(nb);
+        for o in 0..nb {
+            let scale = g[o] / (v[o] + EPS).sqrt();
+            let shift = be[o] - m[o] * scale;
+            let col: Vec<f32> = (0..nb).map(|i| w[i * nb + o] * scale).collect();
+            let bias = b[o] * scale + shift;
+            // smallest k so the scaled column and bias fit Q4.12
+            let maxabs = col
+                .iter()
+                .map(|x| x.abs())
+                .fold(bias.abs(), f32::max);
+            let mut k = 0u32;
+            while maxabs / (1u32 << k) as f32 >= 7.9 && k < 12 {
+                k += 1;
             }
-            samples.push(kept);
+            let div = (1u32 << k) as f32;
+            dense.push(QuantColumn {
+                weights: quantize_slice(
+                    &col.iter().map(|x| x / div).collect::<Vec<_>>(),
+                ),
+                bias: Fx::from_f32(bias / div),
+                shift_k: k,
+            });
         }
+        let kept = (0..mask.n)
+            .map(|s| {
+                // capacity = nb: a later swap may keep every column
+                let mut ks = Vec::with_capacity(nb);
+                ks.extend(mask.kept_indices(s).into_iter().map(|o| o as u32));
+                ks
+            })
+            .collect();
         QuantLayer {
             nb_in: nb,
-            samples,
+            dense,
+            kept,
             store: WeightStore::from_mask(nb, mask),
         }
+    }
+
+    /// Re-select this layer's kept columns from a [`LayerPlan`], in place
+    /// (index lists + store counts only; `dense` is never touched).
+    fn swap(&mut self, plan: &LayerPlan) {
+        debug_assert_eq!(plan.width(), self.nb_in);
+        debug_assert_eq!(plan.n(), self.kept.len());
+        for (s, ks) in self.kept.iter_mut().enumerate() {
+            ks.clear();
+            ks.extend_from_slice(plan.kept(s));
+        }
+        self.store
+            .refresh_kept_counts(self.kept.iter().map(|k| k.len()));
     }
 
     /// Stored words for one sample (mask-skipped).
     fn words(&self, s: usize) -> usize {
         self.store.skipped_words(s)
+    }
+
+    /// Owned-buffer capacities (no-allocation witness for swap tests).
+    fn alloc_signature(&self, sig: &mut Vec<usize>) {
+        sig.push(self.dense.capacity());
+        sig.push(self.store.kept_per_sample.capacity());
+        sig.extend(self.kept.iter().map(|k| k.capacity()));
     }
 }
 
@@ -252,6 +293,77 @@ impl AccelSimulator {
         &self.pu
     }
 
+    /// Re-point the PE-count knob without rebuilding the datapath.
+    /// Parallelism is a scheduling choice — numerics are invariant, only
+    /// cycle/resource accounting changes — so a DSE sweep varies it on
+    /// one live simulator instead of re-instantiating per point.
+    pub fn set_n_pe(&mut self, n_pe: usize) {
+        self.cfg.n_pe = n_pe;
+    }
+
+    /// Hot-swap the simulator's masks from a [`MaskPlan`] without
+    /// touching the quantised weights or scratch: each masked layer
+    /// re-selects its kept columns (index lists into the dense quantised
+    /// block) and refreshes its [`WeightStore`] counts in place — zero
+    /// steady-state allocation, mirroring `NativeEngine::swap_masks`.
+    ///
+    /// Contract: after a swap the simulator is **bit-for-bit** identical
+    /// — outputs *and* cycle/load counters — to a freshly constructed
+    /// `AccelSimulator` whose manifest carried the plan's masks.  The
+    /// plan must match the simulator's shape (`nb`, `n_samples`) and
+    /// subnet names; a rejected swap leaves the simulator untouched.
+    pub fn swap_masks(&mut self, plan: &MaskPlan) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            plan.nb() == self.nb,
+            "plan width {} != simulator width {}",
+            plan.nb(),
+            self.nb
+        );
+        anyhow::ensure!(
+            plan.n_samples() == self.n_samples,
+            "plan has {} samples, simulator runs {}",
+            plan.n_samples(),
+            self.n_samples
+        );
+        // Validate every lookup and layer shape BEFORE mutating anything:
+        // a failed swap must never leave the datapath half-swapped.
+        for sn in &self.subnets {
+            let name = sn.param.name();
+            for layer in [1usize, 2] {
+                let lp = plan
+                    .layer_for(name, layer)
+                    .ok_or_else(|| anyhow::anyhow!("plan has no subnet '{name}'"))?;
+                anyhow::ensure!(
+                    lp.width() == self.nb && lp.n() == self.n_samples,
+                    "plan layer {name}.{layer} is {}x{}, simulator needs {}x{}",
+                    lp.n(),
+                    lp.width(),
+                    self.n_samples,
+                    self.nb
+                );
+            }
+        }
+        for sn in &mut self.subnets {
+            let name = sn.param.name();
+            for (layer, l) in [(1usize, &mut sn.l1), (2usize, &mut sn.l2)] {
+                l.swap(plan.layer_for(name, layer).expect("validated above"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Capacities of every owned buffer (scratch + per-layer stores) —
+    /// stable across `swap_masks`/`execute_into_stats` calls in steady
+    /// state (the no-allocation witness).
+    pub fn alloc_signature(&self) -> Vec<usize> {
+        let mut sig = vec![self.x0.capacity(), self.h1.capacity(), self.h2.capacity()];
+        for sn in &self.subnets {
+            sn.l1.alloc_signature(&mut sig);
+            sn.l2.alloc_signature(&mut sig);
+        }
+        sig
+    }
+
     /// Weight stores of all masked layers (for the resource model).
     pub fn weight_stores(&self) -> Vec<WeightStore> {
         self.subnets
@@ -290,14 +402,15 @@ impl AccelSimulator {
         let mut macs = 0u64;
         for v in 0..batch {
             let x = &input[v * layer.nb_in..(v + 1) * layer.nb_in];
-            for c in &layer.samples[sample] {
+            for &ci in &layer.kept[sample] {
+                let c = &layer.dense[ci as usize];
                 // BN is folded into the stored weights; the accumulator
                 // is barrel-shifted by the column's pre-shift before
                 // saturating back to Q4.12 (see QuantColumn docs).
                 let mut acc = super::pu::pu_dot_acc(&self.pu, x, &c.weights);
                 acc += (c.bias.0 as i64) << super::fixed::FRAC_BITS;
                 acc <<= c.shift_k;
-                out[v * nb + c.out] = super::fixed::sat_from_acc(acc).relu();
+                out[v * nb + ci as usize] = super::fixed::sat_from_acc(acc).relu();
                 macs += layer.nb_in as u64;
             }
         }
@@ -361,7 +474,7 @@ impl AccelSimulator {
             // Cycle accounting per layer under the scheme.
             for layer in [&sn.l1, &sn.l2] {
                 for s in 0..self.n_samples {
-                    let kept = layer.samples[s].len();
+                    let kept = layer.kept[s].len();
                     let words = layer.words(s);
                     let loads = match self.scheme {
                         Scheme::BatchLevel => 1usize,
@@ -583,5 +696,148 @@ mod tests {
         let (_, s2) = sim.infer_batch_stats(&ds.signals).unwrap();
         assert_eq!(s1.cycles, s2.cycles);
         assert_eq!(s1.weight_words_loaded, s2.weight_words_loaded);
+    }
+
+    /// Golden pin of the PLAN piecewise bounds in Q4.12 (ISSUE #5): the
+    /// exact breakpoints |x| = 1.0 / 2.375 / 5.0, `Fx` saturation at the
+    /// `i16::MIN` input, and the negative-side symmetry σ(-x) = 1 - σ(x).
+    /// Raw values: 0.75 = 3072/4096, 0.91796875 = 3760/4096, 1.0 = 4096.
+    #[test]
+    fn plan_sigmoid_breakpoint_goldens() {
+        use crate::accel::fixed::{MAX_RAW, MIN_RAW};
+        // positive breakpoints land exactly on the segment formulae
+        assert_eq!(plan_sigmoid(Fx::from_f32(1.0)), Fx(3072));
+        assert_eq!(plan_sigmoid(Fx::from_f32(2.375)), Fx(3760));
+        assert_eq!(plan_sigmoid(Fx::from_f32(5.0)), Fx(4096));
+        assert_eq!(plan_sigmoid(Fx::ZERO), Fx(2048)); // σ(0) = 0.5
+        // negative side: exact Q4.12 complements
+        assert_eq!(plan_sigmoid(Fx::from_f32(-1.0)), Fx(4096 - 3072));
+        assert_eq!(plan_sigmoid(Fx::from_f32(-2.375)), Fx(4096 - 3760));
+        assert_eq!(plan_sigmoid(Fx::from_f32(-5.0)), Fx(0));
+        // Fx saturation: i16::MIN has no positive counterpart — the
+        // |x| clamp must saturate to MAX_RAW, not wrap, giving σ = 0.
+        assert_eq!(plan_sigmoid(Fx(MIN_RAW)), Fx(0));
+        assert_eq!(plan_sigmoid(Fx(MAX_RAW)), Fx::ONE);
+        // σ(-x) = 1 - σ(x) holds bit-exactly across the whole range
+        for i in 0..=80 {
+            let x = Fx::from_f32(i as f32 * 0.1);
+            let neg = Fx(-x.0);
+            assert_eq!(
+                plan_sigmoid(neg),
+                Fx::ONE.sub(plan_sigmoid(x)),
+                "symmetry broken at x = {}",
+                x.to_f32()
+            );
+        }
+    }
+
+    /// Tentpole golden gate (ISSUE #5): a hot mask swap on a live
+    /// simulator must be **bit-for-bit** indistinguishable — outputs AND
+    /// cycle/load counters — from tearing the simulator down and
+    /// rebuilding it with the new masks baked into the manifest.
+    #[test]
+    fn swap_masks_matches_fresh_simulator_bit_for_bit() {
+        use crate::masks::MaskPlan;
+        use crate::util::rng::Pcg32;
+        let Some((man, w)) = setup() else { return };
+        let mut sim =
+            AccelSimulator::new(&man, &w, cfg_for(&man), Scheme::BatchLevel).unwrap();
+        let mut plan = MaskPlan::from_manifest(&man).unwrap();
+        let mut rng = Pcg32::new(71);
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 41);
+        for round in 0..4 {
+            plan.resample(&mut rng);
+            sim.swap_masks(&plan).unwrap();
+            let (a, sa) = sim.infer_batch_stats(&ds.signals).unwrap();
+            let mut man2 = man.clone();
+            plan.apply_to_manifest(&mut man2);
+            let mut fresh =
+                AccelSimulator::new(&man2, &w, cfg_for(&man), Scheme::BatchLevel).unwrap();
+            let (b, sb) = fresh.infer_batch_stats(&ds.signals).unwrap();
+            for p in Param::ALL {
+                assert_eq!(
+                    a.samples[p.index()],
+                    b.samples[p.index()],
+                    "round {round}: swap != fresh for {p:?}"
+                );
+            }
+            assert_eq!(sa.cycles, sb.cycles, "round {round}: cycle counters diverged");
+            assert_eq!(sa.active_cycles, sb.active_cycles, "round {round}");
+            assert_eq!(sa.weight_loads, sb.weight_loads, "round {round}");
+            assert_eq!(
+                sa.weight_words_loaded, sb.weight_words_loaded,
+                "round {round}: load counters diverged"
+            );
+            assert_eq!(sa.macs, sb.macs, "round {round}: mac counters diverged");
+        }
+    }
+
+    /// Swapping back to the manifest's own masks restores outputs and
+    /// counters exactly (nothing beyond the index lists mutated).
+    #[test]
+    fn swap_masks_roundtrips_to_original() {
+        use crate::masks::MaskPlan;
+        use crate::util::rng::Pcg32;
+        let Some((man, w)) = setup() else { return };
+        let mut sim =
+            AccelSimulator::new(&man, &w, cfg_for(&man), Scheme::BatchLevel).unwrap();
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 42);
+        let (original, st0) = sim.infer_batch_stats(&ds.signals).unwrap();
+        let mut plan = MaskPlan::from_manifest(&man).unwrap();
+        let mut rng = Pcg32::new(6);
+        plan.resample(&mut rng);
+        sim.swap_masks(&plan).unwrap();
+        let baked = MaskPlan::from_manifest(&man).unwrap();
+        sim.swap_masks(&baked).unwrap();
+        let (restored, st1) = sim.infer_batch_stats(&ds.signals).unwrap();
+        for p in Param::ALL {
+            assert_eq!(original.samples[p.index()], restored.samples[p.index()]);
+        }
+        assert_eq!(st0.cycles, st1.cycles);
+        assert_eq!(st0.weight_words_loaded, st1.weight_words_loaded);
+    }
+
+    /// The swap path must stay inside the capacity reserved at
+    /// construction: 100 resample/swap/execute cycles without a single
+    /// reallocation, even when the resampled union grows.
+    #[test]
+    fn swap_masks_never_reallocates_over_100_cycles() {
+        use crate::masks::MaskPlan;
+        use crate::util::rng::Pcg32;
+        let Some((man, w)) = setup() else { return };
+        let mut sim =
+            AccelSimulator::new(&man, &w, cfg_for(&man), Scheme::BatchLevel).unwrap();
+        let mut plan = MaskPlan::from_manifest(&man).unwrap();
+        let mut rng = Pcg32::new(12);
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 43);
+        let mut out = InferOutput::new(man.n_samples, man.batch_infer);
+        sim.execute_into_stats(&ds.signals, &mut out).unwrap();
+        let sig = sim.alloc_signature();
+        for i in 0..100 {
+            plan.resample(&mut rng);
+            sim.swap_masks(&plan).unwrap();
+            sim.execute_into_stats(&ds.signals, &mut out).unwrap();
+            assert_eq!(sim.alloc_signature(), sig, "cycle {i}: swap or execute reallocated");
+        }
+    }
+
+    #[test]
+    fn swap_masks_rejects_mismatched_plans() {
+        use crate::masks::MaskPlan;
+        use crate::testing::fixture;
+        let (man, w) = fixture::tiny_fixture();
+        let mut sim =
+            AccelSimulator::new(&man, &w, cfg_for(&man), Scheme::BatchLevel).unwrap();
+        // wrong width
+        let (other, _) = fixture::build(&fixture::FixtureConfig {
+            nb: 17,
+            ..Default::default()
+        });
+        assert!(sim.swap_masks(&MaskPlan::from_manifest(&other).unwrap()).is_err());
+        // wrong sample count
+        assert!(sim.swap_masks(&MaskPlan::all_ones(&man, man.n_samples + 1)).is_err());
+        // a rejected swap leaves the simulator fully functional
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 44);
+        assert!(sim.infer_batch(&ds.signals).is_ok());
     }
 }

@@ -17,10 +17,17 @@
 //!   shared all-ones [`MaskPlan`], so its hot path is allocation-free
 //!   like the native engine's.
 //!
-//! `DeepEnsemble` members come from [`registry::build`]; `McDropout`
-//! holds a concrete [`NativeEngine`] because the hot swap is native-
-//! engine state, not part of the `Engine` trait.
+//! * [`AccelMcDropout`] — the fixed-point twin of [`McDropout`]: the
+//!   same resample → swap → execute loop over the accelerator
+//!   simulator's Q4.12 datapath (`AccelSimulator::swap_masks`), so
+//!   MC-sampling studies and DSE sweeps can draw many masks over one
+//!   fixed quantised weight block without re-instantiating the datapath.
+//!
+//! `DeepEnsemble` members come from [`registry::build`]; `McDropout` and
+//! `AccelMcDropout` hold concrete engines because the hot swap is
+//! engine-specific state, not part of the `Engine` trait.
 
+use crate::accel::{AccelConfig, AccelSimulator, CycleStats, Scheme};
 use crate::infer::native::NativeEngine;
 use crate::infer::registry::{self, EngineOpts};
 use crate::infer::{Engine, InferOutput};
@@ -92,6 +99,84 @@ impl Engine for McDropout {
         self.plan.resample(&mut self.rng);
         self.engine.swap_masks(&self.plan)?;
         self.engine.execute_into(signals, out)
+    }
+}
+
+/// MC-Dropout over the accelerator simulator — the fixed-point twin of
+/// [`McDropout`]: one [`AccelSimulator`] + one [`MaskPlan`] + [`Pcg32`],
+/// running `resample → swap_masks → execute_into` per call.  The
+/// quantised weight block is built once; every mask draw is an in-place
+/// kept-column re-selection (zero steady-state allocation), which is
+/// exactly how SoftDropConnect-style mask sampling runs on the paper's
+/// fixed-weight hardware.
+pub struct AccelMcDropout {
+    sim: AccelSimulator,
+    plan: MaskPlan,
+    rng: Pcg32,
+    batch: usize,
+    n_samples: usize,
+}
+
+impl AccelMcDropout {
+    pub fn new(man: &Manifest, weights: &Weights, seed: u64) -> anyhow::Result<Self> {
+        Self::with_batch(man, weights, man.batch_infer, seed)
+    }
+
+    /// Fixed-point MC-Dropout head with an explicit batch size (registry
+    /// path).  Runs the batch-level scheme, like the `accel` engine.
+    pub fn with_batch(
+        man: &Manifest,
+        weights: &Weights,
+        batch: usize,
+        seed: u64,
+    ) -> anyhow::Result<Self> {
+        let mut rng = Pcg32::new(seed);
+        let plan = MaskPlan::bernoulli(man, 1.0 / man.scale, &mut rng);
+        let cfg = AccelConfig {
+            batch,
+            ..Default::default()
+        };
+        let mut sim = AccelSimulator::new(man, weights, cfg, Scheme::BatchLevel)?;
+        sim.swap_masks(&plan)?;
+        Ok(AccelMcDropout {
+            sim,
+            plan,
+            rng,
+            batch,
+            n_samples: man.n_samples,
+        })
+    }
+
+    /// Cycle stats of the last executed batch (the simulator's counters
+    /// keep working under resampled masks).
+    pub fn last_stats(&self) -> CycleStats {
+        self.sim.last_stats
+    }
+
+    /// Buffer capacities of the head's entire state (plan + simulator) —
+    /// the steady-state no-allocation witness.
+    pub fn alloc_signature(&self) -> Vec<usize> {
+        let mut sig = self.plan.alloc_signature();
+        sig.extend(self.sim.alloc_signature());
+        sig
+    }
+}
+
+impl Engine for AccelMcDropout {
+    fn name(&self) -> &str {
+        "accel-mc"
+    }
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+    fn n_samples(&self) -> usize {
+        self.n_samples
+    }
+
+    fn execute_into(&mut self, signals: &[f32], out: &mut InferOutput) -> anyhow::Result<()> {
+        self.plan.resample(&mut self.rng);
+        self.sim.swap_masks(&self.plan)?;
+        self.sim.execute_into(signals, out)
     }
 }
 
@@ -265,6 +350,50 @@ mod tests {
             assert_eq!(mcd.alloc_signature(), sig, "hot loop reallocated");
             let after: Vec<*const f32> = out.samples.iter().map(|p| p.as_ptr()).collect();
             assert_eq!(out_ptrs, after, "output buffers were reallocated");
+        }
+    }
+
+    #[test]
+    fn accel_mc_produces_spread_and_is_seed_deterministic() {
+        let Some((man, w)) = setup() else { return };
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 7);
+        let mut a = AccelMcDropout::new(&man, &w, 13).unwrap();
+        let mut b = AccelMcDropout::new(&man, &w, 13).unwrap();
+        let oa = a.infer_batch(&ds.signals).unwrap();
+        let ob = b.infer_batch(&ds.signals).unwrap();
+        for p in Param::ALL {
+            assert_eq!(oa.samples[p.index()], ob.samples[p.index()]);
+        }
+        let spread: f64 = Param::ALL
+            .iter()
+            .flat_map(|&p| (0..oa.batch).map(move |v| (p, v)))
+            .map(|(p, v)| oa.std(p, v) / (p.range().1 - p.range().0))
+            .sum();
+        assert!(spread > 0.0, "random masks must induce variance");
+        // like McDropout, NOT repeatable across calls on one instance
+        let oc = a.infer_batch(&ds.signals).unwrap();
+        assert!(
+            Param::ALL
+                .iter()
+                .any(|&p| oa.samples[p.index()] != oc.samples[p.index()]),
+            "a second call must redraw the masks"
+        );
+        assert!(a.last_stats().cycles > 0, "cycle counters keep working");
+    }
+
+    /// The fixed-point sampler hot loop performs zero heap allocation in
+    /// steady state, like its f32 twin.
+    #[test]
+    fn accel_mc_steady_state_never_reallocates() {
+        let Some((man, w)) = setup() else { return };
+        let mut mcd = AccelMcDropout::new(&man, &w, 29).unwrap();
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 8);
+        let mut out = InferOutput::new(mcd.n_samples(), mcd.batch_size());
+        mcd.execute_into(&ds.signals, &mut out).unwrap();
+        let sig = mcd.alloc_signature();
+        for _ in 0..20 {
+            mcd.execute_into(&ds.signals, &mut out).unwrap();
+            assert_eq!(mcd.alloc_signature(), sig, "hot loop reallocated");
         }
     }
 

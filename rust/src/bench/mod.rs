@@ -225,9 +225,13 @@ pub fn read_bench_json(path: &std::path::Path) -> anyhow::Result<Vec<BenchRecord
 /// whose p50 regressed by more than `max_regress` (0.20 = +20%) is a
 /// failure.  Baseline records with `p50_us == 0` are **unmeasured**
 /// sentinels (committed before a toolchain was available, or synthetic
-/// rows like speedup factors) and are skipped, as are cases missing
-/// from either side.  Returns the human-readable comparison table;
-/// `Err` carries the same table plus the offending cases.
+/// rows like speedup factors): each gets an explicit `unmeasured`
+/// verdict row and the report ends with a `N of M cases unmeasured`
+/// count.  Cases missing from either side are skipped — but if not a
+/// single baseline row was actually compared (all sentinels, all
+/// missing/renamed, or an empty baseline) the gate fails outright
+/// instead of vacuously passing.  Returns the human-readable comparison
+/// table; `Err` carries the same table plus the offending cases.
 pub fn compare_bench_records(
     baseline: &[BenchRecord],
     current: &[BenchRecord],
@@ -236,7 +240,25 @@ pub fn compare_bench_records(
     use crate::metrics::report::Table;
     let mut t = Table::new(&["case", "baseline p50", "current p50", "delta", "verdict"]);
     let mut regressions = Vec::new();
+    let mut unmeasured = 0usize;
+    let mut measured = 0usize;
     for b in baseline {
+        if b.p50_us <= 0.0 {
+            unmeasured += 1;
+            let cur = current
+                .iter()
+                .find(|c| c.name == b.name)
+                .map(|c| format!("{:.2} us", c.p50_us))
+                .unwrap_or_else(|| "-".into());
+            t.row(&[
+                b.name.clone(),
+                "sentinel (0)".into(),
+                cur,
+                "-".into(),
+                "unmeasured".into(),
+            ]);
+            continue;
+        }
         let Some(c) = current.iter().find(|c| c.name == b.name) else {
             t.row(&[
                 b.name.clone(),
@@ -247,16 +269,7 @@ pub fn compare_bench_records(
             ]);
             continue;
         };
-        if b.p50_us <= 0.0 {
-            t.row(&[
-                b.name.clone(),
-                "unmeasured".into(),
-                format!("{:.2} us", c.p50_us),
-                "-".into(),
-                "baseline pending".into(),
-            ]);
-            continue;
-        }
+        measured += 1;
         let delta = c.p50_us / b.p50_us - 1.0;
         let regressed = delta > max_regress;
         t.row(&[
@@ -290,7 +303,26 @@ pub fn compare_bench_records(
             ]);
         }
     }
-    let report = t.to_text();
+    let mut report = t.to_text();
+    if unmeasured > 0 {
+        report.push_str(&format!(
+            "\n{unmeasured} of {} cases unmeasured (p50 == 0 sentinel baselines)",
+            baseline.len()
+        ));
+    }
+    // Not one real comparison happened (every baseline row was a
+    // sentinel, missing from the current run, or the baseline is empty):
+    // the gate must fail loudly, never vacuously pass.
+    if measured == 0 {
+        anyhow::bail!(
+            "{report}\nzero measured baseline comparisons ({unmeasured} unmeasured sentinels, \
+             {} missing/renamed of {} baseline cases) — the gate would vacuously pass; run \
+             `UIVIM_BENCH_FAST=1 cargo bench` and commit the emitted BENCH_*.json as the \
+             measured baseline",
+            baseline.len() - unmeasured,
+            baseline.len()
+        );
+    }
     if regressions.is_empty() {
         Ok(report)
     } else {
@@ -401,6 +433,48 @@ mod tests {
         // within budget passes and reports every case
         let ok = compare_bench_records(&baseline, &current, 0.60).unwrap();
         assert!(ok.contains("unmeasured") && ok.contains("+50.0%"), "{ok}");
+    }
+
+    /// ISSUE #5: sentinel rows get an explicit `unmeasured` verdict and
+    /// the report ends with the `N of M cases unmeasured` count.
+    #[test]
+    fn unmeasured_rows_get_verdict_and_trailing_count() {
+        let baseline = vec![rec("a", 100.0), rec("b", 0.0), rec("c", 0.0)];
+        let current = vec![rec("a", 100.0), rec("b", 9.0), rec("c", 5.0)];
+        let report = compare_bench_records(&baseline, &current, 0.20).unwrap();
+        assert!(report.contains("unmeasured"), "{report}");
+        assert!(report.contains("sentinel (0)"), "{report}");
+        assert!(
+            report.contains("2 of 3 cases unmeasured"),
+            "missing trailing count: {report}"
+        );
+    }
+
+    /// ISSUE #5: a gate run that performs zero real comparisons must
+    /// fail — previously an all-sentinel baseline vacuously passed.
+    #[test]
+    fn zero_measured_comparisons_fail_the_gate() {
+        // all sentinels
+        let baseline = vec![rec("a", 0.0), rec("b", 0.0)];
+        let current = vec![rec("a", 10.0), rec("b", 20.0)];
+        let err = compare_bench_records(&baseline, &current, 0.20).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("zero measured baseline comparisons"), "{msg}");
+        assert!(msg.contains("2 unmeasured sentinels"), "{msg}");
+        assert!(msg.contains("2 of 2 cases unmeasured"), "{msg}");
+        // measured rows all renamed away + a sentinel: still zero
+        // comparisons, still a failure (the renamed-case hole)
+        let renamed = vec![rec("old_name", 100.0), rec("b", 0.0)];
+        let err = compare_bench_records(&renamed, &current, 0.20).unwrap_err();
+        assert!(
+            err.to_string().contains("zero measured baseline comparisons"),
+            "{err}"
+        );
+        // empty baseline: nothing compared, fail
+        assert!(compare_bench_records(&[], &current, 0.20).is_err());
+        // one measured comparison is enough to disarm the guard
+        let mixed = vec![rec("a", 10.0), rec("b", 0.0)];
+        assert!(compare_bench_records(&mixed, &current, 0.20).is_ok());
     }
 
     /// The armed CI gate end to end at the file level (exactly what

@@ -100,15 +100,8 @@ fn eval_engine(
 
     let noisy = synth_dataset(256, &man.bvalues, 5.0, seed + 1);
     let clean = synth_dataset(256, &man.bvalues, 50.0, seed + 1);
-    let unc = |outs: &[crate::infer::InferOutput]| {
-        Param::ALL
-            .iter()
-            .map(|&p| metrics::mean_relative_uncertainty(outs, p))
-            .sum::<f64>()
-            / 4.0
-    };
-    let unc_noisy = unc(&run_batches(engine, &noisy)?);
-    let unc_clean = unc(&run_batches(engine, &clean)?);
+    let unc_noisy = metrics::mean_relative_uncertainty_all(&run_batches(engine, &noisy)?, noisy.len());
+    let unc_clean = metrics::mean_relative_uncertainty_all(&run_batches(engine, &clean)?, clean.len());
 
     // repeatability: identical input twice
     let a = run_batches(engine, &ref_ds)?;

@@ -49,9 +49,12 @@ impl Default for SweepConfig {
     }
 }
 
-/// Run one dataset through an engine in engine-sized batches (tail
-/// padded by repeating the last voxel; padded rows are ignored because
-/// metrics only read the first `ds.len()` voxels).
+/// Run one dataset through an engine in engine-sized batches.  The tail
+/// batch is **zero-filled** up to the engine batch — the same padding
+/// contract as `coordinator::Batcher` (PR 2): zeros make any padding
+/// leak deterministic and obvious instead of a silent copy of a
+/// neighbouring voxel.  Padded rows never reach the metrics, which read
+/// only the first `ds.len()` voxels.
 pub fn run_batches(engine: &mut dyn Engine, ds: &Dataset) -> anyhow::Result<Vec<InferOutput>> {
     let b = engine.batch_size();
     let nb = ds.nb;
@@ -63,10 +66,7 @@ pub fn run_batches(engine: &mut dyn Engine, ds: &Dataset) -> anyhow::Result<Vec<
         for v in 0..take {
             signals.extend_from_slice(ds.voxel(i + v));
         }
-        let last = ds.voxel(i + take - 1);
-        for _ in take..b {
-            signals.extend_from_slice(last);
-        }
+        signals.resize(b * nb, 0.0);
         outs.push(engine.infer_batch(&signals)?);
         i += take;
     }
@@ -89,7 +89,7 @@ pub fn snr_sweep(
         let mut cal = [0.0; 4];
         for p in Param::ALL {
             rmse[p.index()] = metrics::rmse_by_param(&outs, &ds, p);
-            unc[p.index()] = metrics::mean_relative_uncertainty(&outs, p);
+            unc[p.index()] = metrics::mean_relative_uncertainty(&outs, p, ds.len());
             cal[p.index()] = metrics::calibration(&outs, &ds, p);
         }
         rows.push(SnrRow {
@@ -234,6 +234,72 @@ mod tests {
             mean_unc(clean),
             mean_unc(noisy)
         );
+    }
+
+    /// Padding regression (ISSUE #5): the zero-filled tail batch must be
+    /// invisible to RMSE, uncertainty AND calibration — the same dataset
+    /// run with a batch size that divides it exactly (no padding at all)
+    /// yields bit-identical metrics.  Per-voxel inference is independent
+    /// of batch composition, so any difference is a padding leak.
+    #[test]
+    fn tail_padding_never_leaks_into_metrics() {
+        use crate::testing::fixture;
+        let (man, w) = fixture::tiny_fixture();
+        // NOT a multiple of the engine batch -> the tail is padded
+        let n = man.batch_infer * 2 + man.batch_infer / 2 + 1;
+        let ds = synth_dataset(n, &man.bvalues, 20.0, 77);
+        let mut padded = registry::build("native", &man, &w, &EngineOpts::default()).unwrap();
+        let outs_padded = run_batches(padded.as_mut(), &ds).unwrap();
+        assert!(outs_padded.len() > 2, "tail batch must exist");
+        let exact_opts = EngineOpts {
+            batch: Some(n),
+            ..Default::default()
+        };
+        let mut exact = registry::build("native", &man, &w, &exact_opts).unwrap();
+        let outs_exact = run_batches(exact.as_mut(), &ds).unwrap();
+        assert_eq!(outs_exact.len(), 1, "exact run needs no padding");
+        for p in Param::ALL {
+            assert_eq!(
+                metrics::rmse_by_param(&outs_padded, &ds, p),
+                metrics::rmse_by_param(&outs_exact, &ds, p),
+                "padding leaked into RMSE for {p:?}"
+            );
+            assert_eq!(
+                metrics::mean_relative_uncertainty(&outs_padded, p, ds.len()),
+                metrics::mean_relative_uncertainty(&outs_exact, p, ds.len()),
+                "padding leaked into uncertainty for {p:?}"
+            );
+            assert_eq!(
+                metrics::calibration(&outs_padded, &ds, p),
+                metrics::calibration(&outs_exact, &ds, p),
+                "padding leaked into calibration for {p:?}"
+            );
+        }
+    }
+
+    /// ISSUE #5 acceptance: the fig67 sweep runs end to end on the
+    /// `accel-mc` engine (fixed-point MC sampling over the simulator's
+    /// hot mask swap), padding included.
+    #[test]
+    fn snr_sweep_runs_on_accel_mc() {
+        use crate::testing::fixture;
+        let (man, w) = fixture::tiny_fixture();
+        let cfg = SweepConfig {
+            n_voxels: man.batch_infer + 3, // forces a padded tail batch
+            snrs: vec![5.0, 50.0],
+            engine: "accel-mc".into(),
+            seed: 9,
+        };
+        let rows = snr_sweep(&man, &w, &cfg).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            for p in Param::ALL {
+                assert!(r.rmse[p.index()].is_finite());
+                assert!(r.uncertainty[p.index()].is_finite());
+            }
+        }
+        // random masks per pass must induce spread somewhere
+        assert!(rows.iter().any(|r| r.uncertainty.iter().any(|&u| u > 0.0)));
     }
 
     #[test]

@@ -35,16 +35,30 @@ pub fn fig8(
     Ok((points, model_ok))
 }
 
-/// Render the Fig. 8 table + plot.
+/// Render the Fig. 8 table + plot.  Rows from `dse::sweep_grid` carry a
+/// mask keep rate; the column is shown whenever any row has one.
 pub fn render(points: &[DsePoint], model_ok: &[bool]) -> String {
     use crate::metrics::report::{ascii_plot, Table};
-    let mut t = Table::new(&[
-        "PEs", "DSP%", "BRAM%", "LUT%", "IO%", "power (W)", "ms/batch", "kvox/s", "fits",
+    let with_masks = points.iter().any(|p| p.keep_prob.is_some());
+    let mut headers = vec!["PEs"];
+    if with_masks {
+        headers.push("keep");
+    }
+    headers.extend([
+        "DSP%", "BRAM%", "LUT%", "IO%", "power (W)", "ms/batch", "kvox/s", "fits",
         "eq2==sim",
     ]);
+    let mut t = Table::new(&headers);
     for (p, ok) in points.iter().zip(model_ok) {
-        t.row(&[
-            p.n_pe.to_string(),
+        let mut cells = vec![p.n_pe.to_string()];
+        if with_masks {
+            cells.push(
+                p.keep_prob
+                    .map(|k| format!("{k:.2}"))
+                    .unwrap_or_else(|| "manifest".into()),
+            );
+        }
+        cells.extend([
             format!("{:.1}", p.usage.dsp_pct()),
             format!("{:.1}", p.usage.bram_pct()),
             format!("{:.1}", p.usage.lut_pct()),
@@ -55,6 +69,45 @@ pub fn render(points: &[DsePoint], model_ok: &[bool]) -> String {
             p.fits.to_string(),
             ok.to_string(),
         ]);
+        t.row(&cells);
+    }
+    if with_masks {
+        // Grid rows repeat every PE count once per keep rate: plot one
+        // speed series per rate (all rates share the PE axis) instead of
+        // conflating them into one zig-zag curve.
+        let mut rates: Vec<f64> = Vec::new();
+        for p in points {
+            if let Some(k) = p.keep_prob {
+                if !rates.iter().any(|r| (r - k).abs() < 1e-12) {
+                    rates.push(k);
+                }
+            }
+        }
+        let xs: Vec<f64> = points
+            .iter()
+            .filter(|p| p.keep_prob == Some(rates[0]))
+            .map(|p| p.n_pe as f64)
+            .collect();
+        let labels: Vec<String> = rates.iter().map(|k| format!("kvox/s keep={k:.2}")).collect();
+        let series: Vec<(&str, Vec<f64>)> = rates
+            .iter()
+            .zip(&labels)
+            .map(|(&k, label)| {
+                (
+                    label.as_str(),
+                    points
+                        .iter()
+                        .filter(|p| p.keep_prob == Some(k))
+                        .map(|p| p.voxels_per_s / 1e3)
+                        .collect(),
+                )
+            })
+            .collect();
+        return format!(
+            "{}\n{}",
+            t.to_text(),
+            ascii_plot("Fig. 8 — speed vs PE count per mask keep rate", &xs, &series, 10)
+        );
     }
     let xs: Vec<f64> = points.iter().map(|p| p.n_pe as f64).collect();
     let speed: Vec<f64> = points.iter().map(|p| p.voxels_per_s / 1e3).collect();
@@ -76,6 +129,33 @@ pub fn render(points: &[DsePoint], model_ok: &[bool]) -> String {
 mod tests {
     use super::*;
     use crate::experiments::load_manifest;
+
+    /// Grid rows (PE × keep rate, one reused simulator) render with the
+    /// keep column; manifest-mask sweeps keep the paper's plain layout.
+    #[test]
+    fn render_shows_keep_column_for_grid_rows() {
+        use crate::accel::dse;
+        use crate::ivim::synth::synth_dataset;
+        let (man, w) = crate::testing::fixture::tiny_fixture();
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 13);
+        let rows = dse::sweep_grid(
+            &man,
+            &w,
+            &[8, 16],
+            &[0.9, 0.3],
+            Scheme::BatchLevel,
+            &ds.signals,
+            3,
+        )
+        .unwrap();
+        let ok = vec![true; rows.len()];
+        let s = render(&rows, &ok);
+        assert!(s.contains("keep") && s.contains("0.90") && s.contains("0.30"), "{s}");
+        // one plotted speed series per keep rate, never a conflated curve
+        assert!(s.contains("keep=0.90") && s.contains("keep=0.30"), "{s}");
+        let plain = dse::sweep(&man, &w, &[8], Scheme::BatchLevel, &ds.signals).unwrap();
+        assert!(!render(&plain, &[true]).contains("keep"));
+    }
 
     #[test]
     fn fig8_model_check_and_shapes() {

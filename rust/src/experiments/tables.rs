@@ -11,7 +11,7 @@
 //!   calibrated power model.
 //! * Prior-work rows of Table I are constants quoted from the paper.
 
-use crate::accel::power::estimate;
+use crate::accel::power::{estimate, MaskSampler};
 use crate::accel::resource::usage;
 use crate::accel::{AccelConfig, AccelSimulator, Scheme};
 use crate::bench::{bench, BenchConfig};
@@ -99,7 +99,7 @@ pub fn table2(
     let (_, stats) = sim.infer_batch_stats(&ds.signals)?;
     let fpga_ms = stats.seconds(cfg.clock_hz) * 1e3;
     let u = usage(&cfg, man.nb, man.n_samples, &sim.weight_stores());
-    let p = estimate(&cfg, &u, &stats, false);
+    let p = estimate(&cfg, &u, &stats, MaskSampler::Offline);
 
     let mk = |platform: &str, ms: f64, w: f64, derived: bool| PlatformRow {
         platform: platform.to_string(),
@@ -172,7 +172,7 @@ pub fn table1(man: &Manifest, weights: &Weights) -> anyhow::Result<Vec<Efficienc
     let mut sim = AccelSimulator::new(man, weights, cfg, Scheme::BatchLevel)?;
     let (_, stats) = sim.infer_batch_stats(&ds.signals)?;
     let u = usage(&cfg, man.nb, man.n_samples, &sim.weight_stores());
-    let p = estimate(&cfg, &u, &stats, false);
+    let p = estimate(&cfg, &u, &stats, MaskSampler::Offline);
     let secs = stats.seconds(cfg.clock_hz);
     let gops = (2.0 * stats.macs as f64) / secs / 1e9; // MAC = 2 ops
     let ours_eff = gops / p.watts;

@@ -224,11 +224,7 @@ pub fn quick_uncertainty(
         &crate::infer::registry::EngineOpts::default(),
     )?;
     let outs = run_batches(eng.as_mut(), &ds)?;
-    Ok(Param::ALL
-        .iter()
-        .map(|&p| crate::metrics::mean_relative_uncertainty(&outs, p))
-        .sum::<f64>()
-        / 4.0)
+    Ok(crate::metrics::mean_relative_uncertainty_all(&outs, ds.len()))
 }
 
 #[cfg(test)]

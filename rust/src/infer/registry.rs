@@ -14,6 +14,8 @@
 //! |--------------|------------------------------------------------|
 //! | `native`     | [`crate::infer::native::NativeEngine`]         |
 //! | `accel`      | [`crate::accel::AccelSimulator`] (batch-level) |
+//! | `accel-mc`   | [`crate::bayes::AccelMcDropout`] (random masks |
+//! |              | per pass over the Q4.12 simulator's mask swap) |
 //! | `mc-dropout` | [`crate::bayes::McDropout`]                    |
 //! | `ensemble`   | [`crate::bayes::DeepEnsemble`]                 |
 //! | `pjrt`       | `runtime::InferExecutable` (needs the `pjrt`   |
@@ -99,6 +101,13 @@ impl Registry {
                     ..Default::default()
                 },
                 crate::accel::Scheme::BatchLevel,
+            )?))
+        })
+        .expect("builtin name");
+        r.register("accel-mc", |man: &Manifest, weights: &Weights, opts: &EngineOpts| {
+            let batch = opts.batch.unwrap_or(man.batch_infer);
+            Ok(Box::new(crate::bayes::AccelMcDropout::with_batch(
+                man, weights, batch, opts.seed,
             )?))
         })
         .expect("builtin name");
@@ -255,7 +264,7 @@ pub fn factory(
     default_registry().factory(name, man, weights, opts)
 }
 
-/// `"native|accel|mc-dropout|ensemble|pjrt"` — for CLI help text.
+/// `"native|accel|accel-mc|mc-dropout|ensemble|pjrt"` — for CLI help text.
 pub fn names_help() -> String {
     default_registry().names_help()
 }
@@ -271,10 +280,11 @@ mod tests {
         let r = Registry::builtin();
         assert_eq!(
             r.names(),
-            vec!["native", "accel", "mc-dropout", "ensemble", "pjrt"]
+            vec!["native", "accel", "accel-mc", "mc-dropout", "ensemble", "pjrt"]
         );
         assert!(r.contains("native") && !r.contains("gpu"));
         assert!(names_help().contains("mc-dropout"));
+        assert!(names_help().contains("accel-mc"));
     }
 
     #[test]
@@ -291,7 +301,7 @@ mod tests {
     fn builds_every_non_pjrt_backend_on_the_fixture() {
         let (man, w) = fixture::tiny_fixture();
         let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 23);
-        for name in ["native", "accel", "mc-dropout", "ensemble"] {
+        for name in ["native", "accel", "accel-mc", "mc-dropout", "ensemble"] {
             let mut eng = build(name, &man, &w, &EngineOpts::default()).unwrap();
             assert_eq!(eng.batch_size(), man.batch_infer, "{name}");
             assert!(eng.n_samples() >= 1, "{name}");

@@ -24,7 +24,7 @@ fn cli() -> Cli {
     let engine = || {
         opt(
             "engine",
-            "registry engine (native|accel|mc-dropout|ensemble|pjrt)",
+            "registry engine (native|accel|accel-mc|mc-dropout|ensemble|pjrt)",
             Some("native"),
         )
     };
@@ -294,7 +294,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
             );
             for p in Param::ALL {
                 let rmse = uivim::metrics::rmse_by_param(&outs, &ds, p);
-                let unc = uivim::metrics::mean_relative_uncertainty(&outs, p);
+                let unc = uivim::metrics::mean_relative_uncertainty(&outs, p, ds.len());
                 println!(
                     "  {:<6} rmse {:.6}  rel-uncertainty {:.4}",
                     p.name(),
@@ -441,7 +441,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
                     man.n_samples,
                     &sim.weight_stores(),
                 );
-                let p = uivim::accel::power::estimate(&cfg, &u, &stats, false);
+                let p = uivim::accel::power::estimate(&cfg, &u, &stats, uivim::accel::MaskSampler::Offline);
                 println!(
                     "{:<16} cycles {:>9}  weight loads {:>6}  words {:>9}  {:.3} ms/batch  {:.2} W  {:.3} mJ/batch",
                     scheme.name(),

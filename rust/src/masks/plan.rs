@@ -252,6 +252,13 @@ impl MaskPlan {
     pub fn keep_prob(&self) -> f64 {
         self.keep_prob
     }
+
+    /// Re-target the Bernoulli keep rate used by subsequent
+    /// [`MaskPlan::resample`] calls (clamped to [0, 1]) — how a DSE
+    /// mask-rate sweep walks the density axis on one live plan.
+    pub fn set_keep_prob(&mut self, p: f64) {
+        self.keep_prob = p.clamp(0.0, 1.0);
+    }
     pub fn subnets(&self) -> &[String] {
         &self.subnets
     }
@@ -450,6 +457,21 @@ mod tests {
         let m = m2.mask("d", 1).unwrap();
         assert!(m.bits.iter().all(|&b| b == 1));
         assert_eq!((m.n, m.width), (2, man.nb));
+    }
+
+    #[test]
+    fn set_keep_prob_retargets_resample_density() {
+        let (man, _) = fixture::paper_fixture(); // nb = 104: enough columns
+        let mut rng = Pcg32::new(8);
+        let mut p = MaskPlan::bernoulli(&man, 0.9, &mut rng);
+        p.set_keep_prob(0.2);
+        assert_eq!(p.keep_prob(), 0.2);
+        p.resample(&mut rng);
+        let l = p.layer(0, 1);
+        let rate = l.kept(0).len() as f64 / l.width() as f64;
+        assert!(rate < 0.5, "resample did not follow the new rate: {rate}");
+        p.set_keep_prob(7.0); // clamped
+        assert_eq!(p.keep_prob(), 1.0);
     }
 
     #[test]

@@ -61,15 +61,34 @@ pub fn recon_rmse(recons: &[Vec<f32>], n_samples: usize, nb: usize, ds: &Dataset
 }
 
 /// Mean relative uncertainty (std/mean) for one parameter — Fig. 7's
-/// series value at one SNR.
-pub fn mean_relative_uncertainty(outs: &[InferOutput], p: Param) -> f64 {
-    let mut vals = Vec::new();
+/// series value at one SNR.  Only the first `n_voxels` rows across the
+/// batches are read: the tail batch is zero-padded to the engine's batch
+/// size (the `coordinator::Batcher` contract) and padding rows must
+/// never leak into the metric.
+pub fn mean_relative_uncertainty(outs: &[InferOutput], p: Param, n_voxels: usize) -> f64 {
+    let mut vals = Vec::with_capacity(n_voxels);
+    let mut voxel = 0usize;
     for out in outs {
         for v in 0..out.batch {
+            if voxel >= n_voxels {
+                break;
+            }
             vals.push(out.relative_uncertainty(p, v));
+            voxel += 1;
         }
     }
     stats::mean(&vals)
+}
+
+/// [`mean_relative_uncertainty`] averaged over all four IVIM parameters
+/// — the single-scalar form the ablation, co-design flow and e2e tests
+/// score datasets with (one definition, not one closure per caller).
+pub fn mean_relative_uncertainty_all(outs: &[InferOutput], n_voxels: usize) -> f64 {
+    Param::ALL
+        .iter()
+        .map(|&p| mean_relative_uncertainty(outs, p, n_voxels))
+        .sum::<f64>()
+        / Param::ALL.len() as f64
 }
 
 /// Calibration: Pearson correlation between per-voxel |error| and
@@ -158,9 +177,35 @@ mod tests {
     fn uncertainty_scales_with_spread() {
         let tight = fake_out(4, 0.003, 0.0001);
         let wide = fake_out(4, 0.003, 0.001);
-        let ut = mean_relative_uncertainty(&[tight], Param::D);
-        let uw = mean_relative_uncertainty(&[wide], Param::D);
+        let ut = mean_relative_uncertainty(&[tight], Param::D, 4);
+        let uw = mean_relative_uncertainty(&[wide], Param::D, 4);
         assert!(uw > ut * 5.0, "{uw} vs {ut}");
+    }
+
+    #[test]
+    fn uncertainty_all_averages_over_params() {
+        let out = fake_out(2, 0.003, 0.001);
+        let want: f64 = Param::ALL
+            .iter()
+            .map(|&p| mean_relative_uncertainty(&[out.clone()], p, 2))
+            .sum::<f64>()
+            / 4.0;
+        assert!((mean_relative_uncertainty_all(&[out], 2) - want).abs() < 1e-12);
+    }
+
+    /// Padding regression (ISSUE #5): rows beyond `n_voxels` — the
+    /// zero-padded tail of the last batch — must not move the metric.
+    #[test]
+    fn uncertainty_ignores_rows_beyond_n_voxels() {
+        let clean = fake_out(3, 0.003, 0.0001);
+        let mut padded = fake_out(4, 0.003, 0.0001);
+        // row 3 is "padding": give it a wild spread that would dominate
+        padded.set(Param::D, 0, 3, 0.0001);
+        padded.set(Param::D, 1, 3, 0.006);
+        assert_eq!(
+            mean_relative_uncertainty(&[padded], Param::D, 3),
+            mean_relative_uncertainty(&[clean], Param::D, 3),
+        );
     }
 
     #[test]

@@ -118,8 +118,8 @@ fn batch_level_scheme_cuts_energy_not_accuracy() {
     }
     // energy: batch-level strictly cheaper via the power model
     let u = uivim::accel::resource::usage(&cfg, man.nb, man.n_samples, &b.weight_stores());
-    let pb = uivim::accel::power::estimate(&cfg, &u, &st_b, false);
-    let ps = uivim::accel::power::estimate(&cfg, &u, &st_s, false);
+    let pb = uivim::accel::power::estimate(&cfg, &u, &st_b, uivim::accel::MaskSampler::Offline);
+    let ps = uivim::accel::power::estimate(&cfg, &u, &st_s, uivim::accel::MaskSampler::Offline);
     assert!(
         pb.energy_j < ps.energy_j,
         "batch-level must cost less energy: {} vs {}",

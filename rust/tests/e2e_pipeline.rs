@@ -145,14 +145,8 @@ fn uncertainty_is_calibrated_after_training() {
     let clean = synth_dataset(512, &man.bvalues, 50.0, 66);
     let o_noisy = uivim::experiments::fig67::run_batches(&mut eng, &noisy).unwrap();
     let o_clean = uivim::experiments::fig67::run_batches(&mut eng, &clean).unwrap();
-    let unc = |outs: &[uivim::infer::InferOutput]| {
-        Param::ALL
-            .iter()
-            .map(|&p| uivim::metrics::mean_relative_uncertainty(outs, p))
-            .sum::<f64>()
-    };
-    let u_noisy = unc(&o_noisy);
-    let u_clean = unc(&o_clean);
+    let u_noisy = uivim::metrics::mean_relative_uncertainty_all(&o_noisy, noisy.len());
+    let u_clean = uivim::metrics::mean_relative_uncertainty_all(&o_clean, clean.len());
     assert!(
         u_clean < u_noisy,
         "uncertainty must shrink with less noise: {u_clean} vs {u_noisy}"
