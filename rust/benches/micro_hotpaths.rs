@@ -182,6 +182,122 @@ fn accel_mask_swap_vs_rebuild(
     speedup
 }
 
+/// f32 dot-kernel dispatch vs the scalar oracle at paper width (the SIMD
+/// tentpole): `kernels::dot_one(Exact, ..)` — the SSE2 kernel under the
+/// `simd` feature, the scalar chain otherwise — against `dot_one_scalar`
+/// called directly.  64 dots per iteration so the timer resolves the
+/// sub-microsecond kernel.  Bit-equality is asserted before timing:
+/// Exact mode's contract is that dispatch never changes a single bit.
+fn dot_one_dispatch_vs_scalar(
+    cfg: &uivim::bench::BenchConfig,
+    results: &mut Vec<uivim::bench::BenchResult>,
+) -> f64 {
+    use uivim::infer::kernels::{backend, dot_one, dot_one_scalar, DotMode};
+    let nb = 104usize;
+    let mut rng = Pcg32::new(77);
+    let x: Vec<f32> = (0..nb).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    let ws: Vec<Vec<f32>> = (0..64)
+        .map(|_| (0..nb).map(|_| rng.uniform(-0.4, 0.4) as f32).collect())
+        .collect();
+
+    for w in &ws {
+        assert_eq!(
+            dot_one(DotMode::Exact, nb, &x, w).to_bits(),
+            dot_one_scalar(nb, &x, w).to_bits(),
+            "Exact dispatch diverged from the scalar oracle"
+        );
+    }
+
+    let r_dispatch = bench("dot_one_dispatch_104_x64", cfg, || {
+        let mut s = 0.0f32;
+        for w in &ws {
+            s += dot_one(DotMode::Exact, nb, &x, w);
+        }
+        black_box(s);
+    });
+    let r_scalar = bench("dot_one_scalar_104_x64", cfg, || {
+        let mut s = 0.0f32;
+        for w in &ws {
+            s += dot_one_scalar(nb, &x, w);
+        }
+        black_box(s);
+    });
+
+    let speedup = r_scalar.mean_s / r_dispatch.mean_s;
+    println!(
+        "f32 dot dispatch ({:?}) vs scalar oracle @ nb=104: {speedup:.2}x \
+         ({:.2} us -> {:.2} us per 64 dots)",
+        backend(DotMode::Exact),
+        r_scalar.mean_us(),
+        r_dispatch.mean_us()
+    );
+    results.push(r_scalar);
+    results.push(r_dispatch);
+    speedup
+}
+
+/// Fixed-point chunk-MAC dispatch vs the scalar adder tree at paper
+/// width: `Pu::dot_acc` (the AVX2 kernel under the `simd` feature on a
+/// capable CPU, the scalar tree otherwise) against `pu_dot_acc_into` on
+/// a reused scratch.  Both sides are allocation-free in steady state,
+/// so this isolates the SIMD gain from the alloc-lift bugfix (which
+/// `pu_dot_104` vs these cases captures).  Integer accumulation reorders
+/// exactly, so bit-equality is asserted before timing.
+fn fx_dot_dispatch_vs_scalar(
+    cfg: &uivim::bench::BenchConfig,
+    results: &mut Vec<uivim::bench::BenchResult>,
+) -> f64 {
+    use uivim::accel::pu::{pu_dot_acc_into, Pu};
+    let n = 104usize;
+    let mut rng = Pcg32::new(78);
+    let x: Vec<Fx> = (0..n)
+        .map(|_| Fx::from_f32(rng.uniform(-2.0, 2.0) as f32))
+        .collect();
+    let ws: Vec<Vec<Fx>> = (0..64)
+        .map(|_| {
+            (0..n)
+                .map(|_| Fx::from_f32(rng.uniform(-0.5, 0.5) as f32))
+                .collect()
+        })
+        .collect();
+
+    let mut pu = Pu::new(PuConfig::default());
+    let pcfg = *pu.config();
+    let mut scratch = vec![0i64; pcfg.lanes];
+    for w in &ws {
+        let got = pu.dot_acc(&x, w);
+        let want = pu_dot_acc_into(&pcfg, &mut scratch, &x, w);
+        assert_eq!(got, want, "fixed-point dispatch diverged from the scalar tree");
+    }
+
+    let r_dispatch = bench("fx_dot_acc_dispatch_104_x64", cfg, || {
+        let mut s = 0i64;
+        for w in &ws {
+            s = s.wrapping_add(pu.dot_acc(&x, w));
+        }
+        black_box(s);
+    });
+    let r_scalar = bench("fx_dot_acc_scalar_104_x64", cfg, || {
+        let mut s = 0i64;
+        for w in &ws {
+            s = s.wrapping_add(pu_dot_acc_into(&pcfg, &mut scratch, &x, w));
+        }
+        black_box(s);
+    });
+
+    let speedup = r_scalar.mean_s / r_dispatch.mean_s;
+    println!(
+        "fixed-point chunk-MAC dispatch ({}) vs scalar tree @ n=104: {speedup:.2}x \
+         ({:.2} us -> {:.2} us per 64 dots)",
+        Pu::new(pcfg).backend(),
+        r_scalar.mean_us(),
+        r_dispatch.mean_us()
+    );
+    results.push(r_scalar);
+    results.push(r_dispatch);
+    speedup
+}
+
 fn main() {
     let cfg = config_from_env();
     let mut results = Vec::new();
@@ -189,6 +305,8 @@ fn main() {
     let blocked_speedup = masked_linear_blocked_vs_scalar(&cfg, &mut results);
     let swap_speedup = mask_swap_vs_fresh_rebuild(&cfg, &mut results);
     let accel_swap_speedup = accel_mask_swap_vs_rebuild(&cfg, &mut results);
+    let simd_speedup = dot_one_dispatch_vs_scalar(&cfg, &mut results);
+    let fx_simd_speedup = fx_dot_dispatch_vs_scalar(&cfg, &mut results);
 
     // fixed-point multiply-accumulate chain
     let xs: Vec<Fx> = (0..1024).map(|i| Fx::from_f32((i % 13) as f32 * 0.01)).collect();
@@ -323,6 +441,18 @@ fn main() {
         p50_us: 0.0,
         p99_us: 0.0,
         throughput: accel_swap_speedup,
+    });
+    records.push(BenchRecord {
+        name: "simd_vs_scalar_speedup".into(),
+        p50_us: 0.0,
+        p99_us: 0.0,
+        throughput: simd_speedup,
+    });
+    records.push(BenchRecord {
+        name: "fx_simd_vs_scalar_speedup".into(),
+        p50_us: 0.0,
+        p99_us: 0.0,
+        throughput: fx_simd_speedup,
     });
     match write_bench_json("micro_hotpaths", &records) {
         Ok(p) => println!("wrote {}", p.display()),

@@ -18,7 +18,11 @@ pub const MAX_RAW: i16 = i16::MAX;
 pub const MIN_RAW: i16 = i16::MIN;
 
 /// A Q4.12 fixed-point number.
+///
+/// `repr(transparent)` over the raw `i16` so `&[Fx]` can be viewed as
+/// `&[i16]` ([`raw_slice`]) for the SIMD chunk-MAC without copying.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+#[repr(transparent)]
 pub struct Fx(pub i16);
 
 #[inline]
@@ -109,6 +113,14 @@ pub fn sat_from_acc(acc: i64) -> Fx {
     }
 }
 
+/// View a slice of Q4.12 values as their raw `i16` bits, zero-copy.
+#[inline]
+pub fn raw_slice(xs: &[Fx]) -> &[i16] {
+    // SAFETY: Fx is repr(transparent) over i16 — same size, alignment
+    // and validity; the lifetime is inherited from the input borrow.
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const i16, xs.len()) }
+}
+
 /// Quantise a whole f32 slice.
 pub fn quantize_slice(xs: &[f32]) -> Vec<Fx> {
     xs.iter().map(|&v| Fx::from_f32(v)).collect()
@@ -196,6 +208,17 @@ mod tests {
                 x <= y
             },
         );
+    }
+
+    #[test]
+    fn raw_slice_is_a_transparent_view() {
+        let xs = vec![Fx(0), Fx(1), Fx(-1), Fx(MAX_RAW), Fx(MIN_RAW)];
+        let raw = raw_slice(&xs);
+        assert_eq!(raw.len(), xs.len());
+        for (f, r) in xs.iter().zip(raw) {
+            assert_eq!(f.0, *r);
+        }
+        assert!(raw_slice(&[]).is_empty());
     }
 
     #[test]

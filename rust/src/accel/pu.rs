@@ -16,6 +16,26 @@
 //!
 //! i.e. multiplier fill + tree fill + one extra tree level's register for
 //! the accumulator + the serial accumulation of `ceil(Nb/lanes)` chunks.
+//!
+//! ## Functional evaluation: `Pu` state vs free-function oracle
+//!
+//! The hot path is [`Pu`]: it owns the chunk scratch once, so the
+//! innermost loop of `accel/sim.rs` performs **zero heap allocations**
+//! in steady state (the crate-wide contract; previously every dot
+//! product allocated a `vec![0i64; lanes]`).  When the `simd` feature is
+//! on and the CPU has AVX2, [`Pu::dot_acc`] dispatches the vectorised
+//! chunk-MAC from [`crate::util::simd`] — **bit-exact** with the scalar
+//! adder tree, because i64 addition is associative and commutative so
+//! any summation order yields identical bits, and no overflow is
+//! reachable (|product| ≤ 2^30; exceeding i64 would need > 2^33 terms).
+//!
+//! The free functions [`pu_dot_acc`] / [`pu_dot`] remain as the
+//! allocating scalar **oracles** the dispatch is golden-tested against.
+//!
+//! Length contract: `x` and `w` must be equal length — enforced by a
+//! hard `assert!` on every path.  (It used to be a `debug_assert!`,
+//! which vanished in release builds and let mismatched slices silently
+//! zip-truncate into a wrong dot product.)
 
 use super::fixed::{sat_from_acc, Fx};
 
@@ -62,15 +82,32 @@ impl PuConfig {
     }
 }
 
-/// Raw PU accumulation: fixed-point dot product in adder-tree order,
-/// returned as the wide Q8.24 accumulator (callers add bias / apply
-/// shifts before saturating).  Bit-exact with the hardware datapath.
-pub fn pu_dot_acc(cfg: &PuConfig, x: &[Fx], w: &[Fx]) -> i64 {
-    debug_assert_eq!(x.len(), w.len());
+#[inline]
+fn assert_same_len(x: &[Fx], w: &[Fx]) {
+    assert_eq!(
+        x.len(),
+        w.len(),
+        "PU dot: input length {} != weight length {} (a mismatch would silently zip-truncate)",
+        x.len(),
+        w.len()
+    );
+}
+
+/// Scalar adder-tree accumulation over caller-supplied chunk scratch
+/// (`scratch.len() == cfg.lanes`) — the allocation-free body shared by
+/// the [`Pu`] scalar path and the [`pu_dot_acc`] oracle.
+pub fn pu_dot_acc_into(cfg: &PuConfig, scratch: &mut [i64], x: &[Fx], w: &[Fx]) -> i64 {
+    assert_same_len(x, w);
+    assert_eq!(
+        scratch.len(),
+        cfg.lanes,
+        "PU dot: scratch sized for {} lanes, config has {}",
+        scratch.len(),
+        cfg.lanes
+    );
     let mut acc: i64 = 0;
-    let mut chunk_prods = vec![0i64; cfg.lanes];
     for (xc, wc) in x.chunks(cfg.lanes).zip(w.chunks(cfg.lanes)) {
-        for (i, slot) in chunk_prods.iter_mut().enumerate() {
+        for (i, slot) in scratch.iter_mut().enumerate() {
             *slot = if i < xc.len() {
                 xc[i].mul_raw(wc[i]) as i64
             } else {
@@ -81,19 +118,26 @@ pub fn pu_dot_acc(cfg: &PuConfig, x: &[Fx], w: &[Fx]) -> i64 {
         while width > 1 {
             let half = width.div_ceil(2);
             for i in 0..half {
-                let a = chunk_prods[2 * i];
-                let b = if 2 * i + 1 < width {
-                    chunk_prods[2 * i + 1]
-                } else {
-                    0
-                };
-                chunk_prods[i] = a + b;
+                let a = scratch[2 * i];
+                let b = if 2 * i + 1 < width { scratch[2 * i + 1] } else { 0 };
+                scratch[i] = a + b;
             }
             width = half;
         }
-        acc += chunk_prods[0];
+        acc += scratch[0];
     }
     acc
+}
+
+/// Raw PU accumulation: fixed-point dot product in adder-tree order,
+/// returned as the wide Q8.24 accumulator (callers add bias / apply
+/// shifts before saturating).  Bit-exact with the hardware datapath.
+///
+/// This is the allocating scalar **oracle** — it builds its chunk
+/// scratch per call.  Hot paths hold a [`Pu`] instead.
+pub fn pu_dot_acc(cfg: &PuConfig, x: &[Fx], w: &[Fx]) -> i64 {
+    let mut scratch = vec![0i64; cfg.lanes];
+    pu_dot_acc_into(cfg, &mut scratch, x, w)
 }
 
 /// Functional PU evaluation: fixed-point dot product + bias, computed in
@@ -108,9 +152,67 @@ pub fn pu_dot(cfg: &PuConfig, x: &[Fx], w: &[Fx], bias: Fx) -> Fx {
     sat_from_acc(acc)
 }
 
+/// Reusable PU evaluation state: the configuration plus the chunk
+/// scratch, allocated once.  Thread one `Pu` through a simulation loop
+/// and every dot product is allocation-free; with the `simd` feature on
+/// an AVX2 CPU the scratch is bypassed entirely in favour of the
+/// vectorised chunk-MAC (bit-exact — see the module docs).
+#[derive(Debug, Clone)]
+pub struct Pu {
+    cfg: PuConfig,
+    scratch: Vec<i64>,
+}
+
+impl Pu {
+    pub fn new(cfg: PuConfig) -> Pu {
+        Pu {
+            cfg,
+            scratch: vec![0i64; cfg.lanes],
+        }
+    }
+
+    pub fn config(&self) -> &PuConfig {
+        &self.cfg
+    }
+
+    /// Kernel this instance dispatches (`"avx2"` or `"scalar"`), for
+    /// the runtime-dispatch tests and bench labels.
+    pub fn backend(&self) -> &'static str {
+        if crate::util::simd::avx2_available() {
+            "avx2"
+        } else {
+            "scalar"
+        }
+    }
+
+    /// Raw accumulation — semantics of [`pu_dot_acc`], zero allocation.
+    pub fn dot_acc(&mut self, x: &[Fx], w: &[Fx]) -> i64 {
+        assert_same_len(x, w);
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        if crate::util::simd::avx2_available() {
+            use super::fixed::raw_slice;
+            return crate::util::simd::fx_dot_acc(raw_slice(x), raw_slice(w));
+        }
+        pu_dot_acc_into(&self.cfg, &mut self.scratch, x, w)
+    }
+
+    /// Dot product + bias — semantics of [`pu_dot`], zero allocation.
+    pub fn dot(&mut self, x: &[Fx], w: &[Fx], bias: Fx) -> Fx {
+        let acc = self.dot_acc(x, w) + ((bias.0 as i64) << super::fixed::FRAC_BITS);
+        sat_from_acc(acc)
+    }
+
+    /// Scratch capacity — the no-allocation witness for the
+    /// alloc-signature stability tests.
+    pub fn alloc_signature(&self) -> usize {
+        self.scratch.capacity()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::accel::fixed::{MAX_RAW, MIN_RAW};
 
     fn fx(v: f32) -> Fx {
         Fx::from_f32(v)
@@ -150,6 +252,8 @@ mod tests {
         // 0.5 + 0.5 - 1.5 - 1.0 = -1.5; bias 0.25 -> -1.25
         let got = pu_dot(&cfg, &x, &w, fx(0.25));
         assert_eq!(got.to_f32(), -1.25);
+        // the reusable state agrees
+        assert_eq!(Pu::new(cfg).dot(&x, &w, fx(0.25)), got);
     }
 
     #[test]
@@ -173,7 +277,7 @@ mod tests {
         let x = vec![fx(7.9); 4];
         let w = vec![fx(7.9); 4];
         let got = pu_dot(&cfg, &x, &w, Fx::ZERO);
-        assert_eq!(got, Fx(super::super::fixed::MAX_RAW));
+        assert_eq!(got, Fx(MAX_RAW));
     }
 
     #[test]
@@ -200,5 +304,109 @@ mod tests {
             let tol = Fx::epsilon() * (n as f32 * 0.5 + 1.0);
             assert!((got - want).abs() <= tol, "{got} vs {want} (n={n})");
         }
+    }
+
+    /// The dispatched `Pu` path (scalar-with-scratch, or AVX2 under the
+    /// `simd` feature) must be bit-exact with the allocating scalar
+    /// oracle — across lane counts, remainder tails, the empty input and
+    /// full-range raw values including `i16::MIN` extremes.
+    #[test]
+    fn pu_state_matches_oracle_bit_exact() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::new(44);
+        for lanes in [1usize, 2, 4, 16, 128] {
+            let cfg = PuConfig {
+                lanes,
+                ..Default::default()
+            };
+            let mut pu = Pu::new(cfg);
+            for n in [0usize, 1, 3, 7, 8, 9, 104, 300] {
+                let x: Vec<Fx> = (0..n)
+                    .map(|_| Fx(rng.below(1 << 16) as u16 as i16))
+                    .collect();
+                let w: Vec<Fx> = (0..n)
+                    .map(|_| Fx(rng.below(1 << 16) as u16 as i16))
+                    .collect();
+                assert_eq!(
+                    pu.dot_acc(&x, &w),
+                    pu_dot_acc(&cfg, &x, &w),
+                    "lanes={lanes} n={n}"
+                );
+            }
+        }
+        // saturation extremes: every product is (-32768)^2 = 2^30
+        let cfg = PuConfig {
+            lanes: 8,
+            ..Default::default()
+        };
+        let mut pu = Pu::new(cfg);
+        let x = vec![Fx(MIN_RAW); 20];
+        assert_eq!(pu.dot_acc(&x, &x), pu_dot_acc(&cfg, &x, &x));
+        assert_eq!(pu.dot_acc(&x, &x), 20 * (1i64 << 30));
+    }
+
+    /// The bugfix pin: mismatched slice lengths must panic loudly on
+    /// every path — in release builds the old `debug_assert` let them
+    /// zip-truncate into a silently wrong dot product.
+    #[test]
+    fn mismatched_lengths_panic_instead_of_truncating() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let cfg = PuConfig {
+            lanes: 4,
+            ..Default::default()
+        };
+        let x = vec![fx(1.0); 5];
+        let w = vec![fx(1.0); 3];
+        let r = catch_unwind(AssertUnwindSafe(|| pu_dot_acc(&cfg, &x, &w)));
+        assert!(r.is_err(), "oracle must panic on mismatched lengths");
+        let r = catch_unwind(AssertUnwindSafe(|| pu_dot(&cfg, &x, &w, Fx::ZERO)));
+        assert!(r.is_err(), "pu_dot must panic on mismatched lengths");
+        let mut pu = Pu::new(cfg);
+        let r = catch_unwind(AssertUnwindSafe(|| pu.dot_acc(&x, &w)));
+        assert!(r.is_err(), "Pu::dot_acc must panic on mismatched lengths");
+        // and a matched call on the same instance still works after the
+        // unwind (no poisoned state)
+        let mut pu = Pu::new(cfg);
+        assert_eq!(pu.dot_acc(&x[..3], &w), pu_dot_acc(&cfg, &x[..3], &w));
+    }
+
+    /// Steady-state zero-allocation pin: the scratch is sized once at
+    /// construction and never grows, whatever input lengths follow.
+    #[test]
+    fn pu_scratch_capacity_is_stable() {
+        let cfg = PuConfig {
+            lanes: 16,
+            ..Default::default()
+        };
+        let mut pu = Pu::new(cfg);
+        let sig = pu.alloc_signature();
+        assert_eq!(sig, cfg.lanes);
+        let xs: Vec<Fx> = (0..300).map(|i| Fx(i as i16)).collect();
+        for n in [0usize, 5, 16, 33, 200, 300] {
+            for _ in 0..20 {
+                let _ = pu.dot_acc(&xs[..n], &xs[..n]);
+            }
+        }
+        assert_eq!(pu.alloc_signature(), sig, "chunk scratch reallocated");
+    }
+
+    /// Runtime-dispatch pin: without the `simd` feature the Pu must
+    /// report (and use) the scalar backend.
+    #[cfg(not(feature = "simd"))]
+    #[test]
+    fn scalar_fallback_selected_without_simd_feature() {
+        assert_eq!(Pu::new(PuConfig::default()).backend(), "scalar");
+        assert!(!crate::util::simd::avx2_available());
+    }
+
+    #[cfg(feature = "simd")]
+    #[test]
+    fn backend_follows_cpu_detection_with_simd_feature() {
+        let want = if crate::util::simd::avx2_available() {
+            "avx2"
+        } else {
+            "scalar"
+        };
+        assert_eq!(Pu::new(PuConfig::default()).backend(), want);
     }
 }

@@ -31,7 +31,7 @@
 
 use super::fixed::{quantize_slice, Fx};
 use super::memory::WeightStore;
-use super::pu::{pu_dot, PuConfig};
+use super::pu::{Pu, PuConfig};
 use super::resource::AccelConfig;
 use super::schemes::Scheme;
 use crate::infer::{Engine, InferOutput};
@@ -223,7 +223,9 @@ struct QuantSubnet {
 /// while counting cycles.
 pub struct AccelSimulator {
     pub cfg: AccelConfig,
-    pu: PuConfig,
+    /// Reusable PU state (config + chunk scratch) — every dot product in
+    /// the layer loops goes through it, allocation-free.
+    pu: Pu,
     nb: usize,
     n_samples: usize,
     scheme: Scheme,
@@ -263,11 +265,11 @@ impl AccelSimulator {
                 },
             });
         }
-        let pu = PuConfig {
+        let pu = Pu::new(PuConfig {
             lanes: cfg.lanes.min(man.nb.next_power_of_two()),
             r_m: cfg.r_m,
             r_a: cfg.r_a,
-        };
+        });
         let scratch = cfg.batch * man.nb;
         Ok(AccelSimulator {
             cfg,
@@ -290,7 +292,7 @@ impl AccelSimulator {
         self.scheme = s;
     }
     pub fn pu_config(&self) -> &PuConfig {
-        &self.pu
+        self.pu.config()
     }
 
     /// Re-point the PE-count knob without rebuilding the datapath.
@@ -356,7 +358,12 @@ impl AccelSimulator {
     /// stable across `swap_masks`/`execute_into_stats` calls in steady
     /// state (the no-allocation witness).
     pub fn alloc_signature(&self) -> Vec<usize> {
-        let mut sig = vec![self.x0.capacity(), self.h1.capacity(), self.h2.capacity()];
+        let mut sig = vec![
+            self.x0.capacity(),
+            self.h1.capacity(),
+            self.h2.capacity(),
+            self.pu.alloc_signature(),
+        ];
         for sn in &self.subnets {
             sn.l1.alloc_signature(&mut sig);
             sn.l2.alloc_signature(&mut sig);
@@ -381,40 +388,10 @@ impl AccelSimulator {
     /// voxels with the PE array (pipelined; one chunk per cycle per PE).
     fn compute_cycles(&self, kept: usize, batch: usize) -> (u64, u64) {
         let out_groups = kept.div_ceil(self.cfg.n_pe);
-        let chunks = self.pu.chunks(self.nb);
-        let fill = self.pu.latency_cycles(self.nb) as u64;
+        let chunks = self.pu.config().chunks(self.nb);
+        let fill = self.pu.config().latency_cycles(self.nb) as u64;
         let stream = (out_groups * batch * chunks) as u64;
         (fill + stream, stream)
-    }
-
-    /// Evaluate one masked layer for one sample over the whole batch
-    /// (functional), returning activations `[batch][nb]`.
-    fn eval_layer(
-        &self,
-        layer: &QuantLayer,
-        sample: usize,
-        input: &[Fx],
-        batch: usize,
-        out: &mut [Fx],
-    ) -> u64 {
-        let nb = self.nb;
-        out.fill(Fx::ZERO);
-        let mut macs = 0u64;
-        for v in 0..batch {
-            let x = &input[v * layer.nb_in..(v + 1) * layer.nb_in];
-            for &ci in &layer.kept[sample] {
-                let c = &layer.dense[ci as usize];
-                // BN is folded into the stored weights; the accumulator
-                // is barrel-shifted by the column's pre-shift before
-                // saturating back to Q4.12 (see QuantColumn docs).
-                let mut acc = super::pu::pu_dot_acc(&self.pu, x, &c.weights);
-                acc += (c.bias.0 as i64) << super::fixed::FRAC_BITS;
-                acc <<= c.shift_k;
-                out[v * nb + ci as usize] = super::fixed::sat_from_acc(acc).relu();
-                macs += layer.nb_in as u64;
-            }
-        }
-        macs
     }
 
     /// Two-phase hot path: run one batch through the full model under
@@ -436,7 +413,8 @@ impl AccelSimulator {
         );
         out.reset(self.n_samples, batch);
         // Scratch is moved out for the duration of the call so the
-        // per-layer helper can borrow `self` immutably alongside it.
+        // per-layer helper can borrow `self.pu` mutably (and the layers
+        // immutably) alongside it.
         let mut x0 = std::mem::take(&mut self.x0);
         let mut h1 = std::mem::take(&mut self.h1);
         let mut h2 = std::mem::take(&mut self.h2);
@@ -453,13 +431,13 @@ impl AccelSimulator {
         for sn in &self.subnets {
             for s in 0..self.n_samples {
                 // layer 1
-                stats.macs += self.eval_layer(&sn.l1, s, &x0, batch, &mut h1);
+                stats.macs += eval_layer(&mut self.pu, nb, &sn.l1, s, &x0, batch, &mut h1);
                 // layer 2
-                stats.macs += self.eval_layer(&sn.l2, s, &h1, batch, &mut h2);
+                stats.macs += eval_layer(&mut self.pu, nb, &sn.l2, s, &h1, batch, &mut h2);
                 // encoder + PLAN sigmoid
                 for v in 0..batch {
                     let x = &h2[v * nb..(v + 1) * nb];
-                    let logit = pu_dot(&self.pu, x, &sn.enc.w, sn.enc.b);
+                    let logit = self.pu.dot(x, &sn.enc.w, sn.enc.b);
                     let sig = plan_sigmoid(logit);
                     out.set(
                         sn.param,
@@ -534,6 +512,39 @@ impl AccelSimulator {
     pub fn batch_latency_ms(&self, stats: &CycleStats) -> f64 {
         stats.seconds(self.cfg.clock_hz) * 1e3
     }
+}
+
+/// Evaluate one masked layer for one sample over the whole batch
+/// (functional), accumulating into `out` (`[batch][nb]`) and returning
+/// the MAC count.  A free function rather than a method so callers can
+/// borrow the PU state mutably alongside `&self.subnets` — the borrows
+/// are disjoint fields of the simulator.
+fn eval_layer(
+    pu: &mut Pu,
+    nb: usize,
+    layer: &QuantLayer,
+    sample: usize,
+    input: &[Fx],
+    batch: usize,
+    out: &mut [Fx],
+) -> u64 {
+    out.fill(Fx::ZERO);
+    let mut macs = 0u64;
+    for v in 0..batch {
+        let x = &input[v * layer.nb_in..(v + 1) * layer.nb_in];
+        for &ci in &layer.kept[sample] {
+            let c = &layer.dense[ci as usize];
+            // BN is folded into the stored weights; the accumulator
+            // is barrel-shifted by the column's pre-shift before
+            // saturating back to Q4.12 (see QuantColumn docs).
+            let mut acc = pu.dot_acc(x, &c.weights);
+            acc += (c.bias.0 as i64) << super::fixed::FRAC_BITS;
+            acc <<= c.shift_k;
+            out[v * nb + ci as usize] = super::fixed::sat_from_acc(acc).relu();
+            macs += layer.nb_in as u64;
+        }
+    }
+    macs
 }
 
 impl Engine for AccelSimulator {

@@ -2,7 +2,7 @@
 //! eq. (2) analytic-model cross-check the paper reports ("matches the
 //! practical results").
 
-use crate::accel::dse::{sweep, DsePoint};
+use crate::accel::dse::{sweep, sweep_grid, DsePoint};
 use crate::accel::latency::predict_batch_cycles;
 use crate::accel::resource::AccelConfig;
 use crate::accel::Scheme;
@@ -35,21 +35,69 @@ pub fn fig8(
     Ok((points, model_ok))
 }
 
+/// Parse a `--keep-rates` CLI value: comma-separated keep probabilities,
+/// each in (0, 1].  Returns a friendly error naming the offending token.
+pub fn parse_keep_rates(spec: &str) -> anyhow::Result<Vec<f64>> {
+    let mut rates = Vec::new();
+    for tok in spec.split(',') {
+        let tok = tok.trim();
+        let r: f64 = tok
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--keep-rates: '{tok}' is not a number"))?;
+        anyhow::ensure!(
+            r > 0.0 && r <= 1.0,
+            "--keep-rates: {r} outside (0, 1] (a keep rate is the fraction of neurons retained)"
+        );
+        rates.push(r);
+    }
+    anyhow::ensure!(!rates.is_empty(), "--keep-rates: empty list");
+    Ok(rates)
+}
+
+/// The Fig. 8 grid sweep (`--keep-rates`): PE count × mask keep rate on
+/// one reused simulator, mask resampling seeded by `mask_seed`.  The
+/// eq. (2) cross-check is skipped — the analytic model assumes the
+/// manifest's masks, not resampled ones — so the returned rows pair with
+/// an **empty** `model_ok` in [`render`].
+pub fn fig8_grid(
+    man: &Manifest,
+    weights: &Weights,
+    pe_counts: &[usize],
+    keep_rates: &[f64],
+    mask_seed: u64,
+) -> anyhow::Result<Vec<DsePoint>> {
+    let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 31);
+    sweep_grid(
+        man,
+        weights,
+        pe_counts,
+        keep_rates,
+        Scheme::BatchLevel,
+        &ds.signals,
+        mask_seed,
+    )
+}
+
 /// Render the Fig. 8 table + plot.  Rows from `dse::sweep_grid` carry a
-/// mask keep rate; the column is shown whenever any row has one.
+/// mask keep rate; the column is shown whenever any row has one.  An
+/// empty `model_ok` drops the eq. (2) column entirely (grid sweeps don't
+/// run the analytic cross-check).
 pub fn render(points: &[DsePoint], model_ok: &[bool]) -> String {
     use crate::metrics::report::{ascii_plot, Table};
     let with_masks = points.iter().any(|p| p.keep_prob.is_some());
+    let with_model = !model_ok.is_empty();
     let mut headers = vec!["PEs"];
     if with_masks {
         headers.push("keep");
     }
     headers.extend([
         "DSP%", "BRAM%", "LUT%", "IO%", "power (W)", "ms/batch", "kvox/s", "fits",
-        "eq2==sim",
     ]);
+    if with_model {
+        headers.push("eq2==sim");
+    }
     let mut t = Table::new(&headers);
-    for (p, ok) in points.iter().zip(model_ok) {
+    for (i, p) in points.iter().enumerate() {
         let mut cells = vec![p.n_pe.to_string()];
         if with_masks {
             cells.push(
@@ -67,8 +115,10 @@ pub fn render(points: &[DsePoint], model_ok: &[bool]) -> String {
             format!("{:.4}", p.batch_ms),
             format!("{:.1}", p.voxels_per_s / 1e3),
             p.fits.to_string(),
-            ok.to_string(),
         ]);
+        if with_model {
+            cells.push(model_ok.get(i).copied().unwrap_or(false).to_string());
+        }
         t.row(&cells);
     }
     if with_masks {
@@ -155,6 +205,36 @@ mod tests {
         assert!(s.contains("keep=0.90") && s.contains("keep=0.30"), "{s}");
         let plain = dse::sweep(&man, &w, &[8], Scheme::BatchLevel, &ds.signals).unwrap();
         assert!(!render(&plain, &[true]).contains("keep"));
+    }
+
+    /// CLI-parse smoke test for `repro fig8 --keep-rates`: the option
+    /// string round-trips through the same parser `main.rs` uses.
+    #[test]
+    fn parse_keep_rates_accepts_valid_and_rejects_garbage() {
+        assert_eq!(parse_keep_rates("0.5").unwrap(), vec![0.5]);
+        assert_eq!(
+            parse_keep_rates(" 0.9, 0.5 ,0.25").unwrap(),
+            vec![0.9, 0.5, 0.25]
+        );
+        assert_eq!(parse_keep_rates("1.0").unwrap(), vec![1.0]);
+        for bad in ["", "abc", "0.5,x", "0.0", "-0.5", "1.5", "0.5,,0.25"] {
+            assert!(parse_keep_rates(bad).is_err(), "'{bad}' should be rejected");
+        }
+    }
+
+    /// `fig8_grid` + `render` end-to-end on the fixture: one row per
+    /// (PE, rate) pair, keep column shown, eq2 column dropped (grid
+    /// sweeps skip the analytic cross-check).
+    #[test]
+    fn fig8_grid_renders_without_model_column() {
+        let (man, w) = crate::testing::fixture::tiny_fixture();
+        let rows = fig8_grid(&man, &w, &[8, 16], &[0.9, 0.5], 17).unwrap();
+        assert_eq!(rows.len(), 4);
+        assert!(rows.iter().all(|p| p.keep_prob.is_some()));
+        let s = render(&rows, &[]);
+        assert!(s.contains("keep") && s.contains("0.90") && s.contains("0.50"), "{s}");
+        assert!(!s.contains("eq2==sim"), "grid render must drop the eq2 column:\n{s}");
+        assert!(s.contains("Fig. 8"));
     }
 
     #[test]

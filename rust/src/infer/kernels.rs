@@ -1,0 +1,348 @@
+//! Dot-product kernel dispatch for the f32 blocked masked-GEMM.
+//!
+//! The scalar bodies here are the **oracles**: [`dot_one_scalar`] /
+//! [`dot_rows_scalar`] define the canonical accumulation order the
+//! engine has carried since the seed (4 unrolled chains, pairwise
+//! combine, scalar tail), and every default-mode backend must reproduce
+//! their bits exactly — that is what keeps the engine-level
+//! blocked-vs-scalar golden test meaningful under the `simd` feature.
+//!
+//! Dispatch table (resolved per call, no global state):
+//!
+//! | mode                  | `simd` + x86_64                   | otherwise        |
+//! |-----------------------|-----------------------------------|------------------|
+//! | [`DotMode::Exact`]    | SSE2 (bit-exact with the oracle)  | scalar oracle    |
+//! | [`DotMode::Reordered`]| AVX2 if detected, else reordered scalar | reordered scalar |
+//!
+//! `Exact` is the default everywhere.  `Reordered` is the opt-in 8-chain
+//! order (`NativeEngine::set_dot_mode`): different bits, golden-tested
+//! at a tolerance at the engine level, and bit-identical between its
+//! AVX2 and portable implementations (same chain structure, same final
+//! reduction — see `util::simd`).
+
+/// Accumulation-order contract for the f32 kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DotMode {
+    /// The seed's canonical 4-chain order — bit-exact across backends.
+    #[default]
+    Exact,
+    /// 8-chain order: wider vectors on AVX2, different bits
+    /// (tolerance-tested, never dispatched unless opted into).
+    Reordered,
+}
+
+/// The implementation [`dot_one`]/[`dot_rows`] will run for a mode on
+/// this build + CPU — introspection for the runtime-dispatch tests and
+/// bench labels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    Scalar,
+    Sse2,
+    Avx2,
+}
+
+/// Which backend a mode resolves to right now.
+pub fn backend(mode: DotMode) -> Backend {
+    match mode {
+        DotMode::Exact => {
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            {
+                Backend::Sse2
+            }
+            #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+            {
+                Backend::Scalar
+            }
+        }
+        DotMode::Reordered => {
+            if crate::util::simd::avx2_available() {
+                Backend::Avx2
+            } else {
+                Backend::Scalar
+            }
+        }
+    }
+}
+
+/// The canonical dot-product accumulation order shared by every exact
+/// path: 4 independent accumulators over the unrolled body,
+/// pairwise-combined, then a scalar tail.  Changing this changes the
+/// bits — it is the oracle the SSE2 kernel is golden-tested against.
+#[inline]
+pub fn dot_one_scalar(nb: usize, x: &[f32], w: &[f32]) -> f32 {
+    let mut a0 = 0.0f32;
+    let mut a1 = 0.0f32;
+    let mut a2 = 0.0f32;
+    let mut a3 = 0.0f32;
+    let chunks = nb / 4 * 4;
+    let mut i = 0;
+    while i < chunks {
+        a0 += x[i] * w[i];
+        a1 += x[i + 1] * w[i + 1];
+        a2 += x[i + 2] * w[i + 2];
+        a3 += x[i + 3] * w[i + 3];
+        i += 4;
+    }
+    let mut acc = (a0 + a1) + (a2 + a3);
+    for j in chunks..nb {
+        acc += x[j] * w[j];
+    }
+    acc
+}
+
+/// Four dot products against one input row, interleaved for ILP.  Each
+/// row's accumulation order is identical to [`dot_one_scalar`]
+/// (bit-exact); the interleaving only shares the `x` loads across rows.
+#[inline]
+pub fn dot_rows_scalar(nb: usize, x: &[f32], ws: [&[f32]; 4]) -> [f32; 4] {
+    let mut a = [[0.0f32; 4]; 4]; // a[row][accumulator]
+    let chunks = nb / 4 * 4;
+    let mut i = 0;
+    while i < chunks {
+        let x0 = x[i];
+        let x1 = x[i + 1];
+        let x2 = x[i + 2];
+        let x3 = x[i + 3];
+        for r in 0..4 {
+            let w = ws[r];
+            a[r][0] += x0 * w[i];
+            a[r][1] += x1 * w[i + 1];
+            a[r][2] += x2 * w[i + 2];
+            a[r][3] += x3 * w[i + 3];
+        }
+        i += 4;
+    }
+    let mut out = [0.0f32; 4];
+    for r in 0..4 {
+        let mut acc = (a[r][0] + a[r][1]) + (a[r][2] + a[r][3]);
+        for j in chunks..nb {
+            acc += x[j] * ws[r][j];
+        }
+        out[r] = acc;
+    }
+    out
+}
+
+/// Portable reference for the reordered (8-chain) accumulation order.
+/// Chain `l` sums `x[8i+l] * w[8i+l]`; the final reduction pairs lanes
+/// exactly like the AVX2 kernel's horizontal sum, so the two are
+/// bit-identical — keep both in sync or the reordered dispatch test
+/// breaks.
+pub fn dot_one_reordered_scalar(nb: usize, x: &[f32], w: &[f32]) -> f32 {
+    let mut a = [0.0f32; 8];
+    let chunks = nb / 8 * 8;
+    let mut i = 0;
+    while i < chunks {
+        for (l, al) in a.iter_mut().enumerate() {
+            *al += x[i + l] * w[i + l];
+        }
+        i += 8;
+    }
+    let mut acc =
+        ((a[0] + a[4]) + (a[1] + a[5])) + ((a[2] + a[6]) + (a[3] + a[7]));
+    for j in chunks..nb {
+        acc += x[j] * w[j];
+    }
+    acc
+}
+
+/// Four-row variant of [`dot_one_reordered_scalar`] (rows independent).
+pub fn dot_rows_reordered_scalar(nb: usize, x: &[f32], ws: [&[f32]; 4]) -> [f32; 4] {
+    let mut out = [0.0f32; 4];
+    for (r, o) in out.iter_mut().enumerate() {
+        *o = dot_one_reordered_scalar(nb, x, ws[r]);
+    }
+    out
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[inline]
+fn dot_one_exact(nb: usize, x: &[f32], w: &[f32]) -> f32 {
+    crate::util::simd::dot_one_f32(nb, x, w)
+}
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+#[inline]
+fn dot_one_exact(nb: usize, x: &[f32], w: &[f32]) -> f32 {
+    dot_one_scalar(nb, x, w)
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[inline]
+fn dot_rows_exact(nb: usize, x: &[f32], ws: [&[f32]; 4]) -> [f32; 4] {
+    crate::util::simd::dot_rows_f32(nb, x, ws)
+}
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+#[inline]
+fn dot_rows_exact(nb: usize, x: &[f32], ws: [&[f32]; 4]) -> [f32; 4] {
+    dot_rows_scalar(nb, x, ws)
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[inline]
+fn dot_one_reordered(nb: usize, x: &[f32], w: &[f32]) -> f32 {
+    if crate::util::simd::avx2_available() {
+        crate::util::simd::dot_one_f32_reordered(nb, x, w)
+    } else {
+        dot_one_reordered_scalar(nb, x, w)
+    }
+}
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+#[inline]
+fn dot_one_reordered(nb: usize, x: &[f32], w: &[f32]) -> f32 {
+    dot_one_reordered_scalar(nb, x, w)
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[inline]
+fn dot_rows_reordered(nb: usize, x: &[f32], ws: [&[f32]; 4]) -> [f32; 4] {
+    if crate::util::simd::avx2_available() {
+        crate::util::simd::dot_rows_f32_reordered(nb, x, ws)
+    } else {
+        dot_rows_reordered_scalar(nb, x, ws)
+    }
+}
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+#[inline]
+fn dot_rows_reordered(nb: usize, x: &[f32], ws: [&[f32]; 4]) -> [f32; 4] {
+    dot_rows_reordered_scalar(nb, x, ws)
+}
+
+/// One dot product under `mode` — the hot-path entry point.
+#[inline]
+pub fn dot_one(mode: DotMode, nb: usize, x: &[f32], w: &[f32]) -> f32 {
+    match mode {
+        DotMode::Exact => dot_one_exact(nb, x, w),
+        DotMode::Reordered => dot_one_reordered(nb, x, w),
+    }
+}
+
+/// Four dot products against one input row under `mode`.
+#[inline]
+pub fn dot_rows(mode: DotMode, nb: usize, x: &[f32], ws: [&[f32]; 4]) -> [f32; 4] {
+    match mode {
+        DotMode::Exact => dot_rows_exact(nb, x, ws),
+        DotMode::Reordered => dot_rows_reordered(nb, x, ws),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg32::new(seed);
+        let x = (0..n).map(|_| rng.uniform(-2.0, 2.0) as f32).collect();
+        let w = (0..n).map(|_| rng.uniform(-2.0, 2.0) as f32).collect();
+        (x, w)
+    }
+
+    /// Sizes chosen to exercise remainder tails of both the 4-wide and
+    /// 8-wide bodies, plus the empty and single-element edge cases.
+    const SIZES: [usize; 12] = [0, 1, 2, 3, 4, 5, 7, 8, 17, 33, 104, 300];
+
+    #[test]
+    fn exact_dispatch_is_bit_exact_vs_scalar_oracle() {
+        for nb in SIZES {
+            let (x, w) = vecs(nb, 10 + nb as u64);
+            let got = dot_one(DotMode::Exact, nb, &x, &w);
+            let want = dot_one_scalar(nb, &x, &w);
+            assert_eq!(got.to_bits(), want.to_bits(), "nb={nb}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn exact_rows_dispatch_is_bit_exact_vs_scalar_oracle() {
+        for nb in SIZES {
+            let (x, _) = vecs(nb, 20 + nb as u64);
+            let (wflat, _) = vecs(nb * 4, 30 + nb as u64);
+            let ws = [
+                &wflat[..nb],
+                &wflat[nb..2 * nb],
+                &wflat[2 * nb..3 * nb],
+                &wflat[3 * nb..4 * nb],
+            ];
+            let got = dot_rows(DotMode::Exact, nb, &x, ws);
+            let want = dot_rows_scalar(nb, &x, ws);
+            for r in 0..4 {
+                assert_eq!(got[r].to_bits(), want[r].to_bits(), "nb={nb} row {r}");
+            }
+        }
+    }
+
+    /// The reordered dispatch must be bit-identical to the *reordered
+    /// scalar* reference on every backend (the AVX2 kernel mirrors its
+    /// chain structure exactly) — so this holds whether or not AVX2 is
+    /// present, which is what makes the mode deterministic per input.
+    #[test]
+    fn reordered_dispatch_is_bit_exact_vs_reordered_scalar() {
+        for nb in SIZES {
+            let (x, w) = vecs(nb, 40 + nb as u64);
+            let got = dot_one(DotMode::Reordered, nb, &x, &w);
+            let want = dot_one_reordered_scalar(nb, &x, &w);
+            assert_eq!(got.to_bits(), want.to_bits(), "nb={nb}: {got} vs {want}");
+            let (wflat, _) = vecs(nb * 4, 50 + nb as u64);
+            let ws = [
+                &wflat[..nb],
+                &wflat[nb..2 * nb],
+                &wflat[2 * nb..3 * nb],
+                &wflat[3 * nb..4 * nb],
+            ];
+            let gr = dot_rows(DotMode::Reordered, nb, &x, ws);
+            let wr = dot_rows_reordered_scalar(nb, &x, ws);
+            for r in 0..4 {
+                assert_eq!(gr[r].to_bits(), wr[r].to_bits(), "nb={nb} row {r}");
+            }
+        }
+    }
+
+    /// Reordered vs exact differ only by summation order: same value to
+    /// within a few ulps of the accumulated magnitude.
+    #[test]
+    fn reordered_mode_within_tolerance_of_exact() {
+        for nb in SIZES {
+            let (x, w) = vecs(nb, 60 + nb as u64);
+            let a = dot_one(DotMode::Exact, nb, &x, &w);
+            let b = dot_one(DotMode::Reordered, nb, &x, &w);
+            let mag: f32 = x.iter().zip(&w).map(|(&p, &q)| (p * q).abs()).sum();
+            let tol = 1e-5 * mag + 1e-6;
+            assert!((a - b).abs() <= tol, "nb={nb}: |{a} - {b}| > {tol}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_element_edge_cases() {
+        for mode in [DotMode::Exact, DotMode::Reordered] {
+            assert_eq!(dot_one(mode, 0, &[], &[]), 0.0);
+            assert_eq!(dot_one(mode, 1, &[3.0], &[-0.5]), -1.5);
+        }
+    }
+
+    /// Runtime-dispatch pin: without the `simd` feature (or off x86_64)
+    /// every mode must resolve to the scalar fallback; with it, Exact is
+    /// the SSE2 kernel and Reordered follows CPU detection.
+    #[test]
+    fn dispatch_selects_expected_backend() {
+        #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+        {
+            assert_eq!(backend(DotMode::Exact), Backend::Scalar);
+            assert_eq!(backend(DotMode::Reordered), Backend::Scalar);
+            assert!(!crate::util::simd::avx2_available());
+        }
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        {
+            assert_eq!(backend(DotMode::Exact), Backend::Sse2);
+            let want = if crate::util::simd::avx2_available() {
+                Backend::Avx2
+            } else {
+                Backend::Scalar
+            };
+            assert_eq!(backend(DotMode::Reordered), want);
+        }
+    }
+
+    #[test]
+    fn default_mode_is_exact() {
+        assert_eq!(DotMode::default(), DotMode::Exact);
+    }
+}

@@ -18,6 +18,7 @@
 //! [`Engine::execute_into`] writes into a caller-provided, recyclable
 //! [`InferOutput`] — zero steady-state allocations.
 
+pub mod kernels;
 pub mod native;
 pub mod registry;
 

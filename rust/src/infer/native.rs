@@ -27,11 +27,16 @@
 //!   layer-1 MACs (4 samples x ~nb/2 kept rows -> nb union rows).
 //!
 //! On top of that the kernels are register-blocked 4 output rows at a
-//! time ([`dot_rows`]) so one voxel's signals feed four dot products in
-//! flight — each individual dot product keeps the seed's exact 4-way
-//! unrolled accumulation order, which is what makes the bit-for-bit
-//! golden test possible.
+//! time ([`kernels::dot_rows`]) so one voxel's signals feed four dot
+//! products in flight — in the default [`DotMode::Exact`] each
+//! individual dot product keeps the seed's exact 4-way unrolled
+//! accumulation order (whether the scalar or the SSE2 backend runs it),
+//! which is what makes the bit-for-bit golden test possible.  The
+//! kernel implementations and their dispatch contract live in
+//! [`super::kernels`]; [`NativeEngine::set_dot_mode`] opts into the
+//! reordered (tolerance-tested) order.
 
+use super::kernels::{self, DotMode};
 use super::{Engine, InferOutput};
 use crate::ivim::Param;
 use crate::masks::{LayerPlan, MaskPlan, MaskSet};
@@ -63,64 +68,6 @@ fn fold_bn(g: &[f32], be: &[f32], m: &[f32], v: &[f32]) -> (Vec<f32>, Vec<f32>) 
         .map(|(&be, (&m, &s))| be - m * s)
         .collect();
     (scale, shift)
-}
-
-/// The canonical dot-product accumulation order shared by every path:
-/// 4 independent accumulators over the unrolled body, pairwise-combined,
-/// then a scalar tail.  Changing this changes the bits.
-#[inline]
-fn dot_one(nb: usize, x: &[f32], w: &[f32]) -> f32 {
-    let mut a0 = 0.0f32;
-    let mut a1 = 0.0f32;
-    let mut a2 = 0.0f32;
-    let mut a3 = 0.0f32;
-    let chunks = nb / 4 * 4;
-    let mut i = 0;
-    while i < chunks {
-        a0 += x[i] * w[i];
-        a1 += x[i + 1] * w[i + 1];
-        a2 += x[i + 2] * w[i + 2];
-        a3 += x[i + 3] * w[i + 3];
-        i += 4;
-    }
-    let mut acc = (a0 + a1) + (a2 + a3);
-    for j in chunks..nb {
-        acc += x[j] * w[j];
-    }
-    acc
-}
-
-/// Four dot products against one input row, interleaved for ILP.  Each
-/// row's accumulation order is identical to [`dot_one`] (bit-exact); the
-/// interleaving only shares the `x` loads across rows.
-#[inline]
-fn dot_rows(nb: usize, x: &[f32], ws: [&[f32]; 4]) -> [f32; 4] {
-    let mut a = [[0.0f32; 4]; 4]; // a[row][accumulator]
-    let chunks = nb / 4 * 4;
-    let mut i = 0;
-    while i < chunks {
-        let x0 = x[i];
-        let x1 = x[i + 1];
-        let x2 = x[i + 2];
-        let x3 = x[i + 3];
-        for r in 0..4 {
-            let w = ws[r];
-            a[r][0] += x0 * w[i];
-            a[r][1] += x1 * w[i + 1];
-            a[r][2] += x2 * w[i + 2];
-            a[r][3] += x3 * w[i + 3];
-        }
-        i += 4;
-    }
-    let mut out = [0.0f32; 4];
-    for r in 0..4 {
-        let mut acc = (a[r][0] + a[r][1]) + (a[r][2] + a[r][3]);
-        for j in chunks..nb {
-            acc += x[j] * ws[r][j];
-        }
-        out[r] = acc;
-    }
-    out
 }
 
 /// Folded-BN affine + ReLU, in the seed's exact operation order.
@@ -161,7 +108,8 @@ pub fn masked_linear_reference(
         oi.fill(0.0);
         for &o in kept {
             let wo = &w[o * nb..(o + 1) * nb];
-            let acc = dot_one(nb, xi, wo);
+            // always the scalar oracle — the reference never dispatches
+            let acc = kernels::dot_one_scalar(nb, xi, wo);
             oi[o] = affine_relu(acc, b[o], scale[o], shift[o]);
         }
     }
@@ -199,6 +147,9 @@ pub struct BlockedMaskedLinear {
     kept_pos: Vec<Vec<u32>>,
     /// Scratch: output index -> packed position (`u32::MAX` = dropped).
     pos_of: Vec<u32>,
+    /// Accumulation-order contract for this layer's dot products
+    /// (default [`DotMode::Exact`]; see [`super::kernels`]).
+    mode: DotMode,
 }
 
 impl BlockedMaskedLinear {
@@ -237,6 +188,7 @@ impl BlockedMaskedLinear {
             shift: Vec::with_capacity(nb),
             kept_pos: (0..mask.n).map(|_| Vec::with_capacity(nb)).collect(),
             pos_of: vec![u32::MAX; nb],
+            mode: DotMode::default(),
         };
         layer.apply_masks(&union, &kept);
         layer
@@ -310,6 +262,18 @@ impl BlockedMaskedLinear {
         self.nb
     }
 
+    /// Select the accumulation-order contract for this layer's dot
+    /// products.  [`DotMode::Exact`] (the default) is bit-for-bit the
+    /// seed order on every backend; [`DotMode::Reordered`] trades that
+    /// for wider vectors and is only tolerance-tested.
+    pub fn set_dot_mode(&mut self, mode: DotMode) {
+        self.mode = mode;
+    }
+
+    pub fn dot_mode(&self) -> DotMode {
+        self.mode
+    }
+
     /// Rows in the shared (union) weight block.
     pub fn union_len(&self) -> usize {
         self.union.len()
@@ -342,7 +306,7 @@ impl BlockedMaskedLinear {
             ];
             for v in 0..batch {
                 let xv = &x[v * nb..(v + 1) * nb];
-                let d = dot_rows(nb, xv, ws);
+                let d = kernels::dot_rows(self.mode, nb, xv, ws);
                 for k in 0..4 {
                     act[(r + k) * batch + v] =
                         affine_relu(d[k], self.b[r + k], self.scale[r + k], self.shift[r + k]);
@@ -354,7 +318,7 @@ impl BlockedMaskedLinear {
             let wr = &self.w[r * nb..(r + 1) * nb];
             for v in 0..batch {
                 let xv = &x[v * nb..(v + 1) * nb];
-                let acc = dot_one(nb, xv, wr);
+                let acc = kernels::dot_one(self.mode, nb, xv, wr);
                 act[r * batch + v] = affine_relu(acc, self.b[r], self.scale[r], self.shift[r]);
             }
             r += 1;
@@ -402,7 +366,7 @@ impl BlockedMaskedLinear {
             ];
             for v in 0..batch {
                 let xv = &x[v * nb..(v + 1) * nb];
-                let d = dot_rows(nb, xv, ws);
+                let d = kernels::dot_rows(self.mode, nb, xv, ws);
                 let ov = &mut out[v * nb..(v + 1) * nb];
                 for j in 0..4 {
                     ov[self.union[p[j]]] =
@@ -417,7 +381,7 @@ impl BlockedMaskedLinear {
             let o = self.union[p];
             for v in 0..batch {
                 let xv = &x[v * nb..(v + 1) * nb];
-                let acc = dot_one(nb, xv, wr);
+                let acc = kernels::dot_one(self.mode, nb, xv, wr);
                 out[v * nb + o] = affine_relu(acc, self.b[p], self.scale[p], self.shift[p]);
             }
             k += 1;
@@ -568,6 +532,19 @@ impl NativeEngine {
     }
     pub fn n_samples(&self) -> usize {
         self.n_samples
+    }
+
+    /// Select the dot-product accumulation order for every masked layer.
+    /// [`DotMode::Exact`] (the default) keeps the engine bit-for-bit
+    /// identical to the scalar oracle; [`DotMode::Reordered`] opts into
+    /// the wider-vector order, which is only tolerance-tested.  The
+    /// encoder's sequential logit loop is deliberately not dispatched —
+    /// its order is part of the seed contract regardless of mode.
+    pub fn set_dot_mode(&mut self, mode: DotMode) {
+        for sn in &mut self.subnets {
+            sn.l1.set_dot_mode(mode);
+            sn.l2.set_dot_mode(mode);
+        }
     }
 
     /// Forward one subnet for all samples, writing into `out`.
@@ -1039,6 +1016,35 @@ mod tests {
             eng.swap_masks(&plan).unwrap();
             eng.execute_into(&ds.signals, &mut out).unwrap();
             assert_eq!(eng.alloc_signature(), sig, "swap or execute reallocated");
+        }
+    }
+
+    /// The opt-in reordered accumulation mode only changes summation
+    /// order inside the masked layers, so end-to-end predictions must
+    /// stay within a tight tolerance of the exact mode (and revert
+    /// bit-for-bit when switched back).
+    #[test]
+    fn reordered_mode_stays_within_tolerance_and_reverts() {
+        let (man, w) = setup();
+        let mut eng = NativeEngine::new(&man, &w).unwrap();
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 31);
+        let exact = eng.infer_batch(&ds.signals).unwrap();
+        eng.set_dot_mode(DotMode::Reordered);
+        let reordered = eng.infer_batch(&ds.signals).unwrap();
+        for p in Param::ALL {
+            let (lo, hi) = p.range();
+            let tol = ((hi - lo) as f32) * 1e-4 + 1e-6;
+            for (a, b) in exact.samples[p.index()]
+                .iter()
+                .zip(&reordered.samples[p.index()])
+            {
+                assert!((a - b).abs() <= tol, "{p:?}: |{a} - {b}| > {tol}");
+            }
+        }
+        eng.set_dot_mode(DotMode::Exact);
+        let back = eng.infer_batch(&ds.signals).unwrap();
+        for p in Param::ALL {
+            assert_eq!(exact.samples[p.index()], back.samples[p.index()]);
         }
     }
 

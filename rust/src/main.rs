@@ -110,6 +110,12 @@ fn cli() -> Cli {
                     variant(),
                     weights_opt(),
                     flag("check-model", "assert eq. (2) matches the simulator"),
+                    opt(
+                        "keep-rates",
+                        "comma-separated mask keep rates in (0,1] — sweep the PE grid per rate",
+                        None,
+                    ),
+                    opt("mask-seed", "mask resampling seed for --keep-rates", Some("17")),
                 ],
             },
             CommandSpec {
@@ -398,14 +404,27 @@ fn run(args: &Args) -> anyhow::Result<()> {
             let man = experiments::load_manifest(args.get_or("variant", "tiny"))?;
             let rt = Runtime::cpu().ok();
             let w = experiments::resolve_weights(&man, rt.as_ref(), args.get("weights"), 0, 20.0)?;
-            let (points, ok) = fig8::fig8(&man, &w, &fig8::PAPER_PE_COUNTS)?;
-            println!("{}", fig8::render(&points, &ok));
-            if args.flag("check-model") {
+            if let Some(spec) = args.get("keep-rates") {
+                // the eq. (2) cross-check assumes the manifest's masks,
+                // not resampled ones — the two options are exclusive
                 anyhow::ensure!(
-                    ok.iter().all(|&b| b),
-                    "eq. (2) model diverged from simulator"
+                    !args.flag("check-model"),
+                    "--check-model applies to the manifest-mask sweep; drop it or --keep-rates"
                 );
-                println!("eq. (2) analytic model matches the cycle simulator on all points");
+                let rates = fig8::parse_keep_rates(spec)?;
+                let seed = args.get_usize("mask-seed")?.unwrap_or(17) as u64;
+                let points = fig8::fig8_grid(&man, &w, &fig8::PAPER_PE_COUNTS, &rates, seed)?;
+                println!("{}", fig8::render(&points, &[]));
+            } else {
+                let (points, ok) = fig8::fig8(&man, &w, &fig8::PAPER_PE_COUNTS)?;
+                println!("{}", fig8::render(&points, &ok));
+                if args.flag("check-model") {
+                    anyhow::ensure!(
+                        ok.iter().all(|&b| b),
+                        "eq. (2) model diverged from simulator"
+                    );
+                    println!("eq. (2) analytic model matches the cycle simulator on all points");
+                }
             }
         }
         "table1" => {

@@ -4,6 +4,7 @@
 pub mod json;
 pub mod pool;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 
 use std::io::{Read, Write};

@@ -1,0 +1,311 @@
+//! SIMD kernels for the two hot dot-product paths, gated behind the
+//! `simd` cargo feature.  All `std::arch` code in the crate lives here,
+//! wrapped in safe functions that assert their length preconditions;
+//! dispatch policy (which kernel runs when) lives in
+//! `crate::infer::kernels` and `crate::accel::pu` — this module only
+//! provides the implementations.
+//!
+//! Three kernel families:
+//!
+//! * **SSE2 f32, exact order** — [`dot_one_f32`] / [`dot_rows_f32`].
+//!   The scalar hot path accumulates into 4 independent chains `a0..a3`
+//!   (chain `k` sums `x[4i+k] * w[4i+k]`) and combines them as
+//!   `(a0+a1)+(a2+a3)`.  A single 4-lane vector accumulator updated with
+//!   separate multiply and add performs *exactly* those four chains, lane
+//!   for lane: IEEE-754 ops are deterministic and `_mm_mul_ps` /
+//!   `_mm_add_ps` neither fuse nor reassociate.  The vector path is
+//!   therefore **bit-exact** with the scalar oracle, which is what lets
+//!   it be the default backend.  SSE2 is part of the x86_64 baseline, so
+//!   it needs no runtime detection.
+//! * **AVX2 f32, reordered** — [`dot_one_f32_reordered`] /
+//!   [`dot_rows_f32_reordered`].  Eight chains instead of four — a
+//!   *different* summation order, reachable only through the opt-in
+//!   `DotMode::Reordered` dispatch and golden-tested at a tolerance.
+//!   Runtime-gated on [`avx2_available`].  The lane structure and final
+//!   reduction mirror `infer::kernels::dot_one_reordered_scalar` exactly,
+//!   so reordered results are bit-identical whether the AVX2 unit or the
+//!   portable fallback computed them.
+//! * **AVX2 fixed-point** — [`fx_dot_acc`]: i16 × i16 → i32 products
+//!   accumulated in four i64 lanes.  Integer addition is associative and
+//!   commutative, so any summation order is bit-exact with the PU
+//!   adder-tree scalar path, and this kernel is dispatched by default.
+//!   `_mm256_madd_epi16` (pmaddwd) is deliberately **not** used: it adds
+//!   adjacent product pairs in i32, and two neighbouring `(-32768)²`
+//!   terms overflow to exactly `i32::MIN`; Q4.12's `-8.0` *is* `-32768`
+//!   (reachable through `Fx::from_f32` saturation), so the wrap is a
+//!   real input.  Products are instead sign-extended to i32, multiplied
+//!   exactly in 32 bits (|p| ≤ 2^30), then widened to i64.
+
+/// True when the AVX2 kernels may be dispatched: the `simd` feature is
+/// compiled in, the target is x86_64 and the CPU reports AVX2.  Always
+/// false otherwise — dispatchers then select a scalar fallback, which is
+/// what the runtime-dispatch tests pin.
+#[inline]
+pub fn avx2_available() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// SSE2 dot product in the canonical 4-chain accumulation order —
+    /// bit-exact with `infer::kernels::dot_one_scalar`.
+    pub fn dot_one_f32(nb: usize, x: &[f32], w: &[f32]) -> f32 {
+        assert!(
+            x.len() >= nb && w.len() >= nb,
+            "dot_one: slices shorter than nb"
+        );
+        let chunks = nb / 4 * 4;
+        // SAFETY: SSE2 is unconditionally available on x86_64; every
+        // load stays inside the asserted `nb` prefix.
+        unsafe {
+            let mut acc = _mm_setzero_ps();
+            let mut i = 0;
+            while i < chunks {
+                let xv = _mm_loadu_ps(x.as_ptr().add(i));
+                let wv = _mm_loadu_ps(w.as_ptr().add(i));
+                acc = _mm_add_ps(acc, _mm_mul_ps(xv, wv));
+                i += 4;
+            }
+            let mut lanes = [0.0f32; 4];
+            _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+            let mut s = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+            for j in chunks..nb {
+                s += x[j] * w[j];
+            }
+            s
+        }
+    }
+
+    /// SSE2 four-row dot product sharing the `x` loads — each row's
+    /// accumulation order is identical to [`dot_one_f32`] (bit-exact with
+    /// `infer::kernels::dot_rows_scalar`).
+    pub fn dot_rows_f32(nb: usize, x: &[f32], ws: [&[f32]; 4]) -> [f32; 4] {
+        assert!(x.len() >= nb, "dot_rows: x shorter than nb");
+        for w in &ws {
+            assert!(w.len() >= nb, "dot_rows: weight row shorter than nb");
+        }
+        let chunks = nb / 4 * 4;
+        let mut out = [0.0f32; 4];
+        // SAFETY: as in dot_one_f32.
+        unsafe {
+            let mut acc = [_mm_setzero_ps(); 4];
+            let mut i = 0;
+            while i < chunks {
+                let xv = _mm_loadu_ps(x.as_ptr().add(i));
+                for (r, a) in acc.iter_mut().enumerate() {
+                    let wv = _mm_loadu_ps(ws[r].as_ptr().add(i));
+                    *a = _mm_add_ps(*a, _mm_mul_ps(xv, wv));
+                }
+                i += 4;
+            }
+            for (r, a) in acc.iter().enumerate() {
+                let mut lanes = [0.0f32; 4];
+                _mm_storeu_ps(lanes.as_mut_ptr(), *a);
+                let mut s = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+                for j in chunks..nb {
+                    s += x[j] * ws[r][j];
+                }
+                out[r] = s;
+            }
+        }
+        out
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_one_f32_avx2(nb: usize, x: &[f32], w: &[f32]) -> f32 {
+        let chunks = nb / 8 * 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < chunks {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            let wv = _mm256_loadu_ps(w.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, wv));
+            i += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        // Must stay textually in sync with dot_one_reordered_scalar's
+        // final reduction — that is what makes the two bit-identical.
+        let mut s = ((lanes[0] + lanes[4]) + (lanes[1] + lanes[5]))
+            + ((lanes[2] + lanes[6]) + (lanes[3] + lanes[7]));
+        for j in chunks..nb {
+            s += x[j] * w[j];
+        }
+        s
+    }
+
+    /// AVX2 dot product in the 8-chain reordered accumulation order —
+    /// bit-exact with `infer::kernels::dot_one_reordered_scalar`, *not*
+    /// with the canonical 4-chain order.
+    pub fn dot_one_f32_reordered(nb: usize, x: &[f32], w: &[f32]) -> f32 {
+        assert!(
+            x.len() >= nb && w.len() >= nb,
+            "dot_one: slices shorter than nb"
+        );
+        assert!(
+            super::avx2_available(),
+            "AVX2 kernel dispatched without CPU support"
+        );
+        // SAFETY: AVX2 presence asserted above; loads stay inside `nb`.
+        unsafe { dot_one_f32_avx2(nb, x, w) }
+    }
+
+    /// AVX2 four-row variant of [`dot_one_f32_reordered`].
+    pub fn dot_rows_f32_reordered(nb: usize, x: &[f32], ws: [&[f32]; 4]) -> [f32; 4] {
+        assert!(x.len() >= nb, "dot_rows: x shorter than nb");
+        for w in &ws {
+            assert!(w.len() >= nb, "dot_rows: weight row shorter than nb");
+        }
+        assert!(
+            super::avx2_available(),
+            "AVX2 kernel dispatched without CPU support"
+        );
+        let mut out = [0.0f32; 4];
+        for (r, o) in out.iter_mut().enumerate() {
+            // SAFETY: AVX2 presence asserted above; loads stay inside `nb`.
+            *o = unsafe { dot_one_f32_avx2(nb, x, ws[r]) };
+        }
+        out
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn fx_dot_acc_avx2(x: &[i16], w: &[i16]) -> i64 {
+        let n = x.len();
+        let chunks = n / 8 * 8;
+        let mut acc_lo = _mm256_setzero_si256();
+        let mut acc_hi = _mm256_setzero_si256();
+        let mut i = 0;
+        while i < chunks {
+            let xv = _mm_loadu_si128(x.as_ptr().add(i) as *const __m128i);
+            let wv = _mm_loadu_si128(w.as_ptr().add(i) as *const __m128i);
+            // sign-extend to i32, multiply exactly (|p| <= 2^30), widen
+            // to i64 — see the module docs for why NOT pmaddwd.
+            let prod = _mm256_mullo_epi32(_mm256_cvtepi16_epi32(xv), _mm256_cvtepi16_epi32(wv));
+            let lo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(prod));
+            let hi = _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(prod));
+            acc_lo = _mm256_add_epi64(acc_lo, lo);
+            acc_hi = _mm256_add_epi64(acc_hi, hi);
+            i += 8;
+        }
+        let acc = _mm256_add_epi64(acc_lo, acc_hi);
+        let mut lanes = [0i64; 4];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut s = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+        while i < n {
+            s += (x[i] as i32 * w[i] as i32) as i64;
+            i += 1;
+        }
+        s
+    }
+
+    /// AVX2 fixed-point chunk-MAC: Σ (x[i] as i32 * w[i] as i32) as i64.
+    /// Bit-exact with the scalar PU adder tree for any summation order
+    /// (i64 addition is associative; no overflow — |product| ≤ 2^30 and
+    /// reaching i64 range would need more than 2^33 terms).
+    pub fn fx_dot_acc(x: &[i16], w: &[i16]) -> i64 {
+        assert_eq!(
+            x.len(),
+            w.len(),
+            "fx_dot_acc: input length {} != weight length {}",
+            x.len(),
+            w.len()
+        );
+        assert!(
+            super::avx2_available(),
+            "AVX2 kernel dispatched without CPU support"
+        );
+        // SAFETY: AVX2 presence asserted above; equal-length slices.
+        unsafe { fx_dot_acc_avx2(x, w) }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub use x86::{dot_one_f32, dot_one_f32_reordered, dot_rows_f32, dot_rows_f32_reordered, fx_dot_acc};
+
+#[cfg(all(test, feature = "simd", target_arch = "x86_64"))]
+mod tests {
+    use super::*;
+    use crate::infer::kernels::{dot_one_reordered_scalar, dot_one_scalar, dot_rows_scalar};
+    use crate::util::rng::Pcg32;
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg32::new(seed);
+        let x = (0..n).map(|_| rng.uniform(-2.0, 2.0) as f32).collect();
+        let w = (0..n).map(|_| rng.uniform(-2.0, 2.0) as f32).collect();
+        (x, w)
+    }
+
+    const SIZES: [usize; 12] = [0, 1, 2, 3, 4, 5, 7, 8, 17, 33, 104, 300];
+
+    #[test]
+    fn sse2_dot_one_is_bit_exact_vs_scalar() {
+        for nb in SIZES {
+            let (x, w) = vecs(nb, 100 + nb as u64);
+            let got = dot_one_f32(nb, &x, &w);
+            let want = dot_one_scalar(nb, &x, &w);
+            assert_eq!(got.to_bits(), want.to_bits(), "nb={nb}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn sse2_dot_rows_is_bit_exact_vs_scalar() {
+        for nb in SIZES {
+            let (x, _) = vecs(nb, 200 + nb as u64);
+            let (wflat, _) = vecs(nb * 4, 300 + nb as u64);
+            let ws = [
+                &wflat[..nb],
+                &wflat[nb..2 * nb],
+                &wflat[2 * nb..3 * nb],
+                &wflat[3 * nb..4 * nb],
+            ];
+            let got = dot_rows_f32(nb, &x, ws);
+            let want = dot_rows_scalar(nb, &x, ws);
+            for r in 0..4 {
+                assert_eq!(got[r].to_bits(), want[r].to_bits(), "nb={nb} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn avx2_reordered_is_bit_exact_vs_reordered_scalar() {
+        if !avx2_available() {
+            return; // covered by the dispatch fallback tests instead
+        }
+        for nb in SIZES {
+            let (x, w) = vecs(nb, 400 + nb as u64);
+            let got = dot_one_f32_reordered(nb, &x, &w);
+            let want = dot_one_reordered_scalar(nb, &x, &w);
+            assert_eq!(got.to_bits(), want.to_bits(), "nb={nb}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn avx2_fx_dot_acc_is_bit_exact_vs_linear_sum() {
+        if !avx2_available() {
+            return;
+        }
+        let mut rng = Pcg32::new(9);
+        for n in SIZES {
+            let x: Vec<i16> = (0..n).map(|_| rng.below(1 << 16) as u16 as i16).collect();
+            let w: Vec<i16> = (0..n).map(|_| rng.below(1 << 16) as u16 as i16).collect();
+            let want: i64 = x
+                .iter()
+                .zip(&w)
+                .map(|(&a, &b)| (a as i32 * b as i32) as i64)
+                .sum();
+            assert_eq!(fx_dot_acc(&x, &w), want, "n={n}");
+        }
+        // extremes: (-32768)^2 pairs are exactly the pmaddwd trap
+        let x = vec![i16::MIN; 20];
+        assert_eq!(fx_dot_acc(&x, &x), 20 * (1i64 << 30));
+    }
+}
