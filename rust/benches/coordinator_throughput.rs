@@ -20,6 +20,9 @@ use uivim::metrics::report::Table;
 use uivim::model::{Manifest, Weights};
 use uivim::testing::fixture;
 use uivim::util::Timer;
+use uivim::volume::scenario::Corruption;
+use uivim::volume::stream::{stream_volume, StreamConfig};
+use uivim::volume::VolumeSpec;
 
 fn run_load(
     man: &Manifest,
@@ -175,6 +178,67 @@ fn main() {
             );
         }
     }
+
+    // ---- streaming 3-D volume pipeline (ISSUE #7) ----------------------
+    // The bounded-memory path: slices pumped through the lease API under
+    // the in-flight cap, maps assembled out of order.  Throughput is the
+    // end-to-end voxels/s of `stream_volume`; the lease high-water column
+    // is the peak-memory signature (flat in volume depth).
+    let dim = if fast { (8usize, 8usize, 4usize) } else { (16usize, 16usize, 8usize) };
+    let mut vol_table = Table::new(&[
+        "shards", "in-flight", "throughput (vox/s)", "stalls", "lease high-water",
+        "p99 latency",
+    ]);
+    for (shards, inflight) in [(1usize, 2usize), (4, 4)] {
+        let batch = 16usize;
+        let mut cfg = CoordinatorConfig::sharded(man.nb, batch, shards);
+        cfg.batcher.max_wait = Duration::from_millis(1);
+        cfg.batcher.queue_capacity = inflight * dim.0 * dim.1 + 1;
+        let opts = EngineOpts {
+            batch: Some(batch),
+            ..Default::default()
+        };
+        let coord = Coordinator::start(
+            cfg,
+            factory("native", man.clone(), w.clone(), opts).expect("known engine"),
+        )
+        .expect("coordinator");
+        let spec = VolumeSpec {
+            dim,
+            bvals: man.bvalues.clone(),
+            snr: 20.0,
+            seed: 41,
+        };
+        let scfg = StreamConfig {
+            slices_in_flight: inflight,
+            ..Default::default()
+        };
+        let vol = stream_volume(&coord, &spec, Corruption::Clean, &scfg).expect("stream");
+        let snap = coord.snapshot();
+        coord.shutdown();
+        vol_table.row(&[
+            shards.to_string(),
+            inflight.to_string(),
+            format!("{:.0}", vol.stats.voxels_per_s),
+            vol.stats.stalls.to_string(),
+            vol.stats.lease_high_water.to_string(),
+            fmt_time(snap.p99_request_us / 1e6),
+        ]);
+        records.push(BenchRecord {
+            name: format!("volume_stream_shards{shards}_inflight{inflight}"),
+            p50_us: snap.p50_request_us,
+            p99_us: snap.p99_request_us,
+            throughput: vol.stats.voxels_per_s,
+        });
+    }
+    println!(
+        "== Streaming volume {}x{}x{} ({} voxels) ==\n",
+        dim.0,
+        dim.1,
+        dim.2,
+        dim.0 * dim.1 * dim.2
+    );
+    println!("{}", vol_table.to_text());
 
     match write_bench_json("coordinator_throughput", &records) {
         Ok(p) => println!("wrote {}", p.display()),

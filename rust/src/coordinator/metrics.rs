@@ -130,6 +130,15 @@ pub struct ServingMetrics {
     pub batches: AtomicU64,
     pub padded_rows: AtomicU64,
     pub rejected: AtomicU64,
+    /// Volume-streaming counters (incremented by `volume::stream`
+    /// drivers through `Coordinator::metrics()`): slices fully
+    /// submitted into the coordinator.
+    pub slices_ingested: AtomicU64,
+    /// Volumes whose every voxel response has been assembled.
+    pub volumes_completed: AtomicU64,
+    /// Times a streaming driver had to drain completions before it
+    /// could admit the next slice (backpressure events).
+    pub stream_stalls: AtomicU64,
     /// One slot per worker shard (`new()` allocates a single slot; the
     /// sharded coordinator uses `with_shards(k)`).
     pub shards: Vec<ShardMetrics>,
@@ -159,6 +168,9 @@ impl ServingMetrics {
             batches: self.batches.load(Ordering::Relaxed),
             padded_rows: self.padded_rows.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            slices_ingested: self.slices_ingested.load(Ordering::Relaxed),
+            volumes_completed: self.volumes_completed.load(Ordering::Relaxed),
+            stream_stalls: self.stream_stalls.load(Ordering::Relaxed),
             mean_request_us: self.request_latency.mean_us(),
             p50_request_us: self.request_latency.percentile_us(50.0) as f64,
             p99_request_us: self.request_latency.percentile_us(99.0) as f64,
@@ -183,6 +195,13 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     pub padded_rows: u64,
     pub rejected: u64,
+    /// Slices fully submitted by streaming-volume drivers.
+    pub slices_ingested: u64,
+    /// Volumes completely assembled by streaming-volume drivers.
+    pub volumes_completed: u64,
+    /// Backpressure events: a streaming driver drained completions
+    /// before admitting the next slice.
+    pub stream_stalls: u64,
     pub mean_request_us: f64,
     pub p50_request_us: f64,
     pub p99_request_us: f64,
@@ -277,6 +296,18 @@ mod tests {
     #[test]
     fn shard_count_clamped_to_one() {
         assert_eq!(ServingMetrics::with_shards(0).shards.len(), 1);
+    }
+
+    #[test]
+    fn stream_counters_snapshot() {
+        let m = ServingMetrics::with_shards(2);
+        m.slices_ingested.fetch_add(8, Ordering::Relaxed);
+        m.volumes_completed.fetch_add(1, Ordering::Relaxed);
+        m.stream_stalls.fetch_add(3, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.slices_ingested, 8);
+        assert_eq!(s.volumes_completed, 1);
+        assert_eq!(s.stream_stalls, 3);
     }
 
     #[test]

@@ -650,6 +650,13 @@ impl Coordinator {
         self.depth.load(Ordering::Acquire)
     }
 
+    /// The admission-gate capacity: `submit` rejects once `queue_depth`
+    /// reaches this. Streaming drivers use it to size backpressure
+    /// (admit a slice only when `capacity - depth` can absorb it).
+    pub fn queue_capacity(&self) -> usize {
+        self.capacity
+    }
+
     /// Idle recycled output buffers (observability for the pool).
     pub fn pooled_outputs(&self) -> usize {
         self.pool.idle()

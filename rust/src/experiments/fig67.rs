@@ -8,12 +8,16 @@
 //! * relative uncertainty falls as SNR rises — "less noise … leads to …
 //!   low uncertainty (more confident)" (Fig. 7).
 
-use crate::infer::registry::{self, EngineOpts};
+use crate::coordinator::{Coordinator, CoordinatorConfig};
+use crate::infer::registry::{self, factory, EngineOpts};
 use crate::infer::{Engine, InferOutput};
 use crate::ivim::synth::{synth_dataset, Dataset};
 use crate::ivim::{Param, PAPER_SNRS};
 use crate::metrics;
 use crate::model::{Manifest, Weights};
+use crate::volume::scenario::Corruption;
+use crate::volume::stream::{self, StreamConfig, StreamedVolume};
+use crate::volume::VolumeSpec;
 
 /// One SNR level's evaluation results.
 #[derive(Debug, Clone)]
@@ -100,6 +104,65 @@ pub fn snr_sweep(
         });
     }
     Ok(rows)
+}
+
+/// One SNR point of the sweep re-expressed over the **streaming volume
+/// pipeline**: the same `cfg.n_voxels` voxels, reshaped into a 3-D
+/// volume of the given `dim`, streamed slice-by-slice through a sharded
+/// coordinator and reassembled into maps — then reduced to the same
+/// `SnrRow`. Because the slice stream drives the same sequential RNG as
+/// `synth_dataset` (same seed ⇒ same voxels), per-voxel inference is
+/// batch-composition-independent, and the map reduction replicates the
+/// batch metrics value for value, the returned row is **bit-identical**
+/// to `snr_sweep`'s row at the same index — the fig6/fig7 experiments
+/// become a special case of the streaming pipeline.
+pub fn snr_point_streamed(
+    man: &Manifest,
+    weights: &Weights,
+    cfg: &SweepConfig,
+    snr_index: usize,
+    dim: (usize, usize, usize),
+    shards: usize,
+    stream_cfg: &StreamConfig,
+) -> anyhow::Result<(SnrRow, StreamedVolume)> {
+    anyhow::ensure!(
+        dim.0 * dim.1 * dim.2 == cfg.n_voxels,
+        "dim {:?} holds {} voxels, sweep expects {}",
+        dim,
+        dim.0 * dim.1 * dim.2,
+        cfg.n_voxels
+    );
+    let snr = *cfg
+        .snrs
+        .get(snr_index)
+        .ok_or_else(|| anyhow::anyhow!("snr index {snr_index} out of range"))?;
+    let mut ccfg = CoordinatorConfig::sharded(man.nb, man.batch_infer, shards);
+    // Bound the pending queue to a couple of slices so streaming
+    // backpressure is actually exercised, not just configured.
+    ccfg.batcher.queue_capacity = stream_cfg.slices_in_flight.max(1) * dim.0 * dim.1 + 1;
+    ccfg.batcher.max_wait = std::time::Duration::from_millis(1);
+    let coord = Coordinator::start(
+        ccfg,
+        factory(&cfg.engine, man.clone(), weights.clone(), EngineOpts::default())?,
+    )?;
+    let spec = VolumeSpec {
+        dim,
+        bvals: man.bvalues.clone(),
+        snr,
+        seed: cfg.seed + snr_index as u64,
+    };
+    let vol = stream::stream_volume(&coord, &spec, Corruption::Clean, stream_cfg)?;
+    coord.shutdown();
+    let m = stream::volume_metrics(&vol);
+    Ok((
+        SnrRow {
+            snr,
+            rmse: m.rmse,
+            uncertainty: m.uncertainty,
+            calibration: m.calibration,
+        },
+        vol,
+    ))
 }
 
 /// Render the Fig. 6 table + ASCII plot.
@@ -275,6 +338,38 @@ mod tests {
                 "padding leaked into calibration for {p:?}"
             );
         }
+    }
+
+    /// ISSUE #7 acceptance: one SNR point of the sweep, run through the
+    /// streaming volume pipeline (chunked slice ingest → sharded
+    /// coordinator → out-of-order map assembly), is **bit-identical**
+    /// to the batch sweep at the same seed — RMSE, relative
+    /// uncertainty and calibration, all four parameters, `assert_eq!`
+    /// on the raw f64s.
+    #[test]
+    fn streamed_snr_point_matches_batch_sweep_bit_for_bit() {
+        use crate::testing::fixture;
+        let (man, w) = fixture::tiny_fixture();
+        let dim = (4usize, 4usize, 2usize);
+        let cfg = SweepConfig {
+            n_voxels: dim.0 * dim.1 * dim.2,
+            snrs: vec![20.0],
+            engine: "native".into(),
+            seed: 11,
+        };
+        let batch_rows = snr_sweep(&man, &w, &cfg).unwrap();
+        let scfg = StreamConfig {
+            slices_in_flight: 2,
+            ..Default::default()
+        };
+        let (row, vol) = snr_point_streamed(&man, &w, &cfg, 0, dim, 2, &scfg).unwrap();
+        assert_eq!(row.rmse, batch_rows[0].rmse, "RMSE diverged");
+        assert_eq!(row.uncertainty, batch_rows[0].uncertainty, "uncertainty diverged");
+        assert_eq!(row.calibration, batch_rows[0].calibration, "calibration diverged");
+        // The streamed run really went through the coordinator.
+        assert_eq!(vol.stats.voxels, cfg.n_voxels);
+        assert!(vol.stats.max_inflight_slices >= 1);
+        assert!(vol.stats.max_inflight_slices <= 2);
     }
 
     /// ISSUE #5 acceptance: the fig67 sweep runs end to end on the

@@ -47,39 +47,68 @@ pub fn draw_params(rng: &mut Pcg32) -> IvimParams {
     }
 }
 
-/// Generate `n` voxels at the given SNR (paper: 10,000 per SNR level).
-pub fn synth_dataset(n: usize, bvals: &[f64], snr: f64, seed: u64) -> Dataset {
-    let mut rng = Pcg32::new(seed);
-    let nb = bvals.len();
-    let mut signals = Vec::with_capacity(n * nb);
-    let mut truth = Vec::with_capacity(n);
-    let b0_idx: Vec<usize> = bvals
+/// Indices of the b == 0 acquisitions in a protocol (precompute once,
+/// share across every voxel of a dataset or streamed volume).
+pub fn b0_indices(bvals: &[f64]) -> Vec<usize> {
+    bvals
         .iter()
         .enumerate()
         .filter(|(_, &b)| b == 0.0)
         .map(|(i, _)| i)
-        .collect();
+        .collect()
+}
 
-    for _ in 0..n {
-        let p = draw_params(&mut rng);
-        let noise_std = p.s0 / snr;
-        let noisy: Vec<f64> = bvals
-            .iter()
-            .map(|&b| signal(b, &p) + noise_std * rng.normal())
-            .collect();
-        // Normalise by the measured b=0 signal (mean over b==0 rows).
-        let s_b0 = if b0_idx.is_empty() {
-            p.s0
+/// Generate ONE voxel into `out` (length = `bvals.len()`) and return its
+/// ground-truth parameters: draw the tuple, evaluate eq. (1) per
+/// b-value, add `S0/SNR` Gaussian noise, normalise by the measured b=0
+/// mean.  This is the single per-voxel generation step — `synth_dataset`
+/// and the streaming volume generator (`volume::SliceStream`) both call
+/// it against one sequential `Pcg32`, which is what makes a streamed
+/// volume **bit-identical** to the batch dataset at the same seed.
+/// `noisy` is caller-owned scratch (cleared here) so the streaming path
+/// allocates nothing per voxel.
+pub fn synth_voxel_into(
+    rng: &mut Pcg32,
+    bvals: &[f64],
+    b0_idx: &[usize],
+    snr: f64,
+    noisy: &mut Vec<f64>,
+    out: &mut [f32],
+) -> IvimParams {
+    debug_assert_eq!(out.len(), bvals.len());
+    let p = draw_params(rng);
+    let noise_std = p.s0 / snr;
+    noisy.clear();
+    noisy.extend(bvals.iter().map(|&b| signal(b, &p) + noise_std * rng.normal()));
+    // Normalise by the measured b=0 signal (mean over b==0 rows).
+    let s_b0 = if b0_idx.is_empty() {
+        p.s0
+    } else {
+        let m = b0_idx.iter().map(|&i| noisy[i]).sum::<f64>() / b0_idx.len() as f64;
+        if m.abs() < 1e-6 {
+            1e-6
         } else {
-            let m = b0_idx.iter().map(|&i| noisy[i]).sum::<f64>() / b0_idx.len() as f64;
-            if m.abs() < 1e-6 {
-                1e-6
-            } else {
-                m
-            }
-        };
-        signals.extend(noisy.iter().map(|&v| (v / s_b0) as f32));
-        truth.push(p);
+            m
+        }
+    };
+    for (slot, &v) in out.iter_mut().zip(noisy.iter()) {
+        *slot = (v / s_b0) as f32;
+    }
+    p
+}
+
+/// Generate `n` voxels at the given SNR (paper: 10,000 per SNR level).
+pub fn synth_dataset(n: usize, bvals: &[f64], snr: f64, seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed);
+    let nb = bvals.len();
+    let mut signals = vec![0.0f32; n * nb];
+    let mut truth = Vec::with_capacity(n);
+    let b0_idx = b0_indices(bvals);
+    let mut noisy = Vec::with_capacity(nb);
+
+    for i in 0..n {
+        let row = &mut signals[i * nb..(i + 1) * nb];
+        truth.push(synth_voxel_into(&mut rng, bvals, &b0_idx, snr, &mut noisy, row));
     }
 
     Dataset {
@@ -154,6 +183,38 @@ mod tests {
         // first column is the (self-normalised) b=0 acquisition
         let col0: Vec<f64> = (0..ds.len()).map(|i| ds.voxel(i)[0] as f64).collect();
         assert!((stats::mean(&col0) - 1.0).abs() < 0.05);
+    }
+
+    /// The streaming contract: generating voxel-by-voxel through
+    /// `synth_voxel_into` against one sequential RNG — in arbitrary
+    /// chunk sizes — reproduces `synth_dataset` bit for bit.  This is
+    /// what lets `volume::SliceStream` stream slices without ever
+    /// materialising the full signal volume while staying equal to the
+    /// batch generator at the same seed.
+    #[test]
+    fn chunked_per_voxel_generation_is_bit_identical_to_dataset() {
+        let b = bvalues_tiny();
+        let nb = b.len();
+        let n = 23;
+        let ds = synth_dataset(n, &b, 15.0, 42);
+        let mut rng = crate::util::rng::Pcg32::new(42);
+        let b0 = b0_indices(&b);
+        let mut noisy = Vec::new();
+        let mut signals = Vec::new();
+        let mut truth = Vec::new();
+        let mut row = vec![0.0f32; nb];
+        // uneven chunks: 7 + 7 + 7 + 2 voxels
+        let mut done = 0;
+        for chunk in [7usize, 7, 7, 2] {
+            for _ in 0..chunk {
+                truth.push(synth_voxel_into(&mut rng, &b, &b0, 15.0, &mut noisy, &mut row));
+                signals.extend_from_slice(&row);
+                done += 1;
+            }
+        }
+        assert_eq!(done, n);
+        assert_eq!(signals, ds.signals, "chunked generation must be bit-identical");
+        assert_eq!(truth, ds.truth);
     }
 
     #[test]

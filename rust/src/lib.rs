@@ -33,3 +33,4 @@ pub mod runtime;
 pub mod testing;
 pub mod train;
 pub mod util;
+pub mod volume;

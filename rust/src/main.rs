@@ -80,6 +80,36 @@ fn cli() -> Cli {
                 ],
             },
             CommandSpec {
+                name: "volume",
+                help: "stream a full 3-D volume through the coordinator, assembling \
+                       parameter/uncertainty maps slice by slice",
+                opts: vec![
+                    variant(),
+                    engine(),
+                    weights_opt(),
+                    train_steps(),
+                    opt("dim", "volume dimensions X,Y,Z", Some("16,16,8")),
+                    opt(
+                        "slices-in-flight",
+                        "max slices awaiting completion (backpressure cap)",
+                        Some("2"),
+                    ),
+                    opt("snr", "noise level", Some("20")),
+                    opt("seed", "volume generation seed", Some("11")),
+                    opt("batch", "dynamic batch size (default: variant batch)", None),
+                    opt("shards", "worker shards (engines) in the pool", Some("1")),
+                    opt(
+                        "out",
+                        "PGM stem: writes D mean/relative map stacks under this path",
+                        None,
+                    ),
+                    flag(
+                        "sweep",
+                        "run the clinical scenario sweep (protocol x corruption grid)",
+                    ),
+                ],
+            },
+            CommandSpec {
                 name: "fig6",
                 help: "Fig. 6 — RMSE vs evaluation SNR",
                 opts: vec![
@@ -380,6 +410,167 @@ fn run(args: &Args) -> anyhow::Result<()> {
                     s.deque_depth
                 );
             }
+            coord.shutdown();
+        }
+        "volume" => {
+            use uivim::volume::scenario::{scenario_grid, Corruption};
+            use uivim::volume::stream::{self, StreamConfig};
+            use uivim::volume::{parse_dim, VolumeSpec};
+            let rt = Runtime::cpu().ok();
+            let kind = args.get_or("engine", "native").to_string();
+            registry::default_registry().validate(&kind)?;
+            // CI and fresh checkouts have no AOT artifacts: fall back to
+            // the built-in tiny fixture (same pattern as the benches).
+            let (man, w) = match experiments::load_manifest(args.get_or("variant", "tiny")) {
+                Ok(man) => {
+                    let steps = args.get_usize("train-steps")?.unwrap_or(0);
+                    let w = experiments::resolve_weights(
+                        &man,
+                        rt.as_ref(),
+                        args.get("weights"),
+                        steps,
+                        20.0,
+                    )?;
+                    (man, w)
+                }
+                Err(e) => {
+                    eprintln!("no artifacts ({e}); using the built-in tiny fixture");
+                    uivim::testing::fixture::tiny_fixture()
+                }
+            };
+            let dim = parse_dim(args.get_or("dim", "16,16,8"))?;
+            let slices_in_flight = args.get_usize("slices-in-flight")?.unwrap_or(2).max(1);
+            let snr = args.get_f64("snr")?.unwrap_or(20.0);
+            let seed = args.get_usize("seed")?.unwrap_or(11) as u64;
+            let batch = args.get_usize("batch")?.unwrap_or(man.batch_infer).max(1);
+            let shards = args.get_usize("shards")?.unwrap_or(1).max(1);
+            let mut cfg = CoordinatorConfig::sharded(man.nb, batch, shards);
+            // Bound the pending queue to the in-flight slice budget so
+            // backpressure is real, not just configured.
+            cfg.batcher.queue_capacity =
+                (slices_in_flight * dim.0 * dim.1 + 1).max(batch + 1);
+            let opts = EngineOpts {
+                batch: Some(batch),
+                ..Default::default()
+            };
+            let coord =
+                Coordinator::start(cfg, registry::factory(&kind, man.clone(), w, opts)?)?;
+            let scfg = StreamConfig {
+                slices_in_flight,
+                ..Default::default()
+            };
+            if args.flag("sweep") {
+                let grid = scenario_grid(
+                    &man.bvalues,
+                    &[snr],
+                    &[
+                        Corruption::Clean,
+                        Corruption::ExtraNoise { std: 0.05 },
+                        Corruption::Motion { max_shift: 2 },
+                    ],
+                );
+                println!(
+                    "scenario sweep: {} scenarios over a {}x{}x{} volume",
+                    grid.len(),
+                    dim.0,
+                    dim.1,
+                    dim.2
+                );
+                for (i, sc) in grid.iter().enumerate() {
+                    let spec = VolumeSpec {
+                        dim,
+                        bvals: sc.bvals.clone(),
+                        snr: sc.snr,
+                        seed: seed + i as u64,
+                    };
+                    let vol = stream::stream_volume(&coord, &spec, sc.corruption, &scfg)?;
+                    let m = stream::volume_metrics(&vol);
+                    let mean_unc = m.uncertainty.iter().sum::<f64>() / 4.0;
+                    let mean_cal = m.calibration.iter().sum::<f64>() / 4.0;
+                    println!(
+                        "  {:<28} {:>9.0} vox/s | rel-unc {:.4} | calib {:+.3} | \
+                         stalls {} | confident {:.1}%",
+                        sc.name,
+                        vol.stats.voxels_per_s,
+                        mean_unc,
+                        mean_cal,
+                        vol.stats.stalls,
+                        100.0 * vol.confident_voxels as f64 / vol.n_voxels() as f64
+                    );
+                }
+            } else {
+                let spec = VolumeSpec {
+                    dim,
+                    bvals: man.bvalues.clone(),
+                    snr,
+                    seed,
+                };
+                let vol = stream::stream_volume(&coord, &spec, Corruption::Clean, &scfg)?;
+                let m = stream::volume_metrics(&vol);
+                println!(
+                    "{}x{}x{} volume ({} voxels, {} slices) in {:.2}s -> {:.0} vox/s",
+                    dim.0,
+                    dim.1,
+                    dim.2,
+                    vol.stats.voxels,
+                    vol.stats.slices,
+                    vol.stats.elapsed_s,
+                    vol.stats.voxels_per_s
+                );
+                println!(
+                    "backpressure: max {} slices in flight (cap {}) | max queue {} | \
+                     max deque depth {} | {} stalls",
+                    vol.stats.max_inflight_slices,
+                    slices_in_flight,
+                    vol.stats.max_queue_depth,
+                    vol.stats.max_deque_depth,
+                    vol.stats.stalls
+                );
+                println!(
+                    "memory: lease high-water {} buffers (volume-depth independent)",
+                    vol.stats.lease_high_water
+                );
+                for p in Param::ALL {
+                    let i = p.index();
+                    let st = vol.maps[i].relative.stats();
+                    println!(
+                        "  {:<6} rmse {:.6} | rel-uncertainty {:.4} (map: min {:.4} \
+                         max {:.4}) | calib {:+.3}",
+                        p.name(),
+                        m.rmse[i],
+                        m.uncertainty[i],
+                        st.min,
+                        st.max,
+                        m.calibration[i]
+                    );
+                }
+                if let Some(out) = args.get("out") {
+                    let stem = std::path::PathBuf::from(out);
+                    let d = &vol.maps[Param::D.index()];
+                    let mut written =
+                        d.mean.write_pgm_stack(&stem.with_file_name(format!(
+                            "{}_d_mean",
+                            stem.file_name().and_then(|s| s.to_str()).unwrap_or("map")
+                        )))?;
+                    written.extend(d.relative.write_pgm_stack(&stem.with_file_name(
+                        format!(
+                            "{}_d_relative",
+                            stem.file_name().and_then(|s| s.to_str()).unwrap_or("map")
+                        ),
+                    ))?);
+                    println!("wrote {} PGM slices under {}", written.len(), stem.display());
+                }
+            }
+            let snap = coord.snapshot();
+            println!(
+                "coordinator: {} slices ingested | {} volumes completed | {} stalls | \
+                 {} local / {} stolen batch claims",
+                snap.slices_ingested,
+                snap.volumes_completed,
+                snap.stream_stalls,
+                snap.local_batches(),
+                snap.stolen_batches()
+            );
             coord.shutdown();
         }
         "fig6" | "fig7" => {

@@ -35,6 +35,28 @@ impl VolumeMap {
         (z * self.dim.1 + y) * self.dim.0 + x
     }
 
+    /// Voxels per z-slice.
+    #[inline]
+    pub fn slice_voxels(&self) -> usize {
+        self.dim.0 * self.dim.1
+    }
+
+    /// Flat index of in-slice voxel `v` (row-major over y then x) of
+    /// slice `z` — the incremental-assembly address used by streaming
+    /// drivers, matching `volume::VolumeSpec::flat_index`.
+    #[inline]
+    pub fn flat_index(&self, z: usize, v: usize) -> usize {
+        z * self.slice_voxels() + v
+    }
+
+    /// Write one voxel by (slice, in-slice) address. Streaming drivers
+    /// call this as responses complete out of order.
+    #[inline]
+    pub fn set_flat(&mut self, z: usize, v: usize, value: f64) {
+        let i = self.flat_index(z, v);
+        self.data[i] = value;
+    }
+
     pub fn set(&mut self, x: usize, y: usize, z: usize, v: f64) {
         let i = self.idx(x, y, z);
         self.data[i] = v;
@@ -56,21 +78,53 @@ impl VolumeMap {
         out
     }
 
+    /// Summary statistics over the map, NaN/Inf-aware: `min`/`max`/
+    /// `mean` cover the finite values only; `finite` counts them.
+    pub fn stats(&self) -> MapStats {
+        let mut s = MapStats {
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            mean: 0.0,
+            finite: 0,
+            total: self.data.len(),
+        };
+        let mut sum = 0.0;
+        for &v in &self.data {
+            if v.is_finite() {
+                s.min = s.min.min(v);
+                s.max = s.max.max(v);
+                sum += v;
+                s.finite += 1;
+            }
+        }
+        if s.finite == 0 {
+            s.min = 0.0;
+            s.max = 0.0;
+        } else {
+            s.mean = sum / s.finite as f64;
+        }
+        s
+    }
+
     /// Write one z-slice as an 8-bit PGM, scaled to the volume's
-    /// min..max range (constant volumes render mid-grey).
+    /// finite min..max range. The normalisation is defined at every
+    /// edge: non-finite voxels render black (0), and a constant or
+    /// all-non-finite volume renders its finite voxels mid-grey (128)
+    /// instead of dividing by a zero range.
     pub fn write_pgm_slice(&self, z: usize, path: &Path) -> anyhow::Result<()> {
         let (nx, ny, nz) = self.dim;
         anyhow::ensure!(z < nz, "slice {z} out of range (nz={nz})");
-        let lo = self.data.iter().cloned().fold(f64::INFINITY, f64::min);
-        let hi = self.data.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-        let span = hi - lo;
+        let st = self.stats();
+        let span = st.max - st.min;
         let mut bytes = Vec::with_capacity(64 + nx * ny);
         bytes.extend_from_slice(format!("P5\n{nx} {ny}\n255\n").as_bytes());
         for v in self.slice_z(z) {
-            let g = if span <= 0.0 {
+            let g = if !v.is_finite() {
+                0u8
+            } else if span <= 0.0 {
                 128u8
             } else {
-                (255.0 * (v - lo) / span).round().clamp(0.0, 255.0) as u8
+                (255.0 * (v - st.min) / span).round().clamp(0.0, 255.0) as u8
             };
             bytes.push(g);
         }
@@ -96,6 +150,21 @@ impl VolumeMap {
         }
         Ok(paths)
     }
+}
+
+/// NaN/Inf-aware summary of a map (see `VolumeMap::stats`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MapStats {
+    /// Minimum over finite values (0.0 when none are finite).
+    pub min: f64,
+    /// Maximum over finite values (0.0 when none are finite).
+    pub max: f64,
+    /// Mean over finite values (0.0 when none are finite).
+    pub mean: f64,
+    /// Number of finite values.
+    pub finite: usize,
+    /// Total voxel count.
+    pub total: usize,
 }
 
 #[cfg(test)]
@@ -144,6 +213,81 @@ mod tests {
         m.write_pgm_slice(0, &path).unwrap();
         let bytes = std::fs::read(&path).unwrap();
         assert_eq!(*bytes.last().unwrap(), 128);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn set_flat_matches_xyz_addressing() {
+        let mut m = VolumeMap::new((3, 2, 2));
+        // slice 1, in-slice voxel 4 == (x=1, y=1, z=1)
+        m.set_flat(1, 4, 7.5);
+        assert_eq!(m.get(1, 1, 1), 7.5);
+        assert_eq!(m.flat_index(1, 4), m.idx(1, 1, 1));
+        assert_eq!(m.slice_voxels(), 6);
+    }
+
+    #[test]
+    fn stats_ignore_non_finite() {
+        let m = VolumeMap::from_values(
+            (2, 2, 1),
+            vec![1.0, f64::NAN, 3.0, f64::INFINITY],
+        )
+        .unwrap();
+        let s = m.stats();
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.finite, 2);
+        assert_eq!(s.total, 4);
+    }
+
+    #[test]
+    fn stats_of_all_non_finite_are_defined() {
+        let m = VolumeMap::from_values((2, 1, 1), vec![f64::NAN, f64::NEG_INFINITY]).unwrap();
+        let s = m.stats();
+        assert_eq!((s.min, s.max, s.mean, s.finite), (0.0, 0.0, 0.0, 0));
+    }
+
+    #[test]
+    fn pgm_with_nan_and_inf_still_normalises() {
+        // NaN must not poison the range fold: the finite gradient
+        // still spans 0..255 and non-finite voxels render black.
+        let m = VolumeMap::from_values(
+            (4, 1, 1),
+            vec![0.0, f64::NAN, 2.0, f64::INFINITY],
+        )
+        .unwrap();
+        let dir = std::env::temp_dir().join("uivim_maps_test");
+        let path = dir.join("nan.pgm");
+        m.write_pgm_slice(0, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let px = &bytes["P5\n4 1\n255\n".len()..];
+        assert_eq!(px, &[0u8, 0, 255, 0], "finite span scaled, non-finite black");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn pgm_of_all_nan_volume_is_defined() {
+        let m = VolumeMap::from_values((2, 1, 1), vec![f64::NAN; 2]).unwrap();
+        let dir = std::env::temp_dir().join("uivim_maps_test");
+        let path = dir.join("allnan.pgm");
+        m.write_pgm_slice(0, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let px = &bytes["P5\n2 1\n255\n".len()..];
+        assert_eq!(px, &[0u8, 0], "all-NaN renders black, no div-by-zero");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn pgm_constant_with_one_nan_renders_mid_grey_and_black() {
+        // Finite values constant (span 0) → 128; the NaN voxel → 0.
+        let m = VolumeMap::from_values((3, 1, 1), vec![5.0, f64::NAN, 5.0]).unwrap();
+        let dir = std::env::temp_dir().join("uivim_maps_test");
+        let path = dir.join("constnan.pgm");
+        m.write_pgm_slice(0, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let px = &bytes["P5\n3 1\n255\n".len()..];
+        assert_eq!(px, &[128u8, 0, 128]);
         std::fs::remove_file(&path).ok();
     }
 

@@ -23,6 +23,7 @@
 //! route, a leaked padding row, or a recycled-buffer aliasing bug all
 //! fail loudly at the step that caused them.
 
+use std::collections::BTreeSet;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -37,6 +38,13 @@ pub enum Op {
     /// `n` requests arrive (leased buffers, sequential ids) at the
     /// current virtual time.
     Arrive(usize),
+    /// A streaming-volume driver ingests one slice of `n` voxels: the
+    /// whole slice is admitted only if it fits under the configured
+    /// in-flight cap (`SimConfig::inflight_cap`); otherwise the slice
+    /// is **deferred** (counted, no ids consumed) — the modelled driver
+    /// drains completions and retries, exactly the
+    /// `volume::stream` backpressure rule.
+    IngestSlice(usize),
     /// Advance virtual time by this many microseconds (drives the
     /// batcher's deadline flush — the harness's only notion of waiting).
     Tick(u64),
@@ -92,6 +100,12 @@ pub struct SimResult {
     /// Batch signal-buffer pool high-water / idle.
     pub batch_created: usize,
     pub batch_idle: usize,
+    /// Highest number of streamed (slice-ingested) requests in flight
+    /// at once — admitted but not yet served, failed or rejected.
+    pub max_inflight: usize,
+    /// Slices refused admission by the in-flight cap (each is one
+    /// driver stall-and-drain event).
+    pub deferred_slices: usize,
 }
 
 /// Harness configuration.
@@ -104,6 +118,9 @@ pub struct SimConfig {
     /// Batcher deadline, in virtual microseconds.
     pub max_wait_us: u64,
     pub queue_capacity: usize,
+    /// In-flight cap for `Op::IngestSlice` (streamed requests admitted
+    /// but not yet completed). Unlimited by default.
+    pub inflight_cap: usize,
     /// Seeds the dispatcher's p2c stream, each shard's steal-victim
     /// stream, and nothing else.
     pub seed: u64,
@@ -117,6 +134,7 @@ impl Default for SimConfig {
             batch_size: 4,
             max_wait_us: 100,
             queue_capacity: 10_000,
+            inflight_cap: usize::MAX,
             seed: 0xC0FFEE,
         }
     }
@@ -136,6 +154,10 @@ pub struct Sim {
     shard_rngs: Vec<Pcg32>,
     alive: Vec<bool>,
     next_id: u64,
+    /// Ids admitted through `Op::IngestSlice` and not yet completed.
+    streamed: BTreeSet<u64>,
+    /// `streamed.len()`, tracked alongside for the gauge updates.
+    inflight: usize,
     out: SimResult,
 }
 
@@ -172,6 +194,8 @@ impl Sim {
                 .collect(),
             alive: vec![true; cfg.shards.max(1)],
             next_id: 0,
+            streamed: BTreeSet::new(),
+            inflight: 0,
             out: SimResult::default(),
             cfg,
         }
@@ -212,6 +236,21 @@ impl Sim {
     pub fn is_closed(&self) -> bool {
         self.deques.is_closed()
     }
+    /// Streamed (slice-ingested) requests admitted but not yet served,
+    /// failed or rejected.
+    pub fn inflight(&self) -> usize {
+        self.inflight
+    }
+
+    /// Record a failed batch, releasing any streamed ids it carried.
+    fn fail_tags(&mut self, tags: &[u64]) {
+        for &id in tags {
+            if self.streamed.remove(&id) {
+                self.inflight -= 1;
+            }
+            self.out.failed.push(id);
+        }
+    }
 
     /// Execute one atomic protocol step.
     pub fn step(&mut self, op: Op) {
@@ -233,6 +272,33 @@ impl Sim {
                     }
                 }
             }
+            Op::IngestSlice(n) => {
+                // All-or-nothing admission under the in-flight cap —
+                // the streaming driver's backpressure gate.
+                if self.inflight + n > self.cfg.inflight_cap {
+                    self.out.deferred_slices += 1;
+                } else {
+                    for _ in 0..n {
+                        let id = self.next_id;
+                        self.next_id += 1;
+                        let mut signals = self.request_pool.take(self.cfg.nb);
+                        signals.resize(self.cfg.nb, Self::fingerprint(id));
+                        let pend = Pending {
+                            signals,
+                            tag: id,
+                            enqueued: self.virtual_now(),
+                        };
+                        if let Err(p) = self.batcher.push(pend) {
+                            self.out.rejected.push(id);
+                            self.request_pool.put(p.signals);
+                        } else {
+                            self.streamed.insert(id);
+                            self.inflight += 1;
+                            self.out.max_inflight = self.out.max_inflight.max(self.inflight);
+                        }
+                    }
+                }
+            }
             Op::Tick(us) => self.now_us += us,
             Op::Cut => {
                 while self.batcher.ready(self.virtual_now()) {
@@ -240,7 +306,7 @@ impl Sim {
                     self.out.cut_order.push(batch.tags.clone());
                     if let Err(batch) = self.deques.push_balanced(batch, &mut self.dispatch_rng)
                     {
-                        self.out.failed.extend(batch.tags.iter().copied());
+                        self.fail_tags(&batch.tags);
                     }
                 }
             }
@@ -249,7 +315,7 @@ impl Sim {
                     let Some(batch) = self.batcher.cut() else { break };
                     self.out.cut_order.push(batch.tags.clone());
                     if let Err(batch) = self.deques.push_to(k, batch) {
-                        self.out.failed.extend(batch.tags.iter().copied());
+                        self.fail_tags(&batch.tags);
                     }
                 }
             }
@@ -282,7 +348,7 @@ impl Sim {
                     self.out.cut_order.push(batch.tags.clone());
                     if let Err(batch) = self.deques.push_balanced(batch, &mut self.dispatch_rng)
                     {
-                        self.out.failed.extend(batch.tags.iter().copied());
+                        self.fail_tags(&batch.tags);
                     }
                 }
                 self.deques.close();
@@ -294,7 +360,7 @@ impl Sim {
                         // dead-pool failsafe: last exit closes + drains
                         self.deques.close();
                         for batch in self.deques.drain() {
-                            self.out.failed.extend(batch.tags.iter().copied());
+                            self.fail_tags(&batch.tags);
                         }
                     }
                 }
@@ -319,6 +385,9 @@ impl Sim {
                 r.iter().all(|&v| v == Self::fingerprint(id)),
                 "request {id} served with another request's signals (row {row}: {r:?})"
             );
+            if self.streamed.remove(&id) {
+                self.inflight -= 1;
+            }
             self.out.served.push(ServedRow { shard, id, claim });
         }
         for row in batch.real..self.cfg.batch_size {
@@ -603,6 +672,102 @@ mod tests {
         assert_eq!(r.lease_created, 4, "wave 2 allocated no request buffers");
         assert_eq!(r.batch_created, 1, "wave 2 allocated no batch buffers");
         assert_conservation(&r, 8);
+    }
+
+    /// ISSUE #7: slice arrivals racing shutdown.  A slice already
+    /// flushed to a deque before the close is served (and its in-flight
+    /// accounting released on completion); a slice ingested after the
+    /// close fails fast at the flush and releases its accounting too —
+    /// the streaming driver never waits on voxels that can't complete.
+    #[test]
+    fn slice_arrivals_racing_shutdown_fail_fast_and_release_inflight() {
+        let cfg = SimConfig {
+            shards: 2,
+            batch_size: 4,
+            ..Default::default()
+        };
+        let mut sim = Sim::new(cfg);
+        sim.step(Op::IngestSlice(4)); // slice A: ids 0..4, one full batch
+        assert_eq!(sim.inflight(), 4);
+        sim.step(Op::Shutdown); // flushes slice A to a deque, closes
+        assert!(sim.is_closed());
+        assert_eq!(sim.inflight(), 4, "queued-but-unserved is still in flight");
+        sim.step(Op::IngestSlice(4)); // slice B lands in the batcher post-close
+        assert_eq!(sim.inflight(), 8);
+        sim.step(Op::Shutdown); // flush hits closed deques: fail fast
+        assert_eq!(sim.inflight(), 4, "failed slice released its accounting");
+        sim.step(Op::Pop(0));
+        sim.step(Op::Pop(1));
+        assert_eq!(sim.inflight(), 0, "served slice released its accounting");
+        let r = sim.finish();
+        assert_conservation(&r, 8);
+        assert_eq!(ids(&r.served), vec![0, 1, 2, 3], "pre-close slice served");
+        assert_eq!(r.failed, vec![4, 5, 6, 7], "post-close slice failed fast");
+        assert_eq!(r.max_inflight, 8);
+    }
+
+    /// ISSUE #7: out-of-order completion.  Two slices are cut onto one
+    /// shard's deque; LIFO local pop serves the *newer* slice first and
+    /// a cross-shard steal completes the older one — service order is
+    /// scrambled relative to ingest order, yet every voxel of the
+    /// "volume" completes exactly once (id-keyed assembly is order-
+    /// independent, the property `volume::stream` relies on).
+    #[test]
+    fn out_of_order_completion_assembles_the_full_volume() {
+        let cfg = SimConfig {
+            shards: 2,
+            batch_size: 4,
+            ..Default::default()
+        };
+        let mut sim = Sim::new(cfg);
+        sim.step(Op::IngestSlice(4)); // slice A: ids 0..4
+        sim.step(Op::IngestSlice(4)); // slice B: ids 4..8
+        sim.step(Op::Tick(1_000));
+        sim.step(Op::CutTo(1)); // both batches pile on shard 1
+        sim.step(Op::PopLocal(1)); // LIFO: slice B completes first
+        sim.step(Op::Pop(0)); // shard 0 steals slice A (FIFO)
+        let r = sim.finish();
+        assert_conservation(&r, 8);
+        let served = ids(&r.served);
+        assert_eq!(&served[..4], &[4, 5, 6, 7], "newer slice completed first");
+        assert_eq!(&served[4..], &[0, 1, 2, 3], "older slice stolen after");
+        assert_ne!(served, (0..8).collect::<Vec<_>>(), "order really scrambled");
+        let mut sorted = served;
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..8).collect::<Vec<_>>(), "volume fully assembled");
+        assert_eq!(r.stolen, 1);
+    }
+
+    /// ISSUE #7: the in-flight cap is never exceeded — a slice that
+    /// would overflow it is deferred (a counted stall), admitted only
+    /// after completions free room.  Fixed seed, bit-for-bit replay.
+    #[test]
+    fn inflight_cap_is_never_exceeded() {
+        let cfg = SimConfig {
+            shards: 1,
+            batch_size: 4,
+            inflight_cap: 8,
+            ..Default::default()
+        };
+        let script = [
+            Op::IngestSlice(4), // ids 0..4
+            Op::IngestSlice(4), // ids 4..8 — at the cap
+            Op::IngestSlice(4), // would exceed: deferred, no ids consumed
+            Op::Cut,            // two full batches to the deque
+            Op::Pop(0),
+            Op::Pop(0), // both served: in-flight back to 0
+            Op::IngestSlice(4), // ids 8..12 — now admitted
+            Op::Cut,
+            Op::Pop(0),
+        ];
+        let a = run_script(cfg, &script);
+        let b = run_script(cfg, &script);
+        assert_eq!(a, b, "fixed seed must replay bit-for-bit");
+        assert_eq!(a.deferred_slices, 1, "the overflow slice was deferred");
+        assert_eq!(a.max_inflight, 8, "cap reached but never exceeded");
+        assert_conservation(&a, 12);
+        assert_eq!(a.served.len(), 12);
+        assert!(a.failed.is_empty() && a.rejected.is_empty());
     }
 
     /// Satellite property: over randomized arrival/deadline/claim

@@ -1,0 +1,226 @@
+//! Volume-scale streaming workloads (ROADMAP direction #2).
+//!
+//! A clinical IVIM acquisition is a full 3D multi-slice volume —
+//! millions of voxels per patient — not the paper-scale flat batches the
+//! synth generator produces. This module opens that workload *without*
+//! ever materialising a volume's f32 signal block: [`SliceStream`]
+//! generates one z-slice at a time into caller-owned scratch, so peak
+//! signal memory is `slice_voxels × nb` floats regardless of depth.
+//!
+//! The streaming contract (pinned by tests here and in `ivim::synth`):
+//! a `SliceStream` over `VolumeSpec { dim: (x, y, z), .. }` drives the
+//! same sequential `Pcg32::new(seed)` through the same per-voxel
+//! generator (`ivim::synth::synth_voxel_into`) as
+//! `synth_dataset(x*y*z, bvals, snr, seed)` — so the streamed volume is
+//! **bit-identical** to the batch dataset at the same seed, voxel `v` of
+//! slice `z` mapping to flat index `z * slice_voxels + v`. That identity
+//! is what lets `experiments::fig67` re-express an SNR point over the
+//! streaming path and assert equality against the batch sweep.
+//!
+//! Submodules: [`scenario`] (SNR × protocol × corruption grid) and
+//! [`stream`] (the coordinator-backed streaming driver with bounded
+//! in-flight depth and incremental map assembly).
+
+pub mod scenario;
+pub mod stream;
+
+use crate::ivim::synth::{b0_indices, synth_voxel_into};
+use crate::ivim::IvimParams;
+use crate::util::rng::Pcg32;
+
+/// Geometry + acquisition protocol of one synthetic volume.
+#[derive(Debug, Clone)]
+pub struct VolumeSpec {
+    /// (x, y, z) — x·y voxels per slice, z slices.
+    pub dim: (usize, usize, usize),
+    /// b-value protocol (one acquisition per entry).
+    pub bvals: Vec<f64>,
+    pub snr: f64,
+    pub seed: u64,
+}
+
+impl VolumeSpec {
+    pub fn n_voxels(&self) -> usize {
+        self.dim.0 * self.dim.1 * self.dim.2
+    }
+    /// Voxels per z-slice — the streaming chunk size.
+    pub fn slice_voxels(&self) -> usize {
+        self.dim.0 * self.dim.1
+    }
+    pub fn slices(&self) -> usize {
+        self.dim.2
+    }
+    /// Flat (row-major, z-major) voxel index of `(slice z, in-slice v)`;
+    /// matches `metrics::maps::VolumeMap` layout and `synth_dataset`
+    /// generation order.
+    pub fn flat_index(&self, z: usize, v: usize) -> usize {
+        z * self.slice_voxels() + v
+    }
+}
+
+/// Chunked slice generator: yields one z-slice of normalised signals +
+/// ground truth per call, never holding more than one slice of f32
+/// signal data. Bit-identical to `synth_dataset` at the same seed (see
+/// module docs).
+pub struct SliceStream<'a> {
+    spec: &'a VolumeSpec,
+    rng: Pcg32,
+    b0_idx: Vec<usize>,
+    noisy: Vec<f64>,
+    next_z: usize,
+}
+
+impl<'a> SliceStream<'a> {
+    pub fn new(spec: &'a VolumeSpec) -> Self {
+        SliceStream {
+            spec,
+            rng: Pcg32::new(spec.seed),
+            b0_idx: b0_indices(&spec.bvals),
+            noisy: Vec::with_capacity(spec.bvals.len()),
+            next_z: 0,
+        }
+    }
+
+    /// Index of the slice the next `next_into` call will produce.
+    pub fn next_z(&self) -> usize {
+        self.next_z
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.spec.slices() - self.next_z
+    }
+
+    /// Generate the next slice into caller-owned buffers (cleared first,
+    /// then filled with `slice_voxels` rows of `nb` signals and as many
+    /// truth tuples). Returns the slice index, or `None` when the
+    /// volume is exhausted. The buffers reach steady-state capacity
+    /// after the first call — no per-slice allocation afterwards.
+    pub fn next_into(
+        &mut self,
+        signals: &mut Vec<f32>,
+        truth: &mut Vec<IvimParams>,
+    ) -> Option<usize> {
+        if self.next_z >= self.spec.slices() {
+            return None;
+        }
+        let z = self.next_z;
+        let nb = self.spec.bvals.len();
+        let nv = self.spec.slice_voxels();
+        signals.clear();
+        signals.resize(nv * nb, 0.0);
+        truth.clear();
+        for v in 0..nv {
+            let row = &mut signals[v * nb..(v + 1) * nb];
+            truth.push(synth_voxel_into(
+                &mut self.rng,
+                &self.spec.bvals,
+                &self.b0_idx,
+                self.spec.snr,
+                &mut self.noisy,
+                row,
+            ));
+        }
+        self.next_z += 1;
+        Some(z)
+    }
+}
+
+/// Parse a `--dim X,Y,Z` argument.
+pub fn parse_dim(s: &str) -> anyhow::Result<(usize, usize, usize)> {
+    let parts: Vec<&str> = s.split(',').collect();
+    if parts.len() != 3 {
+        anyhow::bail!("--dim expects X,Y,Z (got {s:?})");
+    }
+    let p = |t: &str| -> anyhow::Result<usize> {
+        let v: usize = t
+            .trim()
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad dim component {t:?}: {e}"))?;
+        if v == 0 {
+            anyhow::bail!("dim components must be > 0 (got {t:?})");
+        }
+        Ok(v)
+    };
+    Ok((p(parts[0])?, p(parts[1])?, p(parts[2])?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ivim::bvalues_tiny;
+    use crate::ivim::synth::synth_dataset;
+
+    fn spec(dim: (usize, usize, usize)) -> VolumeSpec {
+        VolumeSpec {
+            dim,
+            bvals: bvalues_tiny(),
+            snr: 20.0,
+            seed: 9,
+        }
+    }
+
+    #[test]
+    fn slice_stream_is_bit_identical_to_batch_dataset() {
+        let s = spec((3, 4, 5));
+        let ds = synth_dataset(s.n_voxels(), &s.bvals, s.snr, s.seed);
+        let mut stream = SliceStream::new(&s);
+        let mut signals = Vec::new();
+        let mut truth = Vec::new();
+        let nb = s.bvals.len();
+        let nv = s.slice_voxels();
+        let mut seen = 0;
+        while let Some(z) = stream.next_into(&mut signals, &mut truth) {
+            assert_eq!(signals.len(), nv * nb);
+            assert_eq!(truth.len(), nv);
+            for v in 0..nv {
+                let flat = s.flat_index(z, v);
+                assert_eq!(
+                    &signals[v * nb..(v + 1) * nb],
+                    ds.voxel(flat),
+                    "slice {z} voxel {v}"
+                );
+                assert_eq!(truth[v], ds.truth[flat]);
+            }
+            seen += 1;
+        }
+        assert_eq!(seen, s.slices());
+        assert!(stream.next_into(&mut signals, &mut truth).is_none());
+    }
+
+    #[test]
+    fn buffers_hold_exactly_one_slice_and_stop_growing() {
+        let s = spec((4, 4, 6));
+        let mut stream = SliceStream::new(&s);
+        let mut signals = Vec::new();
+        let mut truth = Vec::new();
+        stream.next_into(&mut signals, &mut truth).unwrap();
+        let sig_cap = signals.capacity();
+        let truth_cap = truth.capacity();
+        assert_eq!(signals.len(), s.slice_voxels() * s.bvals.len());
+        while stream.next_into(&mut signals, &mut truth).is_some() {}
+        // Steady state: reused scratch, zero growth after the first slice.
+        assert_eq!(signals.capacity(), sig_cap);
+        assert_eq!(truth.capacity(), truth_cap);
+    }
+
+    #[test]
+    fn remaining_and_next_z_track_progress() {
+        let s = spec((2, 2, 3));
+        let mut stream = SliceStream::new(&s);
+        let (mut sig, mut tr) = (Vec::new(), Vec::new());
+        assert_eq!(stream.next_z(), 0);
+        assert_eq!(stream.remaining(), 3);
+        stream.next_into(&mut sig, &mut tr);
+        assert_eq!(stream.next_z(), 1);
+        assert_eq!(stream.remaining(), 2);
+    }
+
+    #[test]
+    fn parse_dim_accepts_and_rejects() {
+        assert_eq!(parse_dim("16,16,8").unwrap(), (16, 16, 8));
+        assert_eq!(parse_dim(" 4 , 5 , 6 ").unwrap(), (4, 5, 6));
+        assert!(parse_dim("16,16").is_err());
+        assert!(parse_dim("16,16,0").is_err());
+        assert!(parse_dim("a,b,c").is_err());
+    }
+}

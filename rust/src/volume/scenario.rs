@@ -1,0 +1,177 @@
+//! Clinical scenario sweep: SNR × b-value protocol × corruption.
+//!
+//! Voxel-wise IVIM UQ frameworks (Casali et al., arXiv 2508.04588)
+//! evaluate uncertainty under acquisition sweeps — SNR levels, b-value
+//! protocols, and noise/motion corruption. This module generates that
+//! grid as `Scenario` values a streaming driver can run one volume at a
+//! time.
+//!
+//! Corruptions are applied to the *normalised* signal slice, after
+//! generation, from a corruption RNG stream that is separate from the
+//! generation RNG — so `Corruption::Clean` consumes no randomness and a
+//! clean streamed volume stays bit-identical to the batch dataset at
+//! the same seed (the contract `experiments::fig67` asserts).
+
+use crate::util::rng::Pcg32;
+
+/// Per-slice signal corruption, applied post-normalisation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Corruption {
+    /// No corruption; consumes no RNG draws.
+    Clean,
+    /// Additive Gaussian noise of the given std on the normalised
+    /// signal (models scanner/thermal noise beyond the SNR model).
+    ExtraNoise { std: f64 },
+    /// Bulk in-plane motion: circularly shift the slice's voxels by a
+    /// per-slice random offset in `[1, max_shift]`. The truth map is
+    /// NOT shifted — the misregistration between signal and truth is
+    /// the artifact.
+    Motion { max_shift: usize },
+}
+
+impl Corruption {
+    pub fn name(&self) -> String {
+        match self {
+            Corruption::Clean => "clean".to_string(),
+            Corruption::ExtraNoise { std } => format!("noise{std}"),
+            Corruption::Motion { max_shift } => format!("motion{max_shift}"),
+        }
+    }
+
+    /// Corrupt one slice of normalised signals in place.
+    /// `signals` is row-major `[slice_voxels][nb]`.
+    pub fn apply(&self, rng: &mut Pcg32, signals: &mut [f32], nb: usize) {
+        match *self {
+            Corruption::Clean => {}
+            Corruption::ExtraNoise { std } => {
+                for s in signals.iter_mut() {
+                    *s = (*s as f64 + std * rng.normal()) as f32;
+                }
+            }
+            Corruption::Motion { max_shift } => {
+                if nb == 0 || signals.is_empty() || max_shift == 0 {
+                    return;
+                }
+                let nv = signals.len() / nb;
+                let shift = 1 + rng.below(max_shift.min(u32::MAX as usize) as u32) as usize;
+                let shift = shift % nv.max(1);
+                if shift == 0 {
+                    return;
+                }
+                // Rotate whole voxel rows so each row stays a coherent
+                // acquisition vector.
+                signals.rotate_right(shift * nb);
+            }
+        }
+    }
+}
+
+/// One cell of the sweep grid: a named (SNR, protocol, corruption)
+/// combination.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub snr: f64,
+    pub bvals: Vec<f64>,
+    pub corruption: Corruption,
+}
+
+/// A length-preserving protocol variant: scale every b-value by a
+/// factor (b = 0 rows stay 0, so normalisation still finds them). Same
+/// `nb` for every variant means one engine build serves the whole grid.
+fn scale_protocol(base: &[f64], factor: f64) -> Vec<f64> {
+    base.iter().map(|&b| b * factor).collect()
+}
+
+/// Build the full scenario grid: for each SNR, the clinical protocol
+/// plus low-b (×0.5) and high-b (×1.5) variants, crossed with the
+/// given corruptions. Grid size = `snrs.len() × 3 × corruptions.len()`.
+pub fn scenario_grid(base_bvals: &[f64], snrs: &[f64], corruptions: &[Corruption]) -> Vec<Scenario> {
+    let protocols: [(&str, f64); 3] = [("clinical", 1.0), ("lowb", 0.5), ("highb", 1.5)];
+    let mut out = Vec::with_capacity(snrs.len() * protocols.len() * corruptions.len());
+    for &snr in snrs {
+        for &(pname, factor) in &protocols {
+            let bvals = scale_protocol(base_bvals, factor);
+            for &c in corruptions {
+                out.push(Scenario {
+                    name: format!("snr{snr}_{pname}_{}", c.name()),
+                    snr,
+                    bvals: bvals.clone(),
+                    corruption: c,
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ivim::bvalues_tiny;
+
+    #[test]
+    fn clean_consumes_no_rng_and_changes_nothing() {
+        let mut rng = Pcg32::new(7);
+        let mut twin = Pcg32::new(7);
+        let mut sig = vec![0.5f32; 12];
+        let before = sig.clone();
+        Corruption::Clean.apply(&mut rng, &mut sig, 3);
+        assert_eq!(sig, before);
+        // RNG untouched: next draw matches the twin's first draw.
+        assert_eq!(rng.normal(), twin.normal());
+    }
+
+    #[test]
+    fn extra_noise_perturbs_deterministically() {
+        let base = vec![1.0f32; 8];
+        let mut a = base.clone();
+        let mut b = base.clone();
+        Corruption::ExtraNoise { std: 0.1 }.apply(&mut Pcg32::new(3), &mut a, 4);
+        Corruption::ExtraNoise { std: 0.1 }.apply(&mut Pcg32::new(3), &mut b, 4);
+        assert_eq!(a, b, "same seed, same corruption");
+        assert_ne!(a, base, "noise must actually perturb");
+    }
+
+    #[test]
+    fn motion_rotates_whole_rows() {
+        let nb = 3;
+        // 4 voxels with distinct row signatures.
+        let mut sig: Vec<f32> = (0..4 * nb).map(|i| (i / nb) as f32).collect();
+        Corruption::Motion { max_shift: 2 }.apply(&mut Pcg32::new(1), &mut sig, nb);
+        // Every row still holds one voxel's (constant) signature.
+        for v in 0..4 {
+            let row = &sig[v * nb..(v + 1) * nb];
+            assert!(row.iter().all(|&x| x == row[0]), "row {v} torn: {row:?}");
+        }
+        // It's a permutation of the original voxel ids.
+        let mut ids: Vec<i32> = (0..4).map(|v| sig[v * nb] as i32).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn grid_covers_the_cross_product() {
+        let b = bvalues_tiny();
+        let grid = scenario_grid(
+            &b,
+            &[5.0, 20.0],
+            &[Corruption::Clean, Corruption::ExtraNoise { std: 0.05 }],
+        );
+        assert_eq!(grid.len(), 2 * 3 * 2);
+        // Every protocol keeps the base length (one engine serves all).
+        assert!(grid.iter().all(|s| s.bvals.len() == b.len()));
+        // Names are unique.
+        let mut names: Vec<&str> = grid.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), grid.len());
+        // b=0 rows survive scaling (normalisation depends on them).
+        for s in &grid {
+            assert_eq!(
+                s.bvals.iter().filter(|&&x| x == 0.0).count(),
+                b.iter().filter(|&&x| x == 0.0).count()
+            );
+        }
+    }
+}

@@ -1,0 +1,448 @@
+//! The streaming volume driver: pump a [`SliceStream`] through a
+//! running [`Coordinator`] with bounded in-flight depth, assembling
+//! per-volume parameter and uncertainty maps incrementally as voxel
+//! responses complete **out of order**.
+//!
+//! Memory contract: at any instant the driver holds one slice of f32
+//! signal scratch (the `SliceStream` buffers), at most
+//! `slices_in_flight` slices' worth of response receivers, and the
+//! output maps (f64 per voxel per map — the deliverable, not a
+//! transient). Signal buffers travel through the coordinator as pooled
+//! leases, so the lease slab's `created()` high-water mark stays flat
+//! after warm-up no matter how many slices the volume has — the
+//! capacity-signature test in `tests/volume_stream.rs` pins this.
+//!
+//! Backpressure: a slice is admitted only when (a) fewer than
+//! `slices_in_flight` slices are outstanding, (b) the coordinator's
+//! pending queue has room for the whole slice, and (c) no shard deque
+//! is deeper than `max_deque_depth` batches. When any gate is closed
+//! the driver drains completions instead (counted in
+//! `ServingMetrics::stream_stalls`).
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::time::Instant;
+
+use crate::coordinator::{Coordinator, VoxelResponse};
+use crate::ivim::Param;
+use crate::metrics::maps::VolumeMap;
+use crate::util::rng::Pcg32;
+use crate::util::stats;
+
+use super::scenario::Corruption;
+use super::{SliceStream, VolumeSpec};
+
+/// RNG stream id for corruption draws — separate from the generation
+/// stream so `Corruption::Clean` volumes stay bit-identical to
+/// `synth_dataset` at the same seed.
+const CORRUPTION_SEQ: u64 = 0xC0;
+
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    /// Maximum slices with outstanding responses (the in-flight cap).
+    pub slices_in_flight: usize,
+    /// Stall admission while any shard's deque holds more than this
+    /// many batches (the `deque_depth`-keyed gate).
+    pub max_deque_depth: usize,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            slices_in_flight: 2,
+            max_deque_depth: usize::MAX,
+        }
+    }
+}
+
+/// Per-parameter map bundle (indexed by `Param::index()` in
+/// [`StreamedVolume`]).
+pub struct ParamMaps {
+    pub mean: VolumeMap,
+    pub std: VolumeMap,
+    pub relative: VolumeMap,
+    pub truth: VolumeMap,
+}
+
+/// A fully assembled streamed volume: four map bundles plus the run's
+/// performance counters.
+pub struct StreamedVolume {
+    pub dim: (usize, usize, usize),
+    pub maps: [ParamMaps; 4],
+    /// Voxels the coordinator flagged confident.
+    pub confident_voxels: usize,
+    pub stats: StreamStats,
+}
+
+impl StreamedVolume {
+    pub fn param(&self, p: Param) -> &ParamMaps {
+        &self.maps[p.index()]
+    }
+    pub fn n_voxels(&self) -> usize {
+        self.dim.0 * self.dim.1 * self.dim.2
+    }
+}
+
+/// Performance counters for one streamed volume.
+#[derive(Debug, Clone, Default)]
+pub struct StreamStats {
+    pub voxels: usize,
+    pub slices: usize,
+    pub elapsed_s: f64,
+    pub voxels_per_s: f64,
+    /// Highest number of slices simultaneously outstanding.
+    pub max_inflight_slices: usize,
+    /// Highest pending-queue depth observed at admission points.
+    pub max_queue_depth: usize,
+    /// Deepest per-shard deque observed at slice boundaries.
+    pub max_deque_depth: usize,
+    /// Backpressure events (drain-before-admit).
+    pub stalls: u64,
+    /// Lease-slab allocations at the end of the run (`created()`).
+    pub lease_high_water: usize,
+}
+
+/// The figure-level summary of a streamed volume, computed from the
+/// assembled maps exactly as `metrics::{rmse_by_param,
+/// mean_relative_uncertainty, calibration}` compute it from batch
+/// outputs — same per-voxel values in the same voxel order, so the two
+/// paths are bit-identical at the same seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamedMetrics {
+    pub rmse: [f64; 4],
+    pub uncertainty: [f64; 4],
+    pub calibration: [f64; 4],
+}
+
+/// Compute RMSE / mean relative uncertainty / calibration per parameter
+/// from assembled maps. Map data is voxel-ordered (z-major, then y,
+/// then x — the generation order), so the vectors fed to `util::stats`
+/// match the batch path's iteration order element for element.
+pub fn volume_metrics(vol: &StreamedVolume) -> StreamedMetrics {
+    let mut rmse = [0.0; 4];
+    let mut uncertainty = [0.0; 4];
+    let mut calibration = [0.0; 4];
+    for (i, _p) in Param::ALL.iter().enumerate() {
+        let m = &vol.maps[i];
+        rmse[i] = stats::rmse(&m.mean.data, &m.truth.data);
+        uncertainty[i] = stats::mean(&m.relative.data);
+        let errs: Vec<f64> = m
+            .mean
+            .data
+            .iter()
+            .zip(m.truth.data.iter())
+            .map(|(&pred, &t)| (pred - t).abs())
+            .collect();
+        calibration[i] = stats::pearson(&errs, &m.std.data);
+    }
+    StreamedMetrics {
+        rmse,
+        uncertainty,
+        calibration,
+    }
+}
+
+/// One slice's outstanding responses.
+struct SliceInFlight {
+    z: usize,
+    /// One receiver per submitted voxel; `None` once received.
+    pending: Vec<Option<Receiver<VoxelResponse>>>,
+    received: usize,
+    submitted: usize,
+}
+
+impl SliceInFlight {
+    fn complete(&self) -> bool {
+        self.received == self.submitted && self.pending.len() == self.submitted
+    }
+}
+
+/// Stream one volume through the coordinator and assemble its maps.
+///
+/// The coordinator must have been built with `nb == spec.bvals.len()`.
+/// Responses are written into the maps by flat voxel id as they arrive,
+/// so completion order is irrelevant to the result.
+pub fn stream_volume(
+    coord: &Coordinator,
+    spec: &VolumeSpec,
+    corruption: Corruption,
+    cfg: &StreamConfig,
+) -> anyhow::Result<StreamedVolume> {
+    let nb = spec.bvals.len();
+    {
+        let probe = coord.lease();
+        anyhow::ensure!(
+            probe.signals().len() == nb,
+            "coordinator nb {} != protocol nb {}",
+            probe.signals().len(),
+            nb
+        );
+    }
+    let nv = spec.slice_voxels();
+    let cap = cfg.slices_in_flight.max(1);
+    let mut maps: [ParamMaps; 4] = std::array::from_fn(|_| ParamMaps {
+        mean: VolumeMap::new(spec.dim),
+        std: VolumeMap::new(spec.dim),
+        relative: VolumeMap::new(spec.dim),
+        truth: VolumeMap::new(spec.dim),
+    });
+    let mut confident_voxels = 0usize;
+    let mut stats_out = StreamStats {
+        slices: spec.slices(),
+        voxels: spec.n_voxels(),
+        ..Default::default()
+    };
+
+    let mut stream = SliceStream::new(spec);
+    let mut crng = Pcg32::with_stream(spec.seed, CORRUPTION_SEQ);
+    let mut signals: Vec<f32> = Vec::new();
+    let mut truth = Vec::new();
+    let mut in_flight: Vec<SliceInFlight> = Vec::new();
+
+    // Write one response into the maps.
+    let absorb = |resp: VoxelResponse,
+                  maps: &mut [ParamMaps; 4],
+                  confident: &mut usize| {
+        let id = resp.id as usize;
+        let (z, v) = (id / nv, id % nv);
+        for (i, p) in Param::ALL.iter().enumerate() {
+            let e = resp.report.get(*p);
+            maps[i].mean.set_flat(z, v, e.mean);
+            maps[i].std.set_flat(z, v, e.std);
+            maps[i].relative.set_flat(z, v, e.relative);
+        }
+        if resp.report.confident {
+            *confident += 1;
+        }
+    };
+
+    // Non-blocking sweep over every in-flight slice; retains only
+    // incomplete slices. Returns how many responses were absorbed.
+    let drain_ready = |in_flight: &mut Vec<SliceInFlight>,
+                       maps: &mut [ParamMaps; 4],
+                       confident: &mut usize|
+     -> anyhow::Result<usize> {
+        let mut absorbed = 0usize;
+        for slice in in_flight.iter_mut() {
+            for slot in slice.pending.iter_mut() {
+                if let Some(rx) = slot {
+                    match rx.try_recv() {
+                        Ok(resp) => {
+                            absorb(resp, maps, confident);
+                            *slot = None;
+                            slice.received += 1;
+                            absorbed += 1;
+                        }
+                        Err(TryRecvError::Empty) => {}
+                        Err(TryRecvError::Disconnected) => {
+                            anyhow::bail!(
+                                "coordinator dropped a voxel of slice {}",
+                                slice.z
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        in_flight.retain(|s| !s.complete());
+        Ok(absorbed)
+    };
+
+    // Blocking drain: wait for the oldest outstanding voxel.
+    let drain_one_blocking = |in_flight: &mut Vec<SliceInFlight>,
+                              maps: &mut [ParamMaps; 4],
+                              confident: &mut usize|
+     -> anyhow::Result<()> {
+        if let Some(slice) = in_flight.first_mut() {
+            if let Some(slot) = slice.pending.iter_mut().find(|s| s.is_some()) {
+                let rx = slot.take().expect("just matched Some");
+                let resp = rx.recv().map_err(|_| {
+                    anyhow::anyhow!("coordinator dropped a voxel of slice {}", slice.z)
+                })?;
+                absorb(resp, maps, confident);
+                slice.received += 1;
+            }
+        }
+        in_flight.retain(|s| !s.complete());
+        Ok(())
+    };
+
+    let start = Instant::now();
+    while let Some(z) = stream.next_into(&mut signals, &mut truth) {
+        // Ground truth is known at generation time — write it now.
+        for (v, t) in truth.iter().enumerate() {
+            for (i, p) in Param::ALL.iter().enumerate() {
+                maps[i].truth.set_flat(z, v, t.get(*p));
+            }
+        }
+        corruption.apply(&mut crng, &mut signals, nb);
+
+        // Admission gates: in-flight cap, queue room, deque depth.
+        loop {
+            drain_ready(&mut in_flight, &mut maps, &mut confident_voxels)?;
+            stats_out.max_queue_depth = stats_out.max_queue_depth.max(coord.queue_depth());
+            let snap = coord.snapshot();
+            let deepest = snap
+                .per_shard
+                .iter()
+                .map(|s| s.deque_depth)
+                .max()
+                .unwrap_or(0);
+            stats_out.max_deque_depth = stats_out.max_deque_depth.max(deepest);
+            let slice_fits = coord.queue_depth() + nv <= coord.queue_capacity()
+                || in_flight.is_empty();
+            if in_flight.len() < cap && slice_fits && deepest <= cfg.max_deque_depth {
+                break;
+            }
+            stats_out.stalls += 1;
+            coord.metrics().stream_stalls.fetch_add(1, Ordering::Relaxed);
+            drain_one_blocking(&mut in_flight, &mut maps, &mut confident_voxels)?;
+        }
+
+        let mut slice = SliceInFlight {
+            z,
+            pending: Vec::with_capacity(nv),
+            received: 0,
+            submitted: 0,
+        };
+        for v in 0..nv {
+            let id = spec.flat_index(z, v) as u64;
+            loop {
+                let mut lease = coord.lease();
+                lease.copy_from(&signals[v * nb..(v + 1) * nb]);
+                match coord.submit_leased(id, lease) {
+                    Ok(rx) => {
+                        slice.pending.push(Some(rx));
+                        slice.submitted += 1;
+                        break;
+                    }
+                    Err(_) => {
+                        // Queue full mid-slice (capacity < slice size, or
+                        // racing drains): free a slot by draining.
+                        stats_out.stalls += 1;
+                        coord
+                            .metrics()
+                            .stream_stalls
+                            .fetch_add(1, Ordering::Relaxed);
+                        if in_flight.is_empty() && slice.pending.iter().all(|s| s.is_none()) {
+                            anyhow::bail!(
+                                "queue capacity {} cannot absorb any voxel",
+                                coord.queue_capacity()
+                            );
+                        }
+                        if drain_ready(&mut in_flight, &mut maps, &mut confident_voxels)? == 0 {
+                            // Nothing ready in older slices — wait on this
+                            // slice's own oldest outstanding voxel.
+                            if in_flight.is_empty() {
+                                if let Some(slot) =
+                                    slice.pending.iter_mut().find(|s| s.is_some())
+                                {
+                                    let rx = slot.take().expect("just matched Some");
+                                    let resp = rx.recv().map_err(|_| {
+                                        anyhow::anyhow!(
+                                            "coordinator dropped a voxel of slice {z}"
+                                        )
+                                    })?;
+                                    absorb(resp, &mut maps, &mut confident_voxels);
+                                    slice.received += 1;
+                                }
+                            } else {
+                                drain_one_blocking(
+                                    &mut in_flight,
+                                    &mut maps,
+                                    &mut confident_voxels,
+                                )?;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        in_flight.push(slice);
+        stats_out.max_inflight_slices = stats_out.max_inflight_slices.max(in_flight.len());
+        coord
+            .metrics()
+            .slices_ingested
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    // Tail drain: everything submitted, wait out the stragglers.
+    while !in_flight.is_empty() {
+        drain_one_blocking(&mut in_flight, &mut maps, &mut confident_voxels)?;
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+    stats_out.elapsed_s = elapsed;
+    stats_out.voxels_per_s = if elapsed > 0.0 {
+        stats_out.voxels as f64 / elapsed
+    } else {
+        0.0
+    };
+    stats_out.lease_high_water = coord.lease_high_water();
+    coord
+        .metrics()
+        .volumes_completed
+        .fetch_add(1, Ordering::Relaxed);
+
+    Ok(StreamedVolume {
+        dim: spec.dim,
+        maps,
+        confident_voxels,
+        stats: stats_out,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat_volume(dim: (usize, usize, usize)) -> StreamedVolume {
+        let n = dim.0 * dim.1 * dim.2;
+        let mut maps: [ParamMaps; 4] = std::array::from_fn(|_| ParamMaps {
+            mean: VolumeMap::new(dim),
+            std: VolumeMap::new(dim),
+            relative: VolumeMap::new(dim),
+            truth: VolumeMap::new(dim),
+        });
+        for i in 0..4 {
+            for v in 0..n {
+                // mean tracks truth with a voxel-dependent error; std
+                // tracks that error so calibration is perfect.
+                let t = 1.0 + v as f64;
+                let e = 0.1 * v as f64;
+                maps[i].truth.data[v] = t;
+                maps[i].mean.data[v] = t + e;
+                maps[i].std.data[v] = e;
+                maps[i].relative.data[v] = 0.25;
+            }
+        }
+        StreamedVolume {
+            dim,
+            maps,
+            confident_voxels: 0,
+            stats: StreamStats::default(),
+        }
+    }
+
+    #[test]
+    fn volume_metrics_match_hand_computation() {
+        let vol = flat_volume((2, 2, 2));
+        let m = volume_metrics(&vol);
+        // errors are 0, .1, .2, ..., .7 → rmse = sqrt(mean(e^2))
+        let want_rmse =
+            ((0..8).map(|v| (0.1 * v as f64).powi(2)).sum::<f64>() / 8.0).sqrt();
+        for i in 0..4 {
+            assert!((m.rmse[i] - want_rmse).abs() < 1e-12);
+            assert!((m.uncertainty[i] - 0.25).abs() < 1e-15);
+            // |err| == std exactly → perfect calibration
+            assert!((m.calibration[i] - 1.0).abs() < 1e-9, "{}", m.calibration[i]);
+        }
+    }
+
+    #[test]
+    fn param_accessor_indexes_by_param() {
+        let mut vol = flat_volume((2, 1, 1));
+        vol.maps[Param::F.index()].mean.data[0] = 42.0;
+        assert_eq!(vol.param(Param::F).mean.data[0], 42.0);
+        assert_eq!(vol.n_voxels(), 2);
+    }
+}

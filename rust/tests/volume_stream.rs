@@ -1,0 +1,253 @@
+//! Integration: the streaming 3-D volume pipeline (ISSUE #7) —
+//! per-voxel bit-identity against the direct engine path, the
+//! peak-memory capacity signature (lease high-water independent of
+//! volume depth), and backpressure under a deliberately tiny admission
+//! queue.
+//!
+//! Runs on the deterministic in-tree fixture, so nothing here skips when
+//! the Python-exported artifacts are absent.
+
+use std::time::Duration;
+
+use uivim::coordinator::{Coordinator, CoordinatorConfig};
+use uivim::infer::registry::{self, factory, EngineOpts};
+use uivim::ivim::synth::synth_dataset;
+use uivim::ivim::Param;
+use uivim::model::Manifest;
+use uivim::testing::fixture;
+use uivim::volume::scenario::Corruption;
+use uivim::volume::stream::{stream_volume, volume_metrics, StreamConfig};
+use uivim::volume::VolumeSpec;
+
+fn start(batch: usize, capacity: usize, shards: usize) -> (Coordinator, Manifest) {
+    let (man, w) = fixture::tiny_fixture();
+    let mut cfg = CoordinatorConfig::sharded(man.nb, batch, shards);
+    cfg.batcher.queue_capacity = capacity;
+    cfg.batcher.max_wait = Duration::from_millis(1);
+    let opts = EngineOpts {
+        batch: Some(batch),
+        ..Default::default()
+    };
+    let coord = Coordinator::start(
+        cfg,
+        factory("native", man.clone(), w, opts).expect("known engine"),
+    )
+    .expect("coordinator start");
+    (coord, man)
+}
+
+fn spec(man: &Manifest, dim: (usize, usize, usize), seed: u64) -> VolumeSpec {
+    VolumeSpec {
+        dim,
+        bvals: man.bvalues.clone(),
+        snr: 20.0,
+        seed,
+    }
+}
+
+/// Every voxel of the assembled maps — mean, std, relative, truth —
+/// equals the direct (no coordinator, no streaming) engine run on the
+/// equivalent flat dataset, bit for bit, despite sharded dispatch and
+/// out-of-order completion.
+#[test]
+fn streamed_maps_match_direct_engine_bit_for_bit() {
+    let (coord, man) = start(8, 1_000, 2);
+    let dim = (3usize, 3usize, 4usize);
+    let n = dim.0 * dim.1 * dim.2;
+    let s = spec(&man, dim, 77);
+    let vol = stream_volume(
+        &coord,
+        &s,
+        Corruption::Clean,
+        &StreamConfig {
+            slices_in_flight: 2,
+            ..Default::default()
+        },
+    )
+    .expect("stream");
+    coord.shutdown();
+
+    // Direct path: same seed ⇒ same voxels (the SliceStream contract).
+    let (man2, w) = fixture::tiny_fixture();
+    let ds = synth_dataset(n, &man2.bvalues, 20.0, 77);
+    let mut engine = registry::build("native", &man2, &w, &EngineOpts::default()).unwrap();
+    let outs = uivim::experiments::fig67::run_batches(engine.as_mut(), &ds).unwrap();
+
+    let mut voxel = 0usize;
+    for out in &outs {
+        for v in 0..out.batch {
+            if voxel >= n {
+                break;
+            }
+            for p in Param::ALL {
+                let maps = vol.param(p);
+                assert_eq!(
+                    maps.mean.data[voxel],
+                    out.mean(p, v),
+                    "mean diverged at voxel {voxel} {p:?}"
+                );
+                assert_eq!(
+                    maps.std.data[voxel],
+                    out.std(p, v),
+                    "std diverged at voxel {voxel} {p:?}"
+                );
+                assert_eq!(
+                    maps.relative.data[voxel],
+                    out.relative_uncertainty(p, v),
+                    "relative diverged at voxel {voxel} {p:?}"
+                );
+                assert_eq!(
+                    maps.truth.data[voxel],
+                    ds.truth[voxel].get(p),
+                    "truth diverged at voxel {voxel} {p:?}"
+                );
+            }
+            voxel += 1;
+        }
+    }
+    assert_eq!(voxel, n, "every voxel compared");
+    // And the reduced metrics agree with the metrics-module reductions.
+    let m = volume_metrics(&vol);
+    for p in Param::ALL {
+        assert_eq!(
+            m.rmse[p.index()],
+            uivim::metrics::rmse_by_param(&outs, &ds, p)
+        );
+        assert_eq!(
+            m.uncertainty[p.index()],
+            uivim::metrics::mean_relative_uncertainty(&outs, p, n)
+        );
+        assert_eq!(
+            m.calibration[p.index()],
+            uivim::metrics::calibration(&outs, &ds, p)
+        );
+    }
+}
+
+/// ISSUE #7 peak-memory guard: the lease slab's `created()` high-water
+/// mark is a function of the backpressure window, NOT of volume depth.
+/// The slab is warmed to its provable ceiling (the admission-queue
+/// window — the driver can never hold more un-reclaimed leases than
+/// that), then a shallow and a 4x-deeper volume stream through the
+/// same coordinator and the counter must not move by a single buffer.
+/// Deterministic: growth would require more concurrent leases than the
+/// admission gate admits, regardless of thread timing.
+#[test]
+fn lease_high_water_is_independent_of_volume_depth() {
+    let nv = 4 * 4; // slice voxels
+    let inflight = 2;
+    let window = inflight * nv + 1; // == queue capacity below
+    let (coord, man) = start(8, window, 2);
+    // Warm the slab to the ceiling: `window` leases held at once.
+    let warm_leases: Vec<_> = (0..window).map(|_| coord.lease()).collect();
+    drop(warm_leases);
+    let warm = coord.lease_high_water();
+    assert_eq!(warm, window, "warm-up fills the slab to the window");
+    let scfg = StreamConfig {
+        slices_in_flight: inflight,
+        ..Default::default()
+    };
+    let shallow = spec(&man, (4, 4, 2), 5);
+    stream_volume(&coord, &shallow, Corruption::Clean, &scfg).expect("shallow");
+    assert_eq!(coord.lease_high_water(), warm, "shallow volume stayed flat");
+    // A 4x-deeper volume must not move the high-water either: peak
+    // memory is set by the backpressure window, not the slice count.
+    let deep = spec(&man, (4, 4, 8), 6);
+    let vol = stream_volume(&coord, &deep, Corruption::Clean, &scfg).expect("deep");
+    assert_eq!(
+        coord.lease_high_water(),
+        warm,
+        "deeper volume allocated fresh lease buffers — streaming is not \
+         holding a stable high-water mark"
+    );
+    assert_eq!(vol.stats.lease_high_water, warm);
+    coord.shutdown();
+}
+
+/// Backpressure under a queue that holds one slice plus one voxel: the
+/// admission gate stalls-and-drains instead of overflowing, so the
+/// coordinator never rejects a request and the volume still completes.
+/// With `slices_in_flight = 1`, every slice after the first is a
+/// guaranteed stall, so the stall counter must be visibly non-zero.
+#[test]
+fn tiny_queue_backpressures_without_rejection() {
+    let nv = 4 * 4;
+    let (coord, man) = start(8, nv + 1, 2);
+    let s = spec(&man, (4, 4, 6), 9);
+    let vol = stream_volume(
+        &coord,
+        &s,
+        Corruption::Clean,
+        &StreamConfig {
+            slices_in_flight: 1,
+            ..Default::default()
+        },
+    )
+    .expect("backpressured stream must still complete");
+    let snap = coord.snapshot();
+    assert_eq!(snap.rejected, 0, "admission gate must prevent rejections");
+    assert_eq!(snap.responses, s.n_voxels() as u64);
+    assert!(
+        vol.stats.stalls >= (s.slices() - 1) as u64,
+        "in-flight cap 1 stalls every subsequent slice (got {})",
+        vol.stats.stalls
+    );
+    assert_eq!(vol.stats.max_inflight_slices, 1);
+    assert!(vol.stats.max_queue_depth <= nv + 1);
+    assert_eq!(snap.slices_ingested, s.slices() as u64);
+    assert_eq!(snap.volumes_completed, 1);
+    assert_eq!(snap.stream_stalls, vol.stats.stalls);
+    // The assembled maps are complete: every voxel finite.
+    for p in Param::ALL {
+        let st = vol.param(p).mean.stats();
+        assert_eq!(st.finite, st.total, "{p:?} map has holes");
+    }
+    coord.shutdown();
+}
+
+/// Corrupted scenarios flow through the same pipeline: extra noise and
+/// motion produce complete volumes, and extra noise degrades RMSE
+/// relative to the clean run at the same seed.
+#[test]
+fn corrupted_scenarios_stream_end_to_end() {
+    let (coord, man) = start(8, 1_000, 2);
+    let s = spec(&man, (4, 4, 2), 21);
+    let scfg = StreamConfig {
+        slices_in_flight: 2,
+        ..Default::default()
+    };
+    let clean = stream_volume(&coord, &s, Corruption::Clean, &scfg).unwrap();
+    let noisy = stream_volume(
+        &coord,
+        &s,
+        Corruption::ExtraNoise { std: 0.5 },
+        &scfg,
+    )
+    .unwrap();
+    let moved = stream_volume(&coord, &s, Corruption::Motion { max_shift: 3 }, &scfg).unwrap();
+    coord.shutdown();
+    let mc = volume_metrics(&clean);
+    let mn = volume_metrics(&noisy);
+    let mm = volume_metrics(&moved);
+    let total = |m: &uivim::volume::stream::StreamedMetrics| {
+        Param::ALL
+            .iter()
+            .map(|&p| {
+                let (lo, hi) = p.range();
+                m.rmse[p.index()] / (hi - lo)
+            })
+            .sum::<f64>()
+    };
+    assert!(
+        total(&mn) > total(&mc),
+        "heavy extra noise must degrade RMSE: {} vs {}",
+        total(&mn),
+        total(&mc)
+    );
+    for m in [&mn, &mm] {
+        for p in Param::ALL {
+            assert!(m.rmse[p.index()].is_finite());
+            assert!(m.uncertainty[p.index()].is_finite());
+        }
+    }
+}
