@@ -32,17 +32,31 @@ fn run_load(
     n_requests: usize,
     mode: DispatchMode,
 ) -> (f64, uivim::coordinator::MetricsSnapshot) {
+    run_load_engine(man, w, batch, shards, n_requests, mode, "native", &EngineOpts::default())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_load_engine(
+    man: &Manifest,
+    w: &Weights,
+    batch: usize,
+    shards: usize,
+    n_requests: usize,
+    mode: DispatchMode,
+    engine: &str,
+    opts_base: &EngineOpts,
+) -> (f64, uivim::coordinator::MetricsSnapshot) {
     let mut cfg = CoordinatorConfig::sharded(man.nb, batch, shards);
     cfg.batcher.max_wait = Duration::from_millis(1);
     cfg.batcher.queue_capacity = n_requests + 1;
     cfg.dispatch = mode;
     let opts = EngineOpts {
         batch: Some(batch),
-        ..Default::default()
+        ..opts_base.clone()
     };
     let coord = Coordinator::start(
         cfg,
-        factory("native", man.clone(), w.clone(), opts).expect("known engine"),
+        factory(engine, man.clone(), w.clone(), opts).expect("known engine"),
     )
     .expect("coordinator");
 
@@ -178,6 +192,48 @@ fn main() {
             );
         }
     }
+
+    // ---- MC head: serial vs pipelined masks, tiled GEMM (ISSUE #8) -----
+    // The serving-layer view of the overlap: the same request stream
+    // through `mc-dropout`, first the serial head, then with the mask
+    // prep overlapped (`overlap`), then overlapped + 4 GEMM lanes.
+    // Outputs are bit-identical across rows — the knobs are pure perf.
+    let mut mc_table =
+        Table::new(&["config", "throughput (vox/s)", "mean latency", "p99 latency"]);
+    for (label, threads, overlap) in
+        [("serial", 1usize, false), ("overlap", 1, true), ("overlap_t4", 4, true)]
+    {
+        let opts = EngineOpts {
+            threads,
+            overlap,
+            ..Default::default()
+        };
+        let (el, snap) = run_load_engine(
+            &man,
+            &w,
+            16,
+            1,
+            n_requests,
+            DispatchMode::Deques,
+            "mc-dropout",
+            &opts,
+        );
+        let tput = n_requests as f64 / el;
+        mc_table.row(&[
+            label.into(),
+            format!("{tput:.0}"),
+            fmt_time(snap.mean_request_us / 1e6),
+            fmt_time(snap.p99_request_us / 1e6),
+        ]);
+        records.push(BenchRecord {
+            name: format!("serve_mc_batch16_{label}"),
+            p50_us: snap.p50_request_us,
+            p99_us: snap.p99_request_us,
+            throughput: tput,
+        });
+    }
+    println!("== MC-dropout head: mask-prep overlap + GEMM lanes (batch 16) ==\n");
+    println!("{}", mc_table.to_text());
 
     // ---- streaming 3-D volume pipeline (ISSUE #7) ----------------------
     // The bounded-memory path: slices pumped through the lease API under

@@ -13,10 +13,13 @@ use uivim::infer::native::{masked_linear_reference, BlockedMaskedLinear, NativeE
 use uivim::infer::registry::{build, EngineOpts};
 use uivim::infer::InferOutput;
 use uivim::ivim::synth::synth_dataset;
+use uivim::bayes::{pipeline, McDropout};
+use uivim::infer::Engine;
 use uivim::masks::{self, MaskPlan};
 use uivim::model::Weights;
 use uivim::testing::fixture;
 use uivim::util::rng::Pcg32;
+use uivim::util::workers::WorkerPool;
 
 /// Blocked vs scalar masked-linear at the paper's operating point
 /// (nb=104, batch 64, N=4 masks at p=0.5 density): the seed scalar path
@@ -298,6 +301,109 @@ fn fx_dot_dispatch_vs_scalar(
     speedup
 }
 
+/// Full MC pass at paper scale, serial oracle vs the pipelined head
+/// (the ISSUE #8 tentpole): the serial head pays `resample + swap`
+/// on the critical path every pass; the pipelined head overlaps the
+/// redraw with the previous pass's execute and pays only the swap.
+/// Bit-equality is asserted before timing — the overlap is a pure
+/// scheduling change.  Returns (speedup, overlap_hides_swap_fraction):
+/// the fraction of the serial sampler cost the overlap actually hid,
+/// clamped to [0, 1].
+fn mc_pass_pipelined_vs_serial(
+    cfg: &uivim::bench::BenchConfig,
+    results: &mut Vec<uivim::bench::BenchResult>,
+) -> (f64, f64) {
+    let (man, w) = fixture::paper_fixture();
+    let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 91);
+
+    // Cross-check before trusting the timing.
+    let mut serial = McDropout::with_batch(&man, &w, man.batch_infer, 91).unwrap();
+    let mut piped = pipeline::mc_dropout(&man, &w, man.batch_infer, 91, 1).unwrap();
+    let mut a = InferOutput::new(serial.n_samples(), serial.batch_size());
+    let mut b = InferOutput::new(piped.n_samples(), piped.batch_size());
+    for pass in 0..4 {
+        serial.execute_into(&ds.signals, &mut a).unwrap();
+        piped.execute_into(&ds.signals, &mut b).unwrap();
+        assert_eq!(a.samples, b.samples, "pass {pass}: pipelined diverged from serial");
+    }
+
+    let r_serial = bench("mc_pass_serial_paper", cfg, || {
+        serial.execute_into(&ds.signals, &mut a).unwrap();
+        black_box(&a);
+    });
+    let r_piped = bench("mc_pass_pipelined_paper", cfg, || {
+        piped.execute_into(&ds.signals, &mut b).unwrap();
+        black_box(&b);
+    });
+
+    // The per-pass sampler cost the overlap is hiding: redraw + swap on
+    // an otherwise idle engine.
+    let mut rng = Pcg32::new(92);
+    let mut plan = MaskPlan::bernoulli(&man, 1.0 / man.scale, &mut rng);
+    let mut eng = NativeEngine::with_batch(&man, &w, man.batch_infer).unwrap();
+    let r_sampler = bench("mc_sampler_serial_paper", cfg, || {
+        plan.resample(&mut rng);
+        eng.swap_masks(&plan).unwrap();
+        black_box(&eng);
+    });
+
+    let speedup = r_serial.mean_s / r_piped.mean_s;
+    let hidden = ((r_serial.mean_s - r_piped.mean_s) / r_sampler.mean_s).clamp(0.0, 1.0);
+    println!(
+        "MC pass pipelined vs serial @ paper scale: {speedup:.2}x \
+         ({:.2} us -> {:.2} us per pass; sampler {:.2} us, {:.0}% hidden)",
+        r_serial.mean_us(),
+        r_piped.mean_us(),
+        r_sampler.mean_us(),
+        hidden * 100.0
+    );
+    results.push(r_serial);
+    results.push(r_piped);
+    results.push(r_sampler);
+    (speedup, hidden)
+}
+
+/// Batch-tiled `forward_union` at paper shape across worker counts
+/// (the ISSUE #8 worker pool): the same 4-row-blocked kernel, with the
+/// voxel dimension split into per-lane tiles.  Bit-equality against the
+/// single-threaded path is asserted for every thread count before any
+/// timing — the tiling contract.
+fn forward_union_threads(
+    cfg: &uivim::bench::BenchConfig,
+    results: &mut Vec<uivim::bench::BenchResult>,
+) {
+    let nb = 104usize;
+    let batch = 64usize;
+    let mask = masks::for_width(nb, 4, 2.0, 34).unwrap();
+    let mut rng = Pcg32::new(35);
+    let w_t: Vec<f32> = (0..nb * nb)
+        .map(|_| rng.uniform(-0.4, 0.4) as f32)
+        .collect();
+    let b: Vec<f32> = (0..nb).map(|_| rng.uniform(-0.1, 0.1) as f32).collect();
+    let scale: Vec<f32> = (0..nb).map(|_| rng.uniform(0.8, 1.2) as f32).collect();
+    let shift: Vec<f32> = (0..nb).map(|_| rng.uniform(-0.1, 0.1) as f32).collect();
+    let x: Vec<f32> = (0..batch * nb)
+        .map(|_| rng.uniform(0.0, 1.0) as f32)
+        .collect();
+    let layer = BlockedMaskedLinear::new(nb, &w_t, &b, &scale, &shift, &mask);
+    let mut act_serial = vec![0.0f32; layer.union_len() * batch];
+    layer.forward_union(batch, &x, &mut act_serial);
+
+    for threads in [1usize, 2, 4, 8] {
+        let pool = WorkerPool::new(threads);
+        let mut act = vec![f32::NAN; layer.union_len() * batch];
+        layer.forward_union_tiled(batch, &x, &mut act, &pool);
+        assert_eq!(
+            act, act_serial,
+            "t{threads}: tiled forward_union diverged from serial"
+        );
+        results.push(bench(&format!("forward_union_t{threads}"), cfg, || {
+            layer.forward_union_tiled(batch, &x, &mut act, &pool);
+            black_box(&act);
+        }));
+    }
+}
+
 fn main() {
     let cfg = config_from_env();
     let mut results = Vec::new();
@@ -307,6 +413,9 @@ fn main() {
     let accel_swap_speedup = accel_mask_swap_vs_rebuild(&cfg, &mut results);
     let simd_speedup = dot_one_dispatch_vs_scalar(&cfg, &mut results);
     let fx_simd_speedup = fx_dot_dispatch_vs_scalar(&cfg, &mut results);
+    let (mc_overlap_speedup, swap_hidden_fraction) =
+        mc_pass_pipelined_vs_serial(&cfg, &mut results);
+    forward_union_threads(&cfg, &mut results);
 
     // fixed-point multiply-accumulate chain
     let xs: Vec<Fx> = (0..1024).map(|i| Fx::from_f32((i % 13) as f32 * 0.01)).collect();
@@ -453,6 +562,18 @@ fn main() {
         p50_us: 0.0,
         p99_us: 0.0,
         throughput: fx_simd_speedup,
+    });
+    records.push(BenchRecord {
+        name: "mc_pass_pipelined_vs_serial".into(),
+        p50_us: 0.0,
+        p99_us: 0.0,
+        throughput: mc_overlap_speedup,
+    });
+    records.push(BenchRecord {
+        name: "overlap_hides_swap_fraction".into(),
+        p50_us: 0.0,
+        p99_us: 0.0,
+        throughput: swap_hidden_fraction,
     });
     match write_bench_json("micro_hotpaths", &records) {
         Ok(p) => println!("wrote {}", p.display()),

@@ -315,6 +315,23 @@ impl AccelSimulator {
     /// plan must match the simulator's shape (`nb`, `n_samples`) and
     /// subnet names; a rejected swap leaves the simulator untouched.
     pub fn swap_masks(&mut self, plan: &MaskPlan) -> anyhow::Result<()> {
+        // Validate every lookup and layer shape BEFORE mutating anything:
+        // a failed swap must never leave the datapath half-swapped.
+        self.check_plan(plan)?;
+        for sn in &mut self.subnets {
+            let name = sn.param.name();
+            for (layer, l) in [(1usize, &mut sn.l1), (2usize, &mut sn.l2)] {
+                l.swap(plan.layer_for(name, layer).expect("validated above"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Every check [`AccelSimulator::swap_masks`] runs before mutating —
+    /// exposed so the pipelined prep worker can validate a shadow plan
+    /// off the critical path with the *same* rules the swap enforces
+    /// (mutates nothing; `Ok` means the swap's validation would pass).
+    pub fn check_plan(&self, plan: &MaskPlan) -> anyhow::Result<()> {
         anyhow::ensure!(
             plan.nb() == self.nb,
             "plan width {} != simulator width {}",
@@ -327,8 +344,6 @@ impl AccelSimulator {
             plan.n_samples(),
             self.n_samples
         );
-        // Validate every lookup and layer shape BEFORE mutating anything:
-        // a failed swap must never leave the datapath half-swapped.
         for sn in &self.subnets {
             let name = sn.param.name();
             for layer in [1usize, 2] {
@@ -343,12 +358,6 @@ impl AccelSimulator {
                     self.n_samples,
                     self.nb
                 );
-            }
-        }
-        for sn in &mut self.subnets {
-            let name = sn.param.name();
-            for (layer, l) in [(1usize, &mut sn.l1), (2usize, &mut sn.l2)] {
-                l.swap(plan.layer_for(name, layer).expect("validated above"));
             }
         }
         Ok(())
@@ -844,11 +853,55 @@ mod tests {
             nb: 17,
             ..Default::default()
         });
-        assert!(sim.swap_masks(&MaskPlan::from_manifest(&other).unwrap()).is_err());
+        let wrong_width = MaskPlan::from_manifest(&other).unwrap();
+        assert!(sim.check_plan(&wrong_width).is_err());
+        assert!(sim.swap_masks(&wrong_width).is_err());
         // wrong sample count
         assert!(sim.swap_masks(&MaskPlan::all_ones(&man, man.n_samples + 1)).is_err());
         // a rejected swap leaves the simulator fully functional
         let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 44);
         assert!(sim.infer_batch(&ds.signals).is_ok());
+    }
+
+    /// The pipelined hand-off's core lemma, proven at the simulator
+    /// level: resampling a *stale cloned shadow* plan with the serial
+    /// RNG stream and swapping it in is bit-identical — outputs AND
+    /// cycle counters — to resampling the live plan inline.
+    #[test]
+    fn swap_from_cloned_shadow_plan_matches_inline_resample() {
+        use crate::masks::MaskPlan;
+        use crate::util::rng::Pcg32;
+        let Some((man, w)) = setup() else { return };
+        let mut inline_sim =
+            AccelSimulator::new(&man, &w, cfg_for(&man), Scheme::BatchLevel).unwrap();
+        let mut shadow_sim =
+            AccelSimulator::new(&man, &w, cfg_for(&man), Scheme::BatchLevel).unwrap();
+        let mut live = MaskPlan::from_manifest(&man).unwrap();
+        // The shadow starts as a clone but is deliberately diverged so
+        // the test would catch any prior-state dependence in resample.
+        let mut shadow = live.clone();
+        let mut scratch_rng = Pcg32::new(999);
+        shadow.resample(&mut scratch_rng);
+        let mut rng_inline = Pcg32::new(77);
+        let mut rng_shadow = rng_inline.clone();
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 45);
+        for round in 0..4 {
+            live.resample(&mut rng_inline);
+            inline_sim.swap_masks(&live).unwrap();
+            shadow.resample(&mut rng_shadow);
+            shadow_sim.check_plan(&shadow).unwrap();
+            shadow_sim.swap_masks(&shadow).unwrap();
+            let (a, sa) = inline_sim.infer_batch_stats(&ds.signals).unwrap();
+            let (b, sb) = shadow_sim.infer_batch_stats(&ds.signals).unwrap();
+            for p in Param::ALL {
+                assert_eq!(
+                    a.samples[p.index()],
+                    b.samples[p.index()],
+                    "round {round}: shadow swap != inline resample for {p:?}"
+                );
+            }
+            assert_eq!(sa.cycles, sb.cycles, "round {round}: cycle counters diverged");
+            assert_eq!(sa.macs, sb.macs, "round {round}: mac counters diverged");
+        }
     }
 }

@@ -27,6 +27,8 @@
 //! `AccelMcDropout` hold concrete engines because the hot swap is
 //! engine-specific state, not part of the `Engine` trait.
 
+pub mod pipeline;
+
 use crate::accel::{AccelConfig, AccelSimulator, CycleStats, Scheme};
 use crate::infer::native::NativeEngine;
 use crate::infer::registry::{self, EngineOpts};
@@ -39,12 +41,22 @@ use crate::util::rng::Pcg32;
 /// MC-Dropout: the manifest's network evaluated under freshly sampled
 /// Bernoulli masks each call (keep rate 1/scale, matching the
 /// Masksembles keep fraction).
+///
+/// The redraw can be restricted to a layer range: the last-layer-only
+/// variant (`layer_lo = layer_hi = 2`, registry name `mc-dropout-ll`)
+/// resamples just the final masked layer per pass — untouched layers
+/// keep their mask bits and packed blocks bit-identical across passes,
+/// so the per-pass sampler cost shrinks with the redrawn fraction
+/// (ROADMAP direction #3's cheap-sampler axis).
 pub struct McDropout {
     engine: NativeEngine,
     plan: MaskPlan,
     rng: Pcg32,
     batch: usize,
     n_samples: usize,
+    layer_lo: usize,
+    layer_hi: usize,
+    name: &'static str,
 }
 
 impl McDropout {
@@ -59,9 +71,45 @@ impl McDropout {
         batch: usize,
         seed: u64,
     ) -> anyhow::Result<Self> {
+        Self::build(man, weights, batch, seed, 1, (1, 2), "mc-dropout")
+    }
+
+    /// Full-resample head over a `threads`-lane tiled engine (bit-exact
+    /// vs `threads = 1` — the engine's tiling contract).
+    pub fn with_batch_threads(
+        man: &Manifest,
+        weights: &Weights,
+        batch: usize,
+        seed: u64,
+        threads: usize,
+    ) -> anyhow::Result<Self> {
+        Self::build(man, weights, batch, seed, threads, (1, 2), "mc-dropout")
+    }
+
+    /// Last-layer-only head: only layer-2 plans are redrawn per pass
+    /// (registry name `mc-dropout-ll`).
+    pub fn last_layer_with_batch(
+        man: &Manifest,
+        weights: &Weights,
+        batch: usize,
+        seed: u64,
+        threads: usize,
+    ) -> anyhow::Result<Self> {
+        Self::build(man, weights, batch, seed, threads, (2, 2), "mc-dropout-ll")
+    }
+
+    fn build(
+        man: &Manifest,
+        weights: &Weights,
+        batch: usize,
+        seed: u64,
+        threads: usize,
+        layers: (usize, usize),
+        name: &'static str,
+    ) -> anyhow::Result<Self> {
         let mut rng = Pcg32::new(seed);
         let plan = MaskPlan::bernoulli(man, 1.0 / man.scale, &mut rng);
-        let mut engine = NativeEngine::with_batch(man, weights, batch)?;
+        let mut engine = NativeEngine::with_batch_threads(man, weights, batch, threads)?;
         engine.swap_masks(&plan)?;
         Ok(McDropout {
             engine,
@@ -69,7 +117,15 @@ impl McDropout {
             rng,
             batch,
             n_samples: man.n_samples,
+            layer_lo: layers.0,
+            layer_hi: layers.1,
+            name,
         })
+    }
+
+    /// The live plan (tests: untouched-layer bit-identity).
+    pub fn plan(&self) -> &MaskPlan {
+        &self.plan
     }
 
     /// Buffer capacities of the head's entire state (plan + engine) —
@@ -83,7 +139,7 @@ impl McDropout {
 
 impl Engine for McDropout {
     fn name(&self) -> &str {
-        "mc-dropout"
+        self.name
     }
     fn batch_size(&self) -> usize {
         self.batch
@@ -95,8 +151,10 @@ impl Engine for McDropout {
     fn execute_into(&mut self, signals: &[f32], out: &mut InferOutput) -> anyhow::Result<()> {
         // The runtime-sampler cost Masksembles' fixed masks avoid, now
         // an in-place mask redraw + union re-pack instead of a full
-        // engine rebuild per sample: no steady-state allocation.
-        self.plan.resample(&mut self.rng);
+        // engine rebuild per sample: no steady-state allocation.  The
+        // full range delegates to the same code path, so `mc-dropout`
+        // stays bit-identical to the pre-range implementation.
+        self.plan.resample_layer_range(self.layer_lo, self.layer_hi, &mut self.rng);
         self.engine.swap_masks(&self.plan)?;
         self.engine.execute_into(signals, out)
     }
@@ -350,6 +408,65 @@ mod tests {
             assert_eq!(mcd.alloc_signature(), sig, "hot loop reallocated");
             let after: Vec<*const f32> = out.samples.iter().map(|p| p.as_ptr()).collect();
             assert_eq!(out_ptrs, after, "output buffers were reallocated");
+        }
+    }
+
+    /// Satellite (ISSUE #8): the last-layer-only head redraws only
+    /// layer-2 plans — untouched layers' mask bits, index lists and
+    /// union stay bit-identical across passes — and remains
+    /// seed-deterministic and spread-producing.
+    #[test]
+    fn last_layer_head_keeps_untouched_layers_bit_identical() {
+        let Some((man, w)) = setup() else { return };
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 9);
+        let mut ll = McDropout::last_layer_with_batch(&man, &w, man.batch_infer, 21, 1).unwrap();
+        assert_eq!(Engine::name(&ll), "mc-dropout-ll");
+        let n_subnets = man.subnets.len();
+        let l1_bits: Vec<_> = (0..n_subnets).map(|si| ll.plan().layer(si, 1).to_mask_set()).collect();
+        let l1_kept: Vec<Vec<Vec<u32>>> =
+            (0..n_subnets).map(|si| ll.plan().layer(si, 1).kept_lists().to_vec()).collect();
+        let l2_bits: Vec<_> = (0..n_subnets).map(|si| ll.plan().layer(si, 2).to_mask_set()).collect();
+        let mut out = InferOutput::new(ll.n_samples(), ll.batch_size());
+        let mut l2_changed = false;
+        for pass in 0..4 {
+            ll.execute_into(&ds.signals, &mut out).unwrap();
+            for si in 0..n_subnets {
+                assert_eq!(
+                    ll.plan().layer(si, 1).to_mask_set(),
+                    l1_bits[si],
+                    "pass {pass}: layer-1 bits redrawn by the last-layer head"
+                );
+                assert_eq!(ll.plan().layer(si, 1).kept_lists(), l1_kept[si].as_slice());
+            }
+            l2_changed |= (0..n_subnets).any(|si| ll.plan().layer(si, 2).to_mask_set() != l2_bits[si]);
+        }
+        assert!(l2_changed, "layer-2 plans never changed");
+        // seed-deterministic like the full head
+        let mut a = McDropout::last_layer_with_batch(&man, &w, man.batch_infer, 33, 1).unwrap();
+        let mut b = McDropout::last_layer_with_batch(&man, &w, man.batch_infer, 33, 1).unwrap();
+        let oa = a.infer_batch(&ds.signals).unwrap();
+        let ob = b.infer_batch(&ds.signals).unwrap();
+        for p in Param::ALL {
+            assert_eq!(oa.samples[p.index()], ob.samples[p.index()]);
+        }
+        let spread: f64 = (0..oa.batch).map(|v| oa.std(Param::F, v)).sum();
+        assert!(spread > 0.0, "masked layers still induce variance");
+    }
+
+    /// The threaded full head is bit-identical to the serial head in
+    /// the same seed — the tiled engine inside changes nothing.
+    #[test]
+    fn mc_dropout_threads_match_serial_bit_for_bit() {
+        let Some((man, w)) = setup() else { return };
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 10);
+        let mut serial = McDropout::with_batch(&man, &w, man.batch_infer, 55).unwrap();
+        let mut tiled = McDropout::with_batch_threads(&man, &w, man.batch_infer, 55, 4).unwrap();
+        for _ in 0..4 {
+            let oa = serial.infer_batch(&ds.signals).unwrap();
+            let ob = tiled.infer_batch(&ds.signals).unwrap();
+            for p in Param::ALL {
+                assert_eq!(oa.samples[p.index()], ob.samples[p.index()]);
+            }
         }
     }
 

@@ -1,0 +1,649 @@
+//! Pipelined MC sampling — the paper's *operation reordering* applied
+//! to the software MC loop (ISSUE #8 tentpole).
+//!
+//! The serial heads in `bayes::mod` run `resample → swap_masks →
+//! execute_into` on one thread, so every pass pays the full mask-redraw
+//! latency on the critical path.  Here a persistent background worker
+//! prepares pass *i+1*'s plan (resample + validate) while the engine
+//! executes pass *i*; between passes the live and shadow plans swap
+//! through a one-slot protocol.  Only the *swap* stays on the critical
+//! path — exactly the reordering the paper's hardware uses to hide
+//! sampling cost behind compute.
+//!
+//! ## Why this is bit-exact (the serial engine stays the oracle)
+//!
+//! * **RNG hand-off rule** — there is exactly ONE [`Pcg32`] and it
+//!   travels with the plan through the slot: submit carries it to the
+//!   worker, the worker alone draws from it (one redraw per pass, in
+//!   pass order), and it comes back with the prepared plan.  The draw
+//!   sequence is therefore identical to the serial head's, pass for
+//!   pass.
+//! * **Prior-state independence** — `LayerPlan::resample` overwrites
+//!   every bit from fresh draws and its RNG consumption never depends
+//!   on the prior mask state (golden-tested in `masks::plan`), so
+//!   redrawing the *stale* shadow clone yields the same bits as
+//!   redrawing the live plan would have.
+//! * **Shadow-plan ownership** — two plans exist, allocated once at
+//!   construction; ownership alternates by move through the slot
+//!   (zero per-pass allocation, no sharing: the worker never touches
+//!   the plan the engine is executing with).
+//!
+//! Validation runs **on the prep thread** against a captured
+//! [`PlanShape`] — the mirror of the engines' validate-before-mutate
+//! rule — so a bad plan is flagged before the hand-off, and the
+//! engine-side `swap_masks` validation still guards the actual swap
+//! (a rejected swap leaves the engine exactly as it was).
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::accel::{AccelConfig, AccelSimulator, Scheme};
+use crate::infer::native::NativeEngine;
+use crate::infer::{Engine, InferOutput};
+use crate::masks::MaskPlan;
+use crate::model::{Manifest, Weights};
+use crate::util::rng::Pcg32;
+
+/// The shape contract a prepared plan must satisfy, captured from the
+/// construction-time plan — the prep thread's mirror of the engine's
+/// swap validation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanShape {
+    nb: usize,
+    n_samples: usize,
+    subnets: Vec<String>,
+}
+
+impl PlanShape {
+    pub fn of(plan: &MaskPlan) -> PlanShape {
+        PlanShape {
+            nb: plan.nb(),
+            n_samples: plan.n_samples(),
+            subnets: plan.subnets().to_vec(),
+        }
+    }
+
+    /// Validate a plan against the captured shape — every check the
+    /// engines run before mutating, so a mismatch is caught on the prep
+    /// thread before the hand-off.
+    pub fn check(&self, plan: &MaskPlan) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            plan.nb() == self.nb && plan.n_samples() == self.n_samples,
+            "prepared plan is {}x{}, pipeline needs {}x{}",
+            plan.n_samples(),
+            plan.nb(),
+            self.n_samples,
+            self.nb
+        );
+        anyhow::ensure!(
+            plan.subnets() == &self.subnets[..],
+            "prepared plan subnets {:?} != pipeline subnets {:?}",
+            plan.subnets(),
+            self.subnets
+        );
+        for sn in &self.subnets {
+            for layer in [1usize, 2] {
+                let lp = plan
+                    .layer_for(sn, layer)
+                    .ok_or_else(|| anyhow::anyhow!("prepared plan has no subnet '{sn}'"))?;
+                anyhow::ensure!(
+                    lp.width() == self.nb && lp.n() == self.n_samples,
+                    "prepared layer {sn}.{layer} is {}x{}, pipeline needs {}x{}",
+                    lp.n(),
+                    lp.width(),
+                    self.n_samples,
+                    self.nb
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A prepared hand-off: the redrawn plan, the travelling RNG, and the
+/// prep-side validation verdict.
+pub type Prepared = (MaskPlan, Pcg32, anyhow::Result<()>);
+
+/// One-slot exchange state.  `Preparing` marks the window where the
+/// worker owns the plan outside the lock (the overlap itself).
+enum Slot {
+    Empty,
+    Request { plan: MaskPlan, rng: Pcg32 },
+    Preparing,
+    Ready { plan: MaskPlan, rng: Pcg32, check: Result<(), String> },
+    Shutdown,
+}
+
+/// The prepare/swap hand-off protocol: a single slot guarded by a
+/// mutex + condvar (recheck-under-lock, as in `coordinator/deque.rs`).
+/// All transitions move the plan and RNG **by value** — Vec-pointer
+/// moves, zero per-pass allocation.
+///
+/// The synchronous steps ([`PrepProtocol::try_prep`],
+/// [`PrepProtocol::try_take`]) let the deterministic `testing::sched`
+/// harness drive prepare-racing-swap interleavings without threads;
+/// [`PrepWorker`] drives the same state machine from a real thread.
+pub struct PrepProtocol {
+    slot: Mutex<Slot>,
+    cv: Condvar,
+    shape: PlanShape,
+    layer_lo: usize,
+    layer_hi: usize,
+}
+
+impl PrepProtocol {
+    pub fn new(shape: PlanShape, layer_lo: usize, layer_hi: usize) -> PrepProtocol {
+        PrepProtocol {
+            slot: Mutex::new(Slot::Empty),
+            cv: Condvar::new(),
+            shape,
+            layer_lo,
+            layer_hi,
+        }
+    }
+
+    /// Hand the stale plan and the travelling RNG to the prep side.
+    /// Errors if the slot is occupied or shut down.
+    pub fn submit(&self, plan: MaskPlan, rng: Pcg32) -> anyhow::Result<()> {
+        let mut sl = self.slot.lock().unwrap();
+        match *sl {
+            Slot::Empty => {
+                *sl = Slot::Request { plan, rng };
+                self.cv.notify_all();
+                Ok(())
+            }
+            Slot::Shutdown => anyhow::bail!("prep worker is shut down"),
+            _ => anyhow::bail!("prep slot already holds a plan"),
+        }
+    }
+
+    /// Resample + validate outside the lock, then post the result.
+    /// Returns false if shutdown raced the preparation.
+    fn do_prep(&self, mut plan: MaskPlan, mut rng: Pcg32) -> bool {
+        plan.resample_layer_range(self.layer_lo, self.layer_hi, &mut rng);
+        let check = self.shape.check(&plan).map_err(|e| e.to_string());
+        let mut sl = self.slot.lock().unwrap();
+        if matches!(*sl, Slot::Shutdown) {
+            return false;
+        }
+        *sl = Slot::Ready { plan, rng, check };
+        self.cv.notify_all();
+        true
+    }
+
+    /// Blocking worker step: wait for a request, prepare it, post the
+    /// result.  Returns false on shutdown.
+    pub fn prep_one(&self) -> bool {
+        let (plan, rng) = {
+            let mut sl = self.slot.lock().unwrap();
+            loop {
+                match std::mem::replace(&mut *sl, Slot::Preparing) {
+                    Slot::Request { plan, rng } => break (plan, rng),
+                    Slot::Shutdown => {
+                        *sl = Slot::Shutdown;
+                        return false;
+                    }
+                    other => *sl = other,
+                }
+                sl = self.cv.wait(sl).unwrap();
+            }
+        };
+        self.do_prep(plan, rng)
+    }
+
+    /// Non-blocking worker step: prepare a pending request if there is
+    /// one.  Returns whether work was done.
+    pub fn try_prep(&self) -> bool {
+        let (plan, rng) = {
+            let mut sl = self.slot.lock().unwrap();
+            match std::mem::replace(&mut *sl, Slot::Preparing) {
+                Slot::Request { plan, rng } => (plan, rng),
+                other => {
+                    *sl = other;
+                    return false;
+                }
+            }
+        };
+        self.do_prep(plan, rng)
+    }
+
+    /// Consume the prepared plan (blocking).  Errors on shutdown.
+    pub fn take(&self) -> anyhow::Result<Prepared> {
+        let mut sl = self.slot.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut *sl, Slot::Empty) {
+                Slot::Ready { plan, rng, check } => {
+                    return Ok((plan, rng, check.map_err(|e| anyhow::anyhow!(e))));
+                }
+                Slot::Shutdown => {
+                    *sl = Slot::Shutdown;
+                    anyhow::bail!("prep worker is shut down");
+                }
+                other => *sl = other,
+            }
+            sl = self.cv.wait(sl).unwrap();
+        }
+    }
+
+    /// Consume the prepared plan if one is ready (non-blocking).
+    pub fn try_take(&self) -> Option<Prepared> {
+        let mut sl = self.slot.lock().unwrap();
+        match std::mem::replace(&mut *sl, Slot::Empty) {
+            Slot::Ready { plan, rng, check } => {
+                Some((plan, rng, check.map_err(|e| anyhow::anyhow!(e))))
+            }
+            other => {
+                *sl = other;
+                None
+            }
+        }
+    }
+
+    /// Inspect the prepared plan without consuming it (blocking) — the
+    /// shadow half of the steady-state alloc-signature witness.
+    pub fn with_ready<R>(&self, f: impl FnOnce(&MaskPlan) -> R) -> anyhow::Result<R> {
+        let mut sl = self.slot.lock().unwrap();
+        loop {
+            match &*sl {
+                Slot::Ready { plan, .. } => return Ok(f(plan)),
+                Slot::Shutdown => anyhow::bail!("prep worker is shut down"),
+                _ => {}
+            }
+            sl = self.cv.wait(sl).unwrap();
+        }
+    }
+
+    /// Tear the protocol down: both sides observe the state and stop.
+    pub fn shutdown(&self) {
+        let mut sl = self.slot.lock().unwrap();
+        *sl = Slot::Shutdown;
+        self.cv.notify_all();
+    }
+}
+
+/// The persistent background preparer: one thread looping
+/// [`PrepProtocol::prep_one`] until shutdown.  Dropping joins it.
+pub struct PrepWorker {
+    proto: Arc<PrepProtocol>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl PrepWorker {
+    pub fn spawn(proto: Arc<PrepProtocol>) -> PrepWorker {
+        let p = Arc::clone(&proto);
+        let handle = std::thread::spawn(move || while p.prep_one() {});
+        PrepWorker {
+            proto,
+            handle: Some(handle),
+        }
+    }
+}
+
+impl Drop for PrepWorker {
+    fn drop(&mut self) {
+        self.proto.shutdown();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The hot-swap half of the [`Engine`] contract — what a backend needs
+/// for the pipeline to drive it (mask swap is engine-specific state,
+/// not part of the `Engine` trait).
+pub trait MaskSwapEngine: Engine {
+    fn swap_plan(&mut self, plan: &MaskPlan) -> anyhow::Result<()>;
+    fn plan_alloc_signature(&self) -> Vec<usize>;
+}
+
+impl MaskSwapEngine for NativeEngine {
+    fn swap_plan(&mut self, plan: &MaskPlan) -> anyhow::Result<()> {
+        self.swap_masks(plan)
+    }
+    fn plan_alloc_signature(&self) -> Vec<usize> {
+        self.alloc_signature()
+    }
+}
+
+impl MaskSwapEngine for AccelSimulator {
+    fn swap_plan(&mut self, plan: &MaskPlan) -> anyhow::Result<()> {
+        self.swap_masks(plan)
+    }
+    fn plan_alloc_signature(&self) -> Vec<usize> {
+        self.alloc_signature()
+    }
+}
+
+/// An MC head whose mask preparation overlaps execution: pass *k* uses
+/// exactly the *k*-th redraw of the seed's stream (bit-identical to the
+/// serial heads), but the redraw happened while pass *k-1* executed.
+pub struct Pipelined<E: MaskSwapEngine> {
+    engine: E,
+    live: MaskPlan,
+    proto: Arc<PrepProtocol>,
+    /// Held for Drop (shutdown + join).
+    _worker: PrepWorker,
+    name: &'static str,
+    batch: usize,
+    n_samples: usize,
+}
+
+impl<E: MaskSwapEngine> Pipelined<E> {
+    /// Wrap an engine.  Mirrors the serial heads' construction exactly:
+    /// seed the RNG, draw the initial Bernoulli plan, swap it in — then
+    /// clone it once as the shadow (the only extra allocation) and hand
+    /// shadow + RNG to the background worker, which immediately starts
+    /// preparing pass 1.
+    pub fn new(
+        mut engine: E,
+        man: &Manifest,
+        batch: usize,
+        seed: u64,
+        layers: (usize, usize),
+        name: &'static str,
+    ) -> anyhow::Result<Self> {
+        let mut rng = Pcg32::new(seed);
+        let live = MaskPlan::bernoulli(man, 1.0 / man.scale, &mut rng);
+        engine.swap_plan(&live)?;
+        let shadow = live.clone();
+        let proto = Arc::new(PrepProtocol::new(PlanShape::of(&live), layers.0, layers.1));
+        proto.submit(shadow, rng)?;
+        let worker = PrepWorker::spawn(Arc::clone(&proto));
+        Ok(Pipelined {
+            engine,
+            live,
+            proto,
+            _worker: worker,
+            name,
+            batch,
+            n_samples: man.n_samples,
+        })
+    }
+
+    /// The wrapped engine (read-only: cycle stats, dot mode, …).
+    pub fn engine(&self) -> &E {
+        &self.engine
+    }
+
+    /// Live-plan + engine buffer capacities (steady-state witness).
+    pub fn alloc_signature(&self) -> Vec<usize> {
+        let mut sig = self.live.alloc_signature();
+        sig.extend(self.engine.plan_alloc_signature());
+        sig
+    }
+
+    /// Shadow-plan capacities, read in place once it is prepared — the
+    /// other half of the no-per-pass-allocation contract.
+    pub fn shadow_alloc_signature(&self) -> anyhow::Result<Vec<usize>> {
+        self.proto.with_ready(|p| p.alloc_signature())
+    }
+}
+
+impl<E: MaskSwapEngine> Engine for Pipelined<E> {
+    fn name(&self) -> &str {
+        self.name
+    }
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+    fn n_samples(&self) -> usize {
+        self.n_samples
+    }
+
+    fn execute_into(&mut self, signals: &[f32], out: &mut InferOutput) -> anyhow::Result<()> {
+        // Pass k: the worker already drew mask set k into the shadow
+        // plan while pass k-1 executed (or during construction).
+        let (next, rng, check) = self.proto.take()?;
+        if let Err(e) = check {
+            // Prep-side validation failed: the engine still holds the
+            // old masks untouched.  Park the protocol so later calls
+            // error loudly instead of deadlocking on an empty slot.
+            self.proto.shutdown();
+            return Err(e);
+        }
+        if let Err(e) = self.engine.swap_plan(&next) {
+            // Validate-before-mutate: the engine is exactly as it was.
+            self.proto.shutdown();
+            return Err(e);
+        }
+        let old = std::mem::replace(&mut self.live, next);
+        // Hand the stale plan and the RNG back: the worker draws pass
+        // k+1 while we execute pass k below.
+        self.proto.submit(old, rng)?;
+        self.engine.execute_into(signals, out)
+    }
+}
+
+/// Pipelined f32 MC-Dropout (registry: `mc-dropout` with overlap on).
+pub fn mc_dropout(
+    man: &Manifest,
+    weights: &Weights,
+    batch: usize,
+    seed: u64,
+    threads: usize,
+) -> anyhow::Result<Pipelined<NativeEngine>> {
+    let engine = NativeEngine::with_batch_threads(man, weights, batch, threads)?;
+    Pipelined::new(engine, man, batch, seed, (1, 2), "mc-dropout+overlap")
+}
+
+/// Pipelined last-layer-only MC-Dropout (registry: `mc-dropout-ll`
+/// with overlap on).
+pub fn mc_dropout_last_layer(
+    man: &Manifest,
+    weights: &Weights,
+    batch: usize,
+    seed: u64,
+    threads: usize,
+) -> anyhow::Result<Pipelined<NativeEngine>> {
+    let engine = NativeEngine::with_batch_threads(man, weights, batch, threads)?;
+    Pipelined::new(engine, man, batch, seed, (2, 2), "mc-dropout-ll+overlap")
+}
+
+/// Pipelined fixed-point MC-Dropout over the accelerator simulator
+/// (registry: `accel-mc` with overlap on).
+pub fn accel_mc(
+    man: &Manifest,
+    weights: &Weights,
+    batch: usize,
+    seed: u64,
+) -> anyhow::Result<Pipelined<AccelSimulator>> {
+    let cfg = AccelConfig {
+        batch,
+        ..Default::default()
+    };
+    let sim = AccelSimulator::new(man, weights, cfg, Scheme::BatchLevel)?;
+    Pipelined::new(sim, man, batch, seed, (1, 2), "accel-mc+overlap")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bayes::{AccelMcDropout, McDropout};
+    use crate::ivim::synth::synth_dataset;
+    use crate::ivim::Param;
+    use crate::testing::fixture;
+
+    /// Tentpole golden gate (ISSUE #8 acceptance): the pipelined head is
+    /// bit-identical to the serial oracle for >= 4 passes on the native
+    /// backend, at 1 and 4 worker threads.
+    #[test]
+    fn pipelined_matches_serial_mc_dropout_bit_for_bit() {
+        let (man, w) = fixture::tiny_fixture();
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 61);
+        for threads in [1usize, 4] {
+            let mut serial = McDropout::with_batch(&man, &w, man.batch_infer, 7).unwrap();
+            let mut piped = mc_dropout(&man, &w, man.batch_infer, 7, threads).unwrap();
+            let mut a = InferOutput::new(1, 1);
+            let mut b = InferOutput::new(1, 1);
+            for pass in 0..5 {
+                serial.execute_into(&ds.signals, &mut a).unwrap();
+                piped.execute_into(&ds.signals, &mut b).unwrap();
+                for p in Param::ALL {
+                    assert_eq!(
+                        a.samples[p.index()],
+                        b.samples[p.index()],
+                        "t{threads} pass {pass}: pipelined != serial for {p:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Same gate on the fixed-point backend — outputs AND cycle stats.
+    #[test]
+    fn pipelined_matches_serial_accel_mc_bit_for_bit() {
+        let (man, w) = fixture::tiny_fixture();
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 62);
+        let mut serial = AccelMcDropout::with_batch(&man, &w, man.batch_infer, 13).unwrap();
+        let mut piped = accel_mc(&man, &w, man.batch_infer, 13).unwrap();
+        let mut a = InferOutput::new(1, 1);
+        let mut b = InferOutput::new(1, 1);
+        for pass in 0..5 {
+            serial.execute_into(&ds.signals, &mut a).unwrap();
+            piped.execute_into(&ds.signals, &mut b).unwrap();
+            for p in Param::ALL {
+                assert_eq!(
+                    a.samples[p.index()],
+                    b.samples[p.index()],
+                    "pass {pass}: pipelined != serial for {p:?}"
+                );
+            }
+            let (sa, sb) = (serial.last_stats(), piped.engine().last_stats);
+            assert_eq!(sa.cycles, sb.cycles, "pass {pass}: cycle counters diverged");
+        }
+    }
+
+    /// The last-layer pipelined head tracks its serial twin bit-for-bit.
+    #[test]
+    fn pipelined_last_layer_matches_serial_bit_for_bit() {
+        let (man, w) = fixture::tiny_fixture();
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 63);
+        let mut serial = McDropout::last_layer_with_batch(&man, &w, man.batch_infer, 19, 1).unwrap();
+        let mut piped = mc_dropout_last_layer(&man, &w, man.batch_infer, 19, 1).unwrap();
+        let mut a = InferOutput::new(1, 1);
+        let mut b = InferOutput::new(1, 1);
+        for pass in 0..4 {
+            serial.execute_into(&ds.signals, &mut a).unwrap();
+            piped.execute_into(&ds.signals, &mut b).unwrap();
+            for p in Param::ALL {
+                assert_eq!(
+                    a.samples[p.index()],
+                    b.samples[p.index()],
+                    "pass {pass}: ll pipelined != serial for {p:?}"
+                );
+            }
+        }
+    }
+
+    /// Steady state allocates nothing: live plan, engine, AND the
+    /// in-flight shadow plan keep their capacities across 20 passes.
+    #[test]
+    fn pipelined_steady_state_never_reallocates() {
+        let (man, w) = fixture::tiny_fixture();
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 64);
+        let mut piped = mc_dropout(&man, &w, man.batch_infer, 5, 2).unwrap();
+        let mut out = InferOutput::new(piped.n_samples(), piped.batch_size());
+        piped.execute_into(&ds.signals, &mut out).unwrap();
+        let sig = piped.alloc_signature();
+        let shadow_sig = piped.shadow_alloc_signature().unwrap();
+        let out_ptrs: Vec<*const f32> = out.samples.iter().map(|p| p.as_ptr()).collect();
+        for _ in 0..20 {
+            piped.execute_into(&ds.signals, &mut out).unwrap();
+            assert_eq!(piped.alloc_signature(), sig, "live plan or engine reallocated");
+            assert_eq!(
+                piped.shadow_alloc_signature().unwrap(),
+                shadow_sig,
+                "shadow plan reallocated"
+            );
+            let after: Vec<*const f32> = out.samples.iter().map(|p| p.as_ptr()).collect();
+            assert_eq!(out_ptrs, after, "output buffers reallocated");
+        }
+    }
+
+    /// Satellite (bugfix sweep): a shadow plan that fails validation
+    /// mid-pipeline is flagged on the prep thread, the engine keeps its
+    /// old masks untouched, and the protocol errors loudly afterwards
+    /// instead of deadlocking.
+    #[test]
+    fn pipelined_mismatch_injection_fails_cleanly() {
+        let (man, w) = fixture::tiny_fixture();
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 65);
+        let mut rng = Pcg32::new(3);
+        let plan = MaskPlan::bernoulli(&man, 1.0 / man.scale, &mut rng);
+        let mut eng = NativeEngine::with_batch(&man, &w, man.batch_infer).unwrap();
+        eng.swap_masks(&plan).unwrap();
+        let baseline = eng.infer_batch(&ds.signals).unwrap();
+        // A hostile shape: claims one more sample than the plan carries.
+        let hostile = PlanShape {
+            nb: man.nb,
+            n_samples: man.n_samples + 1,
+            subnets: man.subnets.clone(),
+        };
+        let proto = PrepProtocol::new(hostile, 1, 2);
+        proto.submit(plan.clone(), rng).unwrap();
+        assert!(proto.try_prep(), "request must be preparable");
+        let (bad_plan, _rng, check) = proto.try_take().expect("prepared");
+        let err = check.expect_err("mismatched shape must be flagged by the prep side");
+        assert!(err.to_string().contains("prepared plan"), "{err}");
+        // The engine-side guard agrees and leaves the engine untouched:
+        let mut wrong = MaskPlan::all_ones(&man, man.n_samples + 1);
+        let mut r2 = Pcg32::new(4);
+        wrong.resample(&mut r2);
+        assert!(eng.swap_masks(&wrong).is_err());
+        drop(bad_plan);
+        let after = eng.infer_batch(&ds.signals).unwrap();
+        for p in Param::ALL {
+            assert_eq!(baseline.samples[p.index()], after.samples[p.index()]);
+        }
+        // Degraded protocol: errors, never hangs.
+        proto.shutdown();
+        assert!(proto.take().is_err());
+        assert!(proto.submit(wrong, r2).is_err());
+    }
+
+    /// Protocol unit coverage: occupancy, empty takes, shutdown.
+    #[test]
+    fn prep_protocol_rejects_double_submit_and_handles_shutdown() {
+        let (man, _) = fixture::tiny_fixture();
+        let mut rng = Pcg32::new(8);
+        let plan = MaskPlan::bernoulli(&man, 0.5, &mut rng);
+        let proto = PrepProtocol::new(PlanShape::of(&plan), 1, 2);
+        assert!(proto.try_take().is_none(), "empty slot has nothing to take");
+        assert!(!proto.try_prep(), "empty slot has nothing to prepare");
+        proto.submit(plan.clone(), rng.clone()).unwrap();
+        let e = proto.submit(plan.clone(), rng.clone()).unwrap_err();
+        assert!(e.to_string().contains("already holds"), "{e}");
+        assert!(proto.try_take().is_none(), "request is not yet ready");
+        assert!(proto.try_prep());
+        let (p2, r2, check) = proto.try_take().expect("ready after prep");
+        check.unwrap();
+        assert_eq!(p2.nb(), plan.nb());
+        // round-trips keep working
+        proto.submit(p2, r2).unwrap();
+        assert!(proto.try_prep());
+        assert!(proto.try_take().is_some());
+        // shutdown with a pending request: worker step refuses, both
+        // sides error
+        proto.submit(plan, rng).unwrap();
+        proto.shutdown();
+        assert!(!proto.prep_one(), "prep after shutdown must stop");
+        assert!(proto.take().is_err());
+        assert!(proto.with_ready(|p| p.nb()).is_err());
+    }
+
+    /// The worker thread joins on drop, pending request or not.
+    #[test]
+    fn prep_worker_drop_joins() {
+        let (man, _) = fixture::tiny_fixture();
+        let mut rng = Pcg32::new(12);
+        let plan = MaskPlan::bernoulli(&man, 0.5, &mut rng);
+        for submit_first in [false, true] {
+            let proto = Arc::new(PrepProtocol::new(PlanShape::of(&plan), 1, 2));
+            if submit_first {
+                proto.submit(plan.clone(), rng.clone()).unwrap();
+            }
+            let worker = PrepWorker::spawn(Arc::clone(&proto));
+            drop(worker); // must not hang
+        }
+    }
+}

@@ -47,6 +47,9 @@ pub struct AblationRow {
     pub sampler_fresh_us: f64,
     /// Per-sample sampler overhead via the in-place mask swap (us).
     pub sampler_swap_us: f64,
+    /// Per-sample sampler overhead when only the last layer is redrawn
+    /// (the `mc-dropout-ll` head's per-pass cost; us).
+    pub sampler_ll_us: f64,
 }
 
 /// Measure the runtime-sampler overhead in isolation, per mask redraw:
@@ -55,11 +58,15 @@ pub struct AblationRow {
 ///   construct a new `NativeEngine` (the pre-refactor `McDropout`
 ///   lifecycle: transpose + BN-fold + pack + allocate, every sample);
 /// * **mask-swap** — `MaskPlan::resample` + `NativeEngine::swap_masks`
-///   (the current hot path: in-place redraw + union re-pack).
+///   (the current hot path: in-place redraw + union re-pack);
+/// * **last-layer swap** — `MaskPlan::resample_layer_range(2, 2)` +
+///   swap: the `mc-dropout-ll` head's per-pass cost, redrawing half the
+///   mask bits.
 ///
-/// Both include the Bernoulli redraw itself, so the difference is purely
-/// the mask-application machinery.  Returns `(fresh_us, swap_us)`.
-pub fn sampler_overhead(man: &Manifest, weights: &Weights) -> anyhow::Result<(f64, f64)> {
+/// All include the Bernoulli redraw itself, so the differences are
+/// purely the mask-application machinery.  Returns
+/// `(fresh_us, swap_us, ll_us)`.
+pub fn sampler_overhead(man: &Manifest, weights: &Weights) -> anyhow::Result<(f64, f64, f64)> {
     let iters = 50usize;
     let mut rng = Pcg32::new(71);
     let mut plan = MaskPlan::bernoulli(man, 1.0 / man.scale, &mut rng);
@@ -82,7 +89,15 @@ pub fn sampler_overhead(man: &Manifest, weights: &Weights) -> anyhow::Result<(f6
     }
     std::hint::black_box(&eng);
     let swap_us = t.elapsed_s() * 1e6 / iters as f64;
-    Ok((fresh_us, swap_us))
+
+    let t = Timer::start();
+    for _ in 0..iters {
+        plan.resample_layer_range(2, 2, &mut rng);
+        eng.swap_masks(&plan)?;
+    }
+    std::hint::black_box(&eng);
+    let ll_us = t.elapsed_s() * 1e6 / iters as f64;
+    Ok((fresh_us, swap_us, ll_us))
 }
 
 fn eval_engine(
@@ -119,8 +134,8 @@ fn eval_engine(
     Ok((calibration, unc_noisy, unc_clean, max_delta))
 }
 
-/// Run the three-method ablation with the given weights.  All three
-/// heads come from the engine registry, like every other consumer.
+/// Run the four-method ablation with the given weights.  All the heads
+/// come from the engine registry, like every other consumer.
 pub fn ablation(man: &Manifest, weights: &Weights) -> anyhow::Result<Vec<AblationRow>> {
     let mut rows = Vec::new();
 
@@ -137,15 +152,17 @@ pub fn ablation(man: &Manifest, weights: &Weights) -> anyhow::Result<Vec<Ablatio
         runtime_sampler: false,
         sampler_fresh_us: 0.0,
         sampler_swap_us: 0.0,
+        sampler_ll_us: 0.0,
     });
 
     // MC-Dropout: random Bernoulli masks per pass.  The sampler columns
-    // isolate what one redraw costs under the two mask lifecycles.
+    // isolate what one redraw costs under the three mask lifecycles
+    // (fresh engine build, full-plan swap, last-layer-only swap).
     let mcd_opts = EngineOpts {
         seed: 62,
         ..Default::default()
     };
-    let (sampler_fresh_us, sampler_swap_us) = sampler_overhead(man, weights)?;
+    let (sampler_fresh_us, sampler_swap_us, sampler_ll_us) = sampler_overhead(man, weights)?;
     let mut mcd = registry::build("mc-dropout", man, weights, &mcd_opts)?;
     let (cal, un, uc, rep) = eval_engine(mcd.as_mut(), man, 61)?;
     rows.push(AblationRow {
@@ -158,6 +175,25 @@ pub fn ablation(man: &Manifest, weights: &Weights) -> anyhow::Result<Vec<Ablatio
         runtime_sampler: true, // the Fig.-4 hardware penalty
         sampler_fresh_us,
         sampler_swap_us,
+        sampler_ll_us,
+    });
+
+    // Last-layer-only MC-Dropout: the deterministic trunk is shared
+    // across passes, only the output-layer masks are redrawn — the
+    // cheap-sampler ablation the `mc-dropout-ll` head exists for.
+    let mut mcd_ll = registry::build("mc-dropout-ll", man, weights, &mcd_opts)?;
+    let (cal, un, uc, rep) = eval_engine(mcd_ll.as_mut(), man, 61)?;
+    rows.push(AblationRow {
+        method: "MC-Dropout (last layer)".into(),
+        calibration: cal,
+        unc_noisy: un,
+        unc_clean: uc,
+        repeatability: rep,
+        memory_x: 1.0,
+        runtime_sampler: true,
+        sampler_fresh_us,
+        sampler_swap_us: sampler_ll_us, // its per-pass cost IS the ll redraw
+        sampler_ll_us,
     });
 
     // Deep Ensemble: N independent weight sets (untrained members carry
@@ -180,6 +216,7 @@ pub fn ablation(man: &Manifest, weights: &Weights) -> anyhow::Result<Vec<Ablatio
         runtime_sampler: false,
         sampler_fresh_us: 0.0,
         sampler_swap_us: 0.0,
+        sampler_ll_us: 0.0,
     });
 
     Ok(rows)
@@ -190,7 +227,7 @@ pub fn render(rows: &[AblationRow]) -> String {
     use crate::metrics::report::Table;
     let mut t = Table::new(&[
         "method", "calibration", "unc@SNR5", "unc@SNR50", "repeatability", "memory",
-        "runtime sampler", "sampler fresh-build", "sampler mask-swap",
+        "runtime sampler", "sampler fresh-build", "sampler mask-swap", "sampler last-layer",
     ]);
     for r in rows {
         let sampler_col = |us: f64| {
@@ -214,6 +251,7 @@ pub fn render(rows: &[AblationRow]) -> String {
             if r.runtime_sampler { "REQUIRED" } else { "none" }.into(),
             sampler_col(r.sampler_fresh_us),
             sampler_col(r.sampler_swap_us),
+            sampler_col(r.sampler_ll_us),
         ]);
     }
     t.to_text()
@@ -229,18 +267,27 @@ mod tests {
         let Ok(man) = load_manifest("tiny") else { return };
         let w = Weights::load_init(&man).unwrap();
         let rows = ablation(&man, &w).unwrap();
-        assert_eq!(rows.len(), 3);
+        assert_eq!(rows.len(), 4);
         let ours = &rows[0];
         let mcd = &rows[1];
-        let de = &rows[2];
+        let mcd_ll = &rows[2];
+        let de = &rows[3];
         // The paper's §II-C / §V claims:
         assert_eq!(ours.repeatability, 0.0, "fixed masks are deterministic");
         assert!(mcd.repeatability > 0.0, "MC-Dropout is not repeatable");
-        assert!(!ours.runtime_sampler && mcd.runtime_sampler);
+        assert!(
+            mcd_ll.repeatability > 0.0,
+            "last-layer MC still redraws masks"
+        );
+        assert!(!ours.runtime_sampler && mcd.runtime_sampler && mcd_ll.runtime_sampler);
         assert!(de.memory_x >= 2.0, "ensembles pay the memory cost");
-        // Sampler overhead is reported (and only) for the sampler method.
+        // Sampler overhead is reported (and only) for the sampler methods.
         assert!(mcd.sampler_fresh_us > 0.0 && mcd.sampler_swap_us > 0.0);
+        assert!(mcd.sampler_ll_us > 0.0);
         assert_eq!(ours.sampler_fresh_us, 0.0);
+        assert_eq!(ours.sampler_ll_us, 0.0);
+        // The ll head's per-pass cost is the last-layer redraw itself.
+        assert_eq!(mcd_ll.sampler_swap_us, mcd_ll.sampler_ll_us);
         // All three methods show more uncertainty on noisier data.
         for r in &rows {
             assert!(
@@ -255,9 +302,11 @@ mod tests {
         let rendered = render(&rows);
         assert!(rendered.contains("sampler fresh-build"));
         assert!(rendered.contains("sampler mask-swap"));
+        assert!(rendered.contains("sampler last-layer"));
+        assert!(rendered.contains("MC-Dropout (last layer)"));
     }
 
-    /// Fixture-backed (never skips): both sampler lifecycles are
+    /// Fixture-backed (never skips): all three sampler lifecycles are
     /// measurable.  The swap-vs-fresh *magnitude* claim lives in the
     /// `micro_hotpaths` bench, not here — wall-clock comparisons on a
     /// contended CI runner are a flaky-test class, so the unit test
@@ -265,8 +314,9 @@ mod tests {
     #[test]
     fn sampler_overhead_is_measurable() {
         let (man, w) = crate::testing::fixture::tiny_fixture();
-        let (fresh_us, swap_us) = sampler_overhead(&man, &w).unwrap();
+        let (fresh_us, swap_us, ll_us) = sampler_overhead(&man, &w).unwrap();
         assert!(fresh_us > 0.0 && fresh_us.is_finite());
         assert!(swap_us > 0.0 && swap_us.is_finite());
+        assert!(ll_us > 0.0 && ll_us.is_finite());
     }
 }

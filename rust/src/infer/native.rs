@@ -41,8 +41,19 @@ use super::{Engine, InferOutput};
 use crate::ivim::Param;
 use crate::masks::{LayerPlan, MaskPlan, MaskSet};
 use crate::model::{Manifest, SubnetWeights, Weights};
+use crate::util::workers::{self, WorkerPool};
 
 const EPS: f32 = 1e-5;
+
+/// Raw output pointer shared by the worker lanes of a tiled kernel.
+/// Lanes write **disjoint** voxel tiles (see [`workers::tile`]) through
+/// raw-pointer stores, never through aliasing `&mut` slices, so the
+/// parallel path is sound and — because every element is produced by the
+/// same per-dot kernel on the same inputs — bit-exact vs single-threaded.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
 
 /// Transpose an input-major `[nb_in][nb_out]` matrix into output-major
 /// rows (perf: the hot dot product then reads contiguously).
@@ -292,10 +303,54 @@ impl BlockedMaskedLinear {
     /// `act[p * batch + v]` is output `union[p]` for voxel `v`.  Sample-
     /// independent — call once per batch and reuse for all N samples.
     pub fn forward_union(&self, batch: usize, x: &[f32], act: &mut [f32]) {
+        debug_assert_eq!(x.len(), batch * self.nb);
+        debug_assert!(act.len() >= self.union.len() * batch);
+        // SAFETY: single caller-owned `act`, full voxel range.
+        unsafe { self.forward_union_range_raw(batch, x, act.as_mut_ptr(), 0, batch) }
+    }
+
+    /// [`Self::forward_union`] split across a [`WorkerPool`]'s lanes by
+    /// **voxel tile** — the row blocking and the per-element kernel
+    /// calls are unchanged (lane `k` runs the identical loop restricted
+    /// to voxels `tile(batch, threads, k)`), so the result is bit-exact
+    /// vs the single-threaded path for every thread count.
+    pub fn forward_union_tiled(&self, batch: usize, x: &[f32], act: &mut [f32], pool: &WorkerPool) {
+        if pool.worker_threads() == 0 {
+            self.forward_union(batch, x, act);
+            return;
+        }
+        debug_assert_eq!(x.len(), batch * self.nb);
+        debug_assert!(act.len() >= self.union.len() * batch);
+        let threads = pool.threads();
+        let ptr = SendPtr(act.as_mut_ptr());
+        pool.run(threads, |lane| {
+            let (lo, hi) = workers::tile(batch, threads, lane);
+            if lo < hi {
+                // SAFETY: lane writes only `act[p * batch + v]` for
+                // v in [lo, hi); tiles are disjoint across lanes and
+                // `act` outlives the run's completion barrier.
+                unsafe { self.forward_union_range_raw(batch, x, ptr.0, lo, hi) }
+            }
+        })
+        .expect("forward_union worker lane panicked");
+    }
+
+    /// Inner loop of [`Self::forward_union`] over voxels `[v_lo, v_hi)`.
+    ///
+    /// # Safety
+    /// `act` must be valid for `union_len * batch` elements and no other
+    /// thread may concurrently touch indices `p * batch + v` with
+    /// `v` in `[v_lo, v_hi)`.
+    unsafe fn forward_union_range_raw(
+        &self,
+        batch: usize,
+        x: &[f32],
+        act: *mut f32,
+        v_lo: usize,
+        v_hi: usize,
+    ) {
         let nb = self.nb;
         let rows = self.union.len();
-        debug_assert_eq!(x.len(), batch * nb);
-        debug_assert!(act.len() >= rows * batch);
         let mut r = 0;
         while r + 4 <= rows {
             let ws = [
@@ -304,11 +359,11 @@ impl BlockedMaskedLinear {
                 &self.w[(r + 2) * nb..(r + 3) * nb],
                 &self.w[(r + 3) * nb..(r + 4) * nb],
             ];
-            for v in 0..batch {
+            for v in v_lo..v_hi {
                 let xv = &x[v * nb..(v + 1) * nb];
                 let d = kernels::dot_rows(self.mode, nb, xv, ws);
                 for k in 0..4 {
-                    act[(r + k) * batch + v] =
+                    *act.add((r + k) * batch + v) =
                         affine_relu(d[k], self.b[r + k], self.scale[r + k], self.shift[r + k]);
                 }
             }
@@ -316,10 +371,10 @@ impl BlockedMaskedLinear {
         }
         while r < rows {
             let wr = &self.w[r * nb..(r + 1) * nb];
-            for v in 0..batch {
+            for v in v_lo..v_hi {
                 let xv = &x[v * nb..(v + 1) * nb];
                 let acc = kernels::dot_one(self.mode, nb, xv, wr);
-                act[r * batch + v] = affine_relu(acc, self.b[r], self.scale[r], self.shift[r]);
+                *act.add(r * batch + v) = affine_relu(acc, self.b[r], self.scale[r], self.shift[r]);
             }
             r += 1;
         }
@@ -328,15 +383,67 @@ impl BlockedMaskedLinear {
     /// Scatter sample `s`'s kept union activations into a voxel-major
     /// `[batch][nb]` buffer (dropped outputs are zeroed — the mask).
     pub fn scatter_sample(&self, s: usize, batch: usize, act: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), batch * self.nb);
+        // SAFETY: single caller-owned `out`, full voxel range.
+        unsafe { self.scatter_sample_range_raw(s, batch, act, out.as_mut_ptr(), 0, batch) }
+    }
+
+    /// [`Self::scatter_sample`] split across a [`WorkerPool`]'s lanes by
+    /// voxel tile; each lane zeroes and scatters only its own voxels'
+    /// `[nb]` rows, so writes are disjoint and the result is bit-exact
+    /// vs single-threaded (pure data movement, no arithmetic).
+    pub fn scatter_sample_tiled(
+        &self,
+        s: usize,
+        batch: usize,
+        act: &[f32],
+        out: &mut [f32],
+        pool: &WorkerPool,
+    ) {
+        if pool.worker_threads() == 0 {
+            self.scatter_sample(s, batch, act, out);
+            return;
+        }
+        debug_assert_eq!(out.len(), batch * self.nb);
+        let threads = pool.threads();
+        let ptr = SendPtr(out.as_mut_ptr());
+        pool.run(threads, |lane| {
+            let (lo, hi) = workers::tile(batch, threads, lane);
+            if lo < hi {
+                // SAFETY: lane writes only voxel rows [lo, hi) of `out`;
+                // tiles are disjoint and `out` outlives the barrier.
+                unsafe { self.scatter_sample_range_raw(s, batch, act, ptr.0, lo, hi) }
+            }
+        })
+        .expect("scatter_sample worker lane panicked");
+    }
+
+    /// Inner loop of [`Self::scatter_sample`] over voxels `[v_lo, v_hi)`
+    /// (zeroes those voxels' rows, then scatters the kept columns).
+    ///
+    /// # Safety
+    /// `out` must be valid for `batch * nb` elements and no other thread
+    /// may concurrently touch voxel rows `[v_lo, v_hi)`.
+    unsafe fn scatter_sample_range_raw(
+        &self,
+        s: usize,
+        batch: usize,
+        act: &[f32],
+        out: *mut f32,
+        v_lo: usize,
+        v_hi: usize,
+    ) {
         let nb = self.nb;
-        debug_assert_eq!(out.len(), batch * nb);
-        out.fill(0.0);
+        debug_assert!(v_hi <= batch);
+        for i in v_lo * nb..v_hi * nb {
+            *out.add(i) = 0.0;
+        }
         for &p in &self.kept_pos[s] {
             let p = p as usize;
             let o = self.union[p];
             let col = &act[p * batch..(p + 1) * batch];
-            for (v, &val) in col.iter().enumerate() {
-                out[v * nb + o] = val;
+            for v in v_lo..v_hi {
+                *out.add(v * nb + o) = col[v];
             }
         }
     }
@@ -432,6 +539,9 @@ pub struct NativeEngine {
     n_samples: usize,
     batch: usize,
     subnets: Vec<SubnetState>,
+    /// Persistent lanes for the tiled layer-1 kernels (built once; a
+    /// 1-thread pool spawns nothing and keeps the exact inline path).
+    workers: WorkerPool,
     // scratch buffers reused across calls (hot path: no allocation)
     act1: Vec<f32>,
     h1: Vec<f32>,
@@ -446,6 +556,20 @@ impl NativeEngine {
     /// Engine with a custom batch size (the native path has no static
     /// shape constraint; used by the coordinator for tail batches).
     pub fn with_batch(man: &Manifest, weights: &Weights, batch: usize) -> anyhow::Result<Self> {
+        Self::with_batch_threads(man, weights, batch, 1)
+    }
+
+    /// Engine with a custom batch size and a persistent worker pool of
+    /// `threads` lanes splitting the batch dimension of the layer-1
+    /// kernels into fixed voxel tiles.  Output is **bit-identical** to
+    /// `threads = 1` for every thread count (deterministic tiles, no
+    /// cross-tile reductions, unchanged per-dot kernels).
+    pub fn with_batch_threads(
+        man: &Manifest,
+        weights: &Weights,
+        batch: usize,
+        threads: usize,
+    ) -> anyhow::Result<Self> {
         anyhow::ensure!(batch > 0, "batch must be positive");
         let subnets = build_subnets(man, weights)?;
         Ok(NativeEngine {
@@ -453,6 +577,7 @@ impl NativeEngine {
             n_samples: man.n_samples,
             batch,
             subnets,
+            workers: WorkerPool::new(threads),
             // Sized for the worst-case union (all nb outputs), not the
             // current masks': a later `swap_masks` may grow the union
             // and must never reallocate.
@@ -460,6 +585,11 @@ impl NativeEngine {
             h1: vec![0.0; batch * man.nb],
             h2: vec![0.0; batch * man.nb],
         })
+    }
+
+    /// Worker lanes serving the tiled kernels (1 = inline).
+    pub fn threads(&self) -> usize {
+        self.workers.threads()
     }
 
     /// Hot-swap the engine's masks from a [`MaskPlan`] without touching
@@ -519,6 +649,7 @@ impl NativeEngine {
     /// steady state.
     pub fn alloc_signature(&self) -> Vec<usize> {
         let mut sig = vec![self.act1.capacity(), self.h1.capacity(), self.h2.capacity()];
+        sig.extend(self.workers.alloc_signature());
         for sn in &self.subnets {
             sig.extend(sn.l1.alloc_signature());
             sig.extend(sn.l2.alloc_signature());
@@ -557,11 +688,12 @@ impl NativeEngine {
         let nb = self.nb;
         let batch = self.batch;
         let sn = &self.subnets[si];
+        let pool = &self.workers;
         let u1 = sn.l1.union_len();
         let act1 = &mut self.act1[..u1 * batch];
-        sn.l1.forward_union(batch, signals, act1);
+        sn.l1.forward_union_tiled(batch, signals, act1, pool);
         for s in 0..self.n_samples {
-            sn.l1.scatter_sample(s, batch, act1, &mut self.h1);
+            sn.l1.scatter_sample_tiled(s, batch, act1, &mut self.h1, pool);
             sn.l2.forward_sample(s, batch, &self.h1, &mut self.h2);
             for v in 0..batch {
                 let hi = &self.h2[v * nb..(v + 1) * nb];
@@ -1016,6 +1148,107 @@ mod tests {
             eng.swap_masks(&plan).unwrap();
             eng.execute_into(&ds.signals, &mut out).unwrap();
             assert_eq!(eng.alloc_signature(), sig, "swap or execute reallocated");
+        }
+    }
+
+    /// Tentpole gate (ISSUE #8): the tiled worker-pool path must be
+    /// **bit-identical** to `threads = 1` for every thread count — the
+    /// tile partition is deterministic, lanes share no written element,
+    /// and every element is produced by the unchanged per-dot kernel.
+    /// Exercised end-to-end (engine outputs) and through hot swaps, on
+    /// two fixture shapes including a batch that doesn't divide evenly.
+    #[test]
+    fn tiled_engine_matches_single_thread_bit_for_bit() {
+        use crate::masks::MaskPlan;
+        use crate::util::rng::Pcg32;
+        let mut a = InferOutput::new(1, 1);
+        let mut b = InferOutput::new(1, 1);
+        for (tag, (man, w)) in [
+            ("fixture", fixture::tiny_fixture()),
+            (
+                "fixture-nb17",
+                fixture::build(&fixture::FixtureConfig {
+                    nb: 17,
+                    n_samples: 6,
+                    batch_infer: 9,
+                    weight_seed: 12,
+                    ..Default::default()
+                }),
+            ),
+        ] {
+            let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 42);
+            let mut serial = NativeEngine::with_batch(&man, &w, man.batch_infer).unwrap();
+            for threads in [2usize, 4, 8] {
+                let mut tiled =
+                    NativeEngine::with_batch_threads(&man, &w, man.batch_infer, threads).unwrap();
+                assert_eq!(tiled.threads(), threads);
+                let mut plan = MaskPlan::from_manifest(&man).unwrap();
+                let mut rng = Pcg32::new(77);
+                for round in 0..3 {
+                    plan.resample(&mut rng);
+                    serial.swap_masks(&plan).unwrap();
+                    tiled.swap_masks(&plan).unwrap();
+                    serial.execute_into(&ds.signals, &mut a).unwrap();
+                    tiled.execute_into(&ds.signals, &mut b).unwrap();
+                    for p in Param::ALL {
+                        assert_eq!(
+                            a.samples[p.index()],
+                            b.samples[p.index()],
+                            "{tag} t{threads} round {round}: tiled != serial for {p:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// The bare tiled kernels agree bit-for-bit with their serial
+    /// counterparts on ragged shapes (batch < threads included).
+    #[test]
+    fn tiled_kernels_match_serial_on_ragged_shapes() {
+        let (man, w) = fixture::tiny_fixture();
+        let eng = NativeEngine::new(&man, &w).unwrap();
+        let sn = &eng.subnets[0];
+        for threads in [2usize, 4, 8] {
+            let pool = WorkerPool::new(threads);
+            for batch in [1usize, 3, threads, 13] {
+                let ds = synth_dataset(batch, &man.bvalues, 20.0, 51);
+                let rows = sn.l1.union_len();
+                let mut act_s = vec![0.0f32; rows * batch];
+                let mut act_t = vec![7.0f32; rows * batch];
+                sn.l1.forward_union(batch, &ds.signals, &mut act_s);
+                sn.l1.forward_union_tiled(batch, &ds.signals, &mut act_t, &pool);
+                assert_eq!(act_s, act_t, "forward_union t{threads} batch{batch}");
+                for s in 0..man.n_samples {
+                    let mut out_s = vec![1.0f32; batch * man.nb];
+                    let mut out_t = vec![2.0f32; batch * man.nb];
+                    sn.l1.scatter_sample(s, batch, &act_s, &mut out_s);
+                    sn.l1.scatter_sample_tiled(s, batch, &act_t, &mut out_t, &pool);
+                    assert_eq!(out_s, out_t, "scatter s{s} t{threads} batch{batch}");
+                }
+            }
+        }
+    }
+
+    /// The pool is part of the engine's steady-state no-allocation
+    /// contract: swap + execute at threads=4 never changes the
+    /// capacity signature (which now includes the pool's).
+    #[test]
+    fn tiled_engine_never_reallocates_in_steady_state() {
+        use crate::masks::MaskPlan;
+        use crate::util::rng::Pcg32;
+        let (man, w) = fixture::tiny_fixture();
+        let mut eng = NativeEngine::with_batch_threads(&man, &w, man.batch_infer, 4).unwrap();
+        let mut plan = MaskPlan::from_manifest(&man).unwrap();
+        let mut rng = Pcg32::new(19);
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 24);
+        let mut out = InferOutput::new(man.n_samples, man.batch_infer);
+        let sig = eng.alloc_signature();
+        for _ in 0..20 {
+            plan.resample(&mut rng);
+            eng.swap_masks(&plan).unwrap();
+            eng.execute_into(&ds.signals, &mut out).unwrap();
+            assert_eq!(eng.alloc_signature(), sig, "tiled swap or execute reallocated");
         }
     }
 

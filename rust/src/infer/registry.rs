@@ -17,9 +17,19 @@
 //! | `accel-mc`   | [`crate::bayes::AccelMcDropout`] (random masks |
 //! |              | per pass over the Q4.12 simulator's mask swap) |
 //! | `mc-dropout` | [`crate::bayes::McDropout`]                    |
+//! | `mc-dropout-ll` | [`crate::bayes::McDropout`] last-layer-only |
+//! |              | head (only layer-2 masks redrawn per pass)     |
 //! | `ensemble`   | [`crate::bayes::DeepEnsemble`]                 |
 //! | `pjrt`       | `runtime::InferExecutable` (needs the `pjrt`   |
 //! |              | feature; errors cleanly on the stub build)     |
+//!
+//! The MC heads (`mc-dropout`, `mc-dropout-ll`, `accel-mc`) honour
+//! [`EngineOpts::overlap`]: when set they are wrapped in
+//! [`crate::bayes::pipeline::Pipelined`], which prepares pass *i+1*'s
+//! mask plan on a background worker while pass *i* executes —
+//! bit-identical outputs, swap-only critical path.  `native` and the
+//! f32 MC heads honour [`EngineOpts::threads`] for batch-tiled GEMM
+//! lanes (also bit-exact vs one thread).
 //!
 //! Construction is the *plan* phase of the two-phase execution API: the
 //! returned engine has all scratch sized for its batch shape, and
@@ -46,6 +56,16 @@ pub struct EngineOpts {
     pub seed: u64,
     /// Ensemble member count (`None` = the manifest's `n_samples`).
     pub members: Option<usize>,
+    /// Worker lanes for the batch-tiled f32 kernels (`native`,
+    /// `mc-dropout`, `mc-dropout-ll`).  Clamped to >= 1; 1 spawns no
+    /// threads and is the exact serial path.  Outputs are bit-identical
+    /// for every value (the tiling contract).
+    pub threads: usize,
+    /// Overlap mask preparation with execution on the MC heads
+    /// (`mc-dropout`, `mc-dropout-ll`, `accel-mc`): a persistent
+    /// background worker redraws pass *i+1*'s plan while pass *i*
+    /// executes.  Bit-identical to the serial heads.
+    pub overlap: bool,
 }
 
 impl Default for EngineOpts {
@@ -54,6 +74,8 @@ impl Default for EngineOpts {
             batch: None,
             seed: 42,
             members: None,
+            threads: 1,
+            overlap: false,
         }
     }
 }
@@ -86,8 +108,11 @@ impl Registry {
         let mut r = Registry::new();
         r.register("native", |man: &Manifest, weights: &Weights, opts: &EngineOpts| {
             let batch = opts.batch.unwrap_or(man.batch_infer);
-            Ok(Box::new(crate::infer::native::NativeEngine::with_batch(
-                man, weights, batch,
+            Ok(Box::new(crate::infer::native::NativeEngine::with_batch_threads(
+                man,
+                weights,
+                batch,
+                opts.threads.max(1),
             )?))
         })
         .expect("builtin name");
@@ -106,6 +131,11 @@ impl Registry {
         .expect("builtin name");
         r.register("accel-mc", |man: &Manifest, weights: &Weights, opts: &EngineOpts| {
             let batch = opts.batch.unwrap_or(man.batch_infer);
+            if opts.overlap {
+                return Ok(Box::new(crate::bayes::pipeline::accel_mc(
+                    man, weights, batch, opts.seed,
+                )?));
+            }
             Ok(Box::new(crate::bayes::AccelMcDropout::with_batch(
                 man, weights, batch, opts.seed,
             )?))
@@ -113,8 +143,27 @@ impl Registry {
         .expect("builtin name");
         r.register("mc-dropout", |man: &Manifest, weights: &Weights, opts: &EngineOpts| {
             let batch = opts.batch.unwrap_or(man.batch_infer);
-            Ok(Box::new(crate::bayes::McDropout::with_batch(
-                man, weights, batch, opts.seed,
+            let threads = opts.threads.max(1);
+            if opts.overlap {
+                return Ok(Box::new(crate::bayes::pipeline::mc_dropout(
+                    man, weights, batch, opts.seed, threads,
+                )?));
+            }
+            Ok(Box::new(crate::bayes::McDropout::with_batch_threads(
+                man, weights, batch, opts.seed, threads,
+            )?))
+        })
+        .expect("builtin name");
+        r.register("mc-dropout-ll", |man: &Manifest, weights: &Weights, opts: &EngineOpts| {
+            let batch = opts.batch.unwrap_or(man.batch_infer);
+            let threads = opts.threads.max(1);
+            if opts.overlap {
+                return Ok(Box::new(crate::bayes::pipeline::mc_dropout_last_layer(
+                    man, weights, batch, opts.seed, threads,
+                )?));
+            }
+            Ok(Box::new(crate::bayes::McDropout::last_layer_with_batch(
+                man, weights, batch, opts.seed, threads,
             )?))
         })
         .expect("builtin name");
@@ -280,10 +329,18 @@ mod tests {
         let r = Registry::builtin();
         assert_eq!(
             r.names(),
-            vec!["native", "accel", "accel-mc", "mc-dropout", "ensemble", "pjrt"]
+            vec![
+                "native",
+                "accel",
+                "accel-mc",
+                "mc-dropout",
+                "mc-dropout-ll",
+                "ensemble",
+                "pjrt"
+            ]
         );
         assert!(r.contains("native") && !r.contains("gpu"));
-        assert!(names_help().contains("mc-dropout"));
+        assert!(names_help().contains("mc-dropout-ll"));
         assert!(names_help().contains("accel-mc"));
     }
 
@@ -301,7 +358,14 @@ mod tests {
     fn builds_every_non_pjrt_backend_on_the_fixture() {
         let (man, w) = fixture::tiny_fixture();
         let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 23);
-        for name in ["native", "accel", "accel-mc", "mc-dropout", "ensemble"] {
+        for name in [
+            "native",
+            "accel",
+            "accel-mc",
+            "mc-dropout",
+            "mc-dropout-ll",
+            "ensemble",
+        ] {
             let mut eng = build(name, &man, &w, &EngineOpts::default()).unwrap();
             assert_eq!(eng.batch_size(), man.batch_infer, "{name}");
             assert!(eng.n_samples() >= 1, "{name}");
@@ -351,6 +415,30 @@ mod tests {
             1,
             "second build reuses the cached client (slot), constructing nothing"
         );
+    }
+
+    /// `threads`/`overlap` route through the registry and stay
+    /// bit-identical to the default serial build (the ISSUE #8 CLI
+    /// contract: the flags are pure perf knobs).
+    #[test]
+    fn threads_and_overlap_opts_are_bit_exact_through_the_registry() {
+        let (man, w) = fixture::tiny_fixture();
+        let ds = synth_dataset(man.batch_infer, &man.bvalues, 20.0, 25);
+        for name in ["mc-dropout", "mc-dropout-ll", "accel-mc"] {
+            let mut serial = build(name, &man, &w, &EngineOpts::default()).unwrap();
+            let opts = EngineOpts {
+                threads: if name == "accel-mc" { 1 } else { 4 },
+                overlap: true,
+                ..Default::default()
+            };
+            let mut piped = build(name, &man, &w, &opts).unwrap();
+            assert!(piped.name().contains("overlap"), "{name} -> {}", piped.name());
+            for pass in 0..3 {
+                let a = serial.infer_batch(&ds.signals).unwrap();
+                let b = piped.infer_batch(&ds.signals).unwrap();
+                assert_eq!(a.samples, b.samples, "{name} pass {pass}");
+            }
+        }
     }
 
     #[test]

@@ -24,7 +24,7 @@ fn cli() -> Cli {
     let engine = || {
         opt(
             "engine",
-            "registry engine (native|accel|accel-mc|mc-dropout|ensemble|pjrt)",
+            "registry engine (native|accel|accel-mc|mc-dropout|mc-dropout-ll|ensemble|pjrt)",
             Some("native"),
         )
     };
@@ -77,6 +77,11 @@ fn cli() -> Cli {
                     opt("requests", "number of requests", Some("1000")),
                     opt("batch", "dynamic batch size (default: variant batch)", None),
                     opt("shards", "worker shards (engines) in the pool", Some("1")),
+                    opt("threads", "GEMM worker lanes per engine (bit-exact)", Some("1")),
+                    flag(
+                        "overlap",
+                        "prepare MC mask plans on a background worker (bit-exact)",
+                    ),
                 ],
             },
             CommandSpec {
@@ -98,6 +103,11 @@ fn cli() -> Cli {
                     opt("seed", "volume generation seed", Some("11")),
                     opt("batch", "dynamic batch size (default: variant batch)", None),
                     opt("shards", "worker shards (engines) in the pool", Some("1")),
+                    opt("threads", "GEMM worker lanes per engine (bit-exact)", Some("1")),
+                    flag(
+                        "overlap",
+                        "prepare MC mask plans on a background worker (bit-exact)",
+                    ),
                     opt(
                         "out",
                         "PGM stem: writes D mean/relative map stacks under this path",
@@ -348,6 +358,8 @@ fn run(args: &Args) -> anyhow::Result<()> {
             let cfg = CoordinatorConfig::sharded(man.nb, batch, shards);
             let opts = EngineOpts {
                 batch: Some(batch),
+                threads: args.get_usize("threads")?.unwrap_or(1).max(1),
+                overlap: args.flag("overlap"),
                 ..Default::default()
             };
             let coord = Coordinator::start(cfg, registry::factory(&kind, man.clone(), w, opts)?)?;
@@ -451,6 +463,8 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 (slices_in_flight * dim.0 * dim.1 + 1).max(batch + 1);
             let opts = EngineOpts {
                 batch: Some(batch),
+                threads: args.get_usize("threads")?.unwrap_or(1).max(1),
+                overlap: args.flag("overlap"),
                 ..Default::default()
             };
             let coord =

@@ -278,9 +278,59 @@ impl MaskPlan {
 
     /// Redraw every layer's masks in place (no allocation).
     pub fn resample(&mut self, rng: &mut Pcg32) {
-        for l in &mut self.layers {
-            l.resample(self.keep_prob, rng);
+        self.resample_layer_range(1, 2, rng);
+    }
+
+    /// Redraw only masked layers `first_layer..=last_layer` (each in
+    /// {1, 2}) across every subnet, in place.  RNG draws happen in the
+    /// same (subnet-major, layer-minor) order as [`MaskPlan::resample`],
+    /// so `resample_layer_range(1, 2, rng)` consumes the stream
+    /// identically to a full resample — full-range callers stay
+    /// bit-compatible.  The narrow ranges are what the last-layer-only
+    /// MC sampler and the pipeline's partial-redraw path use: untouched
+    /// layers keep their bits, index lists and counts bit-identical.
+    pub fn resample_layer_range(&mut self, first_layer: usize, last_layer: usize, rng: &mut Pcg32) {
+        assert!(
+            (1..=2).contains(&first_layer) && first_layer <= last_layer && last_layer <= 2,
+            "masked layers are 1 and 2 (got {first_layer}..={last_layer})"
+        );
+        let kp = self.keep_prob;
+        for si in 0..self.subnets.len() {
+            for layer in first_layer..=last_layer {
+                self.layers[si * 2 + (layer - 1)].resample(kp, rng);
+            }
         }
+    }
+
+    /// Redraw a *shadow* plan in place, using `self` only as the shape
+    /// and keep-rate template — the double-buffering primitive.
+    ///
+    /// Because [`LayerPlan::resample`] overwrites every bit from fresh
+    /// Bernoulli draws and its RNG consumption depends only on the
+    /// drawn bits (never the prior mask state), the result is a pure
+    /// function of `rng`'s incoming state: resampling a stale shadow
+    /// clone yields masks bit-identical to resampling the live plan
+    /// (see `resample_is_independent_of_prior_bits`).  That is what
+    /// lets a background worker prepare pass *i+1*'s plan while pass
+    /// *i* executes, with the serial engine as a bit-exact oracle.
+    pub fn resample_into(&self, target: &mut MaskPlan, rng: &mut Pcg32) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            target.nb == self.nb && target.n_samples == self.n_samples,
+            "shadow plan is {}x{}, live plan is {}x{}",
+            target.n_samples,
+            target.nb,
+            self.n_samples,
+            self.nb
+        );
+        anyhow::ensure!(
+            target.subnets == self.subnets,
+            "shadow plan subnets {:?} != live plan subnets {:?}",
+            target.subnets,
+            self.subnets
+        );
+        target.keep_prob = self.keep_prob;
+        target.resample(rng);
+        Ok(())
     }
 
     /// Write this plan's masks (and sample count) into a manifest — the
@@ -300,7 +350,21 @@ impl MaskPlan {
 
     /// Concatenated buffer capacities of every layer (no-alloc witness).
     pub fn alloc_signature(&self) -> Vec<usize> {
-        self.layers.iter().flat_map(|l| l.alloc_signature()).collect()
+        let mut sig = Vec::new();
+        self.alloc_signature_into(&mut sig);
+        sig
+    }
+
+    /// Append the capacity signature to a caller-owned buffer — the
+    /// allocation-free variant for steady-state witnesses that must not
+    /// themselves allocate per pass (the pipeline's shadow-plan check).
+    pub fn alloc_signature_into(&self, out: &mut Vec<usize>) {
+        for l in &self.layers {
+            out.push(l.bits.capacity());
+            out.push(l.union.capacity());
+            out.push(l.use_count.capacity());
+            out.extend(l.kept.iter().map(|k| k.capacity()));
+        }
     }
 }
 
@@ -472,6 +536,116 @@ mod tests {
         assert!(rate < 0.5, "resample did not follow the new rate: {rate}");
         p.set_keep_prob(7.0); // clamped
         assert_eq!(p.keep_prob(), 1.0);
+    }
+
+    /// The pipeline's correctness lemma: a resample's output (and its
+    /// RNG consumption) is a pure function of the incoming RNG state,
+    /// never of the prior mask bits — so redrawing a stale shadow clone
+    /// matches redrawing the live plan bit-for-bit.
+    #[test]
+    fn resample_is_independent_of_prior_bits() {
+        let (man, _) = fixture::tiny_fixture();
+        let mut warm = Pcg32::new(17);
+        // two plans in very different prior states...
+        let mut live = MaskPlan::bernoulli(&man, 0.5, &mut warm);
+        let mut stale = live.clone();
+        for _ in 0..3 {
+            stale.resample(&mut warm); // diverge the shadow's bits
+        }
+        // ...resampled from identical RNG states:
+        let mut ra = Pcg32::new(23);
+        let mut rb = ra.clone();
+        live.resample(&mut ra);
+        stale.resample(&mut rb);
+        for si in 0..4 {
+            for layer in 1..=2 {
+                assert_eq!(
+                    live.layer(si, layer).to_mask_set(),
+                    stale.layer(si, layer).to_mask_set(),
+                    "prior bits leaked into the resample"
+                );
+                assert_eq!(
+                    live.layer(si, layer).kept_lists(),
+                    stale.layer(si, layer).kept_lists()
+                );
+                assert_eq!(live.layer(si, layer).union(), stale.layer(si, layer).union());
+            }
+        }
+        // ...and both consumed the stream identically:
+        assert_eq!(ra.next_u32(), rb.next_u32());
+    }
+
+    #[test]
+    fn full_layer_range_is_bit_identical_to_resample() {
+        let mut a = plan();
+        let mut b = plan();
+        let mut ra = Pcg32::new(31);
+        let mut rb = Pcg32::new(31);
+        a.resample(&mut ra);
+        b.resample_layer_range(1, 2, &mut rb);
+        for si in 0..4 {
+            for layer in 1..=2 {
+                assert_eq!(a.layer(si, layer).to_mask_set(), b.layer(si, layer).to_mask_set());
+            }
+        }
+        assert_eq!(ra.next_u32(), rb.next_u32());
+    }
+
+    #[test]
+    fn layer_range_resample_leaves_other_layers_untouched() {
+        let mut p = plan();
+        let mut rng = Pcg32::new(41);
+        p.resample(&mut rng);
+        let l1_before: Vec<MaskSet> = (0..4).map(|si| p.layer(si, 1).to_mask_set()).collect();
+        let kept_before: Vec<Vec<Vec<u32>>> =
+            (0..4).map(|si| p.layer(si, 1).kept_lists().to_vec()).collect();
+        let union_before: Vec<Vec<u32>> =
+            (0..4).map(|si| p.layer(si, 1).union().to_vec()).collect();
+        let l2_before: Vec<MaskSet> = (0..4).map(|si| p.layer(si, 2).to_mask_set()).collect();
+        let sig = p.alloc_signature();
+        p.resample_layer_range(2, 2, &mut rng);
+        for si in 0..4 {
+            // untouched layer: bits AND derived index lists bit-identical
+            assert_eq!(p.layer(si, 1).to_mask_set(), l1_before[si]);
+            assert_eq!(p.layer(si, 1).kept_lists(), kept_before[si].as_slice());
+            assert_eq!(p.layer(si, 1).union(), union_before[si].as_slice());
+            layer_invariants(p.layer(si, 2));
+        }
+        assert_ne!(
+            (0..4).map(|si| p.layer(si, 2).to_mask_set()).collect::<Vec<_>>(),
+            l2_before,
+            "layer-2 range resample changed nothing"
+        );
+        assert_eq!(p.alloc_signature(), sig, "partial resample reallocated");
+    }
+
+    #[test]
+    fn resample_into_matches_in_place_and_rejects_mismatches() {
+        let (man, _) = fixture::tiny_fixture();
+        let mut warm = Pcg32::new(9);
+        let mut live = MaskPlan::bernoulli(&man, 0.5, &mut warm);
+        let mut shadow = live.clone();
+        let mut ra = Pcg32::new(77);
+        let mut rb = ra.clone();
+        live.resample_into(&mut shadow, &mut rb).unwrap();
+        let mut inline = live.clone();
+        inline.resample(&mut ra);
+        for si in 0..4 {
+            for layer in 1..=2 {
+                assert_eq!(
+                    shadow.layer(si, layer).to_mask_set(),
+                    inline.layer(si, layer).to_mask_set()
+                );
+            }
+        }
+        assert_eq!(ra.next_u32(), rb.next_u32());
+        // shape mismatches are rejected before any draw
+        let mut wrong = MaskPlan::all_ones(&man, man.n_samples + 1);
+        let mut rc = Pcg32::new(1);
+        let state_before = rc.next_u32();
+        let mut rc = Pcg32::new(1);
+        assert!(live.resample_into(&mut wrong, &mut rc).is_err());
+        assert_eq!(rc.next_u32(), state_before, "rejected resample drew from the rng");
     }
 
     #[test]

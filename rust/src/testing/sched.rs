@@ -447,6 +447,133 @@ pub fn run_script(cfg: SimConfig, script: &[Op]) -> SimResult {
     sim.finish()
 }
 
+/// One atomic step of the pipelined mask-prep hand-off
+/// (`bayes::pipeline::PrepProtocol`) — the same state machine the
+/// background `PrepWorker` walks, scheduled explicitly.  `Prep` and
+/// `Take` are the two sides whose interleaving the real pipeline leaves
+/// to the OS; here a script pins it, so "prepare racing swap" orderings
+/// are reproducible table rows like the deque races above.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrepOp {
+    /// Engine side: hand the held stale plan + RNG to the slot.
+    Submit,
+    /// Worker side: one non-blocking prepare attempt (`try_prep`).
+    Prep,
+    /// Engine side: one non-blocking take attempt (`try_take`); on
+    /// success the prepared plan becomes live and the stale one is held
+    /// for the next `Submit`.
+    Take,
+    /// Tear the protocol down.
+    Shutdown,
+}
+
+/// Observable outcome of a [`PrepOp`] script — `PartialEq` so replay
+/// and ordering-independence are single `assert_eq!`s.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PrepResult {
+    /// Kept-column lists of every layer of the plan the engine ends up
+    /// holding, in `(subnet, layer)` order — the mask bits that a real
+    /// engine would have swapped in.
+    pub final_kept: Vec<Vec<Vec<u32>>>,
+    /// Completed prepare→take cycles (passes whose masks advanced).
+    pub completed_passes: usize,
+    /// One entry per op: what the step observed.
+    pub log: Vec<&'static str>,
+}
+
+/// The synchronous twin of `bayes::Pipelined`'s hand-off loop: same
+/// construction (seeded RNG, Bernoulli plan, shadow clone submitted
+/// with the RNG), but `Prep`/`Take` run inline under script control.
+pub struct PrepSim {
+    proto: crate::bayes::pipeline::PrepProtocol,
+    /// The plan "the engine" currently executes with.
+    live: crate::masks::MaskPlan,
+    /// The stale plan + travelling RNG awaiting the next `Submit`.
+    held: Option<(crate::masks::MaskPlan, Pcg32)>,
+    completed: usize,
+    log: Vec<&'static str>,
+}
+
+impl PrepSim {
+    pub fn new(man: &crate::model::Manifest, seed: u64, layers: (usize, usize)) -> PrepSim {
+        use crate::bayes::pipeline::{PlanShape, PrepProtocol};
+        let mut rng = Pcg32::new(seed);
+        let live = crate::masks::MaskPlan::bernoulli(man, 1.0 / man.scale, &mut rng);
+        let proto = PrepProtocol::new(PlanShape::of(&live), layers.0, layers.1);
+        let held = Some((live.clone(), rng));
+        PrepSim {
+            proto,
+            live,
+            held,
+            completed: 0,
+            log: Vec::new(),
+        }
+    }
+
+    pub fn step(&mut self, op: PrepOp) {
+        let ev = match op {
+            PrepOp::Submit => match self.held.take() {
+                Some((plan, rng)) => match self.proto.submit(plan, rng) {
+                    Ok(()) => "submit",
+                    Err(_) => "submit-rejected",
+                },
+                None => "submit-nothing-held",
+            },
+            PrepOp::Prep => {
+                if self.proto.try_prep() {
+                    "prep"
+                } else {
+                    "prep-idle"
+                }
+            }
+            PrepOp::Take => match self.proto.try_take() {
+                Some((plan, rng, check)) => {
+                    check.expect("shape never changes in the sim");
+                    let stale = std::mem::replace(&mut self.live, plan);
+                    self.held = Some((stale, rng));
+                    self.completed += 1;
+                    "take"
+                }
+                None => "take-not-ready",
+            },
+            PrepOp::Shutdown => {
+                self.proto.shutdown();
+                "shutdown"
+            }
+        };
+        self.log.push(ev);
+    }
+
+    pub fn finish(self) -> PrepResult {
+        let n_subnets = self.live.subnets().len();
+        let mut final_kept = Vec::with_capacity(n_subnets * 2);
+        for si in 0..n_subnets {
+            for layer in [1usize, 2] {
+                final_kept.push(self.live.layer(si, layer).kept_lists().to_vec());
+            }
+        }
+        PrepResult {
+            final_kept,
+            completed_passes: self.completed,
+            log: self.log,
+        }
+    }
+}
+
+/// Run a prep-protocol script end to end.
+pub fn run_prep_script(
+    man: &crate::model::Manifest,
+    seed: u64,
+    layers: (usize, usize),
+    script: &[PrepOp],
+) -> PrepResult {
+    let mut sim = PrepSim::new(man, seed, layers);
+    for &op in script {
+        sim.step(op);
+    }
+    sim.finish()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -830,6 +957,134 @@ mod tests {
                 true
             },
         );
+    }
+
+    /// ISSUE #8: prepare racing swap.  An eager worker (prep lands the
+    /// moment a request is submitted) and a lagging one (the engine's
+    /// take attempts keep arriving before the prep) walk different
+    /// interleavings of the same hand-off — yet after the same number of
+    /// completed passes both hold exactly the serial oracle's mask bits.
+    #[test]
+    fn prep_orderings_race_to_identical_masks() {
+        use crate::masks::MaskPlan;
+        let (man, _) = crate::testing::fixture::tiny_fixture();
+        let seed = 0xAB5EED;
+        let eager = [
+            PrepOp::Submit,
+            PrepOp::Prep,
+            PrepOp::Take,
+            PrepOp::Submit,
+            PrepOp::Prep,
+            PrepOp::Take,
+        ];
+        let racy = [
+            PrepOp::Take, // nothing ready yet
+            PrepOp::Submit,
+            PrepOp::Take, // request not prepared yet
+            PrepOp::Prep,
+            PrepOp::Prep, // idle: nothing new submitted
+            PrepOp::Take,
+            PrepOp::Submit,
+            PrepOp::Prep,
+            PrepOp::Take,
+            PrepOp::Take, // slot already empty
+        ];
+        let a = run_prep_script(&man, seed, (1, 2), &eager);
+        let b = run_prep_script(&man, seed, (1, 2), &racy);
+        assert_eq!(a.completed_passes, 2);
+        assert_eq!(b.completed_passes, 2);
+        assert_eq!(
+            a.final_kept, b.final_kept,
+            "interleaving changed the mask bits"
+        );
+        assert_eq!(
+            b.log,
+            vec![
+                "take-not-ready",
+                "submit",
+                "take-not-ready",
+                "prep",
+                "prep-idle",
+                "take",
+                "submit",
+                "prep",
+                "take",
+                "take-not-ready"
+            ]
+        );
+        // …and both equal the serial oracle: two in-place resamples of
+        // the same seed's stream.
+        let mut rng = Pcg32::new(seed);
+        let mut plan = MaskPlan::bernoulli(&man, 1.0 / man.scale, &mut rng);
+        plan.resample(&mut rng);
+        plan.resample(&mut rng);
+        let mut oracle = Vec::new();
+        for si in 0..plan.subnets().len() {
+            for layer in [1usize, 2] {
+                oracle.push(plan.layer(si, layer).kept_lists().to_vec());
+            }
+        }
+        assert_eq!(a.final_kept, oracle, "pipelined masks != serial oracle");
+        // replay determinism
+        assert_eq!(run_prep_script(&man, seed, (1, 2), &racy), b);
+    }
+
+    /// ISSUE #8: the last-layer range flows through the protocol — a
+    /// completed pass leaves layer-1 masks exactly as constructed.
+    #[test]
+    fn prep_last_layer_range_only_redraws_layer_two() {
+        use crate::masks::MaskPlan;
+        let (man, _) = crate::testing::fixture::tiny_fixture();
+        let seed = 31u64;
+        let r = run_prep_script(
+            &man,
+            seed,
+            (2, 2),
+            &[PrepOp::Submit, PrepOp::Prep, PrepOp::Take],
+        );
+        assert_eq!(r.completed_passes, 1);
+        let mut rng = Pcg32::new(seed);
+        let base = MaskPlan::bernoulli(&man, 1.0 / man.scale, &mut rng);
+        for si in 0..base.subnets().len() {
+            assert_eq!(
+                r.final_kept[si * 2],
+                base.layer(si, 1).kept_lists().to_vec(),
+                "subnet {si}: layer-1 masks moved under a last-layer prep"
+            );
+        }
+    }
+
+    /// ISSUE #8: shutdown racing a pending request — the worker step
+    /// refuses, the take side reports not-ready, nothing hangs, and a
+    /// submit with nothing held is a visible no-op (not a crash).
+    #[test]
+    fn prep_shutdown_and_empty_steps_are_loud_no_ops() {
+        let (man, _) = crate::testing::fixture::tiny_fixture();
+        let r = run_prep_script(
+            &man,
+            7,
+            (1, 2),
+            &[
+                PrepOp::Prep, // nothing submitted yet
+                PrepOp::Submit,
+                PrepOp::Submit, // stale plan already handed over
+                PrepOp::Shutdown,
+                PrepOp::Prep, // pending request, but protocol is down
+                PrepOp::Take,
+            ],
+        );
+        assert_eq!(
+            r.log,
+            vec![
+                "prep-idle",
+                "submit",
+                "submit-nothing-held",
+                "shutdown",
+                "prep-idle",
+                "take-not-ready"
+            ]
+        );
+        assert_eq!(r.completed_passes, 0);
     }
 
     /// Satellite property: a slow (never-claiming) victim shard cannot

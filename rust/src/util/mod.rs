@@ -6,6 +6,7 @@ pub mod pool;
 pub mod rng;
 pub mod simd;
 pub mod stats;
+pub mod workers;
 
 use std::io::{Read, Write};
 use std::path::Path;

@@ -1,0 +1,360 @@
+//! Persistent worker pool for batch-parallel kernels.
+//!
+//! A dependency-free fork/join pool over `std::thread`: built **once**
+//! (spawning `threads - 1` OS threads; the caller participates as lane
+//! 0), then reused for every [`WorkerPool::run`] call with zero
+//! steady-state allocation — the same capacity-stability contract as
+//! the engines it serves.  Parking uses the `Mutex` + `Condvar`
+//! recheck-under-lock idiom from `coordinator/deque.rs`: a worker only
+//! sleeps after re-checking the epoch under the lock, so a wakeup
+//! posted between the check and the wait can never be lost.
+//!
+//! Work is handed out as a **deterministic strided partition**: task
+//! `t` always runs on lane `t % threads`, independent of scheduling.
+//! Combined with the [`tile`] helper (contiguous index ranges, no
+//! cross-tile reductions) this is what lets callers split a batch
+//! dimension across lanes while staying **bit-exact** with the
+//! single-threaded path: every output element is computed by the same
+//! scalar code on the same inputs, only on a different thread.
+//!
+//! Panic containment: each task runs under `catch_unwind`.  A
+//! panicking task fails that `run` call with an error, but the pool —
+//! and its threads — stay usable for the next call.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// One posted fork/join job.  The closure reference is lifetime-erased
+/// to `'static` by [`WorkerPool::run`]; soundness rests on `run` not
+/// returning until every lane has finished with it (completion
+/// barrier), so workers never observe it dangling.
+#[derive(Clone, Copy)]
+struct Job {
+    f: &'static (dyn Fn(usize) + Sync),
+    n_tasks: usize,
+    stride: usize,
+}
+
+struct State {
+    /// Monotone job counter; workers run a job when `epoch` passes
+    /// their last-seen value.  Posted together with `job` under the
+    /// lock, so a worker that observes the new epoch observes the job.
+    epoch: u64,
+    job: Option<Job>,
+    shutdown: bool,
+    /// Spawned workers still running the current job.
+    active: usize,
+    /// Panicking tasks observed by spawned workers this job.
+    panics: usize,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between jobs.
+    work_cv: Condvar,
+    /// The caller parks here waiting for `active` to reach zero.
+    done_cv: Condvar,
+}
+
+/// A persistent pool of `threads` lanes (the calling thread plus
+/// `threads - 1` spawned workers).  `threads <= 1` spawns nothing and
+/// [`WorkerPool::run`] degenerates to the exact inline loop.
+pub struct WorkerPool {
+    threads: usize,
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Build a pool with `threads` total lanes (clamped to >= 1).
+    /// This is the only allocating call; `run` never allocates.
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                shutdown: false,
+                active: 0,
+                panics: 0,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|lane| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared, lane))
+            })
+            .collect();
+        WorkerPool {
+            threads,
+            shared,
+            handles,
+        }
+    }
+
+    /// Total lanes, including the calling thread.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Spawned OS threads (0 for an inline pool).
+    pub fn worker_threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Owned-buffer capacities (no-allocation witness: stable across
+    /// `run` calls).
+    pub fn alloc_signature(&self) -> Vec<usize> {
+        vec![self.threads, self.handles.capacity()]
+    }
+
+    /// Run tasks `0..n_tasks`, task `t` on lane `t % threads`, and
+    /// block until all have finished.  Errors if any task panicked;
+    /// the pool stays usable afterwards.
+    pub fn run<F>(&self, n_tasks: usize, f: F) -> anyhow::Result<()>
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n_tasks == 0 {
+            return Ok(());
+        }
+        if self.handles.is_empty() {
+            // threads=1: exactly the inline path (same task order, same
+            // panic accounting) with no synchronisation at all.
+            let mut panics = 0usize;
+            for t in 0..n_tasks {
+                if catch_unwind(AssertUnwindSafe(|| f(t))).is_err() {
+                    panics += 1;
+                }
+            }
+            anyhow::ensure!(panics == 0, "{panics} worker task(s) panicked");
+            return Ok(());
+        }
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: the reference only outlives this frame in the eyes of
+        // the type system.  `run` does not return until every spawned
+        // lane has decremented `active` for this epoch (the wait loop
+        // below), and `job` is cleared before returning, so no worker
+        // can touch `f` after it goes out of scope.
+        let f_static = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f_ref)
+        };
+        let job = Job {
+            f: f_static,
+            n_tasks,
+            stride: self.threads,
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch += 1;
+            st.job = Some(job);
+            st.active = self.handles.len();
+            st.panics = 0;
+            self.shared.work_cv.notify_all();
+        }
+        // The caller is lane 0 — it works instead of idling.
+        let own_panics = run_lane(job, 0);
+        let mut st = self.shared.state.lock().unwrap();
+        while st.active > 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.job = None; // drop the erased-lifetime reference
+        let total = st.panics + own_panics;
+        drop(st);
+        anyhow::ensure!(total == 0, "{total} worker task(s) panicked");
+        Ok(())
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Run one lane's strided share of a job, counting contained panics.
+fn run_lane(job: Job, lane: usize) -> usize {
+    let mut panics = 0usize;
+    let mut t = lane;
+    while t < job.n_tasks {
+        if catch_unwind(AssertUnwindSafe(|| (job.f)(t))).is_err() {
+            panics += 1;
+        }
+        t += job.stride;
+    }
+    panics
+}
+
+fn worker_loop(shared: &Shared, lane: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch > seen {
+                    seen = st.epoch;
+                    break *st.job.as_ref().expect("job posted with epoch");
+                }
+                // Recheck-under-lock park (deque idiom): the wait
+                // atomically releases the lock, so a notify between the
+                // epoch check and the wait cannot be lost.
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        let panics = run_lane(job, lane);
+        let mut st = shared.state.lock().unwrap();
+        st.panics += panics;
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done_cv.notify_one();
+        }
+    }
+}
+
+/// Deterministic contiguous partition of `0..n` into `parts` tiles:
+/// tile `k` is `[lo, hi)`.  The first `n % parts` tiles get one extra
+/// element; tiles are disjoint and exhaustive for every `(n, parts)`.
+pub fn tile(n: usize, parts: usize, k: usize) -> (usize, usize) {
+    let parts = parts.max(1);
+    let base = n / parts;
+    let rem = n % parts;
+    let lo = k * base + k.min(rem);
+    let hi = lo + base + usize::from(k < rem);
+    (lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn tile_partition_is_disjoint_and_exhaustive() {
+        for n in [0usize, 1, 2, 7, 16, 17, 104] {
+            for parts in [1usize, 2, 3, 4, 8, 16] {
+                let mut next = 0usize;
+                for k in 0..parts {
+                    let (lo, hi) = tile(n, parts, k);
+                    assert_eq!(lo, next, "tile {k} of {n}/{parts} not contiguous");
+                    assert!(hi >= lo);
+                    next = hi;
+                }
+                assert_eq!(next, n, "tiles of {n}/{parts} do not cover 0..n");
+            }
+        }
+    }
+
+    #[test]
+    fn every_task_runs_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..37).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(37, |t| {
+            hits[t].fetch_add(1, Ordering::SeqCst);
+        })
+        .unwrap();
+        for (t, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "task {t}");
+        }
+    }
+
+    #[test]
+    fn threads_one_is_exactly_the_inline_path() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.worker_threads(), 0);
+        let caller = std::thread::current().id();
+        let order = Mutex::new(Vec::new());
+        pool.run(8, |t| {
+            assert_eq!(std::thread::current().id(), caller);
+            order.lock().unwrap().push(t);
+        })
+        .unwrap();
+        assert_eq!(*order.lock().unwrap(), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panicking_task_fails_the_call_but_pool_survives() {
+        let pool = WorkerPool::new(4);
+        let err = pool
+            .run(8, |t| {
+                if t == 3 {
+                    panic!("injected task failure");
+                }
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("panicked"), "got: {err}");
+        // The pool is still fully usable after the poisoned job.
+        let n = AtomicUsize::new(0);
+        pool.run(16, |_| {
+            n.fetch_add(1, Ordering::SeqCst);
+        })
+        .unwrap();
+        assert_eq!(n.load(Ordering::SeqCst), 16);
+        // ... including on the inline (threads=1) accounting path.
+        let inline = WorkerPool::new(1);
+        assert!(inline.run(4, |t| assert!(t != 2, "boom")).is_err());
+        assert!(inline.run(4, |_| {}).is_ok());
+    }
+
+    #[test]
+    fn drop_joins_all_threads() {
+        for round in 0..8 {
+            let pool = WorkerPool::new(3);
+            let n = AtomicUsize::new(0);
+            pool.run(round + 1, |_| {
+                n.fetch_add(1, Ordering::SeqCst);
+            })
+            .unwrap();
+            assert_eq!(n.load(Ordering::SeqCst), round + 1);
+            drop(pool); // must join, not leak or hang
+        }
+    }
+
+    #[test]
+    fn strided_writes_match_serial_for_every_thread_count() {
+        let n = 103usize;
+        let serial: Vec<f32> = (0..n).map(|t| (t as f32).sin() * 3.0 + 1.0).collect();
+        for threads in [1usize, 2, 4, 8] {
+            let pool = WorkerPool::new(threads);
+            let mut out = vec![0.0f32; n];
+            {
+                // Disjoint per-task writes through a raw-pointer
+                // wrapper, the same pattern the tiled engine kernels
+                // use: task t owns exactly slot t.
+                struct SendPtr(*mut f32);
+                unsafe impl Send for SendPtr {}
+                unsafe impl Sync for SendPtr {}
+                let ptr = SendPtr(out.as_mut_ptr());
+                pool.run(n, |t| {
+                    // SAFETY: task t writes only slot t; tasks are disjoint.
+                    unsafe { *ptr.0.add(t) = (t as f32).sin() * 3.0 + 1.0 };
+                })
+                .unwrap();
+            }
+            assert_eq!(out, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn alloc_signature_is_stable_across_runs() {
+        let pool = WorkerPool::new(4);
+        pool.run(32, |_| {}).unwrap();
+        let sig = pool.alloc_signature();
+        for _ in 0..20 {
+            pool.run(32, |_| {}).unwrap();
+            assert_eq!(pool.alloc_signature(), sig);
+        }
+    }
+}
