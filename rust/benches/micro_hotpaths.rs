@@ -404,6 +404,50 @@ fn forward_union_threads(
     }
 }
 
+/// Framed-ingest hot path (ISSUE #9): request encode into a reused
+/// frame buffer, and the server-side reassembly — `feed` -> `poll` ->
+/// zero-copy `decode_request_into` -> `consume` — at paper width.
+/// Every buffer is reused across iterations, mirroring the per-
+/// connection steady state where ingest allocates nothing.  The wire
+/// roundtrip is asserted bit-exact before any timing.
+fn net_frame_ingest(
+    cfg: &uivim::bench::BenchConfig,
+    results: &mut Vec<uivim::bench::BenchResult>,
+) {
+    use uivim::util::frame::{encode_request, FrameAssembler};
+    let nb = 104usize;
+    let mut rng = Pcg32::new(63);
+    let signals: Vec<f32> = (0..nb).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
+
+    // Cross-check before trusting the timing: encode -> reassemble ->
+    // decode must hand back the exact payload bits.
+    let mut frame = Vec::new();
+    encode_request(&mut frame, 42, 1_000, &signals);
+    let mut asm = FrameAssembler::new(nb);
+    let mut out = vec![0.0f32; nb];
+    assert_eq!(asm.feed(&frame), frame.len());
+    let header = asm.poll().expect("well-formed frame").expect("complete frame");
+    assert_eq!(header.id, 42);
+    assert_eq!(header.n_values, nb);
+    assert!(asm.decode_request_into(&header, &mut out));
+    for (got, want) in out.iter().zip(&signals) {
+        assert_eq!(got.to_bits(), want.to_bits(), "wire roundtrip changed payload bits");
+    }
+    asm.consume(&header);
+
+    results.push(bench("net_ingest_encode_104", cfg, || {
+        encode_request(&mut frame, 42, 1_000, &signals);
+        black_box(&frame);
+    }));
+    results.push(bench("net_ingest_parse_104", cfg, || {
+        asm.feed(&frame);
+        let header = asm.poll().expect("well-formed").expect("complete");
+        asm.decode_request_into(&header, &mut out);
+        asm.consume(&header);
+        black_box(&out);
+    }));
+}
+
 fn main() {
     let cfg = config_from_env();
     let mut results = Vec::new();
@@ -416,6 +460,7 @@ fn main() {
     let (mc_overlap_speedup, swap_hidden_fraction) =
         mc_pass_pipelined_vs_serial(&cfg, &mut results);
     forward_union_threads(&cfg, &mut results);
+    net_frame_ingest(&cfg, &mut results);
 
     // fixed-point multiply-accumulate chain
     let xs: Vec<Fx> = (0..1024).map(|i| Fx::from_f32((i % 13) as f32 * 0.01)).collect();

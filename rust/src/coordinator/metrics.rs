@@ -139,10 +139,33 @@ pub struct ServingMetrics {
     /// Times a streaming driver had to drain completions before it
     /// could admit the next slice (backpressure events).
     pub stream_stalls: AtomicU64,
+    /// Exponentially-weighted moving average of batch service latency
+    /// in µs, stored as `f64` bits (0 until the first batch).  This is
+    /// the admission controller's delay-per-batch estimate: unlike the
+    /// histogram mean it tracks the *current* service rate, so a warm-up
+    /// transient cannot poison shed decisions forever.
+    pub ewma_batch_us: AtomicU64,
+    /// Network front door (`coordinator::net`): connections accepted.
+    pub net_connections: AtomicU64,
+    /// Request frames fully parsed off the wire.
+    pub net_frames: AtomicU64,
+    /// Requests shed by admission control with an `OVERLOADED` reply
+    /// (per-connection quota, queue full, or estimated delay past the
+    /// request deadline).
+    pub net_shed: AtomicU64,
+    /// Frames rejected by the hardened parser or request validation
+    /// (bad magic/version/kind, oversize, wrong width, non-finite).
+    pub net_bad_frames: AtomicU64,
+    /// Admitted requests whose deadline passed before the response
+    /// could be written back (answered with `EXPIRED`).
+    pub net_expired: AtomicU64,
     /// One slot per worker shard (`new()` allocates a single slot; the
     /// sharded coordinator uses `with_shards(k)`).
     pub shards: Vec<ShardMetrics>,
 }
+
+/// EWMA smoothing factor: each new batch contributes 20%.
+const EWMA_ALPHA: f64 = 0.2;
 
 impl ServingMetrics {
     pub fn new() -> Self {
@@ -161,6 +184,34 @@ impl ServingMetrics {
         &self.shards[k]
     }
 
+    /// Fold one batch's service time into the EWMA (lock-free CAS loop;
+    /// the first sample seeds the average directly).
+    pub fn record_batch_ewma(&self, us: u64) {
+        let mut cur = self.ewma_batch_us.load(Ordering::Relaxed);
+        loop {
+            let prev = f64::from_bits(cur);
+            let next = if prev == 0.0 {
+                us as f64
+            } else {
+                prev + EWMA_ALPHA * (us as f64 - prev)
+            };
+            match self.ewma_batch_us.compare_exchange_weak(
+                cur,
+                next.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Current EWMA batch latency in µs (0 before the first batch).
+    pub fn ewma_batch_us(&self) -> f64 {
+        f64::from_bits(self.ewma_batch_us.load(Ordering::Relaxed))
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
@@ -171,6 +222,12 @@ impl ServingMetrics {
             slices_ingested: self.slices_ingested.load(Ordering::Relaxed),
             volumes_completed: self.volumes_completed.load(Ordering::Relaxed),
             stream_stalls: self.stream_stalls.load(Ordering::Relaxed),
+            ewma_batch_us: self.ewma_batch_us(),
+            net_connections: self.net_connections.load(Ordering::Relaxed),
+            net_frames: self.net_frames.load(Ordering::Relaxed),
+            net_shed: self.net_shed.load(Ordering::Relaxed),
+            net_bad_frames: self.net_bad_frames.load(Ordering::Relaxed),
+            net_expired: self.net_expired.load(Ordering::Relaxed),
             mean_request_us: self.request_latency.mean_us(),
             p50_request_us: self.request_latency.percentile_us(50.0) as f64,
             p99_request_us: self.request_latency.percentile_us(99.0) as f64,
@@ -202,6 +259,19 @@ pub struct MetricsSnapshot {
     /// Backpressure events: a streaming driver drained completions
     /// before admitting the next slice.
     pub stream_stalls: u64,
+    /// EWMA batch service latency in µs — the admission controller's
+    /// live delay-per-batch estimate (0 before the first batch).
+    pub ewma_batch_us: f64,
+    /// TCP connections accepted by the network front door.
+    pub net_connections: u64,
+    /// Request frames fully parsed off the wire.
+    pub net_frames: u64,
+    /// Requests answered `OVERLOADED` by admission control.
+    pub net_shed: u64,
+    /// Frames rejected by parsing or request validation.
+    pub net_bad_frames: u64,
+    /// Admitted requests that expired before their response was written.
+    pub net_expired: u64,
     pub mean_request_us: f64,
     pub p50_request_us: f64,
     pub p99_request_us: f64,
@@ -308,6 +378,45 @@ mod tests {
         assert_eq!(s.slices_ingested, 8);
         assert_eq!(s.volumes_completed, 1);
         assert_eq!(s.stream_stalls, 3);
+    }
+
+    #[test]
+    fn ewma_seeds_then_converges() {
+        let m = ServingMetrics::new();
+        assert_eq!(m.ewma_batch_us(), 0.0);
+        m.record_batch_ewma(100);
+        assert_eq!(m.ewma_batch_us(), 100.0, "first sample seeds directly");
+        m.record_batch_ewma(200);
+        // 100 + 0.2 * (200 - 100)
+        assert_eq!(m.ewma_batch_us(), 120.0);
+        // a long run of constant samples converges to that constant
+        for _ in 0..200 {
+            m.record_batch_ewma(50);
+        }
+        assert!((m.ewma_batch_us() - 50.0).abs() < 1e-6);
+        let s = m.snapshot();
+        assert!((s.ewma_batch_us - 50.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn net_counters_snapshot() {
+        let m = ServingMetrics::new();
+        m.net_connections.fetch_add(2, Ordering::Relaxed);
+        m.net_frames.fetch_add(10, Ordering::Relaxed);
+        m.net_shed.fetch_add(3, Ordering::Relaxed);
+        m.net_bad_frames.fetch_add(1, Ordering::Relaxed);
+        m.net_expired.fetch_add(4, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(
+            (
+                s.net_connections,
+                s.net_frames,
+                s.net_shed,
+                s.net_bad_frames,
+                s.net_expired
+            ),
+            (2, 10, 3, 1, 4)
+        );
     }
 
     #[test]

@@ -31,6 +31,11 @@
 //!   through a shared `infer::OutputPool`.  `Coordinator::lease` hands
 //!   out pooled per-request signal buffers that the dispatcher reclaims
 //!   at batch-cut time.  Graceful shutdown drains every shard.
+//! * [`net`] — the TCP front door: hardened length-prefixed framing
+//!   (`util::frame`), zero-copy ingest into `lease()` buffers, and
+//!   deadline-aware admission control that sheds with an explicit
+//!   `OVERLOADED` reply when the estimated queue delay (deque backlog ×
+//!   EWMA batch latency) exceeds the request deadline.
 //! * [`uncertainty`] — per-voxel aggregation of the N mask samples into
 //!   prediction + relative uncertainty + confidence flag.
 //! * [`metrics`] — latency histogram, throughput, queue/deque gauges and
@@ -41,13 +46,16 @@
 pub mod batcher;
 pub mod deque;
 pub mod metrics;
+pub mod net;
 pub mod server;
 pub mod uncertainty;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
 pub use deque::{Claim, ShardDeques};
 pub use metrics::{MetricsSnapshot, ServingMetrics, ShardSnapshot};
+pub use net::{NetClient, NetConfig, NetReply, NetServer};
 pub use server::{
-    Coordinator, CoordinatorConfig, DispatchMode, SignalLease, VoxelRequest, VoxelResponse,
+    Coordinator, CoordinatorConfig, DispatchMode, SignalLease, StreamDriverGuard, VoxelRequest,
+    VoxelResponse,
 };
 pub use uncertainty::{UncertaintyReport, VoxelEstimate};

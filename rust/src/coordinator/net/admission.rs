@@ -1,0 +1,78 @@
+//! Deadline-aware admission control — the *pure* decision kernel.
+//!
+//! The rule is deliberately free of clocks, sockets and atomics so the
+//! exact code the server runs is also what `testing::sched` drives
+//! under virtual time: estimate how long a newly admitted request would
+//! wait behind the current backlog, and shed it with an explicit
+//! `OVERLOADED` reply when that estimate already exceeds the request's
+//! own deadline.  Shedding beats queuing here because an answer that
+//! arrives after the deadline is worthless to the client *and* cost a
+//! batch slot that an in-deadline request could have used.
+
+/// Estimated queue delay in µs for a request admitted now.
+///
+/// * `queued_batches` — formed batches already sitting in the shard
+///   deques (each costs one batch service time).
+/// * `pending_requests` — admitted requests not yet in a formed batch
+///   (the batcher's backlog); they round up to whole batches.
+/// * `batch_size` / `shards` — how much parallelism drains the backlog.
+/// * `ewma_batch_us` — the live batch service-time estimate
+///   (`ServingMetrics::ewma_batch_us`); 0 before the first batch, which
+///   makes the estimate 0 — a cold coordinator never sheds on delay.
+pub fn estimate_delay_us(
+    queued_batches: usize,
+    pending_requests: usize,
+    batch_size: usize,
+    shards: usize,
+    ewma_batch_us: u64,
+) -> u64 {
+    let forming = pending_requests.div_ceil(batch_size.max(1));
+    let batches = (queued_batches + forming) as u64;
+    (batches * ewma_batch_us) / shards.max(1) as u64
+}
+
+/// Shed decision: `deadline_us == 0` means "no deadline" and is never
+/// shed on delay; otherwise shed when the estimated wait alone already
+/// exceeds the deadline.
+pub fn should_shed(deadline_us: u64, est_delay_us: u64) -> bool {
+    deadline_us != 0 && est_delay_us > deadline_us
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_coordinator_never_sheds() {
+        // ewma 0 (no batch has ever run) -> estimate 0 -> admit anything
+        assert_eq!(estimate_delay_us(100, 100, 8, 1, 0), 0);
+        assert!(!should_shed(1, 0));
+    }
+
+    #[test]
+    fn no_deadline_is_never_shed() {
+        assert!(!should_shed(0, u64::MAX));
+    }
+
+    #[test]
+    fn delay_scales_with_backlog_and_divides_by_shards() {
+        // 4 queued batches + 9 pending at batch 8 = 4 + 2 = 6 batches
+        assert_eq!(estimate_delay_us(4, 9, 8, 1, 100), 600);
+        assert_eq!(estimate_delay_us(4, 9, 8, 2, 100), 300);
+        assert_eq!(estimate_delay_us(4, 9, 8, 4, 100), 150);
+        // empty system waits for nothing
+        assert_eq!(estimate_delay_us(0, 0, 8, 4, 100), 0);
+    }
+
+    #[test]
+    fn shed_is_strict_greater_than_deadline() {
+        assert!(!should_shed(600, 600), "exactly-at-deadline still admits");
+        assert!(should_shed(599, 600));
+        assert!(!should_shed(601, 600));
+    }
+
+    #[test]
+    fn degenerate_sizes_are_clamped_not_divided_by_zero() {
+        assert_eq!(estimate_delay_us(0, 5, 0, 0, 100), 500);
+    }
+}

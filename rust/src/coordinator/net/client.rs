@@ -1,0 +1,119 @@
+//! Blocking framed-TCP client for the coordinator's front door.
+//!
+//! One request/response pair per call; buffers (encode scratch, frame
+//! reassembly, report values) are owned by the client and reused, so a
+//! long-lived client allocates only at construction.  Used by the
+//! `repro client` smoke subcommand, the loopback integration tests and
+//! the `repro serve --listen` demo driver.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use super::{decode_report, REPORT_VALUES};
+use crate::coordinator::uncertainty::UncertaintyReport;
+use crate::util::frame::{encode_request, FrameAssembler, FrameKind, Status};
+
+/// One decoded response frame.
+#[derive(Debug)]
+pub struct NetReply {
+    /// Echoed request id.
+    pub id: u64,
+    pub status: Status,
+    /// The aggregated report — present only on [`Status::Ok`].
+    pub report: Option<UncertaintyReport>,
+}
+
+/// A blocking connection to a [`super::NetServer`].
+pub struct NetClient {
+    stream: TcpStream,
+    asm: FrameAssembler,
+    buf: Vec<u8>,
+    values: [f64; REPORT_VALUES],
+}
+
+impl NetClient {
+    /// Connect with a 30 s reply timeout.
+    pub fn connect(addr: &str) -> anyhow::Result<NetClient> {
+        Self::connect_with_timeout(addr, Duration::from_secs(30))
+    }
+
+    /// Connect; `recv` fails after `timeout` without a reply.
+    pub fn connect_with_timeout(addr: &str, timeout: Duration) -> anyhow::Result<NetClient> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(Some(timeout))?;
+        Ok(NetClient {
+            stream,
+            asm: FrameAssembler::new(REPORT_VALUES),
+            buf: Vec::new(),
+            values: [0.0; REPORT_VALUES],
+        })
+    }
+
+    /// Send one request frame (`deadline_us` 0 = no deadline).
+    pub fn send(&mut self, id: u64, deadline_us: u64, signals: &[f32]) -> anyhow::Result<()> {
+        encode_request(&mut self.buf, id, deadline_us, signals);
+        self.stream
+            .write_all(&self.buf)
+            .map_err(|e| anyhow::anyhow!("send request {id}: {e}"))
+    }
+
+    /// Send raw bytes as-is (test hook for malformed / partial frames).
+    pub fn send_raw(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        self.stream
+            .write_all(bytes)
+            .map_err(|e| anyhow::anyhow!("send raw bytes: {e}"))
+    }
+
+    /// Block for the next response frame.
+    pub fn recv(&mut self) -> anyhow::Result<NetReply> {
+        loop {
+            let polled = self
+                .asm
+                .poll()
+                .map_err(|e| anyhow::anyhow!("server sent an invalid frame: {e}"))?;
+            if let Some(h) = polled {
+                anyhow::ensure!(
+                    h.kind == FrameKind::Response,
+                    "server sent a non-response frame"
+                );
+                let status = Status::from_u8(h.status)
+                    .ok_or_else(|| anyhow::anyhow!("unknown response status {}", h.status))?;
+                let report = if status == Status::Ok {
+                    anyhow::ensure!(
+                        h.n_values == REPORT_VALUES,
+                        "OK response carries {} values, expected {REPORT_VALUES}",
+                        h.n_values
+                    );
+                    self.asm.decode_response_into(&h, &mut self.values);
+                    Some(decode_report(&self.values))
+                } else {
+                    None
+                };
+                let id = h.id;
+                self.asm.consume(&h);
+                return Ok(NetReply { id, status, report });
+            }
+            let spare = self.asm.spare();
+            let n = self
+                .stream
+                .read(spare)
+                .map_err(|e| anyhow::anyhow!("waiting for a reply: {e}"))?;
+            anyhow::ensure!(n > 0, "server closed the connection");
+            self.asm.commit(n);
+        }
+    }
+
+    /// Convenience: one request, one reply.
+    pub fn request(
+        &mut self,
+        id: u64,
+        deadline_us: u64,
+        signals: &[f32],
+    ) -> anyhow::Result<NetReply> {
+        self.send(id, deadline_us, signals)?;
+        self.recv()
+    }
+}

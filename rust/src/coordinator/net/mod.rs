@@ -1,0 +1,576 @@
+//! The network front door: a dependency-free, length-prefixed TCP
+//! ingest layer over [`Coordinator::lease`].
+//!
+//! ```text
+//! client ──frame──► conn thread ──lease()/submit_leased()──► coordinator
+//!        ◄─frame──  (one per connection, blocking socket,
+//!                    short read tick = reply-sweep cadence)
+//! ```
+//!
+//! * **Wire format** — `util::frame`: 28-byte header (magic, version,
+//!   kind, status, id, deadline µs, value count) + f32 payload.  The
+//!   parser is hardened: fixed-capacity reassembly, header validated
+//!   before any payload is awaited, typed rejections.
+//! * **Zero-copy ingest** — request signals decode *directly into a
+//!   [`Coordinator::lease`] buffer*; there is no intermediate `Vec` on
+//!   the serving path, so steady-state ingest allocates nothing (the
+//!   lease slab's `created()` high-water stays flat).
+//! * **Admission control** — three gates, each answered with an
+//!   explicit status frame instead of a stall: a per-connection
+//!   in-flight quota and the coordinator's queue-full backpressure
+//!   both return [`Status::Overloaded`], and [`admission::should_shed`]
+//!   sheds any request whose estimated queue delay
+//!   (`Coordinator::estimated_queue_delay_us`: deque backlog × EWMA
+//!   batch latency) already exceeds its deadline.  A request that
+//!   expires *after* admission is answered [`Status::Expired`] and its
+//!   response receiver dropped (reply-side shedding — the shard's send
+//!   tolerates a dropped receiver).
+//! * **Connection cap** — beyond `max_conns` live connections the
+//!   acceptor writes one `OVERLOADED` goodbye frame and closes.
+//! * **Shutdown** — connections stop reading, answer or `SHUTDOWN`-
+//!   reject everything still pending, then close; no admitted request
+//!   is silently dropped.
+
+pub mod admission;
+pub mod client;
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::server::{Coordinator, VoxelResponse};
+use super::uncertainty::{UncertaintyReport, VoxelEstimate};
+use crate::ivim::Param;
+use crate::util::frame::{encode_response, FrameAssembler, FrameKind, Status};
+
+pub use client::{NetClient, NetReply};
+
+/// f64 slots in an `OK` response payload: (mean, std, relative) per
+/// IVIM parameter + the confidence flag as 0.0/1.0.
+pub const REPORT_VALUES: usize = 13;
+
+/// Serialise a report into the response payload layout (f64 passes
+/// through the wire bit-exactly, so framed results match the direct
+/// `submit_leased` path bit for bit).
+pub fn encode_report(report: &UncertaintyReport, out: &mut [f64; REPORT_VALUES]) {
+    for p in Param::ALL {
+        let e = report.get(p);
+        let i = 3 * p.index();
+        out[i] = e.mean;
+        out[i + 1] = e.std;
+        out[i + 2] = e.relative;
+    }
+    out[REPORT_VALUES - 1] = if report.confident { 1.0 } else { 0.0 };
+}
+
+/// Inverse of [`encode_report`].
+pub fn decode_report(values: &[f64; REPORT_VALUES]) -> UncertaintyReport {
+    let mut estimates = [VoxelEstimate {
+        mean: 0.0,
+        std: 0.0,
+        relative: 0.0,
+    }; 4];
+    for p in Param::ALL {
+        let i = 3 * p.index();
+        estimates[p.index()] = VoxelEstimate {
+            mean: values[i],
+            std: values[i + 1],
+            relative: values[i + 2],
+        };
+    }
+    UncertaintyReport {
+        estimates,
+        confident: values[REPORT_VALUES - 1] != 0.0,
+    }
+}
+
+/// Front-door configuration.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Live-connection cap; excess connections get an `OVERLOADED`
+    /// goodbye frame and are closed.
+    pub max_conns: usize,
+    /// Per-connection in-flight request quota; requests past it are
+    /// answered `OVERLOADED` (one client cannot monopolise the queue).
+    pub conn_quota: usize,
+    /// Socket read tick — also the reply-sweep cadence, so it bounds
+    /// added response latency.
+    pub read_timeout: Duration,
+    /// Slow-loris guard: a connection idling with a *partial* frame
+    /// buffered for longer than this is closed.
+    pub idle_timeout: Duration,
+    /// Acceptor poll interval (the listener is non-blocking so
+    /// shutdown never hangs on `accept`).
+    pub accept_poll: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            max_conns: 64,
+            conn_quota: 256,
+            read_timeout: Duration::from_millis(2),
+            idle_timeout: Duration::from_secs(2),
+            accept_poll: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Handle to a running TCP front door.  Dropping shuts it down (the
+/// coordinator behind it is owned separately and keeps running).
+pub struct NetServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Bind `listen` (e.g. `"127.0.0.1:0"` for an ephemeral port — see
+    /// [`addr`](Self::addr)) and start accepting framed requests for
+    /// `coord`.
+    pub fn start(
+        coord: Arc<Coordinator>,
+        listen: &str,
+        cfg: NetConfig,
+    ) -> anyhow::Result<NetServer> {
+        let listener =
+            TcpListener::bind(listen).map_err(|e| anyhow::anyhow!("bind {listen}: {e}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let live = Arc::new(AtomicUsize::new(0));
+
+        let a_shutdown = Arc::clone(&shutdown);
+        let a_conns = Arc::clone(&conns);
+        let acceptor = std::thread::Builder::new()
+            .name("uivim-net-accept".into())
+            .spawn(move || {
+                accept_loop(listener, coord, cfg, a_shutdown, a_conns, live);
+            })?;
+
+        Ok(NetServer {
+            addr,
+            shutdown,
+            acceptor: Some(acceptor),
+            conns,
+        })
+    }
+
+    /// The bound address (resolves the port when `listen` used port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, answer or reject everything pending on every
+    /// open connection, join all threads.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        let handles = std::mem::take(&mut *self.conns.lock().expect("conns lock"));
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    coord: Arc<Coordinator>,
+    cfg: NetConfig,
+    shutdown: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    live: Arc<AtomicUsize>,
+) {
+    let mut goodbye = Vec::new();
+    while !shutdown.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((mut stream, _peer)) => {
+                if live.load(Ordering::Acquire) >= cfg.max_conns {
+                    // explicit rejection, never a silent stall
+                    encode_response(&mut goodbye, 0, Status::Overloaded, &[]);
+                    let _ = stream.write_all(&goodbye);
+                    continue;
+                }
+                live.fetch_add(1, Ordering::AcqRel);
+                coord
+                    .metrics()
+                    .net_connections
+                    .fetch_add(1, Ordering::Relaxed);
+                let conn = Conn::new(stream, Arc::clone(&coord), cfg.clone());
+                let c_shutdown = Arc::clone(&shutdown);
+                let c_live = Arc::clone(&live);
+                let spawned = std::thread::Builder::new()
+                    .name("uivim-net-conn".into())
+                    .spawn(move || {
+                        // decrement on every exit path, including panics
+                        struct LiveGuard(Arc<AtomicUsize>);
+                        impl Drop for LiveGuard {
+                            fn drop(&mut self) {
+                                self.0.fetch_sub(1, Ordering::AcqRel);
+                            }
+                        }
+                        let _guard = LiveGuard(c_live);
+                        conn.run(&c_shutdown);
+                    });
+                match spawned {
+                    Ok(h) => conns.lock().expect("conns lock").push(h),
+                    Err(_) => {
+                        live.fetch_sub(1, Ordering::AcqRel);
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(cfg.accept_poll);
+            }
+            Err(_) => std::thread::sleep(cfg.accept_poll),
+        }
+    }
+}
+
+/// One admitted request awaiting its response.
+struct PendingReply {
+    id: u64,
+    /// Absolute expiry (None = no deadline).
+    deadline: Option<Instant>,
+    rx: Receiver<VoxelResponse>,
+}
+
+enum ReadOutcome {
+    Progress,
+    Idle,
+    Closed,
+    Dead,
+}
+
+/// Per-connection state: fixed read buffer, reusable reply buffer, and
+/// the in-flight request set — nothing here allocates in steady state.
+struct Conn {
+    stream: TcpStream,
+    coord: Arc<Coordinator>,
+    cfg: NetConfig,
+    asm: FrameAssembler,
+    reply: Vec<u8>,
+    values: [f64; REPORT_VALUES],
+    pending: Vec<PendingReply>,
+    nb: usize,
+    last_progress: Instant,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, coord: Arc<Coordinator>, cfg: NetConfig) -> Conn {
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(cfg.read_timeout));
+        let nb = coord.nb();
+        Conn {
+            stream,
+            coord,
+            cfg,
+            asm: FrameAssembler::new(nb),
+            reply: Vec::new(),
+            values: [0.0; REPORT_VALUES],
+            pending: Vec::new(),
+            nb,
+            last_progress: Instant::now(),
+        }
+    }
+
+    fn run(mut self, shutdown: &AtomicBool) {
+        loop {
+            if !self.sweep_replies() {
+                return; // client gone; dropped receivers shed the rest
+            }
+            if shutdown.load(Ordering::Acquire) {
+                self.drain_pending();
+                return;
+            }
+            match self.read_some() {
+                ReadOutcome::Progress => {
+                    self.last_progress = Instant::now();
+                    if !self.process_frames() {
+                        return;
+                    }
+                }
+                ReadOutcome::Idle => {
+                    // slow-loris: half a frame, then silence
+                    if self.asm.buffered() > 0
+                        && self.last_progress.elapsed() > self.cfg.idle_timeout
+                    {
+                        return;
+                    }
+                }
+                ReadOutcome::Closed => {
+                    // peer finished writing; answer what it already sent
+                    self.drain_pending();
+                    return;
+                }
+                ReadOutcome::Dead => return,
+            }
+        }
+    }
+
+    /// Write one response frame; `false` = connection dead.
+    fn send_reply(&mut self, id: u64, status: Status, with_values: bool) -> bool {
+        let vals: &[f64] = if with_values { &self.values } else { &[] };
+        encode_response(&mut self.reply, id, status, vals);
+        self.stream.write_all(&self.reply).is_ok()
+    }
+
+    /// Deliver every ready response; expire overdue ones (dropping the
+    /// receiver — the shard's send tolerates it).  `false` = dead.
+    fn sweep_replies(&mut self) -> bool {
+        let mut i = 0;
+        while i < self.pending.len() {
+            let now = Instant::now();
+            let expired = self.pending[i].deadline.is_some_and(|d| now > d);
+            let polled = self.pending[i].rx.try_recv();
+            match polled {
+                Ok(resp) => {
+                    let id = self.pending.swap_remove(i).id;
+                    let ok = if expired {
+                        self.coord
+                            .metrics()
+                            .net_expired
+                            .fetch_add(1, Ordering::Relaxed);
+                        self.send_reply(id, Status::Expired, false)
+                    } else {
+                        encode_report(&resp.report, &mut self.values);
+                        self.send_reply(id, Status::Ok, true)
+                    };
+                    if !ok {
+                        return false;
+                    }
+                }
+                Err(TryRecvError::Empty) => {
+                    if expired {
+                        // reply-side shedding: stop waiting, free the slot
+                        let id = self.pending.swap_remove(i).id;
+                        self.coord
+                            .metrics()
+                            .net_expired
+                            .fetch_add(1, Ordering::Relaxed);
+                        if !self.send_reply(id, Status::Expired, false) {
+                            return false;
+                        }
+                    } else {
+                        i += 1;
+                    }
+                }
+                Err(TryRecvError::Disconnected) => {
+                    // the pool dropped the responder (engine failure or
+                    // shutdown): tell the client rather than stall it
+                    let id = self.pending.swap_remove(i).id;
+                    if !self.send_reply(id, Status::Shutdown, false) {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    fn read_some(&mut self) -> ReadOutcome {
+        let spare = self.asm.spare();
+        if spare.is_empty() {
+            // cannot happen after process_frames (the buffer outsizes
+            // any legal frame), but never misread "full" as "closed"
+            return ReadOutcome::Idle;
+        }
+        match self.stream.read(spare) {
+            Ok(0) => ReadOutcome::Closed,
+            Ok(n) => {
+                self.asm.commit(n);
+                ReadOutcome::Progress
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                ReadOutcome::Idle
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => ReadOutcome::Idle,
+            Err(_) => ReadOutcome::Dead,
+        }
+    }
+
+    /// Handle every complete buffered frame; `false` = close.
+    fn process_frames(&mut self) -> bool {
+        loop {
+            match self.asm.poll() {
+                Ok(Some(h)) => {
+                    if !self.handle_request(h) {
+                        return false;
+                    }
+                }
+                Ok(None) => return true,
+                Err(_) => {
+                    // stream desynchronised or hostile: one typed
+                    // rejection, then close
+                    self.coord
+                        .metrics()
+                        .net_bad_frames
+                        .fetch_add(1, Ordering::Relaxed);
+                    let _ = self.send_reply(0, Status::BadRequest, false);
+                    return false;
+                }
+            }
+        }
+    }
+
+    fn handle_request(&mut self, h: crate::util::frame::FrameHeader) -> bool {
+        if h.kind != FrameKind::Request {
+            // clients have no business pushing response frames
+            self.coord
+                .metrics()
+                .net_bad_frames
+                .fetch_add(1, Ordering::Relaxed);
+            let _ = self.send_reply(h.id, Status::BadRequest, false);
+            return false;
+        }
+        self.coord
+            .metrics()
+            .net_frames
+            .fetch_add(1, Ordering::Relaxed);
+
+        // Admission gates, cheapest first.  All are answered explicitly.
+        let verdict = if h.n_values != self.nb {
+            self.coord
+                .metrics()
+                .net_bad_frames
+                .fetch_add(1, Ordering::Relaxed);
+            Some(Status::BadRequest)
+        } else if self.pending.len() >= self.cfg.conn_quota {
+            self.coord.metrics().net_shed.fetch_add(1, Ordering::Relaxed);
+            Some(Status::Overloaded)
+        } else if admission::should_shed(h.deadline_us, self.coord.estimated_queue_delay_us()) {
+            self.coord.metrics().net_shed.fetch_add(1, Ordering::Relaxed);
+            Some(Status::Overloaded)
+        } else {
+            None
+        };
+        if let Some(status) = verdict {
+            self.asm.consume(&h);
+            return self.send_reply(h.id, status, false);
+        }
+
+        // Zero-copy ingest: decode straight into a leased slab buffer.
+        let mut lease = self.coord.lease();
+        if !self.asm.decode_request_into(&h, lease.signals_mut()) {
+            drop(lease); // reclaims into the slab
+            self.coord
+                .metrics()
+                .net_bad_frames
+                .fetch_add(1, Ordering::Relaxed);
+            self.asm.consume(&h);
+            return self.send_reply(h.id, Status::BadRequest, false);
+        }
+        let deadline =
+            (h.deadline_us != 0).then(|| Instant::now() + Duration::from_micros(h.deadline_us));
+        let id = h.id;
+        self.asm.consume(&h);
+        match self.coord.submit_leased(id, lease) {
+            Ok(rx) => {
+                self.pending.push(PendingReply { id, deadline, rx });
+                true
+            }
+            Err(_) => {
+                // queue-full backpressure raced the estimate; the lease
+                // was already reclaimed by submit_leased
+                self.coord.metrics().net_shed.fetch_add(1, Ordering::Relaxed);
+                self.send_reply(id, Status::Overloaded, false)
+            }
+        }
+    }
+
+    /// Shutdown / half-close: wait (bounded) for the coordinator to
+    /// answer what was admitted, then `SHUTDOWN`-reject the remainder.
+    fn drain_pending(&mut self) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !self.pending.is_empty() && Instant::now() < deadline {
+            if !self.sweep_replies() {
+                return;
+            }
+            if !self.pending.is_empty() {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        while let Some(p) = self.pending.pop() {
+            if !self.send_reply(p.id, Status::Shutdown, false) {
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> UncertaintyReport {
+        let mut estimates = [VoxelEstimate {
+            mean: 0.0,
+            std: 0.0,
+            relative: 0.0,
+        }; 4];
+        for p in Param::ALL {
+            let i = p.index();
+            estimates[i] = VoxelEstimate {
+                mean: 0.5 + i as f64,
+                std: 0.125 * (i as f64 + 1.0),
+                relative: 0.25 / (i as f64 + 1.0),
+            };
+        }
+        UncertaintyReport {
+            estimates,
+            confident: true,
+        }
+    }
+
+    #[test]
+    fn report_payload_roundtrip_bit_exact() {
+        let r = report();
+        let mut values = [0.0f64; REPORT_VALUES];
+        encode_report(&r, &mut values);
+        let back = decode_report(&values);
+        for p in Param::ALL {
+            let (a, b) = (r.get(p), back.get(p));
+            assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+            assert_eq!(a.std.to_bits(), b.std.to_bits());
+            assert_eq!(a.relative.to_bits(), b.relative.to_bits());
+        }
+        assert_eq!(r.confident, back.confident);
+    }
+
+    #[test]
+    fn confidence_flag_encodes_both_ways() {
+        let mut r = report();
+        r.confident = false;
+        let mut values = [0.0f64; REPORT_VALUES];
+        encode_report(&r, &mut values);
+        assert_eq!(values[REPORT_VALUES - 1], 0.0);
+        assert!(!decode_report(&values).confident);
+    }
+
+    #[test]
+    fn config_defaults_are_sane() {
+        let cfg = NetConfig::default();
+        assert!(cfg.max_conns >= 1);
+        assert!(cfg.conn_quota >= 1);
+        assert!(cfg.idle_timeout > cfg.read_timeout);
+    }
+}

@@ -44,7 +44,7 @@
 //! hanging.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -370,6 +370,29 @@ pub struct Coordinator {
     capacity: usize,
     nb: usize,
     shards: usize,
+    batch_size: usize,
+    /// Set while a streaming-volume driver owns the slice admission
+    /// gate (see [`Coordinator::stream_driver_guard`]).
+    stream_driver: Arc<AtomicBool>,
+}
+
+/// Exclusive claim on the streaming-volume admission gate.
+///
+/// `volume::stream::stream_volume`'s no-rejection proof assumes a
+/// **single producer**: the driver reads `queue_depth` and then submits
+/// a whole slice on the strength of that read, which only holds when no
+/// other driver is admitting concurrently.  The guard turns that
+/// implicit invariant into a checked one — a second concurrent driver
+/// gets an error instead of silently racing the gate.  Dropping the
+/// guard releases the claim.
+pub struct StreamDriverGuard {
+    flag: Arc<AtomicBool>,
+}
+
+impl Drop for StreamDriverGuard {
+    fn drop(&mut self) {
+        self.flag.store(false, Ordering::Release);
+    }
 }
 
 /// Everything one shard worker needs, bundled so the spawn loop stays
@@ -543,6 +566,8 @@ impl Coordinator {
             capacity,
             nb,
             shards,
+            batch_size: cfg.batcher.batch_size,
+            stream_driver: Arc::new(AtomicBool::new(false)),
         })
     }
 
@@ -645,6 +670,12 @@ impl Coordinator {
         self.shards
     }
 
+    /// Voxel width (signal values per request) — what `lease()` sizes
+    /// its buffers to and what the net layer validates frames against.
+    pub fn nb(&self) -> usize {
+        self.nb
+    }
+
     /// Current queue depth (requests admitted but not yet answered).
     pub fn queue_depth(&self) -> usize {
         self.depth.load(Ordering::Acquire)
@@ -693,6 +724,49 @@ impl Coordinator {
             shard.deque_depth = self.source.deque_depth(k);
         }
         s
+    }
+
+    /// Estimated wait for a request admitted right now, in µs: the
+    /// formed-batch backlog across every shard deque plus the unformed
+    /// remainder of `queue_depth`, priced at the EWMA batch service
+    /// time and divided across the shards.  Zero on a cold coordinator
+    /// (no batch has run yet) — deadline shedding only ever engages
+    /// once there is measured service time to reason with.
+    pub fn estimated_queue_delay_us(&self) -> u64 {
+        let queued_batches: usize = (0..self.shards)
+            .map(|k| self.source.deque_depth(k))
+            .sum();
+        let in_deques = queued_batches * self.batch_size;
+        let pending = self.queue_depth().saturating_sub(in_deques);
+        super::net::admission::estimate_delay_us(
+            queued_batches,
+            pending,
+            self.batch_size,
+            self.shards,
+            self.metrics.ewma_batch_us() as u64,
+        )
+    }
+
+    /// Claim the streaming-volume admission gate for one driver (see
+    /// [`StreamDriverGuard`]).  Errors when another driver already
+    /// holds it: running two `stream_volume` calls concurrently against
+    /// one coordinator would break the gate's single-producer
+    /// no-rejection invariant.
+    pub fn stream_driver_guard(&self) -> anyhow::Result<StreamDriverGuard> {
+        if self
+            .stream_driver
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            anyhow::bail!(
+                "a streaming-volume driver already owns this coordinator's slice \
+                 admission gate (single-producer invariant); run the volumes \
+                 sequentially or use separate coordinators"
+            );
+        }
+        Ok(StreamDriverGuard {
+            flag: Arc::clone(&self.stream_driver),
+        })
     }
 
     fn stop(&mut self) {
@@ -853,6 +927,7 @@ fn shard_loop(ctx: ShardCtx, engine: &mut dyn Engine) {
             Ok(()) => {
                 let batch_us = t0.elapsed().as_micros() as u64;
                 ctx.metrics.batch_latency.record_us(batch_us);
+                ctx.metrics.record_batch_ewma(batch_us);
                 ctx.metrics.batches.fetch_add(1, Ordering::Relaxed);
                 ctx.metrics.padded_rows.fetch_add(
                     (ctx.batch_size - real) as u64,
@@ -1453,6 +1528,52 @@ mod tests {
         let cfg = CoordinatorConfig::sharded(4, 4, 4);
         let r = Coordinator::start(cfg, || anyhow::bail!("boom"));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn stream_driver_guard_is_exclusive_and_releases_on_drop() {
+        let (coord, _) = start_native(8, 1000, 1);
+        let g = coord.stream_driver_guard().unwrap();
+        assert!(
+            coord.stream_driver_guard().is_err(),
+            "a second concurrent driver must be rejected"
+        );
+        drop(g);
+        // sequential drivers are fine
+        let g2 = coord.stream_driver_guard().unwrap();
+        drop(g2);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn delay_estimate_cold_then_tracks_service_time() {
+        let (coord, man) = start_native(8, 1000, 1);
+        assert_eq!(
+            coord.estimated_queue_delay_us(),
+            0,
+            "cold coordinator must estimate zero wait (never sheds)"
+        );
+        let ds = synth_dataset(8, &man.bvalues, 20.0, 21);
+        let rxs: Vec<_> = (0..8)
+            .map(|i| {
+                coord
+                    .submit(VoxelRequest {
+                        id: i as u64,
+                        signals: ds.voxel(i).to_vec(),
+                    })
+                    .unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        assert!(
+            coord.metrics().ewma_batch_us() > 0.0,
+            "a served batch must seed the EWMA"
+        );
+        // queue drained -> no backlog -> estimate back to zero
+        assert_eq!(coord.estimated_queue_delay_us(), 0);
+        coord.shutdown();
     }
 
     #[test]

@@ -7,7 +7,7 @@
 use uivim::accel::{AccelConfig, AccelSimulator, Scheme};
 use uivim::bench;
 use uivim::cli::{flag, opt, Args, Cli, CommandSpec};
-use uivim::coordinator::{Coordinator, CoordinatorConfig};
+use uivim::coordinator::{Coordinator, CoordinatorConfig, NetClient, NetConfig, NetServer};
 use uivim::experiments::{self, fig67, fig8, tables};
 use uivim::infer::registry::{self, EngineOpts};
 use uivim::ivim::synth::synth_dataset;
@@ -17,6 +17,7 @@ use uivim::metrics::report::write_report;
 use uivim::model::Weights;
 use uivim::runtime::Runtime;
 use uivim::train::{train, TrainConfig};
+use uivim::util::frame::Status;
 use uivim::util::Timer;
 
 fn cli() -> Cli {
@@ -82,6 +83,31 @@ fn cli() -> Cli {
                         "overlap",
                         "prepare MC mask plans on a background worker (bit-exact)",
                     ),
+                    opt(
+                        "listen",
+                        "serve framed TCP requests on this address (e.g. 127.0.0.1:7070; \
+                         port 0 = ephemeral) and run the demo stream through a loopback client",
+                        None,
+                    ),
+                    opt("max-conns", "live TCP connection cap for --listen", Some("64")),
+                ],
+            },
+            CommandSpec {
+                name: "client",
+                help: "framed-TCP smoke client: send synthetic voxels to a running \
+                       `serve --listen` front door",
+                opts: vec![
+                    variant(),
+                    opt("connect", "server address (host:port)", Some("127.0.0.1:7070")),
+                    opt("requests", "number of requests", Some("16")),
+                    opt(
+                        "deadline-us",
+                        "per-request deadline in µs (0 = none; overloaded servers shed \
+                         deadlines they cannot meet)",
+                        Some("0"),
+                    ),
+                    opt("snr", "noise level", Some("20")),
+                    opt("seed", "data stream seed", Some("18")),
                 ],
             },
             CommandSpec {
@@ -364,6 +390,64 @@ fn run(args: &Args) -> anyhow::Result<()> {
             };
             let coord = Coordinator::start(cfg, registry::factory(&kind, man.clone(), w, opts)?)?;
             let ds = synth_dataset(n, &man.bvalues, 20.0, 18);
+            if let Some(listen) = args.get("listen") {
+                // TCP front door + loopback smoke client: the same demo
+                // stream, but framed over a real socket.
+                let coord = std::sync::Arc::new(coord);
+                let net_cfg = NetConfig {
+                    max_conns: args.get_usize("max-conns")?.unwrap_or(64).max(1),
+                    ..Default::default()
+                };
+                let server = NetServer::start(std::sync::Arc::clone(&coord), listen, net_cfg)?;
+                println!(
+                    "serving framed TCP on {} ({shards} shards, batch {batch})",
+                    server.addr()
+                );
+                let mut client = NetClient::connect(&server.addr().to_string())?;
+                let t = Timer::start();
+                let (mut confident, mut not_ok) = (0usize, 0usize);
+                for i in 0..n {
+                    let reply = client.request(i as u64, 0, ds.voxel(i))?;
+                    anyhow::ensure!(
+                        reply.id == i as u64,
+                        "reply {} routed to request {i}",
+                        reply.id
+                    );
+                    if reply.status == Status::Ok {
+                        if reply.report.is_some_and(|r| r.confident) {
+                            confident += 1;
+                        }
+                    } else {
+                        not_ok += 1;
+                    }
+                }
+                let el = t.elapsed_s();
+                let snap = coord.snapshot();
+                println!(
+                    "{n} framed requests in {el:.2}s -> {:.0} vox/s | frames {} | shed {} | \
+                     bad {} | expired {} | connections {} | non-OK {not_ok} | \
+                     confident {:.1}%",
+                    n as f64 / el,
+                    snap.net_frames,
+                    snap.net_shed,
+                    snap.net_bad_frames,
+                    snap.net_expired,
+                    snap.net_connections,
+                    100.0 * confident as f64 / n as f64
+                );
+                println!(
+                    "admission: est queue delay {} µs | ewma batch {:.0} µs | lease \
+                     high-water {}",
+                    coord.estimated_queue_delay_us(),
+                    snap.ewma_batch_us,
+                    coord.lease_high_water()
+                );
+                server.shutdown();
+                if let Ok(c) = std::sync::Arc::try_unwrap(coord) {
+                    c.shutdown();
+                }
+                return Ok(());
+            }
             let t = Timer::start();
             // the zero-alloc client path: leased buffers, reclaimed by
             // the dispatcher at batch-cut time
@@ -423,6 +507,53 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 );
             }
             coord.shutdown();
+        }
+        "client" => {
+            let addr = args.get_or("connect", "127.0.0.1:7070").to_string();
+            let n = args.get_usize("requests")?.unwrap_or(16);
+            let deadline = args.get_usize("deadline-us")?.unwrap_or(0) as u64;
+            let snr = args.get_f64("snr")?.unwrap_or(20.0);
+            let seed = args.get_usize("seed")?.unwrap_or(18) as u64;
+            // Only the protocol (b-values) is needed client-side; fall
+            // back to the in-tree fixture when artifacts are absent.
+            let man = match experiments::load_manifest(args.get_or("variant", "tiny")) {
+                Ok(man) => man,
+                Err(e) => {
+                    eprintln!("no artifacts ({e}); using the built-in tiny fixture protocol");
+                    uivim::testing::fixture::tiny_fixture().0
+                }
+            };
+            let ds = synth_dataset(n, &man.bvalues, snr, seed);
+            let mut client = NetClient::connect(&addr)?;
+            let t = Timer::start();
+            let (mut ok, mut shed, mut expired, mut other) = (0usize, 0usize, 0usize, 0usize);
+            let mut confident = 0usize;
+            for i in 0..n {
+                let reply = client.request(i as u64, deadline, ds.voxel(i))?;
+                anyhow::ensure!(
+                    reply.id == i as u64,
+                    "reply {} routed to request {i}",
+                    reply.id
+                );
+                match reply.status {
+                    Status::Ok => {
+                        ok += 1;
+                        if reply.report.is_some_and(|r| r.confident) {
+                            confident += 1;
+                        }
+                    }
+                    Status::Overloaded => shed += 1,
+                    Status::Expired => expired += 1,
+                    _ => other += 1,
+                }
+            }
+            let el = t.elapsed_s();
+            println!(
+                "{n} requests to {addr} in {el:.2}s -> {:.0} req/s | OK {ok} \
+                 (confident {confident}) | OVERLOADED {shed} | EXPIRED {expired} | \
+                 other {other}",
+                n as f64 / el
+            );
         }
         "volume" => {
             use uivim::volume::scenario::{scenario_grid, Corruption};

@@ -1,7 +1,10 @@
 //! Deterministic concurrency harness for the coordinator's serving
-//! protocol — batcher, per-shard work-stealing deques, and the pooled
-//! signal-buffer lifecycle — driven in **virtual time** with **no
-//! threads, no sleeps, no retries**.
+//! protocol — batcher, per-shard work-stealing deques, the pooled
+//! signal-buffer lifecycle, and the network front door's
+//! admission/shed accounting (`Op::NetArrive` / `Op::NetShed` run the
+//! real `coordinator::net::admission` rule against the live backlog) —
+//! driven in **virtual time** with **no threads, no sleeps, no
+//! retries**.
 //!
 //! Real threads interleave the protocol's atomic steps (push a batch,
 //! pop locally, steal from a victim, close, exit) in whatever order the
@@ -23,7 +26,7 @@
 //! route, a leaked padding row, or a recycled-buffer aliasing bug all
 //! fail loudly at the step that caused them.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -61,6 +64,20 @@ pub enum Op {
     PopLocal(usize),
     /// `thief` steals FIFO from exactly `victim`'s deque.
     StealFrom { thief: usize, victim: usize },
+    /// `n` framed requests arrive on the network front door, each with
+    /// this relative deadline (µs; 0 = none).  Every request walks the
+    /// REAL server-side admission chain in server order — connection
+    /// quota (`SimConfig::net_quota`), then the deadline gate
+    /// (`coordinator::net::admission::should_shed` fed the live deque /
+    /// batcher backlog and `SimConfig::net_ewma_us`) — and is either
+    /// admitted to the batcher or shed with an explicit `OVERLOADED`
+    /// (recorded in `SimResult::shed`; the id is consumed, never lost).
+    NetArrive { n: usize, deadline_us: u64 },
+    /// The reply-side expiry sweep (`net::Conn::sweep_replies`): every
+    /// admitted net request whose deadline has passed in virtual time
+    /// is answered `EXPIRED` now; the shard's eventual service of those
+    /// rows is discarded instead of double-counted.
+    NetShed,
     /// Graceful shutdown: flush everything pending through the deques,
     /// then close them (pushes fail from here on; claims keep
     /// draining).
@@ -106,6 +123,12 @@ pub struct SimResult {
     /// Slices refused admission by the in-flight cap (each is one
     /// driver stall-and-drain event).
     pub deferred_slices: usize,
+    /// Net requests shed at the admission gate with an explicit
+    /// `OVERLOADED` (quota or deadline rule), in arrival order.
+    pub shed: Vec<u64>,
+    /// Net requests answered `EXPIRED` by the reply-side sweep after
+    /// their deadline lapsed in the queue.
+    pub expired: Vec<u64>,
 }
 
 /// Harness configuration.
@@ -121,6 +144,14 @@ pub struct SimConfig {
     /// In-flight cap for `Op::IngestSlice` (streamed requests admitted
     /// but not yet completed). Unlimited by default.
     pub inflight_cap: usize,
+    /// Connection quota for `Op::NetArrive`: admitted-but-unanswered
+    /// net requests allowed at once (the server's per-connection
+    /// `NetConfig::conn_quota`). Unlimited by default.
+    pub net_quota: usize,
+    /// Virtual EWMA batch latency (µs) fed to the admission estimator
+    /// by `Op::NetArrive`. 0 models a cold coordinator, which never
+    /// sheds on delay.
+    pub net_ewma_us: u64,
     /// Seeds the dispatcher's p2c stream, each shard's steal-victim
     /// stream, and nothing else.
     pub seed: u64,
@@ -135,6 +166,8 @@ impl Default for SimConfig {
             max_wait_us: 100,
             queue_capacity: 10_000,
             inflight_cap: usize::MAX,
+            net_quota: usize::MAX,
+            net_ewma_us: 0,
             seed: 0xC0FFEE,
         }
     }
@@ -158,6 +191,12 @@ pub struct Sim {
     streamed: BTreeSet<u64>,
     /// `streamed.len()`, tracked alongside for the gauge updates.
     inflight: usize,
+    /// Net-admitted ids → absolute virtual-time expiry (µs;
+    /// `u64::MAX` = no deadline), awaiting a reply.
+    net_pending: BTreeMap<u64, u64>,
+    /// Ids already answered `EXPIRED`: their eventual service or
+    /// failure is accounting-discarded, never double-counted.
+    disposed: BTreeSet<u64>,
     out: SimResult,
 }
 
@@ -196,6 +235,8 @@ impl Sim {
             next_id: 0,
             streamed: BTreeSet::new(),
             inflight: 0,
+            net_pending: BTreeMap::new(),
+            disposed: BTreeSet::new(),
             out: SimResult::default(),
             cfg,
         }
@@ -241,12 +282,23 @@ impl Sim {
     pub fn inflight(&self) -> usize {
         self.inflight
     }
+    /// Net requests admitted and still awaiting a reply (the quota
+    /// gauge for `Op::NetArrive`).
+    pub fn net_pending(&self) -> usize {
+        self.net_pending.len()
+    }
 
     /// Record a failed batch, releasing any streamed ids it carried.
+    /// Rows already answered `EXPIRED` were accounted at sweep time and
+    /// are discarded here.
     fn fail_tags(&mut self, tags: &[u64]) {
         for &id in tags {
             if self.streamed.remove(&id) {
                 self.inflight -= 1;
+            }
+            self.net_pending.remove(&id);
+            if self.disposed.remove(&id) {
+                continue;
             }
             self.out.failed.push(id);
         }
@@ -297,6 +349,63 @@ impl Sim {
                             self.out.max_inflight = self.out.max_inflight.max(self.inflight);
                         }
                     }
+                }
+            }
+            Op::NetArrive { n, deadline_us } => {
+                for _ in 0..n {
+                    let id = self.next_id;
+                    self.next_id += 1;
+                    // The real admission chain in server order — quota,
+                    // then the deadline gate fed the live backlog —
+                    // both checked before any lease is taken (the
+                    // server sheds without touching the slab).
+                    let est = crate::coordinator::net::admission::estimate_delay_us(
+                        self.deques.total(),
+                        self.batcher.len(),
+                        self.cfg.batch_size,
+                        self.cfg.shards,
+                        self.cfg.net_ewma_us,
+                    );
+                    if self.net_pending.len() >= self.cfg.net_quota
+                        || crate::coordinator::net::admission::should_shed(deadline_us, est)
+                    {
+                        self.out.shed.push(id);
+                        continue;
+                    }
+                    let mut signals = self.request_pool.take(self.cfg.nb);
+                    signals.resize(self.cfg.nb, Self::fingerprint(id));
+                    let pend = Pending {
+                        signals,
+                        tag: id,
+                        enqueued: self.virtual_now(),
+                    };
+                    if let Err(p) = self.batcher.push(pend) {
+                        self.out.rejected.push(id);
+                        self.request_pool.put(p.signals);
+                    } else {
+                        let exp = if deadline_us == 0 {
+                            u64::MAX
+                        } else {
+                            self.now_us.saturating_add(deadline_us)
+                        };
+                        self.net_pending.insert(id, exp);
+                    }
+                }
+            }
+            Op::NetShed => {
+                // Reply-side sweep: answer EXPIRED for every overdue
+                // pending reply (expiry instant counts as overdue).
+                let now = self.now_us;
+                let overdue: Vec<u64> = self
+                    .net_pending
+                    .iter()
+                    .filter(|&(_, &exp)| exp <= now)
+                    .map(|(&id, _)| id)
+                    .collect();
+                for id in overdue {
+                    self.net_pending.remove(&id);
+                    self.disposed.insert(id);
+                    self.out.expired.push(id);
                 }
             }
             Op::Tick(us) => self.now_us += us,
@@ -387,6 +496,12 @@ impl Sim {
             );
             if self.streamed.remove(&id) {
                 self.inflight -= 1;
+            }
+            self.net_pending.remove(&id);
+            if self.disposed.remove(&id) {
+                // already answered EXPIRED at sweep time — the shard
+                // computed it, but the reply side discards it
+                continue;
             }
             self.out.served.push(ServedRow { shard, id, claim });
         }
@@ -585,19 +700,28 @@ mod tests {
     }
 
     /// Every id arrives exactly once somewhere: served ∪ failed ∪
-    /// rejected partitions 0..n.
+    /// rejected ∪ shed ∪ expired partitions 0..n — the exactly-once
+    /// accounting contract, network paths included.
     fn assert_conservation(r: &SimResult, n: u64) {
         let mut seen = BTreeSet::new();
-        for &id in ids(&r.served).iter().chain(&r.failed).chain(&r.rejected) {
+        for &id in ids(&r.served)
+            .iter()
+            .chain(&r.failed)
+            .chain(&r.rejected)
+            .chain(&r.shed)
+            .chain(&r.expired)
+        {
             assert!(seen.insert(id), "request {id} delivered twice: {r:?}");
         }
         assert_eq!(
             seen,
             (0..n).collect::<BTreeSet<_>>(),
-            "lost requests (served {} / failed {} / rejected {} of {n})",
+            "lost requests (served {} / failed {} / rejected {} / shed {} / expired {} of {n})",
             r.served.len(),
             r.failed.len(),
-            r.rejected.len()
+            r.rejected.len(),
+            r.shed.len(),
+            r.expired.len()
         );
     }
 
@@ -957,6 +1081,122 @@ mod tests {
                 true
             },
         );
+    }
+
+    /// ISSUE #9: net admission racing shutdown.  Requests the gate
+    /// admitted before the close are flushed and served; requests
+    /// admitted after it fail fast at the closed deques — and shed +
+    /// served + failed still partitions the arrivals exactly once.
+    #[test]
+    fn net_admit_racing_shutdown_is_exactly_once() {
+        let cfg = SimConfig {
+            shards: 2,
+            batch_size: 4,
+            ..Default::default()
+        };
+        let mut sim = Sim::new(cfg);
+        sim.step(Op::NetArrive { n: 4, deadline_us: 0 }); // cold gate admits
+        assert_eq!(sim.net_pending(), 4);
+        sim.step(Op::Shutdown); // flushes the full batch, closes
+        assert!(sim.is_closed());
+        sim.step(Op::NetArrive { n: 4, deadline_us: 0 }); // land in the batcher…
+        sim.step(Op::Shutdown); // …and the flush hits closed deques
+        assert_eq!(sim.net_pending(), 4, "failed admits released their quota");
+        sim.step(Op::Pop(0));
+        sim.step(Op::Pop(1));
+        assert_eq!(sim.net_pending(), 0, "served admits released their quota");
+        let r = sim.finish();
+        assert_conservation(&r, 8);
+        assert_eq!(ids(&r.served), vec![0, 1, 2, 3], "pre-close admits served");
+        assert_eq!(r.failed, vec![4, 5, 6, 7], "post-close admits fail fast");
+        assert!(r.shed.is_empty() && r.expired.is_empty());
+    }
+
+    /// ISSUE #9: a deadline that lapses *in the queue* is answered
+    /// `EXPIRED` by the reply-side sweep exactly once — the shard still
+    /// computes the batch, but the late rows are discarded rather than
+    /// double-counted as served.
+    #[test]
+    fn net_deadline_expiring_in_queue_is_shed_exactly_once() {
+        let cfg = SimConfig {
+            shards: 1,
+            batch_size: 4,
+            ..Default::default()
+        };
+        let mut sim = Sim::new(cfg);
+        sim.step(Op::NetArrive { n: 4, deadline_us: 300 }); // est 0: admitted
+        assert_eq!(sim.net_pending(), 4);
+        sim.step(Op::Cut); // one full batch onto the deque
+        sim.step(Op::Tick(300)); // queue delay eats the whole deadline
+        sim.step(Op::NetShed); // sweep answers all four EXPIRED
+        assert_eq!(sim.net_pending(), 0);
+        sim.step(Op::Pop(0)); // the shard still serves the batch…
+        let r = sim.finish();
+        assert_conservation(&r, 4);
+        assert!(r.served.is_empty(), "…but the late rows are discarded");
+        assert_eq!(r.expired, vec![0, 1, 2, 3]);
+        assert!(r.failed.is_empty() && r.shed.is_empty());
+    }
+
+    /// ISSUE #9: quota exhaustion sheds the excess with an explicit
+    /// OVERLOADED, and the quota frees as replies complete — later
+    /// arrivals are admitted again.
+    #[test]
+    fn net_quota_sheds_excess_then_recovers() {
+        let cfg = SimConfig {
+            shards: 1,
+            batch_size: 4,
+            net_quota: 4,
+            ..Default::default()
+        };
+        let mut sim = Sim::new(cfg);
+        sim.step(Op::NetArrive { n: 6, deadline_us: 0 }); // 4 admitted, 2 shed
+        assert_eq!(sim.net_pending(), 4, "quota caps the pending replies");
+        sim.step(Op::Cut);
+        sim.step(Op::Pop(0)); // replies go out: quota frees
+        assert_eq!(sim.net_pending(), 0);
+        sim.step(Op::NetArrive { n: 4, deadline_us: 0 }); // admitted again
+        sim.step(Op::Cut);
+        sim.step(Op::Pop(0));
+        let r = sim.finish();
+        assert_conservation(&r, 10);
+        assert_eq!(r.shed, vec![4, 5], "overflow shed in arrival order");
+        assert_eq!(r.served.len(), 8);
+        assert!(r.expired.is_empty() && r.failed.is_empty());
+    }
+
+    /// ISSUE #9: the admission gate reads the LIVE backlog.  With a
+    /// warm EWMA and eight requests pending, a tight-deadline arrival
+    /// is shed at the door while a no-deadline and a loose-deadline one
+    /// ride the same backlog in — and the whole trace replays
+    /// bit-for-bit from the fixed seed.
+    #[test]
+    fn net_admission_gate_reads_live_backlog_and_replays() {
+        let cfg = SimConfig {
+            shards: 1,
+            batch_size: 4,
+            net_ewma_us: 100,
+            ..Default::default()
+        };
+        let script = [
+            Op::Arrive(8), // backlog: 2 forming batches = est 200 µs
+            Op::NetArrive { n: 1, deadline_us: 150 }, // 200 > 150: shed
+            Op::NetArrive { n: 1, deadline_us: 0 },   // no deadline: admitted
+            Op::NetArrive { n: 1, deadline_us: 350 }, // est 300 ≤ 350: admitted
+            Op::Cut,       // two full batches; ids 9,10 still forming
+            Op::Pop(0),
+            Op::Pop(0),
+            Op::Tick(200), // partial batch past its deadline
+            Op::Cut,
+            Op::Pop(0),
+        ];
+        let a = run_script(cfg, &script);
+        let b = run_script(cfg, &script);
+        assert_eq!(a, b, "fixed seed must replay bit-for-bit");
+        assert_conservation(&a, 11);
+        assert_eq!(a.shed, vec![8], "only the tight deadline was shed");
+        assert_eq!(a.served.len(), 10);
+        assert!(a.expired.is_empty() && a.failed.is_empty());
     }
 
     /// ISSUE #8: prepare racing swap.  An eager worker (prep lands the

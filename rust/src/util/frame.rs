@@ -1,0 +1,583 @@
+//! Length-prefixed binary frame codec for the coordinator's TCP front
+//! door (`coordinator::net`).
+//!
+//! No external dependencies (DESIGN.md §6): the wire format is a fixed
+//! 28-byte little-endian header followed by a typed payload.
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic        b"UIVM"
+//!      4     2  version      u16 (currently 1)
+//!      6     1  kind         1 = request, 2 = response
+//!      7     1  status       response status code (0 on requests)
+//!      8     8  id           caller-chosen request id (echoed back)
+//!     16     8  deadline_us  relative deadline in µs (0 = none)
+//!     24     4  n_values     payload element count
+//!     28     …  payload      request: n_values × f32 LE (the voxel
+//!                            signals); response: n_values × f64 LE
+//! ```
+//!
+//! Parsing is **hardened**: [`FrameAssembler`] owns a fixed-capacity
+//! buffer sized at construction, validates the header the instant 28
+//! bytes are available (bad magic / version / kind / oversized
+//! `n_values` are rejected *before* any payload is awaited — the
+//! declared length is never trusted and never drives an allocation),
+//! and only ever reads bytes it has itself buffered, so no input can
+//! make it panic or over-read.  Every rejection is a typed
+//! [`FrameError`].
+
+use std::fmt;
+
+/// Frame magic: first four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"UIVM";
+/// Protocol version this build speaks.
+pub const VERSION: u16 = 1;
+/// Fixed header length in bytes.
+pub const HEADER_LEN: usize = 28;
+
+/// Payload element width per frame kind (f32 requests, f64 responses).
+const REQ_ELEM: usize = 4;
+const RESP_ELEM: usize = 8;
+
+/// Frame kind discriminant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Client → server: one voxel's signals.
+    Request,
+    /// Server → client: a status + the aggregated report values.
+    Response,
+}
+
+impl FrameKind {
+    fn from_u8(v: u8) -> Option<FrameKind> {
+        match v {
+            1 => Some(FrameKind::Request),
+            2 => Some(FrameKind::Response),
+            _ => None,
+        }
+    }
+
+    fn as_u8(self) -> u8 {
+        match self {
+            FrameKind::Request => 1,
+            FrameKind::Response => 2,
+        }
+    }
+
+    /// Payload element width in bytes.
+    pub fn elem_size(self) -> usize {
+        match self {
+            FrameKind::Request => REQ_ELEM,
+            FrameKind::Response => RESP_ELEM,
+        }
+    }
+}
+
+/// Response status codes (the `status` header byte).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    /// Served: payload carries the report values.
+    Ok,
+    /// Shed by admission control (quota, queue, or estimated delay past
+    /// the deadline) — retry later or relax the deadline.
+    Overloaded,
+    /// The deadline passed before the response could be delivered.
+    Expired,
+    /// Recoverable request error (wrong signal count, non-finite
+    /// payload float) — the connection stays open.
+    BadRequest,
+    /// The coordinator is shutting down.
+    Shutdown,
+}
+
+impl Status {
+    pub fn from_u8(v: u8) -> Option<Status> {
+        match v {
+            0 => Some(Status::Ok),
+            1 => Some(Status::Overloaded),
+            2 => Some(Status::Expired),
+            3 => Some(Status::BadRequest),
+            4 => Some(Status::Shutdown),
+            _ => None,
+        }
+    }
+
+    pub fn as_u8(self) -> u8 {
+        match self {
+            Status::Ok => 0,
+            Status::Overloaded => 1,
+            Status::Expired => 2,
+            Status::BadRequest => 3,
+            Status::Shutdown => 4,
+        }
+    }
+}
+
+/// Typed parse rejection.  Every variant means the byte stream is
+/// desynchronised (or hostile) and the connection should be closed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameError {
+    /// First four bytes were not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Unsupported protocol version.
+    BadVersion(u16),
+    /// Unknown frame-kind discriminant.
+    BadKind(u8),
+    /// Declared `n_values` exceeds the assembler's fixed limit.
+    Oversize { n_values: u32, max_values: usize },
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            FrameError::BadVersion(v) => {
+                write!(f, "unsupported frame version {v} (speak {VERSION})")
+            }
+            FrameError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            FrameError::Oversize {
+                n_values,
+                max_values,
+            } => write!(
+                f,
+                "declared payload of {n_values} values exceeds the limit of {max_values}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// A validated frame header (payload fully buffered when returned by
+/// [`FrameAssembler::poll`]).
+#[derive(Debug, Clone, Copy)]
+pub struct FrameHeader {
+    pub kind: FrameKind,
+    pub status: u8,
+    pub id: u64,
+    /// Relative deadline in µs (0 = no deadline).
+    pub deadline_us: u64,
+    pub n_values: usize,
+}
+
+impl FrameHeader {
+    /// Total frame length (header + payload) in bytes.
+    pub fn frame_len(&self) -> usize {
+        HEADER_LEN + self.n_values * self.kind.elem_size()
+    }
+}
+
+fn put_header(buf: &mut Vec<u8>, kind: FrameKind, status: u8, id: u64, deadline_us: u64, n: u32) {
+    buf.extend_from_slice(&MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.push(kind.as_u8());
+    buf.push(status);
+    buf.extend_from_slice(&id.to_le_bytes());
+    buf.extend_from_slice(&deadline_us.to_le_bytes());
+    buf.extend_from_slice(&n.to_le_bytes());
+}
+
+/// Encode a request frame into `buf` (cleared first; capacity is
+/// reused, so a connection's encode buffer allocates once).
+pub fn encode_request(buf: &mut Vec<u8>, id: u64, deadline_us: u64, signals: &[f32]) {
+    buf.clear();
+    buf.reserve(HEADER_LEN + signals.len() * REQ_ELEM);
+    put_header(
+        buf,
+        FrameKind::Request,
+        0,
+        id,
+        deadline_us,
+        signals.len() as u32,
+    );
+    for v in signals {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Encode a response frame into `buf` (cleared first).
+pub fn encode_response(buf: &mut Vec<u8>, id: u64, status: Status, values: &[f64]) {
+    buf.clear();
+    buf.reserve(HEADER_LEN + values.len() * RESP_ELEM);
+    put_header(
+        buf,
+        FrameKind::Response,
+        status.as_u8(),
+        id,
+        0,
+        values.len() as u32,
+    );
+    for v in values {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Incremental frame reassembler over a fixed-capacity buffer.
+///
+/// Feed bytes in (any fragmentation — byte-at-a-time is fine), call
+/// [`poll`](Self::poll) until it yields a complete frame, decode, then
+/// [`consume`](Self::consume).  The buffer is sized once at
+/// construction for the largest legal frame plus read slack; the
+/// declared payload length can never grow it.
+pub struct FrameAssembler {
+    buf: Vec<u8>,
+    len: usize,
+    max_values: usize,
+}
+
+impl FrameAssembler {
+    /// Assembler accepting at most `max_values` payload elements per
+    /// frame.  Capacity covers one worst-case response frame (the wider
+    /// element) plus one header, so a full frame and the start of the
+    /// next fit without stalling the reader.
+    pub fn new(max_values: usize) -> Self {
+        let cap = HEADER_LEN + max_values.max(1) * RESP_ELEM + HEADER_LEN;
+        FrameAssembler {
+            buf: vec![0u8; cap],
+            len: 0,
+            max_values: max_values.max(1),
+        }
+    }
+
+    /// Bytes currently buffered.
+    pub fn buffered(&self) -> usize {
+        self.len
+    }
+
+    /// Largest legal `n_values`.
+    pub fn max_values(&self) -> usize {
+        self.max_values
+    }
+
+    /// Writable tail for a socket read (`read(spare())` then
+    /// [`commit`](Self::commit) the byte count).  Empty only when the
+    /// buffer is full — which, with the construction-time sizing, means
+    /// the peer sent a full frame we have not consumed yet.
+    pub fn spare(&mut self) -> &mut [u8] {
+        &mut self.buf[self.len..]
+    }
+
+    /// Mark `n` bytes of [`spare`](Self::spare) as filled.
+    pub fn commit(&mut self, n: usize) {
+        self.len = (self.len + n).min(self.buf.len());
+    }
+
+    /// Copy as much of `bytes` as fits; returns the count consumed.
+    pub fn feed(&mut self, bytes: &[u8]) -> usize {
+        let room = self.buf.len() - self.len;
+        let n = bytes.len().min(room);
+        self.buf[self.len..self.len + n].copy_from_slice(&bytes[..n]);
+        self.len += n;
+        n
+    }
+
+    /// Parse the buffered bytes.  `Ok(None)` = incomplete (feed more);
+    /// `Ok(Some(h))` = one whole validated frame is buffered;
+    /// `Err` = the stream is invalid at the current position (close the
+    /// connection — resynchronising an adversarial stream is hopeless).
+    ///
+    /// Header fields are validated as soon as the header itself is
+    /// buffered: an oversized or malformed declaration is rejected
+    /// without waiting for (or trusting) its payload.
+    pub fn poll(&self) -> Result<Option<FrameHeader>, FrameError> {
+        if self.len < HEADER_LEN {
+            return Ok(None);
+        }
+        let b = &self.buf[..self.len];
+        let magic = [b[0], b[1], b[2], b[3]];
+        if magic != MAGIC {
+            return Err(FrameError::BadMagic(magic));
+        }
+        let version = u16::from_le_bytes([b[4], b[5]]);
+        if version != VERSION {
+            return Err(FrameError::BadVersion(version));
+        }
+        let Some(kind) = FrameKind::from_u8(b[6]) else {
+            return Err(FrameError::BadKind(b[6]));
+        };
+        let status = b[7];
+        let id = u64::from_le_bytes(b[8..16].try_into().expect("8 bytes"));
+        let deadline_us = u64::from_le_bytes(b[16..24].try_into().expect("8 bytes"));
+        let n_values = u32::from_le_bytes(b[24..28].try_into().expect("4 bytes"));
+        if n_values as usize > self.max_values {
+            return Err(FrameError::Oversize {
+                n_values,
+                max_values: self.max_values,
+            });
+        }
+        let header = FrameHeader {
+            kind,
+            status,
+            id,
+            deadline_us,
+            n_values: n_values as usize,
+        };
+        if self.len < header.frame_len() {
+            return Ok(None); // payload still in flight
+        }
+        Ok(Some(header))
+    }
+
+    /// Decode a request frame's payload into `dst` (which must be
+    /// exactly `n_values` long — the caller checks the width *before*
+    /// taking a lease).  Returns `false`, leaving `dst` unspecified,
+    /// when any payload float is NaN or infinite.
+    pub fn decode_request_into(&self, header: &FrameHeader, dst: &mut [f32]) -> bool {
+        assert_eq!(header.kind, FrameKind::Request, "not a request frame");
+        assert_eq!(dst.len(), header.n_values, "destination width mismatch");
+        debug_assert!(self.len >= header.frame_len(), "frame not fully buffered");
+        let payload = &self.buf[HEADER_LEN..header.frame_len()];
+        for (slot, chunk) in dst.iter_mut().zip(payload.chunks_exact(REQ_ELEM)) {
+            let v = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            if !v.is_finite() {
+                return false;
+            }
+            *slot = v;
+        }
+        true
+    }
+
+    /// Decode a response frame's payload into `dst` (must be exactly
+    /// `n_values` long).
+    pub fn decode_response_into(&self, header: &FrameHeader, dst: &mut [f64]) {
+        assert_eq!(header.kind, FrameKind::Response, "not a response frame");
+        assert_eq!(dst.len(), header.n_values, "destination width mismatch");
+        debug_assert!(self.len >= header.frame_len(), "frame not fully buffered");
+        let payload = &self.buf[HEADER_LEN..header.frame_len()];
+        for (slot, chunk) in dst.iter_mut().zip(payload.chunks_exact(RESP_ELEM)) {
+            *slot = f64::from_le_bytes(chunk.try_into().expect("8 bytes"));
+        }
+    }
+
+    /// Drop a decoded frame's bytes, compacting any following bytes to
+    /// the front (no allocation).
+    pub fn consume(&mut self, header: &FrameHeader) {
+        let n = header.frame_len().min(self.len);
+        self.buf.copy_within(n..self.len, 0);
+        self.len -= n;
+    }
+
+    /// Discard everything buffered (post-error reset in tests).
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn signals(n: usize) -> Vec<f32> {
+        (0..n).map(|i| i as f32 * 0.25 - 1.0).collect()
+    }
+
+    #[test]
+    fn request_roundtrip_bit_exact() {
+        let sig = signals(9);
+        let mut wire = Vec::new();
+        encode_request(&mut wire, 77, 1500, &sig);
+        assert_eq!(wire.len(), HEADER_LEN + 9 * 4);
+
+        let mut asm = FrameAssembler::new(16);
+        assert_eq!(asm.feed(&wire), wire.len());
+        let h = asm.poll().unwrap().expect("complete frame");
+        assert_eq!(h.kind, FrameKind::Request);
+        assert_eq!(h.id, 77);
+        assert_eq!(h.deadline_us, 1500);
+        assert_eq!(h.n_values, 9);
+        let mut out = vec![0.0f32; 9];
+        assert!(asm.decode_request_into(&h, &mut out));
+        assert_eq!(out, sig, "payload must roundtrip bit-exactly");
+        asm.consume(&h);
+        assert_eq!(asm.buffered(), 0);
+        assert!(asm.poll().unwrap().is_none());
+    }
+
+    #[test]
+    fn response_roundtrip_bit_exact() {
+        let vals: Vec<f64> = (0..13).map(|i| (i as f64).sqrt() - 2.0).collect();
+        let mut wire = Vec::new();
+        encode_response(&mut wire, 5, Status::Ok, &vals);
+        let mut asm = FrameAssembler::new(13);
+        asm.feed(&wire);
+        let h = asm.poll().unwrap().unwrap();
+        assert_eq!(h.kind, FrameKind::Response);
+        assert_eq!(Status::from_u8(h.status), Some(Status::Ok));
+        let mut out = vec![0.0f64; 13];
+        asm.decode_response_into(&h, &mut out);
+        assert_eq!(out, vals);
+    }
+
+    #[test]
+    fn byte_at_a_time_reassembly() {
+        let sig = signals(5);
+        let mut wire = Vec::new();
+        encode_request(&mut wire, 1, 0, &sig);
+        let mut asm = FrameAssembler::new(8);
+        for (i, b) in wire.iter().enumerate() {
+            // incomplete at every prefix…
+            assert!(asm.poll().unwrap().is_none(), "premature frame at byte {i}");
+            assert_eq!(asm.feed(std::slice::from_ref(b)), 1);
+        }
+        // …complete only on the final byte
+        let h = asm.poll().unwrap().expect("complete");
+        assert_eq!(h.n_values, 5);
+    }
+
+    #[test]
+    fn two_frames_back_to_back_compact() {
+        let mut wire = Vec::new();
+        let mut all = Vec::new();
+        encode_request(&mut wire, 1, 0, &signals(4));
+        all.extend_from_slice(&wire);
+        encode_request(&mut wire, 2, 9, &signals(4));
+        all.extend_from_slice(&wire);
+
+        let mut asm = FrameAssembler::new(4);
+        let mut fed = 0;
+        let mut ids = Vec::new();
+        while ids.len() < 2 {
+            fed += asm.feed(&all[fed..]);
+            while let Some(h) = asm.poll().unwrap() {
+                ids.push(h.id);
+                asm.consume(&h);
+            }
+        }
+        assert_eq!(ids, vec![1, 2]);
+        assert_eq!(fed, all.len());
+        assert_eq!(asm.buffered(), 0);
+    }
+
+    #[test]
+    fn bad_magic_version_kind_are_typed_errors() {
+        let mut wire = Vec::new();
+        encode_request(&mut wire, 1, 0, &signals(2));
+
+        let mut bad = wire.clone();
+        bad[0] = b'X';
+        let mut asm = FrameAssembler::new(4);
+        asm.feed(&bad);
+        assert!(matches!(asm.poll(), Err(FrameError::BadMagic(_))));
+
+        let mut bad = wire.clone();
+        bad[4] = 0xFF;
+        let mut asm = FrameAssembler::new(4);
+        asm.feed(&bad);
+        assert!(matches!(asm.poll(), Err(FrameError::BadVersion(_))));
+
+        let mut bad = wire.clone();
+        bad[6] = 42;
+        let mut asm = FrameAssembler::new(4);
+        asm.feed(&bad);
+        assert!(matches!(asm.poll(), Err(FrameError::BadKind(42))));
+    }
+
+    #[test]
+    fn oversize_declaration_rejected_before_payload() {
+        // Header declares u32::MAX values; only the header is sent.
+        // The assembler must reject from the header alone — never wait
+        // for (or try to buffer) the impossible payload.
+        let mut wire = Vec::new();
+        encode_request(&mut wire, 1, 0, &signals(2));
+        wire.truncate(HEADER_LEN);
+        wire[24..28].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut asm = FrameAssembler::new(104);
+        asm.feed(&wire);
+        match asm.poll() {
+            Err(FrameError::Oversize { n_values, .. }) => assert_eq!(n_values, u32::MAX),
+            other => panic!("expected Oversize, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn declared_length_never_grows_the_buffer() {
+        let mut asm = FrameAssembler::new(8);
+        let cap = asm.buf.len();
+        // a legal-looking header followed by a flood of garbage
+        let mut wire = Vec::new();
+        encode_request(&mut wire, 3, 0, &signals(8));
+        wire.extend_from_slice(&[0xAA; 4096]);
+        let mut fed = 0;
+        loop {
+            let n = asm.feed(&wire[fed..]);
+            fed += n;
+            if n == 0 {
+                break; // buffer full: backpressure, not growth
+            }
+        }
+        assert_eq!(asm.buf.len(), cap, "fixed capacity must never grow");
+        assert!(fed < wire.len(), "flood must hit the cap");
+        // the real frame at the front still parses
+        let h = asm.poll().unwrap().expect("frame");
+        assert_eq!(h.id, 3);
+    }
+
+    #[test]
+    fn nonfinite_payload_rejected() {
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut sig = signals(4);
+            sig[2] = bad;
+            let mut wire = Vec::new();
+            encode_request(&mut wire, 1, 0, &sig);
+            let mut asm = FrameAssembler::new(4);
+            asm.feed(&wire);
+            let h = asm.poll().unwrap().unwrap();
+            let mut out = vec![0.0f32; 4];
+            assert!(
+                !asm.decode_request_into(&h, &mut out),
+                "non-finite {bad} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn spare_commit_socket_style_path() {
+        let sig = signals(6);
+        let mut wire = Vec::new();
+        encode_request(&mut wire, 12, 7, &sig);
+        let mut asm = FrameAssembler::new(6);
+        let mut off = 0;
+        while off < wire.len() {
+            let spare = asm.spare();
+            assert!(!spare.is_empty());
+            let n = spare.len().min(3).min(wire.len() - off); // 3-byte reads
+            spare[..n].copy_from_slice(&wire[off..off + n]);
+            asm.commit(n);
+            off += n;
+        }
+        let h = asm.poll().unwrap().expect("complete");
+        assert_eq!((h.id, h.deadline_us), (12, 7));
+    }
+
+    /// Random bytes can never panic the parser, make it read beyond
+    /// what was fed, or produce a frame that validates falsely.
+    #[test]
+    fn random_bytes_never_panic_or_overread() {
+        let mut rng = Pcg32::new(0xF8A3);
+        let mut asm = FrameAssembler::new(104);
+        for _ in 0..2000 {
+            let n = rng.below(96) as usize;
+            let chunk: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+            asm.feed(&chunk);
+            match asm.poll() {
+                Ok(Some(h)) => {
+                    // complete frame: decoding must stay in bounds
+                    match h.kind {
+                        FrameKind::Request => {
+                            let mut out = vec![0.0f32; h.n_values];
+                            let _ = asm.decode_request_into(&h, &mut out);
+                        }
+                        FrameKind::Response => {
+                            let mut out = vec![0.0f64; h.n_values];
+                            asm.decode_response_into(&h, &mut out);
+                        }
+                    }
+                    asm.consume(&h);
+                }
+                Ok(None) => {}
+                Err(_) => asm.clear(), // typed rejection: connection would close
+            }
+        }
+    }
+}

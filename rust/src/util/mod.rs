@@ -1,6 +1,7 @@
 //! Shared infrastructure: deterministic RNG, statistics, JSON, thread
-//! pool, timing and binary I/O helpers.
+//! pool, wire-frame codec, timing and binary I/O helpers.
 
+pub mod frame;
 pub mod json;
 pub mod pool;
 pub mod rng;

@@ -18,6 +18,19 @@
 //! is deeper than `max_deque_depth` batches. When any gate is closed
 //! the driver drains completions instead (counted in
 //! `ServingMetrics::stream_stalls`).
+//!
+//! Single-producer invariant: the admission gate is check-then-submit
+//! with no lock between the check and the submits, so it only
+//! guarantees "never rejects" when exactly one driver feeds the
+//! coordinator.  Two concurrent `stream_volume` calls on the same
+//! coordinator could both observe queue room and jointly overshoot it,
+//! turning backpressure stalls into hard `submit_leased` rejections.
+//! Rather than serialise every probe, the driver takes the
+//! coordinator's [`StreamDriverGuard`](crate::coordinator::StreamDriverGuard)
+//! for the duration of the volume: a second concurrent driver fails
+//! fast with an explicit error instead of corrupting the accounting.
+//! Run volumes sequentially (as `repro volume` does) or give each its
+//! own coordinator.
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, TryRecvError};
@@ -162,12 +175,19 @@ impl SliceInFlight {
 /// The coordinator must have been built with `nb == spec.bvals.len()`.
 /// Responses are written into the maps by flat voxel id as they arrive,
 /// so completion order is irrelevant to the result.
+///
+/// Holds the coordinator's stream-driver guard for the whole run: a
+/// second concurrent `stream_volume` on the same coordinator errors
+/// immediately (see the module docs' single-producer invariant).
 pub fn stream_volume(
     coord: &Coordinator,
     spec: &VolumeSpec,
     corruption: Corruption,
     cfg: &StreamConfig,
 ) -> anyhow::Result<StreamedVolume> {
+    // Acquired before any probe or submit; released on every exit path
+    // (including errors) by Drop.
+    let _driver = coord.stream_driver_guard()?;
     let nb = spec.bvals.len();
     {
         let probe = coord.lease();

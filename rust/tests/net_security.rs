@@ -1,0 +1,267 @@
+//! Adversarial-input tests for the TCP front door (ISSUE #9): every
+//! malformed, hostile or merely unlucky byte stream must produce a
+//! *typed* rejection (or a clean close) — never a panic, an over-read,
+//! a stall, or a leaked lease.  The coordinator behind the server must
+//! stay fully serviceable after every attack.
+//!
+//! Runs on the deterministic in-tree fixture, so nothing here skips when
+//! the Python-exported artifacts are absent.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use uivim::coordinator::{Coordinator, CoordinatorConfig, NetClient, NetConfig, NetServer};
+use uivim::infer::registry::{factory, EngineOpts};
+use uivim::ivim::synth::synth_dataset;
+use uivim::model::Manifest;
+use uivim::testing::fixture;
+use uivim::util::frame::{encode_request, Status, HEADER_LEN};
+use uivim::util::rng::Pcg32;
+
+fn start(batch: usize, capacity: usize, shards: usize) -> (Arc<Coordinator>, Manifest) {
+    let (man, w) = fixture::tiny_fixture();
+    let mut cfg = CoordinatorConfig::sharded(man.nb, batch, shards);
+    cfg.batcher.queue_capacity = capacity;
+    cfg.batcher.max_wait = Duration::from_millis(1);
+    let opts = EngineOpts {
+        batch: Some(batch),
+        ..Default::default()
+    };
+    let coord = Coordinator::start(
+        cfg,
+        factory("native", man.clone(), w, opts).expect("known engine"),
+    )
+    .expect("coordinator start");
+    (Arc::new(coord), man)
+}
+
+fn serve(coord: &Arc<Coordinator>, cfg: NetConfig) -> (NetServer, String) {
+    let server =
+        NetServer::start(Arc::clone(coord), "127.0.0.1:0", cfg).expect("bind ephemeral port");
+    let addr = server.addr().to_string();
+    (server, addr)
+}
+
+/// A short-timeout client for reads where a rejection (or close) is the
+/// expected outcome.
+fn attack_client(addr: &str) -> NetClient {
+    NetClient::connect_with_timeout(addr, Duration::from_secs(5)).expect("connect")
+}
+
+/// One well-formed request proving the server still serves after an
+/// attack.
+fn assert_still_serves(addr: &str, man: &Manifest, id: u64) {
+    let ds = synth_dataset(1, &man.bvalues, 20.0, id);
+    let mut client = attack_client(addr);
+    let reply = client.request(id, 0, ds.voxel(0)).expect("healthy request");
+    assert_eq!(reply.status, Status::Ok, "server unhealthy after attack");
+    assert!(reply.report.is_some());
+}
+
+/// A truncated frame followed by a hard disconnect: the server drops
+/// the connection without panicking and keeps serving others.
+#[test]
+fn truncated_frame_then_disconnect_is_harmless() {
+    let (coord, man) = start(8, 10_000, 1);
+    let (server, addr) = serve(&coord, NetConfig::default());
+    {
+        let mut half = attack_client(&addr);
+        let mut frame = Vec::new();
+        encode_request(&mut frame, 7, 0, &vec![0.5f32; man.nb]);
+        half.send_raw(&frame[..HEADER_LEN - 3]).expect("partial header");
+        // dropped here: the server sees a half-frame then EOF
+    }
+    assert_still_serves(&addr, &man, 1);
+    assert_eq!(coord.metrics().snapshot().net_frames, 1, "half-frame never parsed");
+    server.shutdown();
+}
+
+/// A header declaring an absurd payload length (the classic
+/// length-prefix attack): rejected from the header alone — the server
+/// never waits for, nor allocates, the declared payload — with a typed
+/// `BAD_REQUEST` before the connection closes.
+#[test]
+fn declared_length_overflow_is_rejected_before_payload() {
+    let (coord, man) = start(8, 10_000, 1);
+    let (server, addr) = serve(&coord, NetConfig::default());
+    let lease_before = coord.lease_high_water();
+
+    let mut client = attack_client(&addr);
+    let mut frame = Vec::new();
+    encode_request(&mut frame, 9, 0, &vec![0.5f32; man.nb]);
+    frame[24..28].copy_from_slice(&u32::MAX.to_le_bytes()); // n_values = 4 Gi
+    client.send_raw(&frame[..HEADER_LEN]).expect("hostile header");
+    let reply = client.recv().expect("typed rejection");
+    assert_eq!(reply.status, Status::BadRequest);
+    assert!(client.recv().is_err(), "desynced stream must be closed");
+
+    assert_eq!(
+        coord.lease_high_water(),
+        lease_before,
+        "oversize rejection must not touch the lease slab"
+    );
+    assert!(coord.metrics().snapshot().net_bad_frames >= 1);
+    assert_still_serves(&addr, &man, 2);
+    server.shutdown();
+}
+
+/// An under-declared length (fewer values than the protocol width) is a
+/// *recoverable* typed rejection: the frame is well-formed, just wrong,
+/// so the connection survives and the next request is served.
+#[test]
+fn wrong_width_is_rejected_but_connection_survives() {
+    let (coord, man) = start(8, 10_000, 1);
+    let (server, addr) = serve(&coord, NetConfig::default());
+    let ds = synth_dataset(1, &man.bvalues, 20.0, 41);
+
+    let mut client = attack_client(&addr);
+    let mut frame = Vec::new();
+    encode_request(&mut frame, 11, 0, &vec![0.5f32; man.nb - 1]);
+    client.send_raw(&frame).expect("narrow frame");
+    let reply = client.recv().expect("typed rejection");
+    assert_eq!(reply.id, 11, "rejection echoes the offending id");
+    assert_eq!(reply.status, Status::BadRequest);
+    // Same connection, correct width: served.
+    let reply = client.request(12, 0, ds.voxel(0)).expect("recovered");
+    assert_eq!(reply.status, Status::Ok);
+    server.shutdown();
+}
+
+/// Bad magic and bad version each draw a typed rejection and a close —
+/// the stream cannot be trusted past the first corrupt header.
+#[test]
+fn bad_magic_and_bad_version_get_typed_rejections() {
+    let (coord, man) = start(8, 10_000, 1);
+    let (server, addr) = serve(&coord, NetConfig::default());
+    let good = {
+        let mut f = Vec::new();
+        encode_request(&mut f, 21, 0, &vec![0.5f32; man.nb]);
+        f
+    };
+    for (corrupt, what) in [(0usize..4, "magic"), (4..6, "version")] {
+        let mut frame = good.clone();
+        for b in &mut frame[corrupt] {
+            *b = 0xFF;
+        }
+        let mut client = attack_client(&addr);
+        client.send_raw(&frame).expect("corrupt frame");
+        let reply = client.recv().unwrap_or_else(|e| panic!("typed {what} rejection: {e}"));
+        assert_eq!(reply.status, Status::BadRequest, "{what}");
+        assert!(client.recv().is_err(), "{what}: connection must close");
+    }
+    assert_eq!(coord.metrics().snapshot().net_bad_frames, 2);
+    assert_still_serves(&addr, &man, 3);
+    server.shutdown();
+}
+
+/// NaN / Inf payload floats are rejected with `BAD_REQUEST`, the lease
+/// taken for the zero-copy decode is reclaimed (high-water flat), and
+/// the connection survives.
+#[test]
+fn nonfinite_payload_is_rejected_and_lease_reclaimed() {
+    let (coord, man) = start(8, 10_000, 1);
+    let (server, addr) = serve(&coord, NetConfig::default());
+    let ds = synth_dataset(1, &man.bvalues, 20.0, 43);
+
+    let mut client = attack_client(&addr);
+    // Warm the slab with one good request so the high-water is settled.
+    let reply = client.request(30, 0, ds.voxel(0)).expect("warm-up");
+    assert_eq!(reply.status, Status::Ok);
+    let warm = coord.lease_high_water();
+
+    for (i, bad) in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY]
+        .into_iter()
+        .enumerate()
+    {
+        let mut signals = vec![0.5f32; man.nb];
+        signals[i % man.nb] = bad;
+        let reply = client.request(31 + i as u64, 0, &signals).expect("typed rejection");
+        assert_eq!(reply.id, 31 + i as u64);
+        assert_eq!(reply.status, Status::BadRequest, "non-finite {bad} admitted");
+    }
+    assert_eq!(
+        coord.lease_high_water(),
+        warm,
+        "rejected payloads leaked lease buffers"
+    );
+    // The connection is still good.
+    let reply = client.request(35, 0, ds.voxel(0)).expect("recovered");
+    assert_eq!(reply.status, Status::Ok);
+    assert_eq!(coord.metrics().snapshot().net_bad_frames, 3);
+    server.shutdown();
+}
+
+/// Slow-loris: a client that sends half a header and then goes quiet is
+/// disconnected once `idle_timeout` passes — it cannot pin a connection
+/// slot forever.
+#[test]
+fn slow_loris_partial_frame_is_disconnected() {
+    let (coord, man) = start(8, 10_000, 1);
+    let cfg = NetConfig {
+        idle_timeout: Duration::from_millis(100),
+        ..Default::default()
+    };
+    let (server, addr) = serve(&coord, cfg);
+
+    let mut loris = attack_client(&addr);
+    loris.send_raw(&[0x55; 10]).expect("drip-feed"); // not even a header
+    let err = loris.recv().expect_err("idle half-frame must be disconnected");
+    assert!(
+        err.to_string().contains("closed") || err.to_string().contains("reply"),
+        "unexpected failure mode: {err}"
+    );
+    assert_still_serves(&addr, &man, 4);
+    server.shutdown();
+}
+
+/// Seeded random-bytes property loop: whatever bytes arrive, the server
+/// never panics, never over-reads, never leaks a lease, and is still
+/// fully serviceable afterwards.  The seed makes any failure replay.
+#[test]
+fn random_bytes_never_panic_or_leak() {
+    let (coord, man) = start(8, 10_000, 1);
+    let (server, addr) = serve(&coord, NetConfig::default());
+    let ds = synth_dataset(1, &man.bvalues, 20.0, 47);
+
+    // Settle the slab's high-water with a legitimate request first.
+    {
+        let mut c = attack_client(&addr);
+        assert_eq!(c.request(50, 0, ds.voxel(0)).expect("warm").status, Status::Ok);
+    }
+    let warm = coord.lease_high_water();
+
+    let mut rng = Pcg32::new(0xF8A3_0009);
+    for round in 0..24 {
+        let mut stream = TcpStream::connect(&addr).expect("connect");
+        stream
+            .set_write_timeout(Some(Duration::from_secs(5)))
+            .expect("write timeout");
+        let len = 1 + rng.below(200) as usize;
+        let mut bytes = vec![0u8; len];
+        for b in bytes.iter_mut() {
+            *b = rng.next_u32() as u8;
+        }
+        if rng.below(3) == 0 {
+            // a plausible prefix makes the parser walk further
+            bytes[..4.min(len)].copy_from_slice(&b"UIVM"[..4.min(len)]);
+        }
+        // The server may close mid-write (typed rejection + close) —
+        // a write error is an acceptable outcome, a hang is not.
+        let _ = stream.write_all(&bytes);
+        drop(stream);
+        if round % 6 == 5 {
+            // periodically prove the server is still alive and leak-free
+            assert_still_serves(&addr, &man, 60 + round as u64);
+            assert_eq!(
+                coord.lease_high_water(),
+                warm,
+                "garbage round {round} leaked a lease"
+            );
+        }
+    }
+    assert_still_serves(&addr, &man, 99);
+    assert_eq!(coord.lease_high_water(), warm, "garbage storm leaked leases");
+    server.shutdown();
+}

@@ -1,0 +1,223 @@
+//! Loopback end-to-end tests for the TCP front door (ISSUE #9): real
+//! sockets against a fixture coordinator.  Framed replies must be
+//! bit-identical to the direct `submit_leased` path, steady-state
+//! ingest must allocate nothing (lease high-water flat across 100+
+//! framed requests), concurrent clients route correctly, the
+//! connection cap answers with an explicit `OVERLOADED` goodbye, and
+//! shutdown under open connections answers everything already admitted.
+//!
+//! Runs on the deterministic in-tree fixture, so nothing here skips when
+//! the Python-exported artifacts are absent.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use uivim::coordinator::{Coordinator, CoordinatorConfig, NetClient, NetConfig, NetServer};
+use uivim::infer::registry::{factory, EngineOpts};
+use uivim::ivim::synth::synth_dataset;
+use uivim::ivim::Param;
+use uivim::model::Manifest;
+use uivim::testing::fixture;
+use uivim::util::frame::Status;
+
+fn start(batch: usize, capacity: usize, shards: usize) -> (Arc<Coordinator>, Manifest) {
+    let (man, w) = fixture::tiny_fixture();
+    let mut cfg = CoordinatorConfig::sharded(man.nb, batch, shards);
+    cfg.batcher.queue_capacity = capacity;
+    cfg.batcher.max_wait = Duration::from_millis(1);
+    let opts = EngineOpts {
+        batch: Some(batch),
+        ..Default::default()
+    };
+    let coord = Coordinator::start(
+        cfg,
+        factory("native", man.clone(), w, opts).expect("known engine"),
+    )
+    .expect("coordinator start");
+    (Arc::new(coord), man)
+}
+
+fn serve(coord: &Arc<Coordinator>, cfg: NetConfig) -> (NetServer, String) {
+    let server =
+        NetServer::start(Arc::clone(coord), "127.0.0.1:0", cfg).expect("bind ephemeral port");
+    let addr = server.addr().to_string();
+    (server, addr)
+}
+
+/// The tentpole contract: a request that travels the wire — frame
+/// encode, socket, zero-copy decode into a lease, f64 report payload
+/// back — produces the same bits as handing the coordinator the lease
+/// directly.  Same coordinator, same signals, compared voxel by voxel.
+#[test]
+fn framed_replies_are_bit_identical_to_direct_submission() {
+    let (coord, man) = start(8, 10_000, 2);
+    let (server, addr) = serve(&coord, NetConfig::default());
+    let n = 40usize;
+    let ds = synth_dataset(n, &man.bvalues, 20.0, 303);
+
+    // Direct path first: lease + submit_leased, no sockets.
+    let direct: Vec<_> = (0..n)
+        .map(|i| {
+            let mut lease = coord.lease();
+            lease.copy_from(ds.voxel(i));
+            let rx = coord.submit_leased(i as u64, lease).expect("capacity sized");
+            rx.recv_timeout(Duration::from_secs(30)).expect("direct response").report
+        })
+        .collect();
+
+    // Framed path: the same voxels over loopback TCP.
+    let mut client = NetClient::connect(&addr).expect("connect");
+    for (i, want) in direct.iter().enumerate() {
+        let id = 1_000 + i as u64;
+        let reply = client.request(id, 0, ds.voxel(i)).expect("framed request");
+        assert_eq!(reply.id, id, "reply routed to the wrong request");
+        assert_eq!(reply.status, Status::Ok);
+        let got = reply.report.expect("OK reply carries a report");
+        for p in Param::ALL {
+            let (g, w) = (got.get(p), want.get(p));
+            assert_eq!(g.mean.to_bits(), w.mean.to_bits(), "voxel {i} {p:?} mean");
+            assert_eq!(g.std.to_bits(), w.std.to_bits(), "voxel {i} {p:?} std");
+            assert_eq!(
+                g.relative.to_bits(),
+                w.relative.to_bits(),
+                "voxel {i} {p:?} relative"
+            );
+        }
+        assert_eq!(got.confident, want.confident, "voxel {i} confidence flag");
+    }
+    server.shutdown();
+}
+
+/// Zero-allocation steady state: after warm-up, 120 more framed
+/// requests must not grow the lease slab by a single buffer — the
+/// socket path decodes straight into recycled leases.
+#[test]
+fn lease_high_water_stays_flat_across_framed_requests() {
+    let (coord, man) = start(8, 10_000, 1);
+    let (server, addr) = serve(&coord, NetConfig::default());
+    let ds = synth_dataset(8, &man.bvalues, 20.0, 71);
+    let mut client = NetClient::connect(&addr).expect("connect");
+    for i in 0..16u64 {
+        let r = client.request(i, 0, ds.voxel((i % 8) as usize)).expect("warm-up");
+        assert_eq!(r.status, Status::Ok);
+    }
+    let warm = coord.lease_high_water();
+    assert!(warm >= 1, "warm-up must have taken at least one lease");
+    for i in 0..120u64 {
+        let r = client
+            .request(100 + i, 0, ds.voxel((i % 8) as usize))
+            .expect("steady-state request");
+        assert_eq!(r.status, Status::Ok);
+    }
+    assert_eq!(
+        coord.lease_high_water(),
+        warm,
+        "framed ingest allocated fresh lease buffers in steady state"
+    );
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.net_frames, 136, "every frame counted exactly once");
+    assert_eq!(snap.net_bad_frames, 0);
+    assert_eq!(snap.net_shed, 0);
+    server.shutdown();
+}
+
+/// Four concurrent clients, each its own connection and id space: every
+/// reply routes to the request that asked for it, with plausible
+/// estimates, and the coordinator's counters balance.
+#[test]
+fn concurrent_clients_are_routed_correctly() {
+    let (coord, man) = start(16, 100_000, 2);
+    let (server, addr) = serve(&coord, NetConfig::default());
+    let n_clients = 4usize;
+    let per = 50usize;
+    std::thread::scope(|s| {
+        for c in 0..n_clients {
+            let addr = addr.clone();
+            let man = man.clone();
+            s.spawn(move || {
+                let ds = synth_dataset(per, &man.bvalues, 20.0, 500 + c as u64);
+                let mut client = NetClient::connect(&addr).expect("connect");
+                for i in 0..per {
+                    let id = (c * per + i) as u64;
+                    let reply = client.request(id, 0, ds.voxel(i)).expect("request");
+                    assert_eq!(reply.id, id, "cross-client reply routing broke");
+                    assert_eq!(reply.status, Status::Ok);
+                    let d = reply.report.expect("report").get(Param::D);
+                    assert!(d.mean >= 0.0 && d.mean <= 0.005);
+                    assert!(d.std.is_finite());
+                }
+            });
+        }
+    });
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.responses, (n_clients * per) as u64);
+    assert_eq!(snap.net_frames, (n_clients * per) as u64);
+    assert_eq!(snap.net_connections, n_clients as u64);
+    server.shutdown();
+}
+
+/// Beyond `max_conns` live connections the acceptor answers with one
+/// explicit `OVERLOADED` goodbye frame and closes — never a silent
+/// stall; the admitted connection keeps working throughout.
+#[test]
+fn connection_cap_rejects_with_explicit_overloaded() {
+    let (coord, man) = start(8, 10_000, 1);
+    let cfg = NetConfig {
+        max_conns: 1,
+        ..Default::default()
+    };
+    let (server, addr) = serve(&coord, cfg);
+    let ds = synth_dataset(2, &man.bvalues, 20.0, 13);
+    let mut first = NetClient::connect(&addr).expect("connect");
+    // A full round trip guarantees the first connection is registered.
+    let r = first.request(1, 0, ds.voxel(0)).expect("admitted client");
+    assert_eq!(r.status, Status::Ok);
+
+    let mut second = NetClient::connect(&addr).expect("TCP connect still succeeds");
+    let goodbye = second.recv().expect("goodbye frame");
+    assert_eq!(goodbye.status, Status::Overloaded, "explicit rejection");
+    assert!(goodbye.report.is_none());
+    assert!(
+        second.recv().is_err(),
+        "rejected connection must be closed after the goodbye"
+    );
+    // The admitted connection is unaffected.
+    let r = first.request(2, 0, ds.voxel(1)).expect("still served");
+    assert_eq!(r.status, Status::Ok);
+    server.shutdown();
+}
+
+/// Shutdown with a connection open: everything the server admitted is
+/// answered (`OK`) or explicitly rejected (`SHUTDOWN`/`EXPIRED`) before
+/// the threads join — and afterwards the client sees a clean close, not
+/// a hang.
+#[test]
+fn shutdown_with_open_connections_answers_everything() {
+    let (coord, man) = start(8, 10_000, 1);
+    let (server, addr) = serve(&coord, NetConfig::default());
+    let ds = synth_dataset(5, &man.bvalues, 20.0, 29);
+    let mut client =
+        NetClient::connect_with_timeout(&addr, Duration::from_secs(10)).expect("connect");
+    for i in 0..5u64 {
+        client.send(i, 0, ds.voxel(i as usize)).expect("send");
+    }
+    // Let the connection thread ingest and the coordinator serve.
+    std::thread::sleep(Duration::from_millis(300));
+    server.shutdown(); // joins every connection thread
+
+    let mut seen = std::collections::BTreeSet::new();
+    for _ in 0..5 {
+        let reply = client.recv().expect("every admitted request is answered");
+        assert!(
+            matches!(reply.status, Status::Ok | Status::Shutdown | Status::Expired),
+            "unexpected terminal status {:?}",
+            reply.status
+        );
+        assert!(seen.insert(reply.id), "request {} answered twice", reply.id);
+    }
+    assert_eq!(seen, (0..5u64).collect());
+    // The socket is closed afterwards — a late request cannot hang.
+    let _ = client.send(99, 0, ds.voxel(0));
+    assert!(client.recv().is_err(), "server gone: clean close, not a stall");
+    drop(coord);
+}

@@ -205,6 +205,37 @@ fn tiny_queue_backpressures_without_rejection() {
     coord.shutdown();
 }
 
+/// Single-producer invariant regression (ISSUE #9 satellite): while any
+/// driver owns the coordinator's slice-admission gate, a concurrent
+/// `stream_volume` on the same coordinator must fail fast with an
+/// explicit error — not race the gate into over-admission.  Once the
+/// guard drops, streaming works again, so strictly-sequential volumes
+/// (the supported pattern) are unaffected.
+#[test]
+fn concurrent_stream_drivers_are_rejected_not_raced() {
+    let (coord, man) = start(8, 1_000, 2);
+    let s = spec(&man, (4, 4, 2), 31);
+    let scfg = StreamConfig::default();
+
+    // Simulate a driver mid-volume by holding the guard directly.
+    let guard = coord.stream_driver_guard().expect("first owner wins");
+    let err = stream_volume(&coord, &s, Corruption::Clean, &scfg)
+        .expect_err("second driver must be rejected while the gate is owned");
+    assert!(
+        err.to_string().contains("single-producer"),
+        "rejection names the violated invariant: {err}"
+    );
+    drop(guard);
+
+    // Sequential use — the documented contract — still streams fine,
+    // which also proves stream_volume releases its own guard on return.
+    let a = stream_volume(&coord, &s, Corruption::Clean, &scfg).expect("after drop");
+    let b = stream_volume(&coord, &s, Corruption::Clean, &scfg).expect("sequential reuse");
+    assert_eq!(a.n_voxels(), s.n_voxels());
+    assert_eq!(b.n_voxels(), s.n_voxels());
+    coord.shutdown();
+}
+
 /// Corrupted scenarios flow through the same pipeline: extra noise and
 /// motion produce complete volumes, and extra noise degrades RMSE
 /// relative to the clean run at the same seed.
