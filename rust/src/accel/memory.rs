@@ -77,8 +77,8 @@ impl WeightStore {
             *slot = k;
             n += 1;
         }
-        debug_assert_eq!(n, self.kept_per_sample.len(), "fewer kept counts than samples");
-        debug_assert!(it.next().is_none(), "more kept counts than samples");
+        assert_eq!(n, self.kept_per_sample.len(), "fewer kept counts than samples");
+        assert!(it.next().is_none(), "more kept counts than samples");
     }
 
     /// Dense (no skipping) words for one sample: full `nb x nb` weights +

@@ -183,8 +183,8 @@ impl QuantLayer {
     /// Re-select this layer's kept columns from a [`LayerPlan`], in place
     /// (index lists + store counts only; `dense` is never touched).
     fn swap(&mut self, plan: &LayerPlan) {
-        debug_assert_eq!(plan.width(), self.nb_in);
-        debug_assert_eq!(plan.n(), self.kept.len());
+        assert_eq!(plan.width(), self.nb_in);
+        assert_eq!(plan.n(), self.kept.len());
         for (s, ks) in self.kept.iter_mut().enumerate() {
             ks.clear();
             ks.extend_from_slice(plan.kept(s));

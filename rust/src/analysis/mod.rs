@@ -1,0 +1,205 @@
+//! `repro lint` — a dependency-free, repo-specific static analyzer
+//! (DESIGN.md §6 "Invariants & enforcement").
+//!
+//! The codebase rests on hand-proven invariants — zero-alloc serving
+//! paths, `unsafe` confined to four audited kernel files, panic-free
+//! wire parsing, justified memory orderings.  This module *enforces*
+//! them: [`lint_crate`] scans every `.rs` file under `src/` and
+//! `benches/` with the lexical scanner in [`scan`] and applies the six
+//! rules in [`rules`].  Findings are machine-readable
+//! ([`findings_json`]) and the CLI (`repro lint [--json]`) exits
+//! nonzero when any survive, so CI can gate on a clean tree.
+//!
+//! Escape hatch: a comment containing `lint: allow(<rule>) — <reason>`
+//! on the offending line or the line above suppresses one finding;
+//! the reason is mandatory by convention and reviewed like any code.
+
+pub mod rules;
+pub mod scan;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule name (one of [`rules::RULES`]).
+    pub rule: &'static str,
+    /// Crate-relative path with forward slashes (e.g. `src/util/frame.rs`).
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// Lint the crate rooted at `crate_dir` (the directory holding `src/`
+/// and `benches/`).  Files are visited in sorted order so output and
+/// JSON are deterministic.
+pub fn lint_crate(crate_dir: &Path) -> anyhow::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    for sub in ["src", "benches"] {
+        let dir = crate_dir.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files)?;
+        }
+    }
+    anyhow::ensure!(
+        !files.is_empty(),
+        "no .rs files under {} (src/, benches/) — wrong --root?",
+        crate_dir.display()
+    );
+    files.sort();
+    let mut findings = Vec::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        let rel = path
+            .strip_prefix(crate_dir)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let file = scan::SourceFile::parse(&rel, &text);
+        rules::check_all(&file, &mut findings);
+    }
+    Ok(findings)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    for entry in std::fs::read_dir(dir).map_err(|e| anyhow::anyhow!("read {}: {e}", dir.display()))?
+    {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// The crate dir `repro lint` scans when `--root` is not given: the
+/// checkout's `rust/` when invoked from the repo root, the current dir
+/// when invoked from inside `rust/`, else the build-time manifest dir.
+pub fn default_crate_dir() -> PathBuf {
+    if Path::new("rust/src").is_dir() {
+        return PathBuf::from("rust");
+    }
+    if Path::new("src").is_dir() {
+        return PathBuf::from(".");
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Machine-readable findings: a stable single-line JSON object
+/// (`{"count":N,"findings":[{"rule":…,"path":…,"line":N,"message":…}]}`,
+/// shape pinned by a test).
+pub fn findings_json(findings: &[Finding]) -> String {
+    let mut s = String::from("{\"count\":");
+    s.push_str(&findings.len().to_string());
+    s.push_str(",\"findings\":[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str("{\"rule\":\"");
+        s.push_str(&json_escape(f.rule));
+        s.push_str("\",\"path\":\"");
+        s.push_str(&json_escape(&f.path));
+        s.push_str("\",\"line\":");
+        s.push_str(&f.line.to_string());
+        s.push_str(",\"message\":\"");
+        s.push_str(&json_escape(&f.message));
+        s.push_str("\"}");
+    }
+    s.push_str("]}");
+    s
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance gate: the repo's own tree carries zero findings.
+    /// Every invariant the rules encode is live — a regression anywhere
+    /// in `src/` or `benches/` fails this test (and the CI analyze job,
+    /// which runs the same scan through `repro lint`).
+    #[test]
+    fn repo_tree_is_lint_clean() {
+        let crate_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let findings = lint_crate(crate_dir).expect("lint walks the tree");
+        let rendered: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
+        assert!(
+            findings.is_empty(),
+            "repo tree has {} lint finding(s):\n{}",
+            findings.len(),
+            rendered.join("\n")
+        );
+    }
+
+    #[test]
+    fn json_shape_is_pinned() {
+        let findings = vec![
+            Finding {
+                rule: "panic-free-net",
+                path: "src/util/frame.rs".into(),
+                line: 42,
+                message: "`unwrap` on a wire-facing path".into(),
+            },
+            Finding {
+                rule: "atomic-ordering",
+                path: "src/coordinator/metrics.rs".into(),
+                line: 7,
+                message: "say \"why\"".into(),
+            },
+        ];
+        assert_eq!(
+            findings_json(&findings),
+            "{\"count\":2,\"findings\":[\
+             {\"rule\":\"panic-free-net\",\"path\":\"src/util/frame.rs\",\"line\":42,\
+             \"message\":\"`unwrap` on a wire-facing path\"},\
+             {\"rule\":\"atomic-ordering\",\"path\":\"src/coordinator/metrics.rs\",\"line\":7,\
+             \"message\":\"say \\\"why\\\"\"}]}"
+        );
+        assert_eq!(findings_json(&[]), "{\"count\":0,\"findings\":[]}");
+    }
+
+    #[test]
+    fn lint_crate_rejects_an_empty_root() {
+        let err = lint_crate(Path::new("/nonexistent-lint-root")).unwrap_err();
+        assert!(err.to_string().contains("wrong --root"));
+    }
+
+    #[test]
+    fn findings_render_as_path_line_rule() {
+        let f = Finding {
+            rule: "hot-path-alloc",
+            path: "src/infer/native.rs".into(),
+            line: 3,
+            message: "allocation".into(),
+        };
+        assert_eq!(f.to_string(), "src/infer/native.rs:3: [hot-path-alloc] allocation");
+    }
+}

@@ -1,0 +1,583 @@
+//! The six repo-invariant rules (DESIGN.md §6).
+//!
+//! Each rule is a pure function over a scanned [`SourceFile`] appending
+//! [`Finding`]s; [`check_all`] is the driver's entry point.  Every rule
+//! honours the allowlist escape hatch: a comment containing
+//! `lint: allow(<rule>) — <reason>` on the offending line or the line
+//! above suppresses that finding.
+
+use super::scan::{fn_ranges, innermost_fn, SourceFile};
+use super::Finding;
+
+/// Rule names, in the order they run.
+pub const RULES: &[&str] = &[
+    "unsafe-confinement",
+    "safety-comment",
+    "release-vanishing-guard",
+    "hot-path-alloc",
+    "atomic-ordering",
+    "panic-free-net",
+];
+
+/// Run every rule over one file.
+pub fn check_all(file: &SourceFile, out: &mut Vec<Finding>) {
+    unsafe_confinement(file, out);
+    safety_comment(file, out);
+    release_vanishing_guard(file, out);
+    hot_path_alloc(file, out);
+    atomic_ordering(file, out);
+    panic_free_net(file, out);
+}
+
+/// `word` as a whole identifier token in the code view.
+fn has_word(code: &str, word: &str) -> bool {
+    let b = code.as_bytes();
+    let ident = |c: u8| c == b'_' || c.is_ascii_alphanumeric();
+    let mut from = 0;
+    while let Some(p) = code[from..].find(word) {
+        let s = from + p;
+        let e = s + word.len();
+        let pre_ok = s == 0 || !ident(b[s - 1]);
+        let post_ok = b.get(e).is_none_or(|&c| !ident(c));
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = e;
+    }
+    false
+}
+
+/// The allowlist escape hatch: same line or the line above.
+fn allowed(file: &SourceFile, i: usize, rule: &str) -> bool {
+    let pat = format!("lint: allow({rule})");
+    file.lines[i].comment.contains(&pat)
+        || (i > 0 && file.lines[i - 1].comment.contains(&pat))
+}
+
+fn push(out: &mut Vec<Finding>, file: &SourceFile, i: usize, rule: &'static str, message: String) {
+    if !allowed(file, i, rule) {
+        out.push(Finding {
+            rule,
+            path: file.path.clone(),
+            line: i + 1,
+            message,
+        });
+    }
+}
+
+/// Files allowed to contain `unsafe` (the audited kernel seams).
+const UNSAFE_FILES: &[&str] = &[
+    "util/simd.rs",
+    "util/workers.rs",
+    "accel/fixed.rs",
+    "infer/native.rs",
+];
+
+/// Rule 1 — `unsafe` appears only in the four audited kernel files.
+pub fn unsafe_confinement(file: &SourceFile, out: &mut Vec<Finding>) {
+    if UNSAFE_FILES.iter().any(|f| file.path.ends_with(f)) {
+        return;
+    }
+    for (i, l) in file.lines.iter().enumerate() {
+        if has_word(&l.code, "unsafe") {
+            push(
+                out,
+                file,
+                i,
+                "unsafe-confinement",
+                format!(
+                    "`unsafe` outside the audited kernel files ({})",
+                    UNSAFE_FILES.join(", ")
+                ),
+            );
+        }
+    }
+}
+
+/// Rule 2 — every `unsafe` site carries a `SAFETY:` comment (or a
+/// `# Safety` doc section) in the contiguous comment/attribute block
+/// above it.  Consecutive `unsafe impl` lines may share one comment.
+pub fn safety_comment(file: &SourceFile, out: &mut Vec<Finding>) {
+    for i in 0..file.lines.len() {
+        if !has_word(&file.lines[i].code, "unsafe") {
+            continue;
+        }
+        if has_safety_comment(file, i) {
+            continue;
+        }
+        push(
+            out,
+            file,
+            i,
+            "safety-comment",
+            "`unsafe` site without a `SAFETY:` justification in the comment block above".into(),
+        );
+    }
+}
+
+fn has_safety_comment(file: &SourceFile, site: usize) -> bool {
+    let safety = |c: &str| c.to_ascii_lowercase().contains("safety");
+    if safety(&file.lines[site].comment) {
+        return true;
+    }
+    let mut i = site;
+    while i > 0 {
+        i -= 1;
+        let l = &file.lines[i];
+        if safety(&l.comment) {
+            return true;
+        }
+        let t = l.code.trim();
+        let comment_or_attr = t.is_empty() || t.starts_with("#[") || t.starts_with("#![");
+        // `unsafe impl Send` / `unsafe impl Sync` pairs share one comment
+        let shared_impl = t.starts_with("unsafe impl");
+        if !comment_or_attr && !shared_impl {
+            return false;
+        }
+    }
+    false
+}
+
+/// Patterns whose presence in a fn body makes a `debug_assert` there a
+/// release-mode hazard: the checked length/index feeds raw-pointer or
+/// silently-truncating code once the assert compiles away (the PR 6
+/// PU-kernel bug class).
+const HAZARDS: &[&str] = &[
+    "as_mut_ptr",
+    ".as_ptr",
+    ".add(",
+    "from_raw_parts",
+    "get_unchecked",
+    "set_len(",
+    ".zip(",
+    "chunks_exact(",
+];
+
+/// Rule 3 — no `debug_assert` in a fn that also touches raw pointers or
+/// truncating iteration.
+pub fn release_vanishing_guard(file: &SourceFile, out: &mut Vec<Finding>) {
+    let ranges = fn_ranges(file);
+    for i in 0..file.lines.len() {
+        if file.is_test(i) {
+            continue;
+        }
+        if !file.lines[i].code.contains("debug_assert") {
+            continue;
+        }
+        let Some((a, b)) = innermost_fn(&ranges, i) else {
+            continue;
+        };
+        let hazard = (a..=b).find_map(|j| {
+            HAZARDS
+                .iter()
+                .find(|h| file.lines[j].code.contains(*h))
+                .map(|h| (j, *h))
+        });
+        if let Some((j, h)) = hazard {
+            push(
+                out,
+                file,
+                i,
+                "release-vanishing-guard",
+                format!(
+                    "`debug_assert` vanishes in release builds but this fn touches `{h}` \
+                     (line {}): use a hard assert or a typed error",
+                    j + 1
+                ),
+            );
+        }
+    }
+}
+
+/// Allocation/copy patterns banned inside marked hot-path regions.
+const ALLOC_PATTERNS: &[&str] = &["vec![", "Vec::new", ".to_vec(", ".clone(", ".collect("];
+
+const HOT_MARK: &str = "hot-path:";
+
+/// Rule 4 — no allocation inside explicitly marked hot-path regions
+/// (opened by a `hot-path` comment marker, closed by its `end` form).
+pub fn hot_path_alloc(file: &SourceFile, out: &mut Vec<Finding>) {
+    let mut open: Option<usize> = None;
+    for i in 0..file.lines.len() {
+        let c = &file.lines[i].comment;
+        if let Some(p) = c.find(HOT_MARK) {
+            let rest = c[p + HOT_MARK.len()..].trim();
+            if rest == "end" {
+                if open.take().is_none() {
+                    push(
+                        out,
+                        file,
+                        i,
+                        "hot-path-alloc",
+                        "hot-path end marker without a matching open marker".into(),
+                    );
+                }
+            } else if let Some(prev) = open {
+                push(
+                    out,
+                    file,
+                    i,
+                    "hot-path-alloc",
+                    format!("nested hot-path region (previous opened on line {})", prev + 1),
+                );
+            } else {
+                open = Some(i);
+            }
+            continue;
+        }
+        if open.is_some() && !file.is_test(i) {
+            if let Some(pat) = ALLOC_PATTERNS
+                .iter()
+                .find(|p| file.lines[i].code.contains(*p))
+            {
+                push(
+                    out,
+                    file,
+                    i,
+                    "hot-path-alloc",
+                    format!("allocation/copy `{pat}` inside a marked hot-path region"),
+                );
+            }
+        }
+    }
+    if let Some(i) = open {
+        push(
+            out,
+            file,
+            i,
+            "hot-path-alloc",
+            "hot-path region never closed (missing end marker)".into(),
+        );
+    }
+}
+
+/// Rule 5 — every `Ordering::Relaxed` is justified by a comment
+/// containing `relaxed:` on its line or earlier in the enclosing fn.
+pub fn atomic_ordering(file: &SourceFile, out: &mut Vec<Finding>) {
+    let ranges = fn_ranges(file);
+    for i in 0..file.lines.len() {
+        if file.is_test(i) {
+            continue;
+        }
+        if !file.lines[i].code.contains("Ordering::Relaxed") {
+            continue;
+        }
+        let start = innermost_fn(&ranges, i)
+            .map(|(a, _)| a)
+            .unwrap_or_else(|| i.saturating_sub(1));
+        let justified = (start..=i).any(|j| file.lines[j].comment.contains("relaxed:"));
+        if !justified {
+            push(
+                out,
+                file,
+                i,
+                "atomic-ordering",
+                "`Ordering::Relaxed` without a `relaxed:` justification comment in the \
+                 enclosing fn"
+                    .into(),
+            );
+        }
+    }
+}
+
+/// Wire-facing scope of rule 6.
+fn net_scoped(path: &str) -> bool {
+    path.contains("coordinator/net/") || path.ends_with("util/frame.rs")
+}
+
+/// Identifiers conventionally bound to wire-controlled data in the net
+/// scope; single (non-range) bracket indexing on them is banned.
+const WIRE_IDENTS: &[&str] = &["buf", "b", "bytes", "payload", "chunk", "frame", "wire"];
+
+const PANIC_PATTERNS: &[&str] = &[
+    ".unwrap(",
+    ".expect(",
+    "panic!(",
+    "unreachable!(",
+    "todo!(",
+    "unimplemented!(",
+];
+
+/// Rule 6 — wire-facing code (`coordinator/net/`, `util/frame.rs`)
+/// never panics on input: no unwrap/expect/panic-family macros, no
+/// unchecked single-index on wire-named buffers (range slices are the
+/// guarded idiom and stay allowed).  Test code is exempt.
+pub fn panic_free_net(file: &SourceFile, out: &mut Vec<Finding>) {
+    if !net_scoped(&file.path) {
+        return;
+    }
+    for i in 0..file.lines.len() {
+        if file.is_test(i) {
+            continue;
+        }
+        let code = &file.lines[i].code;
+        for pat in PANIC_PATTERNS {
+            if code.contains(pat) {
+                push(
+                    out,
+                    file,
+                    i,
+                    "panic-free-net",
+                    format!(
+                        "`{}` on a wire-facing path: return a typed error instead",
+                        pat.trim_start_matches('.').trim_end_matches('(')
+                    ),
+                );
+            }
+        }
+        for ident in wire_single_index(code) {
+            push(
+                out,
+                file,
+                i,
+                "panic-free-net",
+                format!(
+                    "unchecked single-index on wire-controlled `{ident}`: use `get`, \
+                     a range slice, or a length-checked helper"
+                ),
+            );
+        }
+    }
+}
+
+/// Wire-named identifiers indexed with a single (non-range) expression.
+fn wire_single_index(code: &str) -> Vec<&'static str> {
+    let b = code.as_bytes();
+    let ident_ch = |c: u8| c == b'_' || c.is_ascii_alphanumeric();
+    let mut hits = Vec::new();
+    for ident in WIRE_IDENTS {
+        let mut from = 0;
+        while let Some(p) = code[from..].find(ident) {
+            let s = from + p;
+            let e = s + ident.len();
+            from = e;
+            if s > 0 && ident_ch(b[s - 1]) {
+                continue;
+            }
+            if b.get(e) != Some(&b'[') {
+                continue;
+            }
+            let mut depth = 0usize;
+            let mut content = String::new();
+            let mut closed = false;
+            for &c in &b[e..] {
+                match c {
+                    b'[' => {
+                        depth += 1;
+                        if depth > 1 {
+                            content.push(c as char);
+                        }
+                    }
+                    b']' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            closed = true;
+                            break;
+                        }
+                        content.push(c as char);
+                    }
+                    _ => content.push(c as char),
+                }
+            }
+            if closed && content.contains("..") {
+                continue; // range slice — the guarded idiom
+            }
+            hits.push(*ident);
+        }
+    }
+    hits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scan::SourceFile;
+
+    fn run(rule: fn(&SourceFile, &mut Vec<Finding>), path: &str, src: &str) -> Vec<Finding> {
+        let f = SourceFile::parse(path, src);
+        let mut out = Vec::new();
+        rule(&f, &mut out);
+        out
+    }
+
+    // ---- rule 1: unsafe-confinement -------------------------------
+
+    #[test]
+    fn unsafe_confinement_triggers_outside_the_allowlist() {
+        let bad = "fn f() {\n    unsafe { g() }\n}";
+        let hits = run(unsafe_confinement, "src/bayes/pipeline.rs", bad);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, "unsafe-confinement");
+        assert_eq!(hits[0].line, 2);
+    }
+
+    #[test]
+    fn unsafe_confinement_passes_in_kernel_files_and_on_prose() {
+        let ok = "fn f() {\n    // SAFETY: fine\n    unsafe { g() }\n}";
+        assert!(run(unsafe_confinement, "src/util/simd.rs", ok).is_empty());
+        // the word in a comment or string is not code
+        let prose = "// unsafe is discussed here\nlet s = \"unsafe\";";
+        assert!(run(unsafe_confinement, "src/foo.rs", prose).is_empty());
+    }
+
+    #[test]
+    fn unsafe_confinement_honours_the_allowlist_marker() {
+        let allowed = "fn f() {\n    // lint: allow(unsafe-confinement) — audited one-off\n    unsafe { g() }\n}";
+        assert!(run(unsafe_confinement, "src/foo.rs", allowed).is_empty());
+    }
+
+    // ---- rule 2: safety-comment -----------------------------------
+
+    #[test]
+    fn safety_comment_triggers_on_a_bare_unsafe_block() {
+        let bad = "fn f() {\n    unsafe { g() }\n}";
+        let hits = run(safety_comment, "src/util/simd.rs", bad);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].line, 2);
+    }
+
+    #[test]
+    fn safety_comment_accepts_comment_doc_and_shared_impl_blocks() {
+        let ok = "fn f() {\n    // SAFETY: disjoint tiles\n    unsafe { g() }\n}";
+        assert!(run(safety_comment, "src/util/simd.rs", ok).is_empty());
+        let doc = "/// # Safety\n/// caller checks len\n#[target_feature(enable = \"avx2\")]\nunsafe fn g() {}";
+        assert!(run(safety_comment, "src/util/simd.rs", doc).is_empty());
+        let shared = "// SAFETY: lanes write disjoint tiles\nunsafe impl Send for P {}\nunsafe impl Sync for P {}";
+        assert!(run(safety_comment, "src/infer/native.rs", shared).is_empty());
+    }
+
+    // ---- rule 3: release-vanishing-guard --------------------------
+
+    #[test]
+    fn release_vanishing_guard_triggers_next_to_raw_pointers() {
+        let bad = "fn f(xs: &mut [f32]) {\n    debug_assert!(xs.len() >= 4);\n    let p = xs.as_mut_ptr();\n    h(p);\n}";
+        let hits = run(release_vanishing_guard, "src/infer/native.rs", bad);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].line, 2);
+        assert!(hits[0].message.contains("as_mut_ptr"));
+    }
+
+    #[test]
+    fn release_vanishing_guard_triggers_next_to_truncating_zip() {
+        let bad = "fn f(a: &[f32], o: &mut [f32]) {\n    debug_assert_eq!(a.len(), o.len());\n    for (x, y) in o.iter_mut().zip(a.iter()) { *x = *y; }\n}";
+        assert_eq!(run(release_vanishing_guard, "src/ivim/synth.rs", bad).len(), 1);
+    }
+
+    #[test]
+    fn release_vanishing_guard_passes_on_plain_fns_and_tests() {
+        let ok = "fn f(a: &[f32]) {\n    debug_assert!(a.len() > 1);\n    let s: f32 = a.iter().sum();\n    h(s);\n}";
+        assert!(run(release_vanishing_guard, "src/x.rs", ok).is_empty());
+        let test_only = "#[cfg(test)]\nmod tests {\n    fn f(xs: &mut [f32]) {\n        debug_assert!(xs.len() > 0);\n        let _ = xs.as_mut_ptr();\n    }\n}";
+        assert!(run(release_vanishing_guard, "src/x.rs", test_only).is_empty());
+    }
+
+    // ---- rule 4: hot-path-alloc -----------------------------------
+
+    // NOTE: fixture sources are built by joining lines so that this
+    // file's own comment/string scan never sees a live region marker.
+    fn hot(body: &str) -> String {
+        [
+            "fn f(data: &[f32]) {".to_string(),
+            format!("    // {HOT_MARK} decode"),
+            body.to_string(),
+            format!("    // {HOT_MARK} end"),
+            "}".to_string(),
+        ]
+        .join("\n")
+    }
+
+    #[test]
+    fn hot_path_alloc_triggers_on_allocation_in_a_region() {
+        let hits = run(hot_path_alloc, "src/util/frame.rs", &hot("    let v = data.to_vec();"));
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].line, 3);
+        assert!(hits[0].message.contains("to_vec"));
+    }
+
+    #[test]
+    fn hot_path_alloc_passes_clean_regions_and_unmarked_code() {
+        let ok = hot("    let s: f32 = data.iter().sum();");
+        assert!(run(hot_path_alloc, "src/util/frame.rs", &ok).is_empty());
+        // allocation outside any region is not this rule's business
+        let free = "fn f() {\n    let v = vec![1, 2];\n    g(&v);\n}";
+        assert!(run(hot_path_alloc, "src/util/frame.rs", free).is_empty());
+    }
+
+    #[test]
+    fn hot_path_alloc_flags_unclosed_regions() {
+        let src = format!("fn f() {{\n    // {HOT_MARK} decode\n    g();\n}}");
+        let hits = run(hot_path_alloc, "src/x.rs", &src);
+        assert_eq!(hits.len(), 1);
+        assert!(hits[0].message.contains("never closed"));
+    }
+
+    #[test]
+    fn hot_path_alloc_honours_the_allowlist_marker() {
+        let src = [
+            "fn f(data: &[f32]) {".to_string(),
+            format!("    // {HOT_MARK} decode"),
+            "    // lint: allow(hot-path-alloc) — cold fallback branch".to_string(),
+            "    let v = data.to_vec();".to_string(),
+            format!("    // {HOT_MARK} end"),
+            "}".to_string(),
+        ]
+        .join("\n");
+        assert!(run(hot_path_alloc, "src/util/frame.rs", &src).is_empty());
+    }
+
+    // ---- rule 5: atomic-ordering ----------------------------------
+
+    #[test]
+    fn atomic_ordering_triggers_without_justification() {
+        let bad = "fn f(c: &AtomicU64) {\n    c.fetch_add(1, Ordering::Relaxed);\n}";
+        let hits = run(atomic_ordering, "src/coordinator/metrics.rs", bad);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].line, 2);
+    }
+
+    #[test]
+    fn atomic_ordering_accepts_fn_level_justification() {
+        let ok = "fn f(c: &AtomicU64) {\n    // relaxed: monotonic counter, no ordering needed\n    c.fetch_add(1, Ordering::Relaxed);\n    c.fetch_add(1, Ordering::Relaxed);\n}";
+        assert!(run(atomic_ordering, "src/coordinator/metrics.rs", ok).is_empty());
+    }
+
+    // ---- rule 6: panic-free-net -----------------------------------
+
+    #[test]
+    fn panic_free_net_triggers_on_unwrap_and_single_index() {
+        let bad = "fn f(buf: &[u8]) -> u8 {\n    let h = parse(buf).unwrap();\n    buf[0] + h\n}";
+        let hits = run(panic_free_net, "src/coordinator/net/mod.rs", bad);
+        assert_eq!(hits.len(), 2);
+        assert!(hits[0].message.contains("unwrap"));
+        assert!(hits[1].message.contains("`buf`"));
+    }
+
+    #[test]
+    fn panic_free_net_allows_ranges_fallbacks_and_other_files() {
+        let ok = "fn f(buf: &[u8]) -> &[u8] {\n    let w = buf.first().copied().unwrap_or(0);\n    g(w);\n    &buf[4..8]\n}";
+        assert!(run(panic_free_net, "src/util/frame.rs", ok).is_empty());
+        // identical code outside the net scope is not this rule's business
+        let elsewhere = "fn f(buf: &[u8]) -> u8 { buf[0] }";
+        assert!(run(panic_free_net, "src/infer/native.rs", elsewhere).is_empty());
+    }
+
+    #[test]
+    fn panic_free_net_exempts_test_code() {
+        let src = "fn f() {}\n#[cfg(test)]\nmod tests {\n    fn g(buf: &[u8]) -> u8 {\n        parse(buf).unwrap();\n        buf[0]\n    }\n}";
+        assert!(run(panic_free_net, "src/coordinator/net/mod.rs", src).is_empty());
+    }
+
+    // ---- driver ---------------------------------------------------
+
+    #[test]
+    fn check_all_runs_every_rule() {
+        let bad = "fn f(c: &AtomicU64) {\n    c.fetch_add(1, Ordering::Relaxed);\n    unsafe { g() }\n}";
+        let f = SourceFile::parse("src/volume/stream.rs", bad);
+        let mut out = Vec::new();
+        check_all(&f, &mut out);
+        let rules: Vec<&str> = out.iter().map(|f| f.rule).collect();
+        assert!(rules.contains(&"unsafe-confinement"));
+        assert!(rules.contains(&"safety-comment"));
+        assert!(rules.contains(&"atomic-ordering"));
+    }
+}

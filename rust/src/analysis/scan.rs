@@ -1,0 +1,380 @@
+//! Lexical scanner for the repo-invariant analyzer (DESIGN.md §6).
+//!
+//! Deliberately **not** a Rust parser: every rule in [`super::rules`]
+//! works on two per-line views produced here — `code` (the line with
+//! comment text and string/char-literal contents blanked to spaces) and
+//! `comment` (the concatenated text of the line's comments).  Code
+//! patterns are matched against `code`, so prose that mentions `unwrap`
+//! or `unsafe` can never false-positive; markers are matched against
+//! `comment`, so a pattern string in the analyzer's own source can
+//! never open a region or grant an allowance.
+//!
+//! The scanner carries a small state machine across lines (block
+//! comments, plain strings with escapes, raw strings with `#` fences)
+//! and adds two structural helpers the rules share: trailing
+//! `#[cfg(test)]` block detection and `fn` extents by brace counting.
+
+/// One physical source line in both views.
+pub struct Line {
+    /// Comments and string/char-literal contents replaced by spaces
+    /// (delimiters kept, so `.expect(` still matches as code).
+    pub code: String,
+    /// Text of every comment span overlapping this line.
+    pub comment: String,
+}
+
+/// A scanned file: crate-relative path (forward slashes), per-line
+/// views, and where the trailing `#[cfg(test)]` block starts.
+pub struct SourceFile {
+    pub path: String,
+    pub lines: Vec<Line>,
+    test_start: Option<usize>,
+}
+
+/// Scanner state carried across physical lines.
+enum St {
+    Code,
+    /// Inside `/* */`, with nesting depth.
+    Block(u32),
+    /// Inside a `"…"` string literal.
+    Str,
+    /// Inside a raw string, with its `#` fence count.
+    RawStr(usize),
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, text: &str) -> Self {
+        let mut st = St::Code;
+        let mut lines = Vec::new();
+        for raw in text.lines() {
+            let (code, comment, next) = scan_line(raw, st);
+            st = next;
+            lines.push(Line { code, comment });
+        }
+        // Every `#[cfg(test)]` module in this crate is tail-positioned
+        // (enforced de facto by the meta-test: a mid-file test block
+        // would exempt real code below it and the rules would miss
+        // violations there, never invent them).
+        let test_start = lines.iter().position(|l| {
+            let t = l.code.trim_start();
+            t.starts_with("#[cfg(test)]") || t.starts_with("#[cfg(all(test")
+        });
+        SourceFile {
+            path: path.replace('\\', "/"),
+            lines,
+            test_start,
+        }
+    }
+
+    /// True when 0-based line `i` is inside the trailing test block.
+    pub fn is_test(&self, i: usize) -> bool {
+        self.test_start.is_some_and(|t| i >= t)
+    }
+}
+
+/// Split one physical line into (code view, comment view, next state).
+fn scan_line(raw: &str, mut st: St) -> (String, String, St) {
+    let ch: Vec<char> = raw.chars().collect();
+    let mut code = String::with_capacity(raw.len());
+    let mut comment = String::new();
+    let mut i = 0;
+    while i < ch.len() {
+        match st {
+            St::Code => {
+                let c = ch[i];
+                if c == '/' && ch.get(i + 1) == Some(&'/') {
+                    for &cc in &ch[i + 2..] {
+                        comment.push(cc);
+                    }
+                    break;
+                } else if c == '/' && ch.get(i + 1) == Some(&'*') {
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                    st = St::Block(1);
+                } else if c == '"' {
+                    st = match raw_fence(&code) {
+                        Some(h) => St::RawStr(h),
+                        None => St::Str,
+                    };
+                    code.push('"');
+                    i += 1;
+                } else if c == '\'' {
+                    i = consume_quote(&ch, i, &mut code);
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            St::Block(depth) => {
+                if ch[i] == '*' && ch.get(i + 1) == Some(&'/') {
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                    st = if depth == 1 {
+                        St::Code
+                    } else {
+                        St::Block(depth - 1)
+                    };
+                } else if ch[i] == '/' && ch.get(i + 1) == Some(&'*') {
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                    st = St::Block(depth + 1);
+                } else {
+                    comment.push(ch[i]);
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if ch[i] == '\\' {
+                    code.push(' ');
+                    i += 1;
+                    if i < ch.len() {
+                        code.push(' ');
+                        i += 1;
+                    }
+                } else if ch[i] == '"' {
+                    code.push('"');
+                    i += 1;
+                    st = St::Code;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                if ch[i] == '"' && (1..=h).all(|k| ch.get(i + k) == Some(&'#')) {
+                    code.push('"');
+                    for _ in 0..h {
+                        code.push('#');
+                    }
+                    i += 1 + h;
+                    st = St::Code;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    (code, comment, st)
+}
+
+/// When the code emitted so far ends in `r`/`br` plus `#` fences, the
+/// `"` being looked at opens a raw string; returns the fence count.
+fn raw_fence(code: &str) -> Option<usize> {
+    let b: Vec<char> = code.chars().collect();
+    let mut i = b.len();
+    let mut fences = 0usize;
+    while i > 0 && b[i - 1] == '#' {
+        i -= 1;
+        fences += 1;
+    }
+    if i == 0 || b[i - 1] != 'r' {
+        return None;
+    }
+    let mut start = i - 1;
+    if start > 0 && b[start - 1] == 'b' {
+        start -= 1;
+    }
+    let ident = |c: char| c == '_' || c.is_alphanumeric();
+    if start > 0 && ident(b[start - 1]) {
+        return None; // identifier merely ending in r/br
+    }
+    Some(fences)
+}
+
+/// Handle a `'` in code position: blank a char literal, pass a
+/// lifetime/label quote through.  Returns the next index.
+fn consume_quote(ch: &[char], mut i: usize, code: &mut String) -> usize {
+    if ch.get(i + 1) == Some(&'\\') {
+        // escaped char literal: blank to the closing quote, consuming
+        // backslash-escape pairs whole so `'\''` and `'\\'` close right
+        code.push('\'');
+        i += 1;
+        while i < ch.len() {
+            if ch[i] == '\\' {
+                code.push(' ');
+                i += 1;
+                if i < ch.len() {
+                    code.push(' ');
+                    i += 1;
+                }
+            } else if ch[i] == '\'' {
+                code.push('\'');
+                i += 1;
+                break;
+            } else {
+                code.push(' ');
+                i += 1;
+            }
+        }
+        i
+    } else if ch.get(i + 2) == Some(&'\'') && ch.get(i + 1).is_some() {
+        // plain char literal 'x'
+        code.push('\'');
+        code.push(' ');
+        code.push('\'');
+        i + 3
+    } else {
+        // lifetime or loop label
+        code.push('\'');
+        i + 1
+    }
+}
+
+/// True when the code view of a line starts an `fn` item (visibility,
+/// `const`, `unsafe`, `extern "…"` qualifiers allowed).  Closures and
+/// `fn(..)` pointer types never match.
+pub fn is_fn_header(code: &str) -> bool {
+    for tok in code.split_whitespace() {
+        match tok {
+            "fn" => return true,
+            "pub" | "const" | "unsafe" | "extern" | "async" => continue,
+            t if t.starts_with("pub(") => continue,
+            t if t.starts_with('"') => continue,
+            _ => return false,
+        }
+    }
+    false
+}
+
+/// `(header_line, last_body_line)` (0-based, inclusive) for every `fn`
+/// with a body, nested fns included, by brace counting over the code
+/// view.  Bodyless trait signatures (`;` before any `{`) are skipped.
+pub fn fn_ranges(file: &SourceFile) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for i in 0..file.lines.len() {
+        if !is_fn_header(&file.lines[i].code) {
+            continue;
+        }
+        let mut depth = 0i32;
+        let mut opened = false;
+        'body: for j in i..file.lines.len() {
+            for c in file.lines[j].code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if opened && depth == 0 {
+                            out.push((i, j));
+                            break 'body;
+                        }
+                    }
+                    ';' if !opened => break 'body,
+                    _ => {}
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The innermost fn range containing `line`, if any.
+pub fn innermost_fn(ranges: &[(usize, usize)], line: usize) -> Option<(usize, usize)> {
+    ranges
+        .iter()
+        .copied()
+        .filter(|&(a, b)| a <= line && line <= b)
+        .max_by_key(|&(a, _)| a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one(src: &str) -> SourceFile {
+        SourceFile::parse("src/x.rs", src)
+    }
+
+    #[test]
+    fn comments_leave_code_view() {
+        let f = one("let a = 1; // unwrap the gift\n/* expect */ let b = 2;");
+        assert!(!f.lines[0].code.contains("unwrap"));
+        assert!(f.lines[0].comment.contains("unwrap the gift"));
+        assert!(!f.lines[1].code.contains("expect"));
+        assert!(f.lines[1].code.contains("let b = 2;"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let f = one("/* a /* b */\nstill comment */ let x = 9;");
+        assert!(!f.lines[0].code.contains('a'));
+        assert!(!f.lines[1].code.contains("still"));
+        assert!(f.lines[1].code.contains("let x = 9;"));
+        assert!(f.lines[1].comment.contains("still comment"));
+    }
+
+    #[test]
+    fn string_contents_are_blanked() {
+        let f = one(r#"let m = "call .unwrap( now"; m.len();"#);
+        assert!(!f.lines[0].code.contains(".unwrap("));
+        assert!(f.lines[0].code.contains("m.len();"));
+    }
+
+    #[test]
+    fn escaped_quotes_stay_inside_the_string() {
+        let f = one(r#"let m = "a \" .expect( b"; real();"#);
+        assert!(!f.lines[0].code.contains(".expect("));
+        assert!(f.lines[0].code.contains("real();"));
+    }
+
+    #[test]
+    fn raw_strings_with_fences_are_blanked() {
+        let f = one("let m = r#\"one .unwrap( two\"# ; after();");
+        assert!(!f.lines[0].code.contains(".unwrap("));
+        assert!(f.lines[0].code.contains("after();"));
+    }
+
+    #[test]
+    fn multiline_raw_string_is_blanked_to_its_fence() {
+        let f = one("let m = r#\"\n.unwrap(\n\"#; done();");
+        assert!(!f.lines[1].code.contains(".unwrap("));
+        assert!(f.lines[2].code.contains("done();"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let f = one("let c = '\"'; let s: &'a str = x; let n = '\\n';");
+        // the quote inside the char literal must not open a string
+        assert!(f.lines[0].code.contains("let s: &'a str = x;"));
+        // a backslash char literal must not swallow the rest of the line
+        let g = one("if ch[i] == '\\\\' { x.after(); }");
+        assert!(g.lines[0].code.contains("x.after();"));
+    }
+
+    #[test]
+    fn test_block_detection() {
+        let f = one("fn a() {}\n#[cfg(test)]\nmod tests { }");
+        assert!(!f.is_test(0));
+        assert!(f.is_test(1));
+        assert!(f.is_test(2));
+        let g = one("fn a() {}\n#[cfg(all(test, feature = \"simd\"))]\nmod tests { }");
+        assert!(g.is_test(1));
+    }
+
+    #[test]
+    fn fn_headers_and_ranges() {
+        assert!(is_fn_header("fn f(x: usize) -> usize {"));
+        assert!(is_fn_header("    pub unsafe fn g("));
+        assert!(is_fn_header("pub(crate) const fn h() {"));
+        assert!(!is_fn_header("let f = |x| x + 1;"));
+        assert!(!is_fn_header("w3: fn(usize) -> f32,"));
+        let f = one("fn outer() {\n    let a = 1;\n    fn inner() {\n        a;\n    }\n}");
+        let r = fn_ranges(&f);
+        assert_eq!(r, vec![(0, 5), (2, 4)]);
+        assert_eq!(innermost_fn(&r, 3), Some((2, 4)));
+        assert_eq!(innermost_fn(&r, 1), Some((0, 5)));
+    }
+
+    #[test]
+    fn bodyless_signatures_are_skipped() {
+        let f = one("trait T {\n    fn sig(&self) -> usize;\n}");
+        assert!(fn_ranges(&f).is_empty());
+    }
+}

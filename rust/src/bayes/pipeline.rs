@@ -390,6 +390,8 @@ impl<E: MaskSwapEngine> Engine for Pipelined<E> {
         self.n_samples
     }
 
+    // hot-path: pipelined MC steady state — plan hand-off and swap must
+    // stay alloc-free or the overlap gain is spent on the allocator.
     fn execute_into(&mut self, signals: &[f32], out: &mut InferOutput) -> anyhow::Result<()> {
         // Pass k: the worker already drew mask set k into the shadow
         // plan while pass k-1 executed (or during construction).
@@ -412,6 +414,7 @@ impl<E: MaskSwapEngine> Engine for Pipelined<E> {
         self.proto.submit(old, rng)?;
         self.engine.execute_into(signals, out)
     }
+    // hot-path: end
 }
 
 /// Pipelined f32 MC-Dropout (registry: `mc-dropout` with overlap on).

@@ -1,4 +1,4 @@
-//! Benchmark harness (criterion substitute, DESIGN.md §6): warmup,
+//! Benchmark harness (criterion substitute, DESIGN.md §7): warmup,
 //! adaptive iteration count, outlier-robust statistics and comparison
 //! tables.  All `cargo bench` targets (`harness = false`) are built on
 //! this.

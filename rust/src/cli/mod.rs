@@ -1,4 +1,4 @@
-//! Minimal clap-substitute argument parser (DESIGN.md §6): subcommands,
+//! Minimal clap-substitute argument parser (DESIGN.md §7): subcommands,
 //! `--key value` options, `--flag` booleans, automatic help text.
 
 use std::collections::BTreeMap;

@@ -1,5 +1,5 @@
 //! Configuration system: a TOML-subset parser (serde/toml unavailable
-//! offline, DESIGN.md §6) plus the typed `RunConfig` the CLI and examples
+//! offline, DESIGN.md §7) plus the typed `RunConfig` the CLI and examples
 //! consume.
 //!
 //! Supported TOML subset: `[section]` headers, `key = value` with string,

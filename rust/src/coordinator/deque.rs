@@ -126,6 +126,9 @@ impl<T> ShardDeques<T> {
         self.closed.load(Ordering::SeqCst)
     }
 
+    // hot-path: deque ops — push/pop/steal run per batch under the
+    // dispatcher and every shard; only pointer moves, no allocation.
+
     /// Push to shard `k`'s deque.  `Err` hands the item back once the
     /// deques are closed (every shard dead, or shutdown already
     /// flushed); the caller must fail it rather than strand it.
@@ -257,6 +260,8 @@ impl<T> ShardDeques<T> {
             self.sleepers.fetch_sub(1, Ordering::SeqCst);
         }
     }
+
+    // hot-path: end
 
     fn notify_one(&self) {
         if self.sleepers.load(Ordering::SeqCst) > 0 {

@@ -31,6 +31,8 @@ impl LatencyHistogram {
     }
 
     pub fn record_us(&self, us: u64) {
+        // relaxed: independent monotonic counters; readers tolerate a
+        // momentarily torn view across buckets/count/sum (telemetry).
         let idx = (63 - us.max(1).leading_zeros() as usize).min(self.buckets.len() - 1);
         self.buckets[idx].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
@@ -39,6 +41,7 @@ impl LatencyHistogram {
     }
 
     pub fn count(&self) -> u64 {
+        // relaxed: telemetry snapshot read, no ordering needed
         self.count.load(Ordering::Relaxed)
     }
 
@@ -47,11 +50,13 @@ impl LatencyHistogram {
         if c == 0 {
             0.0
         } else {
+            // relaxed: telemetry snapshot read, no ordering needed
             self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
         }
     }
 
     pub fn max_us(&self) -> u64 {
+        // relaxed: telemetry snapshot read, no ordering needed
         self.max_us.load(Ordering::Relaxed)
     }
 
@@ -62,6 +67,8 @@ impl LatencyHistogram {
             return 0;
         }
         let target = ((p / 100.0) * total as f64).ceil() as u64;
+        // relaxed: bucket reads race recorders; an approximate
+        // percentile over telemetry tolerates that by design.
         let mut seen = 0;
         for (i, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
@@ -90,6 +97,8 @@ pub struct ShardMetrics {
 
 impl ShardMetrics {
     pub fn snapshot(&self) -> ShardSnapshot {
+        // relaxed: point-in-time telemetry copy; counters are
+        // independent and a torn cross-counter view is acceptable.
         ShardSnapshot {
             batches: self.batches.load(Ordering::Relaxed),
             responses: self.responses.load(Ordering::Relaxed),
@@ -187,6 +196,8 @@ impl ServingMetrics {
     /// Fold one batch's service time into the EWMA (lock-free CAS loop;
     /// the first sample seeds the average directly).
     pub fn record_batch_ewma(&self, us: u64) {
+        // relaxed: the CAS loop only needs atomicity of the single
+        // EWMA word, not ordering against any other memory.
         let mut cur = self.ewma_batch_us.load(Ordering::Relaxed);
         loop {
             let prev = f64::from_bits(cur);
@@ -209,10 +220,13 @@ impl ServingMetrics {
 
     /// Current EWMA batch latency in µs (0 before the first batch).
     pub fn ewma_batch_us(&self) -> f64 {
+        // relaxed: single-word estimate read; staleness is fine
         f64::from_bits(self.ewma_batch_us.load(Ordering::Relaxed))
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
+        // relaxed: point-in-time telemetry copy; counters are
+        // independent and a torn cross-counter view is acceptable.
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             responses: self.responses.load(Ordering::Relaxed),

@@ -179,7 +179,10 @@ impl NetServer {
         if let Some(a) = self.acceptor.take() {
             let _ = a.join();
         }
-        let handles = std::mem::take(&mut *self.conns.lock().expect("conns lock"));
+        // a connection thread that panicked while holding the lock must
+        // not turn shutdown into a second panic — take the list anyway
+        let handles =
+            std::mem::take(&mut *self.conns.lock().unwrap_or_else(|e| e.into_inner()));
         for h in handles {
             let _ = h.join();
         }
@@ -211,6 +214,8 @@ fn accept_loop(
                     continue;
                 }
                 live.fetch_add(1, Ordering::AcqRel);
+                // relaxed: monotonic telemetry counter; the `live` gate
+                // above is the one that needs (and has) real ordering.
                 coord
                     .metrics()
                     .net_connections
@@ -232,7 +237,8 @@ fn accept_loop(
                         conn.run(&c_shutdown);
                     });
                 match spawned {
-                    Ok(h) => conns.lock().expect("conns lock").push(h),
+                    // recover a poisoned list — joining is best-effort
+                    Ok(h) => conns.lock().unwrap_or_else(|e| e.into_inner()).push(h),
                     Err(_) => {
                         live.fetch_sub(1, Ordering::AcqRel);
                     }
@@ -337,6 +343,8 @@ impl Conn {
     /// Deliver every ready response; expire overdue ones (dropping the
     /// receiver — the shard's send tolerates it).  `false` = dead.
     fn sweep_replies(&mut self) -> bool {
+        // relaxed: net_expired is a monotonic telemetry counter —
+        // snapshot-only readers, no ordering needed.
         let mut i = 0;
         while i < self.pending.len() {
             let now = Instant::now();
@@ -410,6 +418,7 @@ impl Conn {
 
     /// Handle every complete buffered frame; `false` = close.
     fn process_frames(&mut self) -> bool {
+        // relaxed: net_bad_frames is a monotonic telemetry counter.
         loop {
             match self.asm.poll() {
                 Ok(Some(h)) => {
@@ -433,6 +442,8 @@ impl Conn {
     }
 
     fn handle_request(&mut self, h: crate::util::frame::FrameHeader) -> bool {
+        // relaxed: net_frames/net_bad_frames/net_shed are monotonic
+        // telemetry counters — snapshot-only readers, no ordering needed.
         if h.kind != FrameKind::Request {
             // clients have no business pushing response frames
             self.coord

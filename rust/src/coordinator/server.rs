@@ -593,6 +593,8 @@ impl Coordinator {
                 req,
             ));
         }
+        // relaxed: request/rejected are monotonic telemetry counters —
+        // readers only ever snapshot totals, no ordering is needed.
         if self.depth.load(Ordering::Acquire) >= self.capacity {
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
             return Err((
@@ -834,6 +836,8 @@ fn dispatcher_loop(
                     // capacity is enforced on submit; push cannot fail
                     // here unless capacity raced — shed in that case,
                     // reclaiming the request's buffer into the slab.
+                    // relaxed: monotonic telemetry counter (snapshot-only
+                    // readers), no ordering needed.
                     if let Err(p) = batcher.push(pend) {
                         metrics.rejected.fetch_add(1, Ordering::Relaxed);
                         depth.fetch_sub(1, Ordering::AcqRel);
@@ -892,7 +896,13 @@ fn dispatcher_loop(
 /// One shard: claim batches (local LIFO pop, FIFO steal when idle), run
 /// the engine into a recycled output buffer, answer requests.
 fn shard_loop(ctx: ShardCtx, engine: &mut dyn Engine) {
-    debug_assert_eq!(engine.batch_size(), ctx.batch_size);
+    // Hard assert: a mis-sized engine would slice `signals` wrong on
+    // every batch, and a `debug_assert` would wave it through in release.
+    assert_eq!(engine.batch_size(), ctx.batch_size);
+    // relaxed: every Relaxed below is a monotonic telemetry counter
+    // (batches, responses, busy time); readers snapshot totals only, so
+    // no cross-counter ordering is needed.  Queue-depth accounting, the
+    // one atomic with ordering semantics, stays AcqRel.
     let shard = ctx.metrics.shard(ctx.index);
     let n_samples = engine.n_samples();
     let mut rng = Pcg32::with_stream(STEAL_SEED, ctx.index as u64);

@@ -174,6 +174,7 @@ impl OutputPool {
     pub fn take(&self, n_samples: usize, batch: usize) -> InferOutput {
         let recycled = self.slots.lock().expect("pool lock").pop();
         recycled.unwrap_or_else(|| {
+            // relaxed: monotonic high-water counter, telemetry only
             self.created
                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             InferOutput::new(n_samples, batch)
@@ -196,6 +197,7 @@ impl OutputPool {
     /// Total fresh allocations so far (high-water mark of buffers in
     /// circulation).
     pub fn created(&self) -> usize {
+        // relaxed: telemetry snapshot read, no ordering needed
         self.created.load(std::sync::atomic::Ordering::Relaxed)
     }
 }

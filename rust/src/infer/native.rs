@@ -52,6 +52,9 @@ const EPS: f32 = 1e-5;
 /// same per-dot kernel on the same inputs — bit-exact vs single-threaded.
 #[derive(Clone, Copy)]
 struct SendPtr(*mut f32);
+// SAFETY: the pointer targets a scratch buffer that outlives every lane
+// (the pool joins before the call returns) and lanes write disjoint
+// tiles, so concurrent sends/shares of the wrapper cannot race.
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
 
@@ -111,8 +114,8 @@ pub fn masked_linear_reference(
     kept: &[usize],
     out: &mut [f32],
 ) {
-    debug_assert_eq!(x.len(), batch * nb);
-    debug_assert_eq!(out.len(), batch * nb);
+    assert_eq!(x.len(), batch * nb);
+    assert_eq!(out.len(), batch * nb);
     for v in 0..batch {
         let xi = &x[v * nb..(v + 1) * nb];
         let oi = &mut out[v * nb..(v + 1) * nb];
@@ -211,7 +214,7 @@ impl BlockedMaskedLinear {
     /// (and in which positions) changes.
     fn apply_masks(&mut self, union: &[u32], kept: &[Vec<u32>]) {
         let nb = self.nb;
-        debug_assert_eq!(kept.len(), self.kept_pos.len());
+        assert_eq!(kept.len(), self.kept_pos.len());
         self.union.clear();
         self.union.extend(union.iter().map(|&o| o as usize));
         self.pos_of.fill(u32::MAX);
@@ -303,8 +306,11 @@ impl BlockedMaskedLinear {
     /// `act[p * batch + v]` is output `union[p]` for voxel `v`.  Sample-
     /// independent — call once per batch and reuse for all N samples.
     pub fn forward_union(&self, batch: usize, x: &[f32], act: &mut [f32]) {
-        debug_assert_eq!(x.len(), batch * self.nb);
-        debug_assert!(act.len() >= self.union.len() * batch);
+        // Hard asserts: these bounds license the raw-pointer stores in
+        // `forward_union_range_raw`; a `debug_assert` would vanish in
+        // release and turn a short buffer into an out-of-bounds write.
+        assert_eq!(x.len(), batch * self.nb);
+        assert!(act.len() >= self.union.len() * batch);
         // SAFETY: single caller-owned `act`, full voxel range.
         unsafe { self.forward_union_range_raw(batch, x, act.as_mut_ptr(), 0, batch) }
     }
@@ -319,8 +325,9 @@ impl BlockedMaskedLinear {
             self.forward_union(batch, x, act);
             return;
         }
-        debug_assert_eq!(x.len(), batch * self.nb);
-        debug_assert!(act.len() >= self.union.len() * batch);
+        // Hard asserts for the same reason as in `forward_union`.
+        assert_eq!(x.len(), batch * self.nb);
+        assert!(act.len() >= self.union.len() * batch);
         let threads = pool.threads();
         let ptr = SendPtr(act.as_mut_ptr());
         pool.run(threads, |lane| {
@@ -383,7 +390,9 @@ impl BlockedMaskedLinear {
     /// Scatter sample `s`'s kept union activations into a voxel-major
     /// `[batch][nb]` buffer (dropped outputs are zeroed — the mask).
     pub fn scatter_sample(&self, s: usize, batch: usize, act: &[f32], out: &mut [f32]) {
-        debug_assert_eq!(out.len(), batch * self.nb);
+        // Hard assert: this bound licenses the raw stores in
+        // `scatter_sample_range_raw`.
+        assert_eq!(out.len(), batch * self.nb);
         // SAFETY: single caller-owned `out`, full voxel range.
         unsafe { self.scatter_sample_range_raw(s, batch, act, out.as_mut_ptr(), 0, batch) }
     }
@@ -404,7 +413,8 @@ impl BlockedMaskedLinear {
             self.scatter_sample(s, batch, act, out);
             return;
         }
-        debug_assert_eq!(out.len(), batch * self.nb);
+        // Hard assert for the same reason as in `scatter_sample`.
+        assert_eq!(out.len(), batch * self.nb);
         let threads = pool.threads();
         let ptr = SendPtr(out.as_mut_ptr());
         pool.run(threads, |lane| {
@@ -434,7 +444,7 @@ impl BlockedMaskedLinear {
         v_hi: usize,
     ) {
         let nb = self.nb;
-        debug_assert!(v_hi <= batch);
+        assert!(v_hi <= batch);
         for i in v_lo * nb..v_hi * nb {
             *out.add(i) = 0.0;
         }
@@ -453,8 +463,8 @@ impl BlockedMaskedLinear {
     /// Only the sample's kept rows are scheduled.
     pub fn forward_sample(&self, s: usize, batch: usize, x: &[f32], out: &mut [f32]) {
         let nb = self.nb;
-        debug_assert_eq!(x.len(), batch * nb);
-        debug_assert_eq!(out.len(), batch * nb);
+        assert_eq!(x.len(), batch * nb);
+        assert_eq!(out.len(), batch * nb);
         out.fill(0.0);
         let pos = &self.kept_pos[s];
         let mut k = 0;
@@ -678,6 +688,9 @@ impl NativeEngine {
         }
     }
 
+    // hot-path: native execute — subnet_forward and execute_into are the
+    // zero-alloc serving core; all scratch is sized at construction.
+
     /// Forward one subnet for all samples, writing into `out`.
     ///
     /// Layer 1's union activations are computed once (its input is the
@@ -736,6 +749,8 @@ impl Engine for NativeEngine {
         Ok(())
     }
 }
+
+// hot-path: end
 
 /// The seed per-voxel scalar engine, preserved verbatim as the numeric
 /// oracle for the blocked path (golden-equivalence test).  Test-only: the

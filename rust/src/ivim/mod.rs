@@ -112,7 +112,7 @@ pub fn bvalues_paper() -> Vec<f64> {
             out.push(*b);
         }
     }
-    debug_assert_eq!(out.len(), 104);
+    assert_eq!(out.len(), 104);
     out
 }
 

@@ -75,7 +75,7 @@ pub fn synth_voxel_into(
     noisy: &mut Vec<f64>,
     out: &mut [f32],
 ) -> IvimParams {
-    debug_assert_eq!(out.len(), bvals.len());
+    assert_eq!(out.len(), bvals.len());
     let p = draw_params(rng);
     let noise_std = p.s0 / snr;
     noisy.clear();

@@ -16,6 +16,7 @@
 //! table/figure of the paper onto modules and bench targets.
 
 pub mod accel;
+pub mod analysis;
 pub mod bayes;
 pub mod bench;
 pub mod cli;

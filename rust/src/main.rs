@@ -239,6 +239,18 @@ fn cli() -> Cli {
                 ],
             },
             CommandSpec {
+                name: "lint",
+                help: "run the repo-invariant static analyzer over src/ and benches/",
+                opts: vec![
+                    opt(
+                        "root",
+                        "crate dir containing src/ and benches/ (default: auto-detect)",
+                        None,
+                    ),
+                    flag("json", "emit machine-readable findings as JSON"),
+                ],
+            },
+            CommandSpec {
                 name: "masks",
                 help: "generate and inspect Masksembles masks",
                 opts: vec![
@@ -872,6 +884,26 @@ fn run(args: &Args) -> anyhow::Result<()> {
             )?;
             println!("{report}");
             println!("no p50 regressions beyond {:.0}%", max_regress * 100.0);
+        }
+        "lint" => {
+            let root = args
+                .get("root")
+                .map(std::path::PathBuf::from)
+                .unwrap_or_else(uivim::analysis::default_crate_dir);
+            let findings = uivim::analysis::lint_crate(&root)?;
+            if args.flag("json") {
+                println!("{}", uivim::analysis::findings_json(&findings));
+            } else {
+                for f in &findings {
+                    println!("{f}");
+                }
+            }
+            if !findings.is_empty() {
+                anyhow::bail!("lint failed: {} finding(s)", findings.len());
+            }
+            if !args.flag("json") {
+                println!("lint clean: {} rules over {}", uivim::analysis::rules::RULES.len(), root.display());
+            }
         }
         "masks" => {
             let width = args.get_usize("width")?.unwrap_or(11);

@@ -1,4 +1,4 @@
-//! Mini property-testing framework (proptest substitute, DESIGN.md §6).
+//! Mini property-testing framework (proptest substitute, DESIGN.md §7).
 //!
 //! Provides seeded generators and a `forall` runner with greedy shrinking:
 //! when a case fails, the runner re-tries progressively "smaller" variants

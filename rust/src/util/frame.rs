@@ -1,7 +1,7 @@
 //! Length-prefixed binary frame codec for the coordinator's TCP front
 //! door (`coordinator::net`).
 //!
-//! No external dependencies (DESIGN.md §6): the wire format is a fixed
+//! No external dependencies (DESIGN.md §7): the wire format is a fixed
 //! 28-byte little-endian header followed by a typed payload.
 //!
 //! ```text
@@ -148,6 +148,16 @@ impl fmt::Display for FrameError {
 
 impl std::error::Error for FrameError {}
 
+/// Read `N` little-endian bytes at `off` without indexing: zero-filled
+/// when out of range.  Callers length-check before parsing, so the
+/// fallback never becomes a parsed value — it only makes the parser
+/// panic-free by construction (enforced by the `panic-free-net` lint).
+fn le_bytes<const N: usize>(b: &[u8], off: usize) -> [u8; N] {
+    b.get(off..off + N)
+        .and_then(|s| s.try_into().ok())
+        .unwrap_or([0u8; N])
+}
+
 /// A validated frame header (payload fully buffered when returned by
 /// [`FrameAssembler::poll`]).
 #[derive(Debug, Clone, Copy)]
@@ -271,6 +281,10 @@ impl FrameAssembler {
         n
     }
 
+    // hot-path: frame decode — poll/decode/consume run once per framed
+    // request on the serving path; lease buffers are pre-sized, so no
+    // allocation is tolerated here.
+
     /// Parse the buffered bytes.  `Ok(None)` = incomplete (feed more);
     /// `Ok(Some(h))` = one whole validated frame is buffered;
     /// `Err` = the stream is invalid at the current position (close the
@@ -284,21 +298,21 @@ impl FrameAssembler {
             return Ok(None);
         }
         let b = &self.buf[..self.len];
-        let magic = [b[0], b[1], b[2], b[3]];
+        let magic: [u8; 4] = le_bytes(b, 0);
         if magic != MAGIC {
             return Err(FrameError::BadMagic(magic));
         }
-        let version = u16::from_le_bytes([b[4], b[5]]);
+        let version = u16::from_le_bytes(le_bytes(b, 4));
         if version != VERSION {
             return Err(FrameError::BadVersion(version));
         }
-        let Some(kind) = FrameKind::from_u8(b[6]) else {
-            return Err(FrameError::BadKind(b[6]));
+        let [kind_byte, status] = le_bytes::<2>(b, 6);
+        let Some(kind) = FrameKind::from_u8(kind_byte) else {
+            return Err(FrameError::BadKind(kind_byte));
         };
-        let status = b[7];
-        let id = u64::from_le_bytes(b[8..16].try_into().expect("8 bytes"));
-        let deadline_us = u64::from_le_bytes(b[16..24].try_into().expect("8 bytes"));
-        let n_values = u32::from_le_bytes(b[24..28].try_into().expect("4 bytes"));
+        let id = u64::from_le_bytes(le_bytes(b, 8));
+        let deadline_us = u64::from_le_bytes(le_bytes(b, 16));
+        let n_values = u32::from_le_bytes(le_bytes(b, 24));
         if n_values as usize > self.max_values {
             return Err(FrameError::Oversize {
                 n_values,
@@ -325,10 +339,13 @@ impl FrameAssembler {
     pub fn decode_request_into(&self, header: &FrameHeader, dst: &mut [f32]) -> bool {
         assert_eq!(header.kind, FrameKind::Request, "not a request frame");
         assert_eq!(dst.len(), header.n_values, "destination width mismatch");
-        debug_assert!(self.len >= header.frame_len(), "frame not fully buffered");
+        // A hard assert: a debug_assert here would vanish in release and
+        // let a short buffer decode a truncated payload silently (the
+        // `release-vanishing-guard` lint's bug class).
+        assert!(self.len >= header.frame_len(), "frame not fully buffered");
         let payload = &self.buf[HEADER_LEN..header.frame_len()];
         for (slot, chunk) in dst.iter_mut().zip(payload.chunks_exact(REQ_ELEM)) {
-            let v = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            let v = f32::from_le_bytes(le_bytes(chunk, 0));
             if !v.is_finite() {
                 return false;
             }
@@ -342,10 +359,11 @@ impl FrameAssembler {
     pub fn decode_response_into(&self, header: &FrameHeader, dst: &mut [f64]) {
         assert_eq!(header.kind, FrameKind::Response, "not a response frame");
         assert_eq!(dst.len(), header.n_values, "destination width mismatch");
-        debug_assert!(self.len >= header.frame_len(), "frame not fully buffered");
+        // Hard assert for the same reason as in `decode_request_into`.
+        assert!(self.len >= header.frame_len(), "frame not fully buffered");
         let payload = &self.buf[HEADER_LEN..header.frame_len()];
         for (slot, chunk) in dst.iter_mut().zip(payload.chunks_exact(RESP_ELEM)) {
-            *slot = f64::from_le_bytes(chunk.try_into().expect("8 bytes"));
+            *slot = f64::from_le_bytes(le_bytes(chunk, 0));
         }
     }
 
@@ -356,6 +374,8 @@ impl FrameAssembler {
         self.buf.copy_within(n..self.len, 0);
         self.len -= n;
     }
+
+    // hot-path: end
 
     /// Discard everything buffered (post-error reset in tests).
     pub fn clear(&mut self) {

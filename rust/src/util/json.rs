@@ -1,6 +1,6 @@
 //! Minimal JSON value model, parser and writer.
 //!
-//! The offline crate registry has no `serde`/`serde_json` (DESIGN.md §6),
+//! The offline crate registry has no `serde`/`serde_json` (DESIGN.md §7),
 //! so artifact manifests and report files are handled by this module.  It
 //! implements the full JSON grammar (RFC 8259) minus some exotic number
 //! edge cases, which is all the manifest needs, plus a pretty writer used

@@ -1,7 +1,7 @@
 //! Fixed-size thread pool on std threads + channels, plus a bounded
 //! recycling buffer pool.
 //!
-//! tokio is unavailable in the offline registry (DESIGN.md §6); the
+//! tokio is unavailable in the offline registry (DESIGN.md §7); the
 //! coordinator and benches use this pool for fan-out work.  Jobs are
 //! `FnOnce` closures; `scope`-style joining is provided by waiting on a
 //! completion counter.  [`VecPool`] is the f32-buffer twin of
@@ -138,6 +138,7 @@ impl VecPool {
                 v
             }
             None => {
+                // relaxed: monotonic high-water counter, telemetry only
                 self.created.fetch_add(1, Ordering::Relaxed);
                 Vec::with_capacity(capacity_hint)
             }
@@ -160,6 +161,7 @@ impl VecPool {
     /// Total fresh allocations so far (the high-water mark of buffers
     /// in circulation; stable once recycling reaches steady state).
     pub fn created(&self) -> usize {
+        // relaxed: telemetry snapshot read, no ordering needed
         self.created.load(Ordering::Relaxed)
     }
 }
@@ -169,6 +171,8 @@ impl VecPool {
 /// for one-shot fan-out).
 pub fn par_map<T: Sync, R: Send>(items: &[T], threads: usize, f: impl Fn(&T) -> R + Sync) -> Vec<R> {
     let threads = threads.max(1).min(items.len().max(1));
+    // relaxed: the counter only hands out unique indices; result
+    // visibility is ordered by the per-slot mutexes and the scope join.
     let counter = AtomicUsize::new(0);
     let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
     let slots: Vec<Mutex<&mut Option<R>>> = out.iter_mut().map(Mutex::new).collect();

@@ -120,6 +120,9 @@ mod x86 {
         out
     }
 
+    /// # Safety
+    /// Caller must have verified AVX2 support and that `x`/`w` hold at
+    /// least `nb` elements (the tail loop reads up to `nb`).
     #[target_feature(enable = "avx2")]
     unsafe fn dot_one_f32_avx2(nb: usize, x: &[f32], w: &[f32]) -> f32 {
         let chunks = nb / 8 * 8;
@@ -177,6 +180,9 @@ mod x86 {
         out
     }
 
+    /// # Safety
+    /// Caller must have verified AVX2 support and that `w` is at least
+    /// as long as `x` (loads index both up to `x.len()`).
     #[target_feature(enable = "avx2")]
     unsafe fn fx_dot_acc_avx2(x: &[i16], w: &[i16]) -> i64 {
         let n = x.len();

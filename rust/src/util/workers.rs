@@ -334,6 +334,8 @@ mod tests {
                 // wrapper, the same pattern the tiled engine kernels
                 // use: task t owns exactly slot t.
                 struct SendPtr(*mut f32);
+                // SAFETY: `out` outlives the pool.run barrier and each
+                // task writes a distinct slot, so sharing is race-free.
                 unsafe impl Send for SendPtr {}
                 unsafe impl Sync for SendPtr {}
                 let ptr = SendPtr(out.as_mut_ptr());

@@ -315,6 +315,9 @@ pub fn stream_volume(
                 break;
             }
             stats_out.stalls += 1;
+            // relaxed: the streaming counters here and below
+            // (stream_stalls, slices_ingested, volumes_completed) are
+            // monotonic telemetry; readers snapshot totals only.
             coord.metrics().stream_stalls.fetch_add(1, Ordering::Relaxed);
             drain_one_blocking(&mut in_flight, &mut maps, &mut confident_voxels)?;
         }
